@@ -1,0 +1,60 @@
+//! Adaptive dispatching demo: train the SVM dispatcher on netsim sweep
+//! data for Frontier, print its decision map, and use it through the
+//! `Backend::Auto` path of the public API.
+//!
+//! ```bash
+//! cargo run --release --example dispatch_demo
+//! ```
+
+use std::sync::Arc;
+
+use pccl::backends::{all_gather, Backend, CollKind, CollectiveOptions};
+use pccl::comm::CommWorld;
+use pccl::dispatch::SvmDispatcher;
+use pccl::topology::Machine;
+
+fn main() -> pccl::Result<()> {
+    println!("training SVM dispatcher on Frontier sweep data...");
+    let dispatcher = Arc::new(SvmDispatcher::train(
+        Machine::Frontier,
+        &[16, 32, 64, 128, 256, 512, 1024],
+        &[32, 64, 128, 256, 512, 1024, 2048],
+        5,
+        42,
+    )?);
+
+    // Decision map over the paper's heatmap grid (Fig. 11 structure).
+    println!("\nall-gather backend decision map (rows = msg MiB, cols = ranks):");
+    print!("{:>8}", "");
+    for p in [32, 128, 512, 2048] {
+        print!("{p:>12}");
+    }
+    println!();
+    for mb in [16usize, 64, 256, 1024] {
+        print!("{mb:>6}MB");
+        for p in [32usize, 128, 512, 2048] {
+            let b = dispatcher.choose(CollKind::AllGather, mb << 20, p);
+            print!(" {:>11}", b.label());
+        }
+        println!();
+    }
+
+    // Table I rows for this machine.
+    println!("\ndispatcher test accuracy:");
+    for (coll, size, correct, acc) in dispatcher.table1() {
+        println!("  {coll:<16} {correct}/{size} = {acc:.1}%");
+    }
+
+    // Use it through the public API on the real data plane.
+    let chooser = dispatcher.chooser();
+    let world = CommWorld::<f32>::new(8);
+    let outs = world.try_run(move |comm| {
+        let opts = CollectiveOptions::default()
+            .backend(Backend::Auto)
+            .chooser(chooser.clone());
+        all_gather(comm, &[comm.rank() as f32; 256], &opts)
+    })?;
+    assert_eq!(outs[0].len(), 8 * 256);
+    println!("\nAuto-dispatched all-gather over 8 ranks OK");
+    Ok(())
+}

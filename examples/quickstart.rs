@@ -1,0 +1,29 @@
+//! Quickstart: an 8-rank hierarchical all-reduce in a dozen lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pccl::backends::{all_reduce, Backend, CollectiveOptions};
+use pccl::comm::CommWorld;
+use pccl::topology::Topology;
+
+fn main() -> pccl::Result<()> {
+    // 2 "nodes" × 4 "GPUs": the hierarchical algorithms kick in.
+    let topo = Topology::new(2, 4, 2)?;
+    let world = CommWorld::<f32>::with_topology(topo);
+
+    let outs = world.try_run(|comm| {
+        let mine = vec![(comm.rank() + 1) as f32; 8];
+        let opts = CollectiveOptions::default().backend(Backend::PcclRec);
+        all_reduce(comm, &mine, &opts)
+    })?;
+
+    // Sum over ranks of (rank+1) = 1+2+...+8 = 36, elementwise.
+    for (rank, out) in outs.iter().enumerate() {
+        assert!(out.iter().all(|&v| v == 36.0));
+        println!("rank {rank}: all_reduce → {:?}", &out[..4]);
+    }
+    println!("quickstart OK");
+    Ok(())
+}

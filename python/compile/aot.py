@@ -1,0 +1,130 @@
+"""AOT pipeline: lower the L1 kernels and the L2 model to HLO **text** and
+write ``artifacts/manifest.json`` — the entire contract with the Rust side.
+
+Run via ``make artifacts`` (idempotent: skipped when inputs are unchanged).
+Python never runs again after this.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import reduce as kreduce
+from .kernels import shuffle as kshuffle
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_entry(out_dir, name, fn, example_args, inputs, outputs):
+    """Lower ``fn`` at the example shapes, write HLO text, return the
+    manifest entry."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {name}: {len(text)} chars, {len(inputs)} in / {len(outputs)} out")
+    return {"file": fname, "inputs": inputs, "outputs": outputs}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = parser.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    entries = {}
+
+    # ---- L1: reduction kernels (two sizes: fast-dispatch + large) -------
+    for n in (4096, kreduce.BLOCK):
+        block = min(n, kreduce.BLOCK)
+        f32 = jax.ShapeDtypeStruct((n,), jnp.float32)
+        entries[f"reduce_sum_{n}"] = lower_entry(
+            out_dir,
+            f"reduce_sum_{n}",
+            lambda x, y, block=block: (kreduce.reduce_sum(x, y, block=block),),
+            (f32, f32),
+            [spec((n,)), spec((n,))],
+            [spec((n,))],
+        )
+
+    # ---- L1: hierarchical unshuffle (example shape: 4 nodes × 2 local) --
+    n_nodes, m_local, block = 4, 2, 1024
+    total = n_nodes * m_local * block
+    buf = jax.ShapeDtypeStruct((total,), jnp.float32)
+    entries[f"unshuffle_{n_nodes}x{m_local}x{block}"] = lower_entry(
+        out_dir,
+        f"unshuffle_{n_nodes}x{m_local}x{block}",
+        lambda b: (kshuffle.unshuffle(b, n_nodes, m_local, block),),
+        (buf,),
+        [spec((total,))],
+        [spec((total,))],
+    )
+
+    # ---- L2: model init + train step ------------------------------------
+    cfg = model.ModelConfig()
+    pspec = model.param_spec(cfg)
+    param_specs = [spec(s) for _, s in pspec]
+
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    entries["init_params"] = lower_entry(
+        out_dir,
+        "init_params",
+        lambda s: tuple(model.init_params(s, cfg)),
+        (seed,),
+        [spec((), "i32")],
+        param_specs,
+    )
+
+    params_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in pspec]
+    tokens = jax.ShapeDtypeStruct((cfg.batch_per_rank, cfg.seq + 1), jnp.int32)
+    entries["train_step"] = lower_entry(
+        out_dir,
+        "train_step",
+        lambda *a: model.train_step(list(a[:-1]), a[-1], cfg),
+        (*params_shapes, tokens),
+        param_specs + [spec((cfg.batch_per_rank, cfg.seq + 1), "i32")],
+        [spec(())] + param_specs,
+    )
+
+    manifest = {
+        "version": 1,
+        "entries": entries,
+        "model": {
+            "param_names": [n for n, _ in pspec],
+            "param_shapes": [list(s) for _, s in pspec],
+            "param_count": int(model.param_count(cfg)),
+            "seq_len": cfg.seq,
+            "batch_per_rank": cfg.batch_per_rank,
+            "vocab_size": cfg.vocab,
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out_dir}/manifest.json ({len(entries)} entries, "
+          f"{manifest['model']['param_count']} params)")
+
+
+if __name__ == "__main__":
+    main()

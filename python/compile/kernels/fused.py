@@ -1,0 +1,149 @@
+"""L1 Pallas kernels used inside the L2 model: row-blocked layernorm and
+GELU, with hand-written backward kernels wired through ``jax.custom_vjp``
+(interpret-mode Pallas has no automatic reverse-mode, exactly like a CUDA
+kernel library — forward and backward are both explicit kernels).
+
+Tiling: one grid step holds a (ROWS, D) tile in VMEM — elementwise /
+row-reduction VPU work, no MXU. With ``interpret=True`` they lower to plain
+HLO and fuse into the surrounding XLA graph, so the AOT model artifact
+carries the kernels' semantics with zero interpret-mode runtime cost.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM tile. d_model ≤ 1024 ⇒ tile ≤ 32×1024×4 B = 128 KiB.
+ROWS = 32
+EPS = 1e-5
+
+
+def _row_tile(rows: int) -> int:
+    tile = ROWS
+    while rows % tile != 0:
+        tile //= 2
+    return max(tile, 1)
+
+
+def _rowwise_call(kernel, out_count, rows, d, *arrays):
+    """Launch a row-tiled kernel: (rows, d) arrays in, (rows, d) arrays out;
+    rank-1 (d,) arrays broadcast to every tile."""
+    tile = _row_tile(rows)
+    in_specs = []
+    for a in arrays:
+        if a.ndim == 2:
+            in_specs.append(pl.BlockSpec((tile, d), lambda i: (i, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((d,), lambda i: (0,)))
+    out_spec = pl.BlockSpec((tile, d), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((rows, d), arrays[0].dtype)
+    if out_count > 1:
+        out_spec = [out_spec] * out_count
+        out_shape = [out_shape] * out_count
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // tile,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )(*arrays)
+
+
+# ------------------------------------------------------------- layernorm --
+
+def _ln_fwd_kernel(x_ref, g_ref, b_ref, y_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y_ref[...] = (x - mu) / jnp.sqrt(var + EPS) * g_ref[...] + b_ref[...]
+
+
+def _ln_xhat_kernel(x_ref, xhat_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    xhat_ref[...] = (x - mu) / jnp.sqrt(var + EPS)
+
+
+def _ln_bwd_dx_kernel(x_ref, g_ref, dy_ref, dx_ref):
+    """dx for y = xhat·g + b:
+    dx = (dyg − mean(dyg) − xhat·mean(dyg·xhat)) / σ, with dyg = dy·g."""
+    x = x_ref[...]
+    dy = dy_ref[...]
+    g = g_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    inv = 1.0 / jnp.sqrt(var + EPS)
+    xhat = (x - mu) * inv
+    dyg = dy * g
+    m1 = jnp.mean(dyg, axis=-1, keepdims=True)
+    m2 = jnp.mean(dyg * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = (dyg - m1 - xhat * m2) * inv
+
+
+@jax.custom_vjp
+def layernorm(x, g, b):
+    """Row-wise layer normalization over the last axis of ``x[(rows, d)]``."""
+    rows, d = x.shape
+    return _rowwise_call(_ln_fwd_kernel, 1, rows, d, x, g, b)
+
+
+def _ln_vjp_fwd(x, g, b):
+    return layernorm(x, g, b), (x, g)
+
+
+def _ln_vjp_bwd(res, dy):
+    x, g = res
+    rows, d = x.shape
+    dx = _rowwise_call(_ln_bwd_dx_kernel, 1, rows, d, x, g, dy)
+    xhat = _rowwise_call(_ln_xhat_kernel, 1, rows, d, x)
+    dg = jnp.sum(dy * xhat, axis=0)
+    db = jnp.sum(dy, axis=0)
+    return dx, dg, db
+
+
+layernorm.defvjp(_ln_vjp_fwd, _ln_vjp_bwd)
+
+
+# ------------------------------------------------------------------ gelu --
+
+_C = 0.7978845608028654  # sqrt(2/pi)
+_A = 0.044715
+
+
+def _gelu_fwd_kernel(x_ref, y_ref):
+    x = x_ref[...]
+    u = _C * (x + _A * x**3)
+    y_ref[...] = 0.5 * x * (1.0 + jnp.tanh(u))
+
+
+def _gelu_bwd_kernel(x_ref, dy_ref, dx_ref):
+    x = x_ref[...]
+    dy = dy_ref[...]
+    u = _C * (x + _A * x**3)
+    t = jnp.tanh(u)
+    du = _C * (1.0 + 3.0 * _A * x**2)
+    dx_ref[...] = dy * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * du)
+
+
+@jax.custom_vjp
+def gelu(x):
+    """tanh-approximated GELU over ``x[(rows, d)]``, row-tiled."""
+    rows, d = x.shape
+    return _rowwise_call(_gelu_fwd_kernel, 1, rows, d, x)
+
+
+def _gelu_vjp_fwd(x):
+    return gelu(x), (x,)
+
+
+def _gelu_vjp_bwd(res, dy):
+    (x,) = res
+    rows, d = x.shape
+    return (_rowwise_call(_gelu_bwd_kernel, 1, rows, d, x, dy),)
+
+
+gelu.defvjp(_gelu_vjp_fwd, _gelu_vjp_bwd)

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: blocked vector reduction (elementwise sum).
+
+This is the collective data path's compute hot-spot — the "GPU vector
+reduction kernel" of the paper's custom reduce-scatter (§III-B, Fig. 4) and
+of PCCL's GPU-offloaded combines. On a real TPU the kernel streams both
+operands through VMEM once (HBM-roofline bound, no MXU work by design);
+here it is lowered with ``interpret=True`` so the CPU PJRT client can run
+the resulting plain-HLO ops (see DESIGN.md §Hardware-Adaptation).
+
+VMEM budget: BLOCK = 64 Ki f32 per operand ⇒ 3 buffers × 256 KiB = 768 KiB,
+comfortably under the ~16 MiB VMEM of a TPU core while being large enough
+to amortize grid overhead.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# f32 elements per VMEM block (256 KiB per operand buffer).
+BLOCK = 64 * 1024
+
+
+def _sum_kernel(x_ref, y_ref, o_ref):
+    """One grid step: o = x + y over a VMEM-resident block."""
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def reduce_sum(x, y, block: int = BLOCK):
+    """Elementwise ``x + y`` over equal-length rank-1 f32 buffers.
+
+    The grid tiles the (flat) buffer in ``block``-element chunks; lengths
+    must be a multiple of ``block`` (the Rust caller pads or falls back to
+    its native reducer for the tail — measured faster than a pad-copy).
+    """
+    n = x.shape[0]
+    if n % block != 0:
+        raise ValueError(f"length {n} not a multiple of block {block}")
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def _sum_many_kernel(x_ref, o_ref):
+    """K-way tree reduction of a (K, block) tile into (block,)."""
+    o_ref[...] = jnp.sum(x_ref[...], axis=0)
+
+
+def reduce_sum_many(stacked, block: int = BLOCK):
+    """Reduce ``stacked[k, n]`` over axis 0 — the k-way combine used when a
+    rank receives several partials in one hierarchical round."""
+    k, n = stacked.shape
+    if n % block != 0:
+        raise ValueError(f"length {n} not a multiple of block {block}")
+    grid = (n // block,)
+    return pl.pallas_call(
+        _sum_many_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), stacked.dtype),
+        interpret=True,
+    )(stacked)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the L1 Pallas kernels — the correctness contract
+checked by pytest/hypothesis at build time (kernel vs ref allclose)."""
+
+import jax.numpy as jnp
+
+
+def reduce_sum(x, y):
+    return x + y
+
+
+def reduce_sum_many(stacked):
+    return jnp.sum(stacked, axis=0)
+
+
+def unshuffle(buf, n_nodes: int, m_local: int, block: int):
+    """(local, node, block) → (node, local, block), flat in/out."""
+    return (
+        buf.reshape(m_local, n_nodes, block)
+        .transpose(1, 0, 2)
+        .reshape(-1)
+    )
+
+
+def shuffle_gather(buf, n_nodes: int, m_local: int, block: int):
+    """(node, local, block) → (local, node, block), flat in/out."""
+    return (
+        buf.reshape(n_nodes, m_local, block)
+        .transpose(1, 0, 2)
+        .reshape(-1)
+    )
+
+
+def layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    # tanh approximation (matches the kernel).
+    c = jnp.sqrt(2.0 / jnp.pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: hierarchical unshuffle (device-local transpose).
+
+Step 3 of the paper's two-level all-gather (Fig. 5): after the inter- then
+intra-node gathers the output sits in ``(local_id, node)`` block order and
+must be permuted to global ``(node, local_id)`` rank order. The paper
+implements this "as a transpose kernel" on the GPU; here it is a Pallas
+kernel whose grid walks the (node, local) block matrix and copies one
+contiguous ``block``-sized chunk per step — every VMEM move is contiguous,
+so the kernel is pure bandwidth (no lane shuffles needed).
+"""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def unshuffle(buf, n_nodes: int, m_local: int, block: int):
+    """Permute ``(local, node, block)`` → ``(node, local, block)`` order.
+
+    ``buf`` is the flat ``m_local·n_nodes·block`` buffer produced by the
+    intra-node all-gather; the result is in global rank order.
+    """
+    n = buf.shape[0]
+    if n != n_nodes * m_local * block:
+        raise ValueError(f"buffer {n} != {m_local}x{n_nodes}x{block}")
+    x = buf.reshape(m_local, n_nodes, block)
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid=(n_nodes, m_local),
+        # Read block (l, n); write it to (n, l): the index maps express the
+        # HBM↔VMEM schedule that a CUDA version would do with threadblocks.
+        in_specs=[pl.BlockSpec((1, 1, block), lambda n_, l: (l, n_, 0))],
+        out_specs=pl.BlockSpec((1, 1, block), lambda n_, l: (n_, l, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_nodes, m_local, block), buf.dtype),
+        interpret=True,
+    )(x)
+    return out.reshape(-1)
+
+
+def shuffle_gather(buf, n_nodes: int, m_local: int, block: int):
+    """Inverse permutation (the reduce-scatter pre-shuffle)."""
+    n = buf.shape[0]
+    if n != n_nodes * m_local * block:
+        raise ValueError(f"buffer {n} != {n_nodes}x{m_local}x{block}")
+    x = buf.reshape(n_nodes, m_local, block)
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid=(m_local, n_nodes),
+        in_specs=[pl.BlockSpec((1, 1, block), lambda l, n_: (n_, l, 0))],
+        out_specs=pl.BlockSpec((1, 1, block), lambda l, n_: (l, n_, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_local, n_nodes, block), buf.dtype),
+        interpret=True,
+    )(x)
+    return out.reshape(-1)

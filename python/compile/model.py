@@ -1,0 +1,153 @@
+"""L2: GPT-style decoder (Table-II architecture family, laptop-scaled) in
+JAX, calling the L1 Pallas kernels for layernorm/GELU. Lowered once by
+``aot.py``; never imported at runtime.
+
+The model matches the paper's workloads structurally (token + learned
+positional embeddings, pre-LN blocks, causal attention, 4× MLP, untied LM
+head); the default configuration is scaled to what one CPU core can train
+for a few hundred steps (the substitution table in DESIGN.md records this).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # Default scale is set by the runtime substrate: the published `xla`
+    # crate pins xla_extension 0.5.1, whose CPU backend executes this model
+    # ~35× slower than a current jaxlib (measured in EXPERIMENTS.md §Perf).
+    # These defaults keep the end-to-end DDP example at ≈100 ms/step so a
+    # few-hundred-step loss curve completes in minutes on one core.
+    vocab: int = 256
+    seq: int = 32
+    d_model: int = 64
+    layers: int = 2
+    heads: int = 4
+    batch_per_rank: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+# Parameter layout: a flat list of arrays with parallel names — explicit
+# ordering is the AOT contract with the Rust side (manifest param_names).
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    spec = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for l in range(cfg.layers):
+        d, h = cfg.d_model, 4 * cfg.d_model
+        spec += [
+            (f"l{l}.ln1_g", (d,)),
+            (f"l{l}.ln1_b", (d,)),
+            (f"l{l}.qkv", (d, 3 * d)),
+            (f"l{l}.attn_o", (d, d)),
+            (f"l{l}.ln2_g", (d,)),
+            (f"l{l}.ln2_b", (d,)),
+            (f"l{l}.mlp_up", (d, h)),
+            (f"l{l}.mlp_down", (h, d)),
+        ]
+    spec += [
+        ("ln_f_g", (cfg.d_model,)),
+        ("ln_f_b", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def init_params(seed, cfg: ModelConfig) -> List[jax.Array]:
+    """Deterministic initialization from an i32 seed scalar (AOT entry
+    ``init_params`` — identical replicas on every rank, Python-free)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b",)):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 0.02 if "emb" in name else 1.0 / jnp.sqrt(fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _attention(x, qkv_w, o_w, cfg: ModelConfig):
+    """Multi-head causal self-attention over x[(tokens, d)] per batch row."""
+    t, d = x.shape
+    qkv = x @ qkv_w  # (t, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    def heads(a):
+        return a.reshape(t, cfg.heads, cfg.d_head).transpose(1, 0, 2)
+    q, k, v = heads(q), heads(k), heads(v)  # (h, t, dh)
+    scores = q @ k.transpose(0, 2, 1) / jnp.sqrt(cfg.d_head).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, :, :], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(1, 0, 2).reshape(t, d)
+    return out @ o_w
+
+
+def forward(params: List[jax.Array], tokens, cfg: ModelConfig):
+    """Logits for tokens[(batch, seq)] → (batch, seq, vocab)."""
+    it = iter(params)
+    tok_emb = next(it)
+    pos_emb = next(it)
+    b, t = tokens.shape
+
+    x = tok_emb[tokens] + pos_emb[None, :t, :]
+
+    def flat(z):
+        return z.reshape(b * t, cfg.d_model)
+
+    def unflat(z):
+        return z.reshape(b, t, cfg.d_model)
+
+    for _ in range(cfg.layers):
+        ln1_g, ln1_b = next(it), next(it)
+        qkv_w, o_w = next(it), next(it)
+        ln2_g, ln2_b = next(it), next(it)
+        up_w, down_w = next(it), next(it)
+        h = unflat(fused.layernorm(flat(x), ln1_g, ln1_b))
+        attn = jax.vmap(lambda row: _attention(row, qkv_w, o_w, cfg))(h)
+        x = x + attn
+        h2 = fused.layernorm(flat(x), ln2_g, ln2_b)
+        mlp = fused.gelu(h2 @ up_w) @ down_w
+        x = x + unflat(mlp)
+
+    ln_f_g, ln_f_b = next(it), next(it)
+    head = next(it)
+    x = fused.layernorm(flat(x), ln_f_g, ln_f_b)
+    return (x @ head).reshape(b, t, cfg.vocab)
+
+
+def loss_fn(params, tokens_with_target, cfg: ModelConfig):
+    """Mean next-token cross-entropy. ``tokens_with_target`` is
+    ``(batch, seq+1)``: columns [0, seq) are inputs, [1, seq+1) targets."""
+    inputs = tokens_with_target[:, :-1]
+    targets = tokens_with_target[:, 1:]
+    logits = forward(params, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return -jnp.mean(picked)
+
+
+def train_step(params, tokens_with_target, cfg: ModelConfig):
+    """AOT entry ``train_step``: returns (loss, *grads) — the gradient
+    communication (all-reduce / reduce-scatter) happens in Rust."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens_with_target, cfg))(params)
+    return (loss, *grads)

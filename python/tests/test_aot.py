@@ -1,0 +1,70 @@
+"""AOT pipeline checks: HLO-text lowering round-trips through the format
+the Rust loader expects, and the manifest contract is well-formed."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import reduce as kreduce
+
+
+def test_to_hlo_text_is_parseable_hlo():
+    f32 = jax.ShapeDtypeStruct((128,), jnp.float32)
+    lowered = jax.jit(lambda x, y: (kreduce.reduce_sum(x, y, block=128),)).lower(f32, f32)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:80]
+    assert "f32[128]" in text
+    # return_tuple=True: the root computation returns a tuple.
+    assert "(f32[128]" in text
+
+
+def test_lower_entry_writes_file_and_entry(tmp_path):
+    f32 = jax.ShapeDtypeStruct((64,), jnp.float32)
+    entry = aot.lower_entry(
+        str(tmp_path),
+        "toy",
+        lambda x: (x * 2.0,),
+        (f32,),
+        [aot.spec((64,))],
+        [aot.spec((64,))],
+    )
+    assert entry["file"] == "toy.hlo.txt"
+    assert (tmp_path / "toy.hlo.txt").exists()
+    assert entry["inputs"][0]["shape"] == [64]
+    assert entry["outputs"][0]["dtype"] == "f32"
+
+
+def test_manifest_contract_matches_model(tmp_path, monkeypatch):
+    # Full pipeline into a temp dir with the (small) default config.
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out", str(tmp_path)]
+    )
+    aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    names = set(manifest["entries"])
+    assert {"init_params", "train_step"} <= names
+    assert any(n.startswith("reduce_sum_") for n in names)
+    assert any(n.startswith("unshuffle_") for n in names)
+    # Every referenced file exists.
+    for e in manifest["entries"].values():
+        assert (tmp_path / e["file"]).exists()
+    # Model metadata is internally consistent and matches model.py.
+    cfg = model.ModelConfig()
+    meta = manifest["model"]
+    assert meta["vocab_size"] == cfg.vocab
+    assert meta["seq_len"] == cfg.seq
+    assert len(meta["param_names"]) == len(meta["param_shapes"])
+    total = sum(
+        int(jnp.prod(jnp.array(s))) for s in meta["param_shapes"]
+    )
+    assert total == meta["param_count"] == model.param_count(cfg)
+    # train_step: inputs = params + tokens; outputs = loss + grads.
+    ts = manifest["entries"]["train_step"]
+    assert len(ts["inputs"]) == len(meta["param_names"]) + 1
+    assert len(ts["outputs"]) == len(meta["param_names"]) + 1
+    assert ts["outputs"][0]["shape"] == []
+    assert ts["inputs"][-1]["dtype"] == "i32"

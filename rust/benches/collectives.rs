@@ -1,0 +1,61 @@
+//! Bench: real data-plane collectives, every backend — the end-to-end hot
+//! path of the library (used by the §Perf iteration log).
+//!
+//! Each measurement spawns one world and runs `INNER` back-to-back
+//! collectives inside it, so thread spawn/join is amortized and the number
+//! reflects the per-collective hot path.
+
+use pccl::backends::{all_gather, all_reduce, reduce_scatter, Backend, CollectiveOptions};
+use pccl::comm::CommWorld;
+use pccl::topology::Topology;
+use pccl::util::microbench::{section, Bench};
+
+const INNER: usize = 32;
+
+fn main() {
+    let topo = Topology::new(2, 4, 2).unwrap();
+    let elems = 64 * 1024; // 256 KiB/rank
+    let bytes = (elems * 4 * INNER) as u64;
+    for backend in [Backend::Vendor, Backend::PcclRing, Backend::PcclRec] {
+        section(&format!("collectives/{} ({} ops/iter)", backend.label(), INNER));
+
+        let world = CommWorld::<f32>::with_topology(topo);
+        Bench::new(format!("all_gather/8rk/{}", backend.label())).run_bytes(bytes, || {
+            world.run(move |comm| {
+                let input = vec![comm.rank() as f32; elems / comm.size()];
+                let opts = CollectiveOptions::default().backend(backend);
+                let mut total = 0usize;
+                for _ in 0..INNER {
+                    total += all_gather(comm, &input, &opts).unwrap().len();
+                }
+                total
+            })
+        });
+
+        let world = CommWorld::<f32>::with_topology(topo);
+        Bench::new(format!("reduce_scatter/8rk/{}", backend.label())).run_bytes(bytes, || {
+            world.run(move |comm| {
+                let input = vec![1.0f32; elems];
+                let opts = CollectiveOptions::default().backend(backend);
+                let mut total = 0usize;
+                for _ in 0..INNER {
+                    total += reduce_scatter(comm, &input, &opts).unwrap().len();
+                }
+                total
+            })
+        });
+
+        let world = CommWorld::<f32>::with_topology(topo);
+        Bench::new(format!("all_reduce/8rk/{}", backend.label())).run_bytes(bytes, || {
+            world.run(move |comm| {
+                let input = vec![1.0f32; elems];
+                let opts = CollectiveOptions::default().backend(backend);
+                let mut total = 0usize;
+                for _ in 0..INNER {
+                    total += all_reduce(comm, &input, &opts).unwrap().len();
+                }
+                total
+            })
+        });
+    }
+}

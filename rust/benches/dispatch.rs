@@ -1,0 +1,26 @@
+//! Bench: dispatcher inference latency (it sits on the collective call
+//! path, so it must be negligible — microseconds).
+
+use pccl::backends::CollKind;
+use pccl::dispatch::SvmDispatcher;
+use pccl::topology::Machine;
+use pccl::util::microbench::{section, Bench};
+
+fn main() {
+    section("dispatch");
+    let dispatcher = SvmDispatcher::train(
+        Machine::Frontier,
+        &[16, 64, 256, 1024],
+        &[32, 128, 512, 2048],
+        3,
+        9,
+    )
+    .expect("train dispatcher");
+    let mut i = 0usize;
+    Bench::new("dispatch/choose").run(|| {
+        i = i.wrapping_add(1);
+        let msg = (16 + (i % 64)) << 20;
+        let ranks = 32 << (i % 7);
+        dispatcher.choose(CollKind::AllGather, msg, ranks)
+    });
+}

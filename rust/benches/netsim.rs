@@ -1,0 +1,27 @@
+//! Bench: netsim throughput — the figure harness runs thousands of
+//! simulations, so a single simulation must stay in the microsecond range.
+
+use pccl::backends::CollKind;
+use pccl::netsim::libmodel::{simulate, LibModel};
+use pccl::topology::Machine;
+use pccl::util::microbench::{section, Bench};
+
+fn main() {
+    section("netsim/simulate (10 trials, 2048 ranks)");
+    for (label, lib) in [("vendor", LibModel::Vendor), ("pccl_rec", LibModel::PcclRec)] {
+        Bench::new(format!("simulate/{label}")).run(|| {
+            simulate(
+                Machine::Frontier,
+                lib,
+                CollKind::ReduceScatter,
+                256 << 20,
+                2048,
+                10,
+                3,
+            )
+            .unwrap()
+            .stats
+            .mean()
+        });
+    }
+}

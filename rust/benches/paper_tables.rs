@@ -1,0 +1,37 @@
+//! Bench: one benchmark per paper table/figure — times the regeneration of
+//! each experiment so `cargo bench` exercises the full harness end to end
+//! (the actual rows land in `results/` via `pccl figures all`).
+
+use std::time::Duration;
+
+use pccl::bench::figures;
+use pccl::topology::Machine;
+use pccl::util::microbench::{section, Bench};
+
+fn main() {
+    section("paper figure regeneration");
+    let quick = Bench::new("fig1_allgather_scaling").budget(Duration::from_millis(800));
+    quick.run(|| figures::fig1().unwrap().cells.len());
+    Bench::new("fig2_msgsize_distributions").run(|| figures::fig2().len());
+    Bench::new("fig3_nic_counters")
+        .budget(Duration::from_millis(800))
+        .run(|| figures::fig3().unwrap().0.cells.len());
+    Bench::new("fig4_reduce_scatter_small_scale")
+        .budget(Duration::from_millis(800))
+        .run(|| figures::fig4().unwrap().cells.len());
+    Bench::new("fig6_rec_vs_ring_heatmap")
+        .budget(Duration::from_millis(800))
+        .run(|| figures::fig6().unwrap().cells.len());
+    Bench::new("fig12_zero3_strong_scaling")
+        .budget(Duration::from_millis(800))
+        .run(|| figures::fig12().unwrap().cells.len());
+    Bench::new("fig13_ddp_strong_scaling")
+        .budget(Duration::from_millis(800))
+        .run(|| figures::fig13().unwrap().cells.len());
+
+    section("paper (slow: trains SVM dispatchers)");
+    Bench::new("fig11_speedup_heatmap_frontier")
+        .warmup(Duration::from_millis(0))
+        .budget(Duration::from_millis(1))
+        .run(|| figures::fig9_or_11(Machine::Frontier).unwrap().cells.len());
+}

@@ -1,0 +1,42 @@
+//! Bench: local reduction kernels — native host loop vs the XLA-offloaded
+//! L1 Pallas kernel (ablation for the "GPU reductions" design point,
+//! Observation 1 / Fig. 4).
+//!
+//! The XLA benches are skipped if `artifacts/` has not been built.
+
+use pccl::reduction::offload::XlaReducer;
+use pccl::reduction::reduce_into;
+use pccl::runtime::{Artifacts, DeviceService};
+use pccl::util::microbench::{section, Bench};
+
+fn main() {
+    section("reduction/native");
+    for n in [1 << 12, 1 << 16, 1 << 20] {
+        let mut acc = vec![1.0f32; n];
+        let src = vec![2.0f32; n];
+        Bench::new(format!("native/{n}")).run_bytes((n * 8) as u64, || {
+            reduce_into(&mut acc, &src);
+        });
+    }
+
+    section("reduction/xla-pallas");
+    let Ok(arts) = Artifacts::load_default() else {
+        eprintln!("skipping reduction/xla: run `make artifacts` first");
+        return;
+    };
+    let Ok(service) = DeviceService::spawn(arts.clone()) else {
+        eprintln!("skipping reduction/xla: device service failed");
+        return;
+    };
+    let Ok(Some(reducer)) = XlaReducer::from_artifacts(&arts, service.handle(), 0) else {
+        eprintln!("skipping reduction/xla: no reduce_sum artifact");
+        return;
+    };
+    for n in [reducer.chunk(), 4 * reducer.chunk()] {
+        let mut acc = vec![1.0f32; n];
+        let src = vec![2.0f32; n];
+        Bench::new(format!("xla-pallas/{n}")).run_bytes((n * 8) as u64, || {
+            reducer.reduce_into(&mut acc, &src).unwrap();
+        });
+    }
+}

@@ -1,0 +1,342 @@
+//! User-facing collective backends — the library surface of PCCL.
+//!
+//! PCCL's three-pronged design (§IV): (1) call the existing library when it
+//! wins ([`Backend::Vendor`], [`Backend::CrayMpich`]); (2) new hierarchical
+//! latency-optimized implementations ([`Backend::PcclRing`],
+//! [`Backend::PcclRec`]); (3) a learning-based adaptive dispatcher that
+//! picks among all of them at runtime ([`Backend::Auto`], backed by
+//! [`crate::dispatch`]).
+//!
+//! On the in-process data plane the "existing libraries" are modeled by
+//! their algorithms: vendor (NCCL/RCCL) = flat ring AG/RS + tree all-reduce;
+//! Cray-MPICH = flat ring with host (CPU) reductions. Their *performance*
+//! models live in [`crate::netsim::libmodel`].
+
+use std::sync::Arc;
+
+use crate::collectives::{
+    hier_all_gather, hier_all_reduce, hier_reduce_scatter, ring_all_gather, ring_all_reduce,
+    ring_reduce_scatter, tree_all_reduce, InterAlgo,
+};
+use crate::comm::Communicator;
+use crate::error::Result;
+use crate::reduction::offload::{native_combine, CombineFn};
+use crate::reduction::{reduce_into_op, Elem, ReduceOp};
+
+/// Which collective implementation handles a call.
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
+pub enum Backend {
+    /// The GPU vendor library (NCCL on Perlmutter, RCCL on Frontier):
+    /// flat ring all-gather/reduce-scatter, double-binary-tree all-reduce.
+    Vendor,
+    /// Cray-MPICH: flat ring with CPU reductions and single-NIC routing
+    /// (Observation 1).
+    CrayMpich,
+    /// PCCL hierarchical collectives with ring inter-node phase.
+    PcclRing,
+    /// PCCL hierarchical collectives with recursive doubling/halving
+    /// inter-node phase.
+    PcclRec,
+    /// Learning-based adaptive dispatch over all of the above (§IV-C).
+    Auto,
+}
+
+impl Backend {
+    /// All concrete (dispatchable) backends.
+    pub const CONCRETE: [Backend; 4] = [
+        Backend::Vendor,
+        Backend::CrayMpich,
+        Backend::PcclRing,
+        Backend::PcclRec,
+    ];
+
+    /// Stable label used in tables, figures, and model files.
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Vendor => "vendor",
+            Backend::CrayMpich => "cray-mpich",
+            Backend::PcclRing => "pccl_ring",
+            Backend::PcclRec => "pccl_rec",
+            Backend::Auto => "pccl_auto",
+        }
+    }
+
+    /// Index into [`Backend::CONCRETE`] (dispatcher class id).
+    pub fn class_id(self) -> Option<usize> {
+        Backend::CONCRETE.iter().position(|&b| b == self)
+    }
+}
+
+/// The collective being dispatched (a dispatcher feature).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollKind {
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+}
+
+impl CollKind {
+    pub const ALL: [CollKind; 3] = [
+        CollKind::AllGather,
+        CollKind::ReduceScatter,
+        CollKind::AllReduce,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CollKind::AllGather => "all-gather",
+            CollKind::ReduceScatter => "reduce-scatter",
+            CollKind::AllReduce => "all-reduce",
+        }
+    }
+}
+
+/// A runtime backend chooser: `(collective, message bytes, ranks) → backend`.
+/// Implemented by [`crate::dispatch::SvmDispatcher`]; any closure works.
+pub type Chooser = Arc<dyn Fn(CollKind, usize, usize) -> Backend + Send + Sync>;
+
+/// Per-call configuration for the collective entry points.
+#[derive(Clone)]
+pub struct CollectiveOptions<T: Elem> {
+    /// Requested backend ([`Backend::Auto`] consults `chooser`).
+    pub backend: Backend,
+    /// Local combine implementation (native host loop by default; the
+    /// XLA-offloaded Pallas kernel via
+    /// [`crate::reduction::offload::XlaReducer::combine_fn`]).
+    pub combine: CombineFn<T>,
+    /// Adaptive dispatcher for [`Backend::Auto`].
+    pub chooser: Option<Chooser>,
+    /// Reduction operator (sum by default — gradient averaging).
+    pub op: ReduceOp,
+}
+
+impl<T: Elem> Default for CollectiveOptions<T> {
+    fn default() -> Self {
+        Self {
+            backend: Backend::PcclRec,
+            combine: native_combine(),
+            chooser: None,
+            op: ReduceOp::Sum,
+        }
+    }
+}
+
+impl<T: Elem> CollectiveOptions<T> {
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn combine(mut self, c: CombineFn<T>) -> Self {
+        self.combine = c;
+        self
+    }
+
+    pub fn chooser(mut self, ch: Chooser) -> Self {
+        self.chooser = Some(ch);
+        self
+    }
+
+    pub fn op(mut self, op: ReduceOp) -> Self {
+        self.op = op;
+        self
+    }
+
+    /// The combine actually used: the injected one for Sum (it may be the
+    /// XLA-offloaded kernel), a native op loop for Max/Min.
+    pub fn effective_combine(&self) -> CombineFn<T> {
+        match self.op {
+            ReduceOp::Sum => self.combine.clone(),
+            op => std::sync::Arc::new(move |acc: &mut [T], src: &[T]| {
+                reduce_into_op(acc, src, op)
+            }),
+        }
+    }
+
+    /// Resolve [`Backend::Auto`] for a concrete call site.
+    pub fn resolve(&self, kind: CollKind, bytes: usize, p: usize) -> Backend {
+        match self.backend {
+            Backend::Auto => match &self.chooser {
+                Some(ch) => ch(kind, bytes, p),
+                // Untrained fallback: the paper's coarse empirical rule —
+                // vendor ring wins in the bandwidth-bound regime (large
+                // messages, few ranks), hierarchical recursive wins in the
+                // latency-bound regime.
+                None => {
+                    let mb = bytes as f64 / (1024.0 * 1024.0);
+                    if p >= 256 || (p >= 64 && mb <= 64.0) {
+                        Backend::PcclRec
+                    } else {
+                        Backend::Vendor
+                    }
+                }
+            },
+            b => b,
+        }
+    }
+}
+
+/// All-gather through the selected backend.
+pub fn all_gather<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    opts: &CollectiveOptions<T>,
+) -> Result<Vec<T>> {
+    let bytes = std::mem::size_of_val(input) * c.size(); // output buffer size
+    match opts.resolve(CollKind::AllGather, bytes, c.size()) {
+        Backend::Vendor | Backend::CrayMpich => ring_all_gather(c, input),
+        Backend::PcclRing => hier_all_gather(c, input, InterAlgo::Ring),
+        Backend::PcclRec | Backend::Auto => hier_all_gather(c, input, InterAlgo::Rec),
+    }
+}
+
+/// Reduce-scatter through the selected backend.
+pub fn reduce_scatter<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    opts: &CollectiveOptions<T>,
+) -> Result<Vec<T>> {
+    let bytes = std::mem::size_of_val(input);
+    match opts.resolve(CollKind::ReduceScatter, bytes, c.size()) {
+        // Cray-MPICH reduces on the host no matter what combine the caller
+        // injected (Observation 1) — model that faithfully.
+        Backend::CrayMpich => {
+            let op = opts.op;
+            let cpu: CombineFn<T> =
+                std::sync::Arc::new(move |acc: &mut [T], src: &[T]| reduce_into_op(acc, src, op));
+            ring_reduce_scatter(c, input, &cpu)
+        }
+        Backend::Vendor => ring_reduce_scatter(c, input, &opts.effective_combine()),
+        Backend::PcclRing => hier_reduce_scatter(c, input, &opts.effective_combine(), InterAlgo::Ring),
+        Backend::PcclRec | Backend::Auto => {
+            hier_reduce_scatter(c, input, &opts.effective_combine(), InterAlgo::Rec)
+        }
+    }
+}
+
+/// All-reduce through the selected backend.
+pub fn all_reduce<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    opts: &CollectiveOptions<T>,
+) -> Result<Vec<T>> {
+    let bytes = std::mem::size_of_val(input);
+    match opts.resolve(CollKind::AllReduce, bytes, c.size()) {
+        Backend::CrayMpich => {
+            let op = opts.op;
+            let cpu: CombineFn<T> =
+                std::sync::Arc::new(move |acc: &mut [T], src: &[T]| reduce_into_op(acc, src, op));
+            ring_all_reduce(c, input, &cpu)
+        }
+        // Vendor libraries use double binary trees for all-reduce [15].
+        Backend::Vendor => tree_all_reduce(c, input, &opts.effective_combine()),
+        Backend::PcclRing => hier_all_reduce(c, input, &opts.effective_combine(), InterAlgo::Ring),
+        Backend::PcclRec | Backend::Auto => {
+            hier_all_reduce(c, input, &opts.effective_combine(), InterAlgo::Rec)
+        }
+    }
+}
+
+/// Broadcast from `root` (binomial tree — backend-independent).
+pub fn broadcast<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    root: usize,
+) -> Result<Vec<T>> {
+    crate::collectives::broadcast(c, input, root)
+}
+
+/// Reduce to `root` with the options' operator and combine.
+pub fn reduce<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    root: usize,
+    opts: &CollectiveOptions<T>,
+) -> Result<Vec<T>> {
+    crate::collectives::reduce(c, input, root, &opts.effective_combine())
+}
+
+/// Gather equal-length contributions to `root`.
+pub fn gather<T: Elem>(c: &mut Communicator<T>, input: &[T], root: usize) -> Result<Vec<T>> {
+    crate::collectives::gather(c, input, root)
+}
+
+/// Scatter `root`'s buffer in rank-order blocks.
+pub fn scatter<T: Elem>(c: &mut Communicator<T>, input: &[T], root: usize) -> Result<Vec<T>> {
+    crate::collectives::scatter(c, input, root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::oracle;
+    use crate::comm::CommWorld;
+    use crate::topology::Topology;
+
+    #[test]
+    fn every_backend_every_collective_matches_oracle() {
+        let topo = Topology::new(2, 4, 2).unwrap();
+        let p = topo.world_size();
+        for backend in Backend::CONCRETE {
+            let world = CommWorld::<f32>::with_topology(topo);
+            let outs = world.run(move |c| {
+                let opts = CollectiveOptions::default().backend(backend);
+                let r = c.rank();
+                let ag_in: Vec<f32> = (0..4).map(|i| (r * 10 + i) as f32).collect();
+                let rs_in: Vec<f32> = (0..p * 2).map(|i| (r + i) as f32).collect();
+                let ar_in: Vec<f32> = (0..9).map(|i| (r * 2 + i) as f32).collect();
+                (
+                    all_gather(c, &ag_in, &opts).unwrap(),
+                    reduce_scatter(c, &rs_in, &opts).unwrap(),
+                    all_reduce(c, &ar_in, &opts).unwrap(),
+                )
+            });
+            let ag_ins: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..4).map(|i| (r * 10 + i) as f32).collect())
+                .collect();
+            let rs_ins: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..p * 2).map(|i| (r + i) as f32).collect())
+                .collect();
+            let ar_ins: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..9).map(|i| (r * 2 + i) as f32).collect())
+                .collect();
+            for (r, (ag, rs, ar)) in outs.iter().enumerate() {
+                assert_eq!(ag, &oracle::all_gather(&ag_ins), "{backend:?} ag r={r}");
+                assert_eq!(
+                    rs,
+                    &oracle::reduce_scatter(&rs_ins, r),
+                    "{backend:?} rs r={r}"
+                );
+                assert_eq!(ar, &oracle::all_reduce(&ar_ins), "{backend:?} ar r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_resolves_by_regime() {
+        let opts = CollectiveOptions::<f32>::default().backend(Backend::Auto);
+        // Large message, small p → vendor.
+        assert_eq!(
+            opts.resolve(CollKind::AllGather, 512 << 20, 16),
+            Backend::Vendor
+        );
+        // Small message, large p → hierarchical recursive.
+        assert_eq!(
+            opts.resolve(CollKind::AllGather, 16 << 20, 2048),
+            Backend::PcclRec
+        );
+    }
+
+    #[test]
+    fn custom_chooser_is_consulted() {
+        let opts = CollectiveOptions::<f32>::default()
+            .backend(Backend::Auto)
+            .chooser(Arc::new(|_, _, _| Backend::PcclRing));
+        assert_eq!(
+            opts.resolve(CollKind::AllReduce, 1024, 4),
+            Backend::PcclRing
+        );
+    }
+}

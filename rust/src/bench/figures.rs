@@ -1,0 +1,376 @@
+//! Generators for every figure/table of the paper's evaluation
+//! (DESIGN.md §4 maps each to its modules). Each returns [`Table`]s whose
+//! rows are the series the paper plots; the CLI prints them and writes CSV.
+
+use crate::backends::CollKind;
+use crate::dispatch::SvmDispatcher;
+use crate::error::Result;
+use crate::metrics::Stats;
+use crate::netsim::libmodel::{schedule, simulate, LibModel};
+use crate::netsim::NicCounters;
+use crate::topology::Machine;
+use crate::workload::msgsizes::{message_sizes, Framework};
+use crate::workload::steptime::{ddp_step, zero3_step};
+use crate::workload::transformer::{TransformerConfig, GPT_13B, GPT_1_3B, GPT_7B};
+
+use super::Table;
+
+const MB: usize = 1 << 20;
+const TRIALS: usize = 10;
+const SEED: u64 = 0xF16;
+
+fn sim_cell(
+    table: &mut Table,
+    machine: Machine,
+    lib: LibModel,
+    kind: CollKind,
+    msg: usize,
+    ranks: usize,
+) -> Result<()> {
+    let out = simulate(machine, lib, kind, msg, ranks, TRIALS, SEED)?;
+    table.push(lib.label(machine), msg, ranks, out.stats);
+    Ok(())
+}
+
+/// Fig. 1: all-gather scaling of RCCL (Frontier), Cray-MPICH (Frontier),
+/// NCCL (Perlmutter) at 64/128 MB output buffers.
+pub fn fig1() -> Result<Table> {
+    let mut t = Table::new("Fig 1: all-gather time vs processes (64/128 MB)");
+    for &msg in &[64 * MB, 128 * MB] {
+        for &p in &[64, 128, 256, 512, 1024, 2048] {
+            sim_cell(&mut t, Machine::Frontier, LibModel::Vendor, CollKind::AllGather, msg, p)?;
+            sim_cell(&mut t, Machine::Frontier, LibModel::CrayMpich, CollKind::AllGather, msg, p)?;
+            sim_cell(&mut t, Machine::Perlmutter, LibModel::Vendor, CollKind::AllGather, msg, p)?;
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 2: message-size distributions per framework and model size.
+pub fn fig2() -> Vec<(String, String, usize, usize, usize, usize)> {
+    let mut rows = Vec::new();
+    let configs: [&TransformerConfig; 3] = [&GPT_1_3B, &GPT_7B, &GPT_13B];
+    for cfg in configs {
+        for fw in [Framework::Fsdp, Framework::Zero3, Framework::Axonn, Framework::Ddp] {
+            let d = message_sizes(fw, cfg);
+            rows.push((
+                d.framework.to_string(),
+                d.model.to_string(),
+                d.sizes.len(),
+                d.min(),
+                d.median(),
+                d.max(),
+            ));
+        }
+    }
+    rows
+}
+
+/// Fig. 3: Cray-MPICH vs RCCL all-gather at small scale (left) plus the
+/// per-NIC read/write packet counters (middle, right).
+pub fn fig3() -> Result<(Table, Vec<(String, NicCounters)>)> {
+    let mut t = Table::new("Fig 3: Cray-MPICH vs RCCL all-gather, 256/512 MB, small scale");
+    let mut counters = Vec::new();
+    for &msg in &[256 * MB, 512 * MB] {
+        for &p in &[8, 16, 32, 64] {
+            sim_cell(&mut t, Machine::Frontier, LibModel::CrayMpich, CollKind::AllGather, msg, p)?;
+            sim_cell(&mut t, Machine::Frontier, LibModel::Vendor, CollKind::AllGather, msg, p)?;
+        }
+    }
+    for lib in [LibModel::CrayMpich, LibModel::Vendor] {
+        let (_, c, _) = schedule(Machine::Frontier, lib, CollKind::AllGather, 256 * MB, 64)?;
+        counters.push((lib.label(Machine::Frontier), c));
+    }
+    Ok((t, counters))
+}
+
+/// Fig. 4: reduce-scatter — Cray-MPICH vs RCCL vs the custom
+/// MPI-p2p + GPU-kernel implementation.
+pub fn fig4() -> Result<Table> {
+    let mut t = Table::new("Fig 4: reduce-scatter, Cray-MPICH vs RCCL vs custom p2p+GPU");
+    for &msg in &[256 * MB, 512 * MB] {
+        for &p in &[8, 16, 32, 64] {
+            sim_cell(&mut t, Machine::Frontier, LibModel::CrayMpich, CollKind::ReduceScatter, msg, p)?;
+            sim_cell(&mut t, Machine::Frontier, LibModel::Vendor, CollKind::ReduceScatter, msg, p)?;
+            sim_cell(&mut t, Machine::Frontier, LibModel::Custom, CollKind::ReduceScatter, msg, p)?;
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 6: speedup heatmap of recursive halving over ring for the
+/// inter-node phase of reduce-scatter.
+pub fn fig6() -> Result<Table> {
+    let mut t = Table::new("Fig 6: rec-halving/ring speedup heatmap (reduce-scatter)");
+    for &mb in &[1usize, 4, 16, 64, 256, 1024] {
+        for &p in &[8usize, 32, 128, 512, 2048] {
+            let ring = simulate(Machine::Frontier, LibModel::PcclRing, CollKind::ReduceScatter, mb * MB, p, TRIALS, SEED)?;
+            let rec = simulate(Machine::Frontier, LibModel::PcclRec, CollKind::ReduceScatter, mb * MB, p, TRIALS, SEED)?;
+            // Encode the speedup as "mean" of a one-sample stat.
+            t.push(
+                "rec_over_ring",
+                mb * MB,
+                p,
+                Stats::from_iter([ring.stats.mean() / rec.stats.mean()]),
+            );
+        }
+    }
+    Ok(t)
+}
+
+/// Table I: SVM dispatcher test accuracy per machine × collective.
+pub fn table1(trials: usize) -> Result<Vec<(String, String, usize, usize, f64)>> {
+    let sizes: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+    let ranks: Vec<usize> = vec![4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048];
+    let mut rows = Vec::new();
+    for machine in [Machine::Frontier, Machine::Perlmutter] {
+        // Perlmutter's smallest deployment is 2 nodes × 4 GPUs.
+        let ranks: Vec<usize> = ranks
+            .iter()
+            .copied()
+            .filter(|&p| p >= machine.params().gpus_per_node)
+            .collect();
+        let d = SvmDispatcher::train(machine, &sizes, &ranks, trials, SEED)?;
+        for (coll, test_size, correct, acc) in d.table1() {
+            rows.push((machine.params().name.to_string(), coll, test_size, correct, acc));
+        }
+    }
+    Ok(rows)
+}
+
+/// Figs. 8 & 10: line plots — Cray-MPICH vs vendor vs PCCL-adaptive for
+/// all three collectives on one machine.
+pub fn fig8_or_10(machine: Machine) -> Result<Table> {
+    let name = machine.params().name;
+    let mut t = Table::new(format!(
+        "Fig {}: collectives vs process count on {name}",
+        if machine == Machine::Frontier { 10 } else { 8 }
+    ));
+    let dispatcher = trained_dispatcher(machine)?;
+    for (kind, sizes) in [
+        (CollKind::AllGather, [256 * MB, 512 * MB]),
+        (CollKind::ReduceScatter, [256 * MB, 512 * MB]),
+        (CollKind::AllReduce, [64 * MB, 128 * MB]),
+    ] {
+        for &msg in &sizes {
+            for &p in &[32, 64, 128, 256, 512, 1024, 2048] {
+                sim_cell(&mut t, machine, LibModel::CrayMpich, kind, msg, p)?;
+                sim_cell(&mut t, machine, LibModel::Vendor, kind, msg, p)?;
+                // PCCL with adaptive dispatch.
+                let backend = dispatcher.choose(kind, msg, p);
+                let lib = LibModel::from_backend(backend).unwrap_or(LibModel::PcclRec);
+                let out = simulate(machine, lib, kind, msg, p, TRIALS, SEED)?;
+                let mut label = String::from("pccl_auto:");
+                label.push_str(&format!("{kind:?}"));
+                let _ = label;
+                t.push("pccl_auto", msg, p, out.stats);
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Figs. 9 & 11: speedup heatmaps of PCCL-adaptive over the vendor
+/// library across (message size × process count).
+pub fn fig9_or_11(machine: Machine) -> Result<Table> {
+    let mut t = Table::new(format!(
+        "Fig {}: PCCL/vendor speedup heatmap on {}",
+        if machine == Machine::Frontier { 11 } else { 9 },
+        machine.params().name
+    ));
+    let dispatcher = trained_dispatcher(machine)?;
+    for kind in CollKind::ALL {
+        for &mb in &[16usize, 32, 64, 128, 256, 512, 1024] {
+            for &p in &[32usize, 64, 128, 256, 512, 1024, 2048] {
+                let vendor = simulate(machine, LibModel::Vendor, kind, mb * MB, p, TRIALS, SEED)?;
+                let backend = dispatcher.choose(kind, mb * MB, p);
+                let lib = LibModel::from_backend(backend).unwrap_or(LibModel::PcclRec);
+                let pccl = simulate(machine, lib, kind, mb * MB, p, TRIALS, SEED)?;
+                let series = format!("{}-speedup", kind.label());
+                t.push(
+                    series,
+                    mb * MB,
+                    p,
+                    Stats::from_iter([vendor.stats.mean() / pccl.stats.mean()]),
+                );
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 12: ZeRO-3 strong scaling (GPT-7B/13B) on both machines.
+pub fn fig12() -> Result<Table> {
+    let mut t = Table::new("Fig 12: ZeRO-3 strong scaling batch time (GPT-7B/13B)");
+    let tokens = 4_000_000;
+    for (machine, ranks) in [
+        (Machine::Frontier, vec![128usize, 256, 512, 1024, 2048]),
+        (Machine::Perlmutter, vec![256, 512, 1024, 2048]),
+    ] {
+        for cfg in [&GPT_7B, &GPT_13B] {
+            for &p in &ranks {
+                for lib in [LibModel::Vendor, LibModel::PcclRec] {
+                    let st = zero3_step(machine, lib, cfg, p, tokens)?;
+                    let series = format!(
+                        "{}/{}/{}",
+                        machine.params().name,
+                        cfg.name,
+                        lib.label(machine)
+                    );
+                    t.push(series, cfg.param_count(), p, Stats::from_iter([st.total_s]));
+                }
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 13: DDP strong scaling (GPT-1.3B) on Frontier.
+pub fn fig13() -> Result<Table> {
+    let mut t = Table::new("Fig 13: DDP strong scaling batch time (GPT-1.3B, Frontier)");
+    let tokens = 1_000_000;
+    for &p in &[128usize, 256, 512, 1024, 2048] {
+        for lib in [LibModel::Vendor, LibModel::PcclRec] {
+            let st = ddp_step(Machine::Frontier, lib, &GPT_1_3B, p, tokens)?;
+            t.push(
+                format!("frontier/GPT-1.3B/{}", lib.label(Machine::Frontier)),
+                GPT_1_3B.param_count(),
+                p,
+                Stats::from_iter([st.total_s]),
+            );
+        }
+    }
+    Ok(t)
+}
+
+/// Train (or reuse a cached) dispatcher for figure generation. Uses a
+/// medium sweep — enough for the regime boundary to be learned.
+pub fn trained_dispatcher(machine: Machine) -> Result<SvmDispatcher> {
+    let sizes: Vec<usize> = vec![16, 32, 64, 128, 256, 512, 1024];
+    let ranks: Vec<usize> = vec![32, 64, 128, 256, 512, 1024, 2048];
+    SvmDispatcher::train(machine, &sizes, &ranks, 3, SEED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shape_vendor_linear_pccl_absent() {
+        let t = fig1().unwrap();
+        // RCCL time at 2048 ≫ at 128 for 64 MB (linear latency growth).
+        let r128 = t.mean("rccl", 64 * MB, 128).unwrap();
+        let r2048 = t.mean("rccl", 64 * MB, 2048).unwrap();
+        assert!(r2048 / r128 > 6.0, "ratio {:.1}", r2048 / r128);
+    }
+
+    #[test]
+    fn fig2_rows_cover_all_frameworks() {
+        let rows = fig2();
+        assert_eq!(rows.len(), 12);
+        assert!(rows.iter().any(|r| r.0 == "AxoNN" && r.1 == "GPT-13B"));
+    }
+
+    #[test]
+    fn fig4_ordering_cray_worst_custom_between() {
+        let t = fig4().unwrap();
+        let cray = t.mean("cray-mpich", 512 * MB, 64).unwrap();
+        let rccl = t.mean("rccl", 512 * MB, 64).unwrap();
+        let custom = t.mean("custom-p2p-gpu", 512 * MB, 64).unwrap();
+        assert!(cray > custom && custom > rccl);
+    }
+
+    #[test]
+    fn fig6_corners() {
+        let t = fig6().unwrap();
+        // Latency-bound corner (small msg, many ranks): rec wins (>1).
+        assert!(t.mean("rec_over_ring", MB, 2048).unwrap() > 1.5);
+        // Bandwidth-bound corner: ring competitive (speedup ≤ ~1).
+        assert!(t.mean("rec_over_ring", 1024 * MB, 8).unwrap() < 1.3);
+    }
+}
+
+/// Ablations beyond the paper (DESIGN.md §5): (a) would NCCL's PAT
+/// algorithm close the gap if it supported multi-GPU nodes? (b) how much
+/// does chunk-pipelining the hierarchy buy? (c) does PCCL still pay off on
+/// an InfiniBand cluster without the Cassini overflow pathology?
+pub fn ablations() -> Result<Table> {
+    let mut t = Table::new("Ablations: PAT / pipelining / InfiniBand");
+    // (a) PAT vs PCCL_rec on Frontier, latency-bound regime.
+    for &mb in &[16usize, 64, 256] {
+        for &p in &[512usize, 2048] {
+            for lib in [LibModel::Vendor, LibModel::VendorPat, LibModel::PcclRec] {
+                sim_cell(&mut t, Machine::Frontier, lib, CollKind::AllGather, mb * MB, p)?;
+            }
+        }
+    }
+    // (b) pipelined vs plain hierarchy, bandwidth-heavy regime where the
+    // intra phase is long enough to hide.
+    for &mb in &[128usize, 512, 1024] {
+        for &p in &[256usize, 2048] {
+            for lib in [LibModel::PcclRec, LibModel::PcclRecPipelined] {
+                sim_cell(&mut t, Machine::Frontier, lib, CollKind::AllGather, mb * MB, p)?;
+            }
+        }
+    }
+    // (c) InfiniBand: vendor vs PCCL (paper future work).
+    for &mb in &[16usize, 256] {
+        for &p in &[256usize, 2048] {
+            for lib in [LibModel::Vendor, LibModel::PcclRec] {
+                sim_cell(&mut t, Machine::InfiniBand, lib, CollKind::AllGather, mb * MB, p)?;
+            }
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod ablation_tests {
+    use super::*;
+
+    #[test]
+    fn pat_would_fix_vendor_latency_scaling_but_not_nic_spread() {
+        let t = ablations().unwrap();
+        let rccl = t.mean("rccl", 16 * MB, 2048).unwrap();
+        let pat = t.mean("rccl-pat", 16 * MB, 2048).unwrap();
+        let pccl = t.mean("pccl_rec", 16 * MB, 2048).unwrap();
+        assert!(pat < rccl / 4.0, "PAT should fix the log-latency gap");
+        assert!(pccl < pat * 4.0, "PCCL stays competitive with ideal PAT");
+    }
+
+    #[test]
+    fn pipelining_helps_when_phases_are_comparable() {
+        let t = ablations().unwrap();
+        let plain = t.mean("pccl_rec", 1024 * MB, 2048).unwrap();
+        let piped = t.mean("pccl_rec_pipe4", 1024 * MB, 2048).unwrap();
+        assert!(piped < plain, "pipelined {piped} !< plain {plain}");
+        assert!(piped > plain * 0.4, "overlap cannot beat the dominant phase");
+    }
+
+    #[test]
+    fn infiniband_gains_exist_but_are_smaller_than_frontier() {
+        let t = ablations().unwrap();
+        let v = t.mean("nccl", 16 * MB, 2048);
+        // Label on InfiniBand is also "nccl" — disambiguate via fresh sims.
+        let _ = v;
+        let v = simulate(Machine::InfiniBand, LibModel::Vendor, CollKind::AllGather, 16 * MB, 2048, 5, 3)
+            .unwrap()
+            .stats
+            .mean();
+        let p = simulate(Machine::InfiniBand, LibModel::PcclRec, CollKind::AllGather, 16 * MB, 2048, 5, 3)
+            .unwrap()
+            .stats
+            .mean();
+        let ib_speedup = v / p;
+        let vf = simulate(Machine::Frontier, LibModel::Vendor, CollKind::AllGather, 16 * MB, 2048, 5, 3)
+            .unwrap()
+            .stats
+            .mean();
+        let pf = simulate(Machine::Frontier, LibModel::PcclRec, CollKind::AllGather, 16 * MB, 2048, 5, 3)
+            .unwrap()
+            .stats
+            .mean();
+        assert!(ib_speedup > 1.0, "PCCL should still win at scale on IB: {ib_speedup:.2}");
+        assert!(ib_speedup < vf / pf, "IB gap must be smaller than Frontier's");
+    }
+}

@@ -1,0 +1,137 @@
+//! Benchmark harness utilities shared by the CLI figure generators and the
+//! criterion benches: sweep drivers, row formatting, CSV output.
+
+pub mod figures;
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::Stats;
+
+/// One measured cell of a sweep table.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Row label (e.g. library name).
+    pub series: String,
+    /// Per-rank message size in bytes.
+    pub bytes: usize,
+    /// Rank count.
+    pub ranks: usize,
+    /// Trial statistics (seconds).
+    pub stats: Stats,
+}
+
+/// A complete table keyed by (series, bytes, ranks).
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub cells: Vec<Cell>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            cells: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, series: impl Into<String>, bytes: usize, ranks: usize, stats: Stats) {
+        self.cells.push(Cell {
+            series: series.into(),
+            bytes,
+            ranks,
+            stats,
+        });
+    }
+
+    /// Look up the mean time for a cell.
+    pub fn mean(&self, series: &str, bytes: usize, ranks: usize) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.series == series && c.bytes == bytes && c.ranks == ranks)
+            .map(|c| c.stats.mean())
+    }
+
+    /// Render as an aligned text table (the paper's "rows/series").
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# {}\n", self.title));
+        out.push_str(&format!(
+            "{:<14} {:>10} {:>8} {:>14} {:>12}\n",
+            "series", "size", "ranks", "mean", "stddev"
+        ));
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{:<14} {:>10} {:>8} {:>14} {:>12}\n",
+                c.series,
+                fmt_bytes(c.bytes),
+                c.ranks,
+                crate::metrics::fmt_secs(c.stats.mean()),
+                crate::metrics::fmt_secs(c.stats.stddev()),
+            ));
+        }
+        out
+    }
+
+    /// Write CSV: `series,bytes,ranks,mean_s,stddev_s,min_s,max_s`.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "series,bytes,ranks,mean_s,stddev_s,min_s,max_s")?;
+        for c in &self.cells {
+            writeln!(
+                f,
+                "{},{},{},{:.9},{:.9},{:.9},{:.9}",
+                c.series,
+                c.bytes,
+                c.ranks,
+                c.stats.mean(),
+                c.stats.stddev(),
+                c.stats.min(),
+                c.stats.max()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Human-readable byte size (powers of two, like the paper's MB axes).
+pub fn fmt_bytes(b: usize) -> String {
+    const MB: usize = 1024 * 1024;
+    if b >= MB && b % MB == 0 {
+        format!("{} MB", b / MB)
+    } else if b >= 1024 && b % 1024 == 0 {
+        format!("{} KB", b / 1024)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("fig-x");
+        t.push("rccl", 64 << 20, 128, Stats::from_iter([1.0, 2.0]));
+        t.push("pccl", 64 << 20, 128, Stats::from_iter([0.5]));
+        assert_eq!(t.mean("rccl", 64 << 20, 128), Some(1.5));
+        let r = t.render();
+        assert!(r.contains("64 MB"));
+        let dir = crate::util::tmp::TempDir::new().unwrap();
+        let p = dir.path().join("t.csv");
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.lines().count() == 3);
+        assert!(text.contains("rccl,67108864,128"));
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(64 << 20), "64 MB");
+        assert_eq!(fmt_bytes(2048), "2 KB");
+        assert_eq!(fmt_bytes(100), "100 B");
+    }
+}

@@ -1,0 +1,313 @@
+//! Two-level hierarchical collectives — the heart of PCCL (§IV-A, Fig. 5).
+//!
+//! * All-gather: concurrent **inter-node** all-gathers (one per local id,
+//!   each bound to its own NIC), then an **intra-node** all-gather, then a
+//!   device-local unshuffle.
+//! * Reduce-scatter: the mirror image — pre-shuffle, intra-node RS, then
+//!   inter-node RS (§IV-A: "starting with the intra-node phase followed by
+//!   the inter-node phase").
+//! * All-reduce: two-level reduce-scatter ∘ two-level all-gather.
+//!
+//! The inter-node phase takes either the ring (`PCCL_ring`) or the
+//! recursive doubling/halving (`PCCL_rec`) backend; recursive requires a
+//! power-of-two node count and otherwise falls back to ring (logged by the
+//! caller via [`InterAlgo::effective`]).
+
+use crate::comm::{Comm, Communicator};
+use crate::error::Result;
+use crate::reduction::offload::CombineFn;
+use crate::reduction::Elem;
+
+use super::recursive::{rec_all_gather, rec_reduce_scatter};
+use super::ring::{ring_all_gather, ring_reduce_scatter};
+use super::{check_all_gather, check_reduce_scatter};
+
+/// Inter-node algorithm choice for the hierarchical collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InterAlgo {
+    /// `PCCL_ring`: bandwidth-optimal, latency ∝ nodes.
+    Ring,
+    /// `PCCL_rec`: recursive doubling/halving, latency ∝ log2(nodes).
+    Rec,
+}
+
+impl InterAlgo {
+    /// The algorithm actually used for `n` nodes (recursive needs 2^k).
+    pub fn effective(self, n: usize) -> InterAlgo {
+        match self {
+            InterAlgo::Rec if !n.is_power_of_two() => InterAlgo::Ring,
+            other => other,
+        }
+    }
+}
+
+fn inter_all_gather<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    algo: InterAlgo,
+) -> Result<Vec<T>> {
+    let n = c.topology().nodes();
+    let mut inter = c.inter_node()?;
+    match algo.effective(n) {
+        InterAlgo::Ring => ring_all_gather(&mut inter, input),
+        InterAlgo::Rec => rec_all_gather(&mut inter, input),
+    }
+}
+
+fn inter_reduce_scatter<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    combine: &CombineFn<T>,
+    algo: InterAlgo,
+) -> Result<Vec<T>> {
+    let n = c.topology().nodes();
+    let mut inter = c.inter_node()?;
+    match algo.effective(n) {
+        InterAlgo::Ring => ring_reduce_scatter(&mut inter, input, combine),
+        InterAlgo::Rec => rec_reduce_scatter(&mut inter, input, combine),
+    }
+}
+
+/// Two-level all-gather. Falls back to the flat algorithm when the
+/// topology has a single node (or single GPU per node).
+///
+/// Hot-path note (§Perf): Step 2 and Step 3 are fused — the intra-node
+/// ring places each received inter-node buffer directly at its final
+/// (node, local) offsets, eliminating the `p·m` staging buffer and the
+/// full-output transpose copy. (The standalone transpose remains available
+/// as [`super::unshuffle`] / the L1 kernel for implementations that cannot
+/// fuse.)
+pub fn hier_all_gather<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    inter: InterAlgo,
+) -> Result<Vec<T>> {
+    check_all_gather(input)?;
+    let topo = c.topology();
+    if !topo.supports_hierarchical() {
+        // Degenerate hierarchy: one level is the whole world.
+        return match inter.effective(c.size()) {
+            InterAlgo::Ring => ring_all_gather(c, input),
+            InterAlgo::Rec => rec_all_gather(c, input),
+        };
+    }
+    let n = topo.nodes();
+    let m_local = topo.gpus_per_node();
+    let block = input.len();
+    // Step 1: concurrent inter-node all-gathers (one per local id).
+    let buf1 = inter_all_gather(c, input, inter)?;
+    debug_assert_eq!(buf1.len(), n * block);
+    // Steps 2+3 fused: intra-node ring all-gather with unshuffled placement.
+    let mut out = vec![T::zero(); m_local * n * block];
+    let place = |out: &mut [T], local_id: usize, data: &[T]| {
+        // data = node-ordered inter result of `local_id`; final position of
+        // its node-n block is global rank (n·M + local_id).
+        for (node, chunk) in data.chunks_exact(block).enumerate() {
+            let dst = (node * m_local + local_id) * block;
+            out[dst..dst + block].copy_from_slice(chunk);
+        }
+    };
+    let mut intra = c.intra_node()?;
+    let l = intra.rank();
+    place(&mut out, l, &buf1);
+    if m_local > 1 {
+        intra.begin_op();
+        let right = (l + 1) % m_local;
+        let left = (l + m_local - 1) % m_local;
+        let mut current = buf1;
+        for s in 0..m_local - 1 {
+            let recv_l = super::schedule::ring::ag_recv_block(l, m_local, s);
+            let got = intra.sendrecv(right, current, left, s as u32)?;
+            place(&mut out, recv_l, &got);
+            current = got;
+        }
+    }
+    Ok(out)
+}
+
+/// Two-level reduce-scatter (intra first, then inter).
+pub fn hier_reduce_scatter<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    combine: &CombineFn<T>,
+    inter: InterAlgo,
+) -> Result<Vec<T>> {
+    let p = c.size();
+    let b = check_reduce_scatter(input, p)?;
+    let topo = c.topology();
+    if !topo.supports_hierarchical() {
+        return match inter.effective(p) {
+            InterAlgo::Ring => ring_reduce_scatter(c, input, combine),
+            InterAlgo::Rec => rec_reduce_scatter(c, input, combine),
+        };
+    }
+    let n = topo.nodes();
+    let m_local = topo.gpus_per_node();
+    // Hot path (§Perf): the pre-shuffle is *virtual* — instead of
+    // materializing the (local_id, node)-ordered copy of the whole input,
+    // the intra-node ring gathers each segment's strided blocks on demand
+    // and combines contributions straight out of `input`.
+    //
+    // Segment `l` = blocks {(node, l) : node ∈ 0..N} = the data destined
+    // for local id `l`'s inter-node phase.
+    let gather_segment = |seg: usize| -> Vec<T> {
+        let mut v = Vec::with_capacity(n * b);
+        for node in 0..n {
+            let src = (node * m_local + seg) * b;
+            v.extend_from_slice(&input[src..src + b]);
+        }
+        v
+    };
+    let add_segment = |acc: &mut [T], seg: usize| {
+        for node in 0..n {
+            let src = (node * m_local + seg) * b;
+            combine(&mut acc[node * b..(node + 1) * b], &input[src..src + b]);
+        }
+    };
+    let partial = {
+        let mut intra = c.intra_node()?;
+        let l = intra.rank();
+        if m_local == 1 {
+            gather_segment(0)
+        } else {
+            intra.begin_op();
+            let right = (l + 1) % m_local;
+            let left = (l + m_local - 1) % m_local;
+            use super::schedule::ring as idx;
+            let mut current = gather_segment(idx::rs_send_block(l, m_local, 0));
+            for s in 0..m_local - 1 {
+                let recv_seg = idx::rs_recv_block(l, m_local, s);
+                let mut got = intra.sendrecv(right, current, left, s as u32)?;
+                add_segment(&mut got, recv_seg);
+                current = got;
+            }
+            current
+        }
+    };
+    debug_assert_eq!(partial.len(), n * b);
+    // Inter-node reduce-scatter over blocks of b elements.
+    let out = inter_reduce_scatter(c, &partial, combine, inter)?;
+    debug_assert_eq!(out.len(), b);
+    Ok(out)
+}
+
+/// Two-level all-reduce = hierarchical RS ∘ hierarchical AG. Pads to a
+/// multiple of `p`.
+pub fn hier_all_reduce<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    combine: &CombineFn<T>,
+    inter: InterAlgo,
+) -> Result<Vec<T>> {
+    check_all_gather(input)?;
+    let p = c.size();
+    if p == 1 {
+        return Ok(input.to_vec());
+    }
+    let n = input.len();
+    let padded = n.div_ceil(p) * p;
+    // §Perf: avoid the pad-copy on the (common) aligned path.
+    let mine = if padded == n {
+        hier_reduce_scatter(c, input, combine, inter)?
+    } else {
+        let mut buf = input.to_vec();
+        buf.resize(padded, T::zero());
+        hier_reduce_scatter(c, &buf, combine, inter)?
+    };
+    let mut out = hier_all_gather(c, &mine, inter)?;
+    out.truncate(n);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::oracle;
+    use crate::comm::CommWorld;
+    use crate::reduction::offload::native_combine;
+    use crate::topology::Topology;
+
+    fn world(nodes: usize, gpn: usize) -> CommWorld<f32> {
+        CommWorld::with_topology(Topology::new(nodes, gpn, 1).unwrap())
+    }
+
+    fn rank_input(r: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| (r * 1000 + i) as f32).collect()
+    }
+
+    #[test]
+    fn hier_all_gather_both_inter_algos() {
+        for (nodes, gpn) in [(2, 2), (4, 2), (2, 4), (3, 2), (4, 3)] {
+            for algo in [InterAlgo::Ring, InterAlgo::Rec] {
+                let p = nodes * gpn;
+                let m = 6;
+                let outs = world(nodes, gpn).run(move |c| {
+                    let input = rank_input(c.rank(), m);
+                    hier_all_gather(c, &input, algo).unwrap()
+                });
+                let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, m)).collect();
+                let expect = oracle::all_gather(&ins);
+                for (r, o) in outs.iter().enumerate() {
+                    assert_eq!(o, &expect, "nodes={nodes} gpn={gpn} algo={algo:?} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_reduce_scatter_both_inter_algos() {
+        for (nodes, gpn) in [(2, 2), (4, 2), (2, 4), (3, 2)] {
+            for algo in [InterAlgo::Ring, InterAlgo::Rec] {
+                let p = nodes * gpn;
+                let b = 3;
+                let outs = world(nodes, gpn).run(move |c| {
+                    let input = rank_input(c.rank(), p * b);
+                    hier_reduce_scatter(c, &input, &native_combine(), algo).unwrap()
+                });
+                let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+                for (r, o) in outs.iter().enumerate() {
+                    assert_eq!(
+                        o,
+                        &oracle::reduce_scatter(&ins, r),
+                        "nodes={nodes} gpn={gpn} algo={algo:?} r={r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_all_reduce_matches_oracle() {
+        let (nodes, gpn) = (2, 4);
+        let p = nodes * gpn;
+        let n = 21; // unaligned → padding path
+        for algo in [InterAlgo::Ring, InterAlgo::Rec] {
+            let outs = world(nodes, gpn).run(move |c| {
+                let input = rank_input(c.rank(), n);
+                hier_all_reduce(c, &input, &native_combine(), algo).unwrap()
+            });
+            let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, n)).collect();
+            let expect = oracle::all_reduce(&ins);
+            for o in outs {
+                assert_eq!(o, expect, "algo={algo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_topology_falls_back_to_flat() {
+        let outs = CommWorld::<f32>::new(4).run(|c| {
+            let input = rank_input(c.rank(), 2);
+            hier_all_gather(c, &input, InterAlgo::Rec).unwrap()
+        });
+        let ins: Vec<Vec<f32>> = (0..4).map(|r| rank_input(r, 2)).collect();
+        assert_eq!(outs[0], oracle::all_gather(&ins));
+    }
+
+    #[test]
+    fn rec_falls_back_to_ring_on_non_pow2_nodes() {
+        assert_eq!(InterAlgo::Rec.effective(3), InterAlgo::Ring);
+        assert_eq!(InterAlgo::Rec.effective(4), InterAlgo::Rec);
+        assert_eq!(InterAlgo::Ring.effective(3), InterAlgo::Ring);
+    }
+}

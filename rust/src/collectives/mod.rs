@@ -1,0 +1,58 @@
+//! Collective algorithms.
+//!
+//! Every algorithm is written against the [`crate::comm::Comm`] trait, so
+//! the same code runs over the real data plane and (via the step/index
+//! helpers in [`schedule`]) drives the network simulator's message
+//! schedules.
+//!
+//! Semantics (MPI-style, out-of-place):
+//! * `all_gather`: input `m` elements/rank → output `p·m`, block `i` is
+//!   rank `i`'s input.
+//! * `reduce_scatter`: input `p·b` elements/rank → output `b`, rank `r`
+//!   receives the elementwise reduction of every rank's block `r`.
+//! * `all_reduce`: input `n` → output `n`, elementwise reduction across all
+//!   ranks (implemented as reduce-scatter ∘ all-gather when `p | n`).
+
+mod hierarchical;
+pub mod oracle;
+mod pipelined;
+mod pt2pt;
+mod recursive;
+mod ring;
+pub mod schedule;
+mod shuffle;
+mod tree;
+
+pub use hierarchical::{hier_all_gather, hier_all_reduce, hier_reduce_scatter, InterAlgo};
+pub use pipelined::pipelined_hier_all_gather;
+pub use pt2pt::{broadcast, gather, reduce, scatter};
+pub use recursive::{rec_all_gather, rec_all_reduce, rec_reduce_scatter};
+pub use ring::{ring_all_gather, ring_all_reduce, ring_reduce_scatter};
+pub use shuffle::{shuffle_gather, transpose_blocks, unshuffle};
+pub use tree::tree_all_reduce;
+
+use crate::error::{Error, Result};
+
+/// Validate an all-gather input (any non-empty block is fine).
+pub(crate) fn check_all_gather<T>(input: &[T]) -> Result<()> {
+    if input.is_empty() {
+        return Err(Error::BadBufferSize {
+            len: 0,
+            size: 0,
+            why: "all-gather input must be non-empty",
+        });
+    }
+    Ok(())
+}
+
+/// Validate a reduce-scatter input: length divisible by communicator size.
+pub(crate) fn check_reduce_scatter<T>(input: &[T], p: usize) -> Result<usize> {
+    if input.is_empty() || input.len() % p != 0 {
+        return Err(Error::BadBufferSize {
+            len: input.len(),
+            size: p,
+            why: "reduce-scatter input length must be a positive multiple of communicator size",
+        });
+    }
+    Ok(input.len() / p)
+}

@@ -1,0 +1,54 @@
+//! Naive reference semantics — the single source of truth the property
+//! tests compare every algorithm against. Pure functions over the per-rank
+//! input vectors (no communication).
+
+use crate::reduction::{Elem, ReduceOp};
+
+/// Expected all-gather output (identical on every rank).
+pub fn all_gather<T: Elem>(inputs: &[Vec<T>]) -> Vec<T> {
+    let mut out = Vec::with_capacity(inputs.iter().map(Vec::len).sum());
+    for inp in inputs {
+        out.extend_from_slice(inp);
+    }
+    out
+}
+
+/// Expected reduce-scatter output for `rank` (sum reduction).
+pub fn reduce_scatter<T: Elem>(inputs: &[Vec<T>], rank: usize) -> Vec<T> {
+    reduce_scatter_op(inputs, rank, ReduceOp::Sum)
+}
+
+/// Expected reduce-scatter output for `rank` under `op`.
+pub fn reduce_scatter_op<T: Elem>(inputs: &[Vec<T>], rank: usize, op: ReduceOp) -> Vec<T> {
+    let p = inputs.len();
+    let b = inputs[0].len() / p;
+    let mut out = inputs[0][rank * b..(rank + 1) * b].to_vec();
+    for inp in &inputs[1..] {
+        let block = &inp[rank * b..(rank + 1) * b];
+        crate::reduction::reduce_into_op(&mut out, block, op);
+    }
+    out
+}
+
+/// Expected all-reduce output (identical on every rank, sum reduction).
+pub fn all_reduce<T: Elem>(inputs: &[Vec<T>]) -> Vec<T> {
+    let mut out = inputs[0].clone();
+    for inp in &inputs[1..] {
+        crate::reduction::reduce_into(&mut out, inp);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let ins = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        assert_eq!(all_gather(&ins), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(reduce_scatter(&ins, 0), vec![4.0]);
+        assert_eq!(reduce_scatter(&ins, 1), vec![6.0]);
+        assert_eq!(all_reduce(&ins), vec![4.0, 6.0]);
+    }
+}

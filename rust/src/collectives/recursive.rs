@@ -1,0 +1,186 @@
+//! Recursive doubling (all-gather) and recursive halving (reduce-scatter)
+//! — the latency-optimal `log2 p`-step algorithms PCCL adds for the
+//! inter-node phase (`PCCL_rec`, §IV-B; Eq. 2).
+//!
+//! These require a power-of-two communicator. Callers (the backends and the
+//! hierarchical composition) fall back to the ring when `p` is not a power
+//! of two — the paper's target systems are all power-of-two node counts.
+
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::reduction::offload::CombineFn;
+use crate::reduction::Elem;
+
+use super::schedule::recursive as idx;
+use super::{check_all_gather, check_reduce_scatter};
+
+fn require_pow2(p: usize) -> Result<()> {
+    if !p.is_power_of_two() {
+        return Err(Error::BadBufferSize {
+            len: p,
+            size: p,
+            why: "recursive doubling/halving requires a power-of-two communicator",
+        });
+    }
+    Ok(())
+}
+
+/// Recursive-doubling all-gather: `log2 p` exchanges of doubling size.
+pub fn rec_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec<T>> {
+    check_all_gather(input)?;
+    let p = c.size();
+    require_pow2(p)?;
+    c.begin_op();
+    let r = c.rank();
+    let m = input.len();
+    let mut out = vec![T::zero(); p * m];
+    out[r * m..(r + 1) * m].copy_from_slice(input);
+    for s in 0..idx::steps(p) {
+        let partner = idx::ag_partner(r, s);
+        let (lo, hi) = idx::ag_owned_range(r, s);
+        let (plo, phi) = idx::ag_owned_range(partner, s);
+        let payload = out[lo * m..hi * m].to_vec();
+        let got = c.sendrecv(partner, payload, partner, s as u32)?;
+        out[plo * m..phi * m].copy_from_slice(&got);
+    }
+    Ok(out)
+}
+
+/// Recursive-halving reduce-scatter: each step exchanges and combines half
+/// of the remaining segment.
+pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: &[T],
+    combine: &CombineFn<T>,
+) -> Result<Vec<T>> {
+    let p = c.size();
+    let b = check_reduce_scatter(input, p)?;
+    require_pow2(p)?;
+    c.begin_op();
+    let r = c.rank();
+    if p == 1 {
+        return Ok(input.to_vec());
+    }
+    let mut acc = input.to_vec();
+    // Current segment of *block indices* this rank is still responsible for.
+    let mut lo = 0usize;
+    let mut hi = p;
+    for s in 0..idx::steps(p) {
+        let partner = idx::rs_partner(r, p, s);
+        let mid = (lo + hi) / 2;
+        // If our rank lies in the lower half of the segment, we keep
+        // [lo, mid) and send [mid, hi); otherwise the reverse.
+        let keep_low = r < mid;
+        let (keep_lo, keep_hi, send_lo, send_hi) = if keep_low {
+            (lo, mid, mid, hi)
+        } else {
+            (mid, hi, lo, mid)
+        };
+        let payload = acc[send_lo * b..send_hi * b].to_vec();
+        let got = c.sendrecv(partner, payload, partner, s as u32)?;
+        combine(&mut acc[keep_lo * b..keep_hi * b], &got);
+        lo = keep_lo;
+        hi = keep_hi;
+    }
+    debug_assert_eq!((lo, hi), (r, r + 1));
+    Ok(acc[r * b..(r + 1) * b].to_vec())
+}
+
+/// All-reduce = recursive halving reduce-scatter ∘ recursive doubling
+/// all-gather (§IV-B: "our all-reduce in PCCL_rec uses recursive halving
+/// followed by recursive doubling"). Pads to a multiple of `p`.
+pub fn rec_all_reduce<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: &[T],
+    combine: &CombineFn<T>,
+) -> Result<Vec<T>> {
+    check_all_gather(input)?;
+    let p = c.size();
+    require_pow2(p)?;
+    if p == 1 {
+        return Ok(input.to_vec());
+    }
+    let n = input.len();
+    let padded = n.div_ceil(p) * p;
+    // §Perf: avoid the pad-copy on the (common) aligned path.
+    let mine = if padded == n {
+        rec_reduce_scatter(c, input, combine)?
+    } else {
+        let mut buf = input.to_vec();
+        buf.resize(padded, T::zero());
+        rec_reduce_scatter(c, &buf, combine)?
+    };
+    let mut out = rec_all_gather(c, &mine)?;
+    out.truncate(n);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::oracle;
+    use crate::comm::CommWorld;
+    use crate::reduction::offload::native_combine;
+
+    #[test]
+    fn all_gather_pow2() {
+        for p in [1usize, 2, 4, 8, 16] {
+            let m = 3;
+            let world = CommWorld::<f32>::new(p);
+            let outs = world.run(move |c| {
+                let input: Vec<f32> = (0..m).map(|i| (c.rank() * 100 + i) as f32).collect();
+                rec_all_gather(c, &input).unwrap()
+            });
+            let ins: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..m).map(|i| (r * 100 + i) as f32).collect())
+                .collect();
+            let expect = oracle::all_gather(&ins);
+            for o in outs {
+                assert_eq!(o, expect, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_pow2() {
+        for p in [2usize, 4, 8] {
+            let b = 4;
+            let world = CommWorld::<f32>::new(p);
+            let outs = world.run(move |c| {
+                let input: Vec<f32> = (0..p * b).map(|i| (c.rank() * 7 + i) as f32).collect();
+                rec_reduce_scatter(c, &input, &native_combine()).unwrap()
+            });
+            let ins: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..p * b).map(|i| (r * 7 + i) as f32).collect())
+                .collect();
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &oracle::reduce_scatter(&ins, r), "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_pow2_unaligned() {
+        let p = 8;
+        let n = 13; // forces padding
+        let world = CommWorld::<f64>::new(p);
+        let outs = world.run(move |c| {
+            let input: Vec<f64> = (0..n).map(|i| (c.rank() as f64) + (i as f64) * 0.5).collect();
+            rec_all_reduce(c, &input, &native_combine()).unwrap()
+        });
+        let ins: Vec<Vec<f64>> = (0..p)
+            .map(|r| (0..n).map(|i| (r as f64) + (i as f64) * 0.5).collect())
+            .collect();
+        let expect = oracle::all_reduce(&ins);
+        for o in outs {
+            assert_eq!(o, expect);
+        }
+    }
+
+    #[test]
+    fn non_pow2_rejected() {
+        let world = CommWorld::<f32>::new(3);
+        let outs = world.run(|c| rec_all_gather(c, &[1.0]).is_err());
+        assert!(outs.iter().all(|&e| e));
+    }
+}

@@ -1,0 +1,184 @@
+//! Flat ring algorithms — bandwidth-optimal, latency linear in `p`
+//! (Eq. 1 of the paper). This is what NCCL/RCCL use for all-gather and
+//! reduce-scatter (Observation 2), and PCCL's `PCCL_ring` inter-node
+//! backend.
+
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::reduction::offload::CombineFn;
+use crate::reduction::Elem;
+
+use super::schedule::ring as idx;
+use super::{check_all_gather, check_reduce_scatter};
+
+/// Ring all-gather: `p - 1` steps, each rank forwards the block it received
+/// in the previous step to its right neighbor.
+///
+/// Hot-path note (§Perf): the block sent at step `s` is exactly the block
+/// received at step `s-1`, so the received buffer is *moved* onward instead
+/// of re-copied out of the output — one memcpy per step instead of two.
+pub fn ring_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec<T>> {
+    check_all_gather(input)?;
+    c.begin_op();
+    let p = c.size();
+    let r = c.rank();
+    let m = input.len();
+    let mut out = vec![T::zero(); p * m];
+    out[r * m..(r + 1) * m].copy_from_slice(input);
+    if p == 1 {
+        return Ok(out);
+    }
+    let right = (r + 1) % p;
+    let left = (r + p - 1) % p;
+    // Block (r - s) travels: at s = 0 it's our input; afterwards it's the
+    // buffer that just arrived from the left.
+    let mut current = input.to_vec();
+    for s in 0..p - 1 {
+        debug_assert_eq!(idx::ag_send_block(r, p, s), (r + p - s) % p);
+        let recv_b = idx::ag_recv_block(r, p, s);
+        let got = c.sendrecv(right, current, left, s as u32)?;
+        out[recv_b * m..(recv_b + 1) * m].copy_from_slice(&got);
+        current = got;
+    }
+    Ok(out)
+}
+
+/// Ring reduce-scatter: `p - 1` steps; the partial for each block travels
+/// once around the ring, combined at every hop (on the "GPU" — the injected
+/// [`CombineFn`]).
+pub fn ring_reduce_scatter<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: &[T],
+    combine: &CombineFn<T>,
+) -> Result<Vec<T>> {
+    let p = c.size();
+    let b = check_reduce_scatter(input, p)?;
+    c.begin_op();
+    let r = c.rank();
+    if p == 1 {
+        return Ok(input.to_vec());
+    }
+    let right = (r + 1) % p;
+    let left = (r + p - 1) % p;
+    // Hot path (§Perf): the partial sent at step `s+1` is the partial
+    // received at step `s` combined with our local contribution, so the
+    // combine happens *into the received buffer* and that buffer is moved
+    // onward — no staging copies, no output buffer mutation.
+    let first = idx::rs_send_block(r, p, 0);
+    let mut current = input[first * b..(first + 1) * b].to_vec();
+    for s in 0..p - 1 {
+        let recv_b = idx::rs_recv_block(r, p, s);
+        let mut got = c.sendrecv(right, current, left, s as u32)?;
+        // Add our own contribution for the block that just arrived.
+        combine(&mut got, &input[recv_b * b..(recv_b + 1) * b]);
+        current = got;
+    }
+    debug_assert_eq!(idx::rs_recv_block(r, p, p - 2), r);
+    Ok(current)
+}
+
+/// Ring all-reduce = ring reduce-scatter ∘ ring all-gather (the
+/// bandwidth-optimal Patarasuk–Yuan composition). Pads to a multiple of `p`
+/// when needed.
+pub fn ring_all_reduce<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: &[T],
+    combine: &CombineFn<T>,
+) -> Result<Vec<T>> {
+    check_all_gather(input)?;
+    let p = c.size();
+    if p == 1 {
+        return Ok(input.to_vec());
+    }
+    let n = input.len();
+    let padded = n.div_ceil(p) * p;
+    // §Perf: avoid the pad-copy on the (common) aligned path.
+    let mine = if padded == n {
+        ring_reduce_scatter(c, input, combine)?
+    } else {
+        let mut buf = input.to_vec();
+        buf.resize(padded, T::zero());
+        ring_reduce_scatter(c, &buf, combine)?
+    };
+    let mut out = ring_all_gather(c, &mine)?;
+    out.truncate(n);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::oracle;
+    use crate::comm::CommWorld;
+    use crate::reduction::offload::native_combine;
+
+    fn inputs(p: usize, m: usize) -> Vec<Vec<f32>> {
+        (0..p)
+            .map(|r| (0..m).map(|i| (r * 100 + i) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn all_gather_matches_oracle() {
+        for p in [1, 2, 3, 5, 8] {
+            let m = 7;
+            let world = CommWorld::<f32>::new(p);
+            let outs = world.run(move |c| {
+                let input: Vec<f32> = (0..m).map(|i| (c.rank() * 100 + i) as f32).collect();
+                ring_all_gather(c, &input).unwrap()
+            });
+            let expect = oracle::all_gather(&inputs(p, m));
+            for o in outs {
+                assert_eq!(o, expect, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_matches_oracle() {
+        for p in [1, 2, 4, 6] {
+            let b = 5;
+            let world = CommWorld::<f32>::new(p);
+            let outs = world.run(move |c| {
+                let input: Vec<f32> = (0..p * b).map(|i| (c.rank() * 10 + i) as f32).collect();
+                ring_reduce_scatter(c, &input, &native_combine()).unwrap()
+            });
+            let ins: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..p * b).map(|i| (r * 10 + i) as f32).collect())
+                .collect();
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &oracle::reduce_scatter(&ins, r), "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_handles_unaligned_len() {
+        // n = 10 not divisible by p = 4 → internal padding.
+        let p = 4;
+        let n = 10;
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(move |c| {
+            let input: Vec<f32> = (0..n).map(|i| (c.rank() + i) as f32).collect();
+            ring_all_reduce(c, &input, &native_combine()).unwrap()
+        });
+        let ins: Vec<Vec<f32>> = (0..p)
+            .map(|r| (0..n).map(|i| (r + i) as f32).collect())
+            .collect();
+        let expect = oracle::all_reduce(&ins);
+        for o in outs {
+            assert_eq!(o, expect);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_rejects_bad_len() {
+        let world = CommWorld::<f32>::new(3);
+        let errs = world.run(|c| {
+            ring_reduce_scatter(c, &[1.0; 7], &native_combine())
+                .err()
+                .map(|e| e.to_string())
+        });
+        assert!(errs.iter().all(|e| e.is_some()));
+    }
+}

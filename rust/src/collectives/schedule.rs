@@ -1,0 +1,133 @@
+//! Step/index arithmetic shared by the data-plane algorithms and the
+//! network simulator's schedule generators.
+//!
+//! Keeping this math in one place is what makes the netsim figures honest:
+//! the simulated message pattern *is* the executed message pattern (same
+//! peers, same block sizes, same step counts).
+
+/// Ring algorithm indices (flat, `p - 1` steps, send right / recv left).
+pub mod ring {
+    /// Number of communication steps.
+    pub fn steps(p: usize) -> usize {
+        p.saturating_sub(1)
+    }
+
+    /// Block sent by `rank` at step `s` during all-gather.
+    pub fn ag_send_block(rank: usize, p: usize, s: usize) -> usize {
+        (rank + p - s % p) % p
+    }
+
+    /// Block received by `rank` at step `s` during all-gather.
+    pub fn ag_recv_block(rank: usize, p: usize, s: usize) -> usize {
+        (rank + p - s % p - 1) % p
+    }
+
+    /// Block sent by `rank` at step `s` during reduce-scatter.
+    pub fn rs_send_block(rank: usize, p: usize, s: usize) -> usize {
+        (rank + 2 * p - s % p - 1) % p
+    }
+
+    /// Block received (and combined) by `rank` at step `s` during
+    /// reduce-scatter.
+    pub fn rs_recv_block(rank: usize, p: usize, s: usize) -> usize {
+        (rank + 2 * p - s % p - 2) % p
+    }
+}
+
+/// Recursive doubling/halving indices (power-of-two `p`, `log2 p` steps).
+pub mod recursive {
+    /// Number of steps (`p` must be a power of two).
+    pub fn steps(p: usize) -> usize {
+        p.trailing_zeros() as usize
+    }
+
+    /// Exchange partner of `rank` at all-gather step `s` (doubling:
+    /// distance `2^s`).
+    pub fn ag_partner(rank: usize, s: usize) -> usize {
+        rank ^ (1 << s)
+    }
+
+    /// Blocks owned by `rank` *before* all-gather step `s`: the
+    /// `2^s`-aligned group containing `rank`.
+    pub fn ag_owned_range(rank: usize, s: usize) -> (usize, usize) {
+        let width = 1 << s;
+        let lo = rank & !(width - 1);
+        (lo, lo + width)
+    }
+
+    /// Exchange partner at reduce-scatter (halving) step `s` out of
+    /// `steps(p)`: distance `p / 2^(s+1)`.
+    pub fn rs_partner(rank: usize, p: usize, s: usize) -> usize {
+        rank ^ (p >> (s + 1))
+    }
+
+    /// Volume factor: elements exchanged at halving step `s` as a fraction
+    /// of the full buffer is `1 / 2^(s+1)`.
+    pub fn rs_fraction_denom(s: usize) -> usize {
+        1 << (s + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_blocks_cover_everything() {
+        // Over p-1 steps, each rank receives exactly the p-1 blocks it does
+        // not own (all-gather).
+        let p = 7;
+        for r in 0..p {
+            let mut got: Vec<usize> = (0..ring::steps(p))
+                .map(|s| ring::ag_recv_block(r, p, s))
+                .collect();
+            got.sort_unstable();
+            let mut expect: Vec<usize> = (0..p).filter(|&b| b != r).collect();
+            expect.sort_unstable();
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn ring_send_matches_left_neighbor_recv() {
+        // What rank r sends at step s is what rank r+1 receives at step s.
+        let p = 6;
+        for r in 0..p {
+            for s in 0..ring::steps(p) {
+                assert_eq!(
+                    ring::ag_send_block(r, p, s),
+                    ring::ag_recv_block((r + 1) % p, p, s)
+                );
+                assert_eq!(
+                    ring::rs_send_block(r, p, s),
+                    ring::rs_recv_block((r + 1) % p, p, s)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recursive_partners_are_involutions() {
+        let p = 16;
+        for r in 0..p {
+            for s in 0..recursive::steps(p) {
+                assert_eq!(recursive::ag_partner(recursive::ag_partner(r, s), s), r);
+                assert_eq!(
+                    recursive::rs_partner(recursive::rs_partner(r, p, s), p, s),
+                    r
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn doubling_owned_range_grows_to_world() {
+        let p = 8;
+        for r in 0..p {
+            let (lo, hi) = recursive::ag_owned_range(r, 0);
+            assert_eq!((lo, hi), (r, r + 1));
+            let (lo, hi) = recursive::ag_owned_range(r, recursive::steps(p));
+            assert_eq!((lo, hi), (0, p));
+        }
+    }
+}

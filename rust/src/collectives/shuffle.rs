@@ -1,0 +1,79 @@
+//! Device-local shuffle — Step 3 of the paper's hierarchical all-gather
+//! (Fig. 5): after the inter- then intra-node gathers, each GPU holds the
+//! full output in `(local_id, node)` block order and must transpose it to
+//! global `(node, local_id)` rank order. Reduce-scatter applies the inverse
+//! permutation *before* communicating.
+//!
+//! On the real system this is the L1 Pallas `shuffle` kernel; the native
+//! implementation here is its host-side twin (and test oracle).
+
+/// Transpose an `(outer, inner)` grid of `block`-element chunks:
+/// `out[(j·outer + i)·block ..] = buf[(i·inner + j)·block ..]`.
+pub fn transpose_blocks<T: Copy>(buf: &[T], outer: usize, inner: usize, block: usize) -> Vec<T> {
+    assert_eq!(
+        buf.len(),
+        outer * inner * block,
+        "transpose_blocks: buffer len {} != {outer}×{inner}×{block}",
+        buf.len()
+    );
+    let mut out = Vec::with_capacity(buf.len());
+    for j in 0..inner {
+        for i in 0..outer {
+            let src = (i * inner + j) * block;
+            out.extend_from_slice(&buf[src..src + block]);
+        }
+    }
+    out
+}
+
+/// All-gather unshuffle: `(local_id ∈ M, node ∈ N)` → `(node, local_id)`.
+pub fn unshuffle<T: Copy>(buf: &[T], n_nodes: usize, m_local: usize, block: usize) -> Vec<T> {
+    transpose_blocks(buf, m_local, n_nodes, block)
+}
+
+/// Reduce-scatter pre-shuffle: `(node ∈ N, local_id ∈ M)` global-rank order
+/// → `(local_id, node)` hierarchical order.
+pub fn shuffle_gather<T: Copy>(buf: &[T], n_nodes: usize, m_local: usize, block: usize) -> Vec<T> {
+    transpose_blocks(buf, n_nodes, m_local, block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_2x3() {
+        // blocks labeled by (i, j)
+        let buf: Vec<i32> = vec![
+            00, 00, // (0,0)
+            01, 01, // (0,1)
+            02, 02, // (0,2)
+            10, 10, // (1,0)
+            11, 11, // (1,1)
+            12, 12, // (1,2)
+        ];
+        let t = transpose_blocks(&buf, 2, 3, 2);
+        assert_eq!(t, vec![00, 00, 10, 10, 01, 01, 11, 11, 02, 02, 12, 12]);
+    }
+
+    #[test]
+    fn shuffle_roundtrip() {
+        let n = 4;
+        let m = 3;
+        let block = 5;
+        let buf: Vec<u32> = (0..(n * m * block) as u32).collect();
+        let once = unshuffle(&buf, n, m, block);
+        let back = shuffle_gather(&once, n, m, block);
+        assert_eq!(back, buf);
+    }
+
+    #[test]
+    fn unshuffle_produces_global_rank_order() {
+        // M=2 locals, N=2 nodes; value = global rank of origin.
+        // Hierarchical buffer order is (l, n): l0n0=rank0, l0n1=rank2,
+        // l1n0=rank1, l1n1=rank3 (rank = n*M + l).
+        let buf = vec![0, 2, 1, 3];
+        let out = unshuffle(&buf, 2, 2, 1);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,350 @@
+//! Communicators: the MPI-like object collectives run over.
+//!
+//! A [`Communicator`] owns a rank's transport [`Endpoint`] and represents
+//! the *world*; [`SubComm`] is a borrowed view over a subset of ranks (the
+//! inter-node / intra-node sub-communicators of the paper's hierarchical
+//! design, Fig. 5). Both implement [`Comm`], the trait the algorithms in
+//! [`crate::collectives`] are written against.
+//!
+//! Tag namespacing: every communicator has a 64-bit context id (an FNV hash
+//! of its member list and lineage), combined with a per-instance op sequence
+//! number and the algorithm step. FIFO per `(src, tag)` in the transport
+//! makes residual aliasing harmless (SPMD collectives send and receive in
+//! matched order).
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::topology::Topology;
+
+use super::transport::Endpoint;
+
+/// FNV-1a over a stream of u64 words — deterministic context ids.
+fn fnv64(words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+fn compose_tag(ctx: u64, op_seq: u64, step: u32) -> u64 {
+    // ctx is already well-mixed; fold in op_seq and step reversibly enough
+    // that distinct (op, step) pairs within a context never collide.
+    ctx ^ (op_seq << 16) ^ (step as u64)
+}
+
+/// Operations collectives need from a communicator.
+pub trait Comm<T: Send + 'static> {
+    /// This rank within the communicator (0-based).
+    fn rank(&self) -> usize;
+    /// Number of ranks in the communicator.
+    fn size(&self) -> usize;
+    /// Post `data` to `peer` for algorithm step `step` (non-blocking).
+    fn send(&mut self, peer: usize, step: u32, data: Vec<T>) -> Result<()>;
+    /// Matched receive from `peer` for step `step` (blocking).
+    fn recv(&mut self, peer: usize, step: u32) -> Result<Vec<T>>;
+    /// Begin a new collective: bumps the op sequence for tag freshness.
+    fn begin_op(&mut self);
+
+    /// Combined exchange: send to `to`, then receive from `from`, same step.
+    /// Safe against deadlock because sends never block.
+    fn sendrecv(&mut self, to: usize, data: Vec<T>, from: usize, step: u32) -> Result<Vec<T>> {
+        self.send(to, step, data)?;
+        self.recv(from, step)
+    }
+
+    /// Dissemination barrier: O(log p) rounds.
+    fn barrier(&mut self) -> Result<()>
+    where
+        T: Default,
+    {
+        self.begin_op();
+        let p = self.size();
+        let rank = self.rank();
+        let mut k = 0u32;
+        let mut dist = 1usize;
+        while dist < p {
+            let to = (rank + dist) % p;
+            let from = (rank + p - dist) % p;
+            self.send(to, 0x8000 + k, Vec::new())?;
+            self.recv(from, 0x8000 + k)?;
+            dist <<= 1;
+            k += 1;
+        }
+        Ok(())
+    }
+}
+
+/// The world communicator: owns this rank's endpoint.
+pub struct Communicator<T> {
+    ep: Endpoint<T>,
+    topo: Topology,
+    ctx: u64,
+    op_seq: u64,
+}
+
+impl<T: Send + 'static> Communicator<T> {
+    /// This rank (inherent mirror of [`Comm::rank`] so callers don't need
+    /// the trait in scope).
+    pub fn rank(&self) -> usize {
+        self.ep.rank()
+    }
+
+    /// World size (inherent mirror of [`Comm::size`]).
+    pub fn size(&self) -> usize {
+        self.ep.size()
+    }
+
+    /// Wrap an endpoint; `topo.world_size()` must equal the transport size.
+    pub fn new(ep: Endpoint<T>, topo: Topology) -> Result<Self> {
+        if topo.world_size() != ep.size() {
+            return Err(Error::InvalidTopology(format!(
+                "topology world {} != transport size {}",
+                topo.world_size(),
+                ep.size()
+            )));
+        }
+        let ctx = fnv64([0xC0, ep.size() as u64]);
+        Ok(Self {
+            ep,
+            topo,
+            ctx,
+            op_seq: 0,
+        })
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// (messages sent, elements sent, messages received) on this endpoint.
+    pub fn traffic(&self) -> (u64, u64, u64) {
+        self.ep.traffic()
+    }
+
+    /// Receive timeout for deadlock detection / failure injection.
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.ep.set_timeout(timeout);
+    }
+
+    /// Borrowed sub-communicator over `group` (global ranks, which must
+    /// contain this rank). Order of `group` defines sub-ranks.
+    pub fn subcomm(&mut self, group: Vec<usize>) -> Result<SubComm<'_, T>> {
+        let Some(rank) = group.iter().position(|&g| g == self.ep.rank()) else {
+            return Err(Error::InvalidTopology(format!(
+                "rank {} not in subgroup {:?}",
+                self.ep.rank(),
+                group
+            )));
+        };
+        for &g in &group {
+            if g >= self.ep.size() {
+                return Err(Error::PeerOutOfRange {
+                    peer: g,
+                    size: self.ep.size(),
+                });
+            }
+        }
+        let ctx = fnv64(
+            std::iter::once(self.ctx).chain(group.iter().map(|&g| g as u64)),
+        );
+        Ok(SubComm {
+            ep: &mut self.ep,
+            group,
+            rank,
+            ctx,
+            op_seq: 0,
+        })
+    }
+
+    /// This rank's inter-node sub-communicator (same local id across nodes).
+    pub fn inter_node(&mut self) -> Result<SubComm<'_, T>> {
+        let g = self.topo.inter_node_group(self.ep.rank());
+        self.subcomm(g)
+    }
+
+    /// This rank's intra-node sub-communicator (all ranks on its node).
+    pub fn intra_node(&mut self) -> Result<SubComm<'_, T>> {
+        let g = self.topo.intra_node_group(self.ep.rank());
+        self.subcomm(g)
+    }
+}
+
+impl<T: Send + 'static> Comm<T> for Communicator<T> {
+    fn rank(&self) -> usize {
+        self.ep.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.ep.size()
+    }
+
+    fn send(&mut self, peer: usize, step: u32, data: Vec<T>) -> Result<()> {
+        let tag = compose_tag(self.ctx, self.op_seq, step);
+        self.ep.send(peer, tag, data)
+    }
+
+    fn recv(&mut self, peer: usize, step: u32) -> Result<Vec<T>> {
+        let tag = compose_tag(self.ctx, self.op_seq, step);
+        self.ep.recv(peer, tag)
+    }
+
+    fn begin_op(&mut self) {
+        self.op_seq = self.op_seq.wrapping_add(1);
+    }
+}
+
+/// Borrowed view over a subset of world ranks.
+pub struct SubComm<'a, T> {
+    ep: &'a mut Endpoint<T>,
+    group: Vec<usize>,
+    rank: usize,
+    ctx: u64,
+    op_seq: u64,
+}
+
+impl<'a, T: Send + 'static> SubComm<'a, T> {
+    /// The global (world) ranks of this subgroup, in sub-rank order.
+    pub fn group(&self) -> &[usize] {
+        &self.group
+    }
+}
+
+impl<'a, T: Send + 'static> Comm<T> for SubComm<'a, T> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.group.len()
+    }
+
+    fn send(&mut self, peer: usize, step: u32, data: Vec<T>) -> Result<()> {
+        let global = *self.group.get(peer).ok_or(Error::PeerOutOfRange {
+            peer,
+            size: self.group.len(),
+        })?;
+        let tag = compose_tag(self.ctx, self.op_seq, step);
+        self.ep.send(global, tag, data)
+    }
+
+    fn recv(&mut self, peer: usize, step: u32) -> Result<Vec<T>> {
+        let global = *self.group.get(peer).ok_or(Error::PeerOutOfRange {
+            peer,
+            size: self.group.len(),
+        })?;
+        let tag = compose_tag(self.ctx, self.op_seq, step);
+        self.ep.recv(global, tag)
+    }
+
+    fn begin_op(&mut self) {
+        self.op_seq = self.op_seq.wrapping_add(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::TransportHub;
+
+    fn pair() -> (Communicator<f32>, Communicator<f32>) {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let t = Topology::flat(2);
+        (
+            Communicator::new(e0, t).unwrap(),
+            Communicator::new(e1, t).unwrap(),
+        )
+    }
+
+    #[test]
+    fn world_send_recv() {
+        let (mut c0, mut c1) = pair();
+        c0.send(1, 0, vec![42.0]).unwrap();
+        assert_eq!(c1.recv(0, 0).unwrap(), vec![42.0]);
+    }
+
+    #[test]
+    fn subcomm_rank_translation() {
+        let (_hub, eps) = TransportHub::<i32>::new(4);
+        let topo = Topology::new(2, 2, 1).unwrap();
+        let mut comms: Vec<Communicator<i32>> = eps
+            .into_iter()
+            .map(|e| Communicator::new(e, topo).unwrap())
+            .collect();
+        // rank 1 and rank 3 share local id 1 → inter-node group [1, 3].
+        let c3 = comms.pop().unwrap();
+        let _c2 = comms.pop().unwrap();
+        let c1 = comms.pop().unwrap();
+        let mut c1 = c1;
+        let mut c3 = c3;
+        {
+            let mut s1 = c1.inter_node().unwrap();
+            assert_eq!(s1.group(), &[1, 3]);
+            assert_eq!(s1.rank(), 0);
+            assert_eq!(s1.size(), 2);
+            s1.send(1, 0, vec![7]).unwrap();
+        }
+        {
+            let mut s3 = c3.inter_node().unwrap();
+            assert_eq!(s3.rank(), 1);
+            assert_eq!(s3.recv(0, 0).unwrap(), vec![7]);
+        }
+    }
+
+    #[test]
+    fn subcomm_requires_membership() {
+        let (mut c0, _c1) = pair();
+        assert!(c0.subcomm(vec![1]).is_err());
+        assert!(c0.subcomm(vec![0, 9]).is_err());
+    }
+
+    #[test]
+    fn distinct_contexts_do_not_cross_talk() {
+        let (_hub, eps) = TransportHub::<i32>::new(4);
+        let topo = Topology::new(2, 2, 1).unwrap();
+        let mut comms: Vec<Communicator<i32>> = eps
+            .into_iter()
+            .map(|e| Communicator::new(e, topo).unwrap())
+            .collect();
+        // World-send from 0 to 1 and subcomm-send from 0 to 1 with the same
+        // step must be distinguishable by tag.
+        let mut c1 = comms.remove(1);
+        let mut c0 = comms.remove(0);
+        c0.send(1, 0, vec![100]).unwrap();
+        {
+            let mut s0 = c0.subcomm(vec![0, 1]).unwrap();
+            s0.send(1, 0, vec![200]).unwrap();
+        }
+        {
+            let mut s1 = c1.subcomm(vec![0, 1]).unwrap();
+            assert_eq!(s1.recv(0, 0).unwrap(), vec![200]);
+        }
+        assert_eq!(c1.recv(0, 0).unwrap(), vec![100]);
+    }
+
+    #[test]
+    fn barrier_completes() {
+        let (_hub, eps) = TransportHub::<f32>::new(8);
+        let topo = Topology::flat(8);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|e| {
+                std::thread::spawn(move || {
+                    let mut c = Communicator::new(e, topo).unwrap();
+                    for _ in 0..5 {
+                        c.barrier().unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! The data plane: a real multi-rank communicator.
+//!
+//! Ranks are OS threads ("simulated GPUs") exchanging typed buffers through
+//! an in-process transport with MPI-style tag matching. The collective
+//! algorithms in [`crate::collectives`] run unmodified over this layer; on a
+//! real deployment the [`transport`] would be swapped for RDMA/ libfabric
+//! endpoints — nothing above it would change.
+
+mod communicator;
+mod transport;
+mod world;
+
+pub use communicator::{Comm, Communicator, SubComm};
+pub use transport::{Endpoint, TransportHub, DEFAULT_RECV_TIMEOUT};
+pub use world::CommWorld;

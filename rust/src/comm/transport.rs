@@ -1,0 +1,236 @@
+//! In-process transport: per-rank mailboxes with (source, tag) matching.
+//!
+//! Each rank owns an [`Endpoint`]: an MPSC receiver (its mailbox) plus
+//! cloned senders to every peer. Messages are matched MPI-style on
+//! `(src, tag)`; out-of-order arrivals are stashed in a pending map. FIFO
+//! is preserved per `(src, tag)` pair because the underlying channel is
+//! FIFO per sender and stashing appends in arrival order.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// Default receive timeout — generous for tests on loaded machines while
+/// still converting deadlocks into typed errors instead of hangs.
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+struct Msg<T> {
+    src: usize,
+    tag: u64,
+    data: Vec<T>,
+}
+
+/// Cloneable handle with senders to every rank's mailbox.
+pub struct TransportHub<T> {
+    senders: Vec<Sender<Msg<T>>>,
+}
+
+impl<T> Clone for TransportHub<T> {
+    fn clone(&self) -> Self {
+        Self {
+            senders: self.senders.clone(),
+        }
+    }
+}
+
+impl<T: Send + 'static> TransportHub<T> {
+    /// Build a hub + one endpoint per rank.
+    pub fn new(size: usize) -> (Self, Vec<Endpoint<T>>) {
+        let mut senders = Vec::with_capacity(size);
+        let mut receivers = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let hub = Self { senders };
+        let endpoints = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, rx)| Endpoint {
+                rank,
+                hub: hub.clone(),
+                rx,
+                pending: HashMap::new(),
+                timeout: DEFAULT_RECV_TIMEOUT,
+                sent_msgs: 0,
+                sent_elems: 0,
+                recvd_msgs: 0,
+            })
+            .collect();
+        (hub, endpoints)
+    }
+
+    fn size(&self) -> usize {
+        self.senders.len()
+    }
+}
+
+/// One rank's connection to the transport. Not `Clone`: exactly one owner
+/// (the rank thread) may receive.
+pub struct Endpoint<T> {
+    rank: usize,
+    hub: TransportHub<T>,
+    rx: Receiver<Msg<T>>,
+    pending: HashMap<(usize, u64), VecDeque<Vec<T>>>,
+    timeout: Duration,
+    // Traffic counters (used by tests and the bench harness).
+    sent_msgs: u64,
+    sent_elems: u64,
+    recvd_msgs: u64,
+}
+
+impl<T: Send + 'static> Endpoint<T> {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.hub.size()
+    }
+
+    /// Override the receive timeout (failure-injection tests use short ones).
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    /// Messages and elements sent so far (monotonic).
+    pub fn traffic(&self) -> (u64, u64, u64) {
+        (self.sent_msgs, self.sent_elems, self.recvd_msgs)
+    }
+
+    /// Post `data` to `to`'s mailbox. Non-blocking (unbounded channel —
+    /// the collectives are self-throttling, at most one outstanding message
+    /// per peer per step).
+    pub fn send(&mut self, to: usize, tag: u64, data: Vec<T>) -> Result<()> {
+        if to >= self.hub.size() {
+            return Err(Error::PeerOutOfRange {
+                peer: to,
+                size: self.hub.size(),
+            });
+        }
+        self.sent_msgs += 1;
+        self.sent_elems += data.len() as u64;
+        self.hub.senders[to]
+            .send(Msg {
+                src: self.rank,
+                tag,
+                data,
+            })
+            .map_err(|_| Error::TransportClosed { rank: self.rank })
+    }
+
+    /// Blocking matched receive from `(from, tag)`.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<T>> {
+        let key = (from, tag);
+        if let Some(q) = self.pending.get_mut(&key) {
+            if let Some(data) = q.pop_front() {
+                self.recvd_msgs += 1;
+                return Ok(data);
+            }
+        }
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(remaining) {
+                Ok(msg) => {
+                    if msg.src == from && msg.tag == tag {
+                        self.recvd_msgs += 1;
+                        return Ok(msg.data);
+                    }
+                    self.pending
+                        .entry((msg.src, msg.tag))
+                        .or_default()
+                        .push_back(msg.data);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(Error::RecvTimeout {
+                        src: from,
+                        tag,
+                        ms: self.timeout.as_millis() as u64,
+                    })
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::TransportClosed { rank: self.rank })
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matched_send_recv() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(1, 7, vec![1.0, 2.0]).unwrap();
+        assert_eq!(e1.recv(0, 7).unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn out_of_order_tags_are_stashed() {
+        let (_hub, mut eps) = TransportHub::<i64>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(1, 1, vec![10]).unwrap();
+        e0.send(1, 2, vec![20]).unwrap();
+        // Receive in reverse tag order.
+        assert_eq!(e1.recv(0, 2).unwrap(), vec![20]);
+        assert_eq!(e1.recv(0, 1).unwrap(), vec![10]);
+    }
+
+    #[test]
+    fn fifo_within_same_tag() {
+        let (_hub, mut eps) = TransportHub::<u8>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        for v in 0..4u8 {
+            e0.send(1, 9, vec![v]).unwrap();
+        }
+        for v in 0..4u8 {
+            assert_eq!(e1.recv(0, 9).unwrap(), vec![v]);
+        }
+    }
+
+    #[test]
+    fn recv_timeout_is_typed_error() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.remove(1);
+        e1.set_timeout(Duration::from_millis(20));
+        match e1.recv(0, 5) {
+            Err(Error::RecvTimeout { src: 0, tag: 5, .. }) => {}
+            other => panic!("expected RecvTimeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn send_to_bad_peer_rejected() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e0 = eps.remove(0);
+        assert!(matches!(
+            e0.send(5, 0, vec![]),
+            Err(Error::PeerOutOfRange { peer: 5, size: 2 })
+        ));
+    }
+
+    #[test]
+    fn cross_thread_roundtrip() {
+        let (_hub, mut eps) = TransportHub::<f64>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            let got = e1.recv(0, 3).unwrap();
+            e1.send(0, 4, got.iter().map(|x| x * 2.0).collect())
+                .unwrap();
+        });
+        e0.send(1, 3, vec![1.5, 2.5]).unwrap();
+        assert_eq!(e0.recv(1, 4).unwrap(), vec![3.0, 5.0]);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,187 @@
+//! Run configuration for the CLI and training drivers (JSON via
+//! [`crate::util::json`]).
+
+use std::path::Path;
+
+use crate::backends::Backend;
+use crate::error::{Error, Result};
+use crate::topology::Machine;
+use crate::util::json::Value;
+
+/// Configuration for a benchmark sweep (`pccl bench`, figure harness).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Machine model for netsim runs.
+    pub machine: Machine,
+    /// Per-rank message sizes in MiB.
+    pub sizes_mb: Vec<usize>,
+    /// Rank counts (GPUs/GCDs).
+    pub ranks: Vec<usize>,
+    /// Independent trials per cell.
+    pub trials: usize,
+    /// RNG seed for jitter reproducibility.
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            machine: Machine::Frontier,
+            sizes_mb: vec![16, 32, 64, 128, 256, 512, 1024],
+            ranks: vec![32, 64, 128, 256, 512, 1024, 2048],
+            trials: 10,
+            seed: 0xC011EC7,
+        }
+    }
+}
+
+impl SweepConfig {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "machine",
+                Value::Str(self.machine.params().name.to_string()),
+            ),
+            ("sizes_mb", Value::arr_usize(&self.sizes_mb)),
+            ("ranks", Value::arr_usize(&self.ranks)),
+            ("trials", Value::Num(self.trials as f64)),
+            ("seed", Value::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            machine: v.get("machine")?.as_str()?.parse().map_err(Error::Json)?,
+            sizes_mb: v.get("sizes_mb")?.vec_usize()?,
+            ranks: v.get("ranks")?.vec_usize()?,
+            trials: v.get("trials")?.as_usize()?,
+            seed: v.get("seed")?.as_f64()? as u64,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_json(&Value::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+fn backend_from_label(s: &str) -> Result<Backend> {
+    Backend::CONCRETE
+        .iter()
+        .copied()
+        .chain([Backend::Auto])
+        .find(|b| b.label() == s)
+        .ok_or_else(|| Error::Json(format!("unknown backend {s:?}")))
+}
+
+/// Configuration for the end-to-end training examples.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of rank threads.
+    pub ranks: usize,
+    /// Steps to run.
+    pub steps: usize,
+    /// Learning rate for the host-side SGD update.
+    pub lr: f32,
+    /// Collective backend for gradient communication.
+    pub backend: Backend,
+    /// Artifact directory (defaults to `./artifacts`).
+    pub artifacts: Option<String>,
+    /// RNG seed for data generation.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            ranks: 4,
+            steps: 200,
+            lr: 0.25,
+            backend: Backend::PcclRec,
+            artifacts: None,
+            seed: 7,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("ranks", Value::Num(self.ranks as f64)),
+            ("steps", Value::Num(self.steps as f64)),
+            ("lr", Value::Num(self.lr as f64)),
+            ("backend", Value::Str(self.backend.label().to_string())),
+            (
+                "artifacts",
+                match &self.artifacts {
+                    Some(a) => Value::Str(a.clone()),
+                    None => Value::Null,
+                },
+            ),
+            ("seed", Value::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            ranks: v.get("ranks")?.as_usize()?,
+            steps: v.get("steps")?.as_usize()?,
+            lr: v.get("lr")?.as_f64()? as f32,
+            backend: backend_from_label(v.get("backend")?.as_str()?)?,
+            artifacts: v
+                .get_opt("artifacts")
+                .map(|a| a.as_str().map(str::to_string))
+                .transpose()?,
+            seed: v.get("seed")?.as_f64()? as u64,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_json(&Value::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn sweep_roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let p = dir.path().join("sweep.json");
+        let cfg = SweepConfig::default();
+        cfg.save(&p).unwrap();
+        let back = SweepConfig::load(&p).unwrap();
+        assert_eq!(back.sizes_mb, cfg.sizes_mb);
+        assert_eq!(back.trials, 10);
+        assert_eq!(back.machine, Machine::Frontier);
+    }
+
+    #[test]
+    fn train_roundtrip_with_optional_fields() {
+        let dir = TempDir::new().unwrap();
+        let p = dir.path().join("train.json");
+        let mut cfg = TrainConfig::default();
+        cfg.backend = Backend::Vendor;
+        cfg.artifacts = Some("custom/arts".into());
+        cfg.save(&p).unwrap();
+        let back = TrainConfig::load(&p).unwrap();
+        assert_eq!(back.backend, Backend::Vendor);
+        assert_eq!(back.artifacts.as_deref(), Some("custom/arts"));
+
+        cfg.artifacts = None;
+        cfg.save(&p).unwrap();
+        let back = TrainConfig::load(&p).unwrap();
+        assert!(back.artifacts.is_none());
+    }
+}

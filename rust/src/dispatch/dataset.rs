@@ -1,0 +1,178 @@
+//! Dispatcher training data (§IV-C): for each (message size, GPU count)
+//! configuration, run every candidate backend ten times on the netsim and
+//! label the configuration with the fastest backend's class id.
+
+use crate::backends::{Backend, CollKind};
+use crate::error::Result;
+use crate::netsim::libmodel::{simulate, LibModel};
+use crate::topology::Machine;
+use crate::util::rng::Rng;
+
+/// One labeled configuration.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Features: `[log2(message MiB), log2(ranks)]` — the paper's two
+    /// dominant factors.
+    pub features: Vec<f64>,
+    /// Class id = index into [`Backend::CONCRETE`].
+    pub label: usize,
+    /// Message bytes (for reporting).
+    pub msg: usize,
+    /// Rank count (for reporting).
+    pub ranks: usize,
+}
+
+/// A labeled dataset for one (machine, collective).
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub samples: Vec<Sample>,
+}
+
+/// Dispatcher feature vector for a call site.
+pub fn features(msg_bytes: usize, ranks: usize) -> Vec<f64> {
+    let mb = (msg_bytes as f64 / (1024.0 * 1024.0)).max(1e-6);
+    vec![mb.log2(), (ranks as f64).log2()]
+}
+
+impl Dataset {
+    /// Build the dataset by sweeping the netsim: `trials` runs per
+    /// (backend, size, ranks); label = argmin of mean time.
+    pub fn build(
+        machine: Machine,
+        kind: CollKind,
+        sizes_mb: &[usize],
+        ranks: &[usize],
+        trials: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut samples = Vec::new();
+        for &mb in sizes_mb {
+            let msg = mb << 20;
+            for &p in ranks {
+                let mut best: Option<(f64, usize)> = None;
+                for (class, backend) in Backend::CONCRETE.iter().enumerate() {
+                    let lib = LibModel::from_backend(*backend).expect("concrete backend");
+                    let out = simulate(machine, lib, kind, msg, p, trials, seed)?;
+                    let mean = out.stats.mean();
+                    if best.map_or(true, |(b, _)| mean < b) {
+                        best = Some((mean, class));
+                    }
+                }
+                samples.push(Sample {
+                    features: features(msg, p),
+                    label: best.expect("non-empty backends").1,
+                    msg,
+                    ranks: p,
+                });
+            }
+        }
+        Ok(Self { samples })
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Feature matrix / label vector views.
+    pub fn xy(&self) -> (Vec<Vec<f64>>, Vec<usize>) {
+        (
+            self.samples.iter().map(|s| s.features.clone()).collect(),
+            self.samples.iter().map(|s| s.label).collect(),
+        )
+    }
+
+    /// Stratified train/test split (the paper's 80/20): each class
+    /// contributes proportionally to the test set.
+    pub fn stratified_split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut by_class: std::collections::BTreeMap<usize, Vec<&Sample>> = Default::default();
+        for s in &self.samples {
+            by_class.entry(s.label).or_default().push(s);
+        }
+        let mut train = Dataset::default();
+        let mut test = Dataset::default();
+        for (_, mut group) in by_class {
+            rng.shuffle(&mut group);
+            let n_test = ((group.len() as f64 * test_frac).round() as usize).min(group.len());
+            for (i, s) in group.into_iter().enumerate() {
+                if i < n_test {
+                    test.samples.push(s.clone());
+                } else {
+                    train.samples.push(s.clone());
+                }
+            }
+        }
+        (train, test)
+    }
+
+    /// Class histogram (for stratification checks and Table I context).
+    pub fn class_counts(&self) -> std::collections::BTreeMap<usize, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for s in &self.samples {
+            *m.entry(s.label).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_labels_regimes_correctly() {
+        // Latency-bound corner must prefer a PCCL backend; bandwidth-bound
+        // corner must prefer the vendor library (Fig. 9/11 structure).
+        let d = Dataset::build(
+            Machine::Frontier,
+            CollKind::AllGather,
+            &[16, 1024],
+            &[32, 2048],
+            3,
+            1,
+        )
+        .unwrap();
+        assert_eq!(d.len(), 4);
+        let find = |msg_mb: usize, p: usize| {
+            d.samples
+                .iter()
+                .find(|s| s.msg == msg_mb << 20 && s.ranks == p)
+                .unwrap()
+                .label
+        };
+        let vendor = Backend::Vendor.class_id().unwrap();
+        let rec = Backend::PcclRec.class_id().unwrap();
+        assert_eq!(find(1024, 32), vendor, "bandwidth-bound corner");
+        assert_eq!(find(16, 2048), rec, "latency-bound corner");
+    }
+
+    #[test]
+    fn stratified_split_is_stratified() {
+        let mut d = Dataset::default();
+        for i in 0..50 {
+            d.samples.push(Sample {
+                features: vec![i as f64, 0.0],
+                label: i % 2,
+                msg: 1,
+                ranks: 1,
+            });
+        }
+        let (train, test) = d.stratified_split(0.2, 7);
+        assert_eq!(train.len() + test.len(), 50);
+        assert_eq!(test.len(), 10);
+        let counts = test.class_counts();
+        assert_eq!(counts[&0], 5);
+        assert_eq!(counts[&1], 5);
+    }
+
+    #[test]
+    fn features_are_log_scaled() {
+        let f = features(64 << 20, 1024);
+        assert!((f[0] - 6.0).abs() < 1e-9);
+        assert!((f[1] - 10.0).abs() < 1e-9);
+    }
+}

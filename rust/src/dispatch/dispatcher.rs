@@ -1,0 +1,275 @@
+//! The adaptive dispatcher: per-(machine, collective) SVMs that map
+//! `(message size, rank count)` to the fastest backend at runtime (§IV-C).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+
+use crate::backends::{Backend, Chooser, CollKind};
+use crate::error::{Error, Result};
+use crate::topology::Machine;
+use crate::util::json::Value;
+
+use super::dataset::{features, Dataset};
+use super::svm::{train_with_cv, MultiClassSvm, Scaler, SvmParams};
+
+/// One trained collective model + its evaluation record (a Table-I row).
+#[derive(Debug, Clone)]
+pub struct DispatcherModel {
+    pub scaler: Scaler,
+    pub svm: MultiClassSvm,
+    pub params: SvmParams,
+    /// 5-fold CV accuracy on the training split.
+    pub cv_accuracy: f64,
+    /// Held-out test accuracy (the paper's Table I column).
+    pub test_accuracy: f64,
+    pub test_size: usize,
+    pub test_correct: usize,
+    pub train_size: usize,
+}
+
+impl DispatcherModel {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("scaler", self.scaler.to_json()),
+            ("svm", self.svm.to_json()),
+            ("params", self.params.to_json()),
+            ("cv_accuracy", Value::Num(self.cv_accuracy)),
+            ("test_accuracy", Value::Num(self.test_accuracy)),
+            ("test_size", Value::Num(self.test_size as f64)),
+            ("test_correct", Value::Num(self.test_correct as f64)),
+            ("train_size", Value::Num(self.train_size as f64)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            scaler: Scaler::from_json(v.get("scaler")?)?,
+            svm: MultiClassSvm::from_json(v.get("svm")?)?,
+            params: SvmParams::from_json(v.get("params")?)?,
+            cv_accuracy: v.get("cv_accuracy")?.as_f64()?,
+            test_accuracy: v.get("test_accuracy")?.as_f64()?,
+            test_size: v.get("test_size")?.as_usize()?,
+            test_correct: v.get("test_correct")?.as_usize()?,
+            train_size: v.get("train_size")?.as_usize()?,
+        })
+    }
+}
+
+/// Trained dispatcher for one machine.
+#[derive(Debug, Clone)]
+pub struct SvmDispatcher {
+    pub machine: Machine,
+    models: BTreeMap<String, DispatcherModel>,
+}
+
+fn kind_key(kind: CollKind) -> String {
+    kind.label().to_string()
+}
+
+impl SvmDispatcher {
+    /// Train one SVM per collective on netsim sweep data, following the
+    /// paper's protocol: 10 trials per configuration, stratified 80/20
+    /// split, 5-fold CV hyperparameter selection.
+    pub fn train(
+        machine: Machine,
+        sizes_mb: &[usize],
+        ranks: &[usize],
+        trials: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut models = BTreeMap::new();
+        for kind in CollKind::ALL {
+            let data = Dataset::build(machine, kind, sizes_mb, ranks, trials, seed)?;
+            let (train, test) = data.stratified_split(0.2, seed ^ 0xA5A5);
+            let (txs_raw, tys) = train.xy();
+            let scaler = Scaler::fit(&txs_raw);
+            let txs = scaler.transform_all(&txs_raw);
+            let (svm, params, cv_accuracy) = train_with_cv(&txs, &tys, 5, seed)?;
+            let (vxs_raw, vys) = test.xy();
+            let vxs = scaler.transform_all(&vxs_raw);
+            let test_correct = vxs
+                .iter()
+                .zip(&vys)
+                .filter(|(x, &y)| svm.predict(x) == y)
+                .count();
+            let test_accuracy = if vys.is_empty() {
+                0.0
+            } else {
+                test_correct as f64 / vys.len() as f64
+            };
+            models.insert(
+                kind_key(kind),
+                DispatcherModel {
+                    scaler,
+                    svm,
+                    params,
+                    cv_accuracy,
+                    test_accuracy,
+                    test_size: vys.len(),
+                    test_correct,
+                    train_size: tys.len(),
+                },
+            );
+        }
+        Ok(Self { machine, models })
+    }
+
+    /// The model for one collective.
+    pub fn model(&self, kind: CollKind) -> Result<&DispatcherModel> {
+        self.models
+            .get(&kind_key(kind))
+            .ok_or_else(|| Error::Dispatch(format!("no model for {}", kind.label())))
+    }
+
+    /// Predict the fastest backend for a call site.
+    pub fn choose(&self, kind: CollKind, msg_bytes: usize, ranks: usize) -> Backend {
+        match self.model(kind) {
+            Ok(m) => {
+                let x = m.scaler.transform(&features(msg_bytes, ranks));
+                Backend::CONCRETE[m.svm.predict(&x).min(Backend::CONCRETE.len() - 1)]
+            }
+            Err(_) => Backend::PcclRec,
+        }
+    }
+
+    /// Adapt to the [`Chooser`] hook used by
+    /// [`crate::backends::CollectiveOptions`].
+    pub fn chooser(self: &Arc<Self>) -> Chooser {
+        let this = Arc::clone(self);
+        Arc::new(move |kind, bytes, ranks| this.choose(kind, bytes, ranks))
+    }
+
+    /// Serialize to JSON (model persistence — train once, ship with the
+    /// library, like the paper's per-machine models).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "machine",
+                Value::Str(self.machine.params().name.to_string()),
+            ),
+            (
+                "models",
+                Value::Obj(
+                    self.models
+                        .iter()
+                        .map(|(k, m)| (k.clone(), m.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let machine: Machine = v
+            .get("machine")?
+            .as_str()?
+            .parse()
+            .map_err(Error::Json)?;
+        let mut models = BTreeMap::new();
+        for (k, m) in v.get("models")?.as_obj()? {
+            models.insert(k.clone(), DispatcherModel::from_json(m)?);
+        }
+        Ok(Self { machine, models })
+    }
+
+    /// Render the Table-I rows for this machine.
+    pub fn table1(&self) -> Vec<(String, usize, usize, f64)> {
+        CollKind::ALL
+            .iter()
+            .filter_map(|&k| {
+                self.models.get(&kind_key(k)).map(|m| {
+                    (
+                        k.label().to_string(),
+                        m.test_size,
+                        m.test_correct,
+                        m.test_accuracy * 100.0,
+                    )
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_dispatcher() -> SvmDispatcher {
+        // Small sweep to keep the test fast; still covers both regimes.
+        SvmDispatcher::train(
+            Machine::Frontier,
+            &[16, 64, 256, 1024],
+            &[32, 128, 512, 2048],
+            3,
+            11,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dispatcher_learns_the_regime_split() {
+        let d = quick_dispatcher();
+        // Bandwidth-bound corner → vendor; latency-bound corner → pccl_rec.
+        assert_eq!(
+            d.choose(CollKind::AllGather, 1024 << 20, 32),
+            Backend::Vendor
+        );
+        assert_eq!(
+            d.choose(CollKind::AllGather, 16 << 20, 2048),
+            Backend::PcclRec
+        );
+    }
+
+    #[test]
+    fn accuracy_is_reported_and_reasonable() {
+        let d = quick_dispatcher();
+        let m = d.model(CollKind::ReduceScatter).unwrap();
+        assert!(m.train_size > 0 && m.test_size > 0);
+        // The paper reports 75–95% on real (noisy) data; the netsim dataset
+        // is cleaner, so demand at least 60% on the tiny test split.
+        assert!(
+            m.test_accuracy >= 0.6,
+            "test accuracy {}",
+            m.test_accuracy
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = quick_dispatcher();
+        let dir = crate::util::tmp::TempDir::new().unwrap();
+        let p = dir.path().join("dispatcher.json");
+        d.save(&p).unwrap();
+        let d2 = SvmDispatcher::load(&p).unwrap();
+        for kind in CollKind::ALL {
+            for (mb, p_) in [(16usize, 2048usize), (1024, 32), (128, 256)] {
+                assert_eq!(
+                    d.choose(kind, mb << 20, p_),
+                    d2.choose(kind, mb << 20, p_)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chooser_hook_integrates_with_options() {
+        let d = Arc::new(quick_dispatcher());
+        let opts = crate::backends::CollectiveOptions::<f32>::default()
+            .backend(Backend::Auto)
+            .chooser(d.chooser());
+        let b = opts.resolve(CollKind::AllGather, 16 << 20, 2048);
+        assert_eq!(b, Backend::PcclRec);
+    }
+}

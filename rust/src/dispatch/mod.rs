@@ -1,0 +1,11 @@
+//! Learning-based adaptive dispatching (§IV-C): a from-scratch SVM (SMO)
+//! trained per (machine, collective) on sweep data to pick the fastest
+//! backend at runtime.
+
+pub mod dataset;
+pub mod dispatcher;
+pub mod svm;
+
+pub use dataset::{Dataset, Sample};
+pub use dispatcher::{DispatcherModel, SvmDispatcher};
+pub use svm::{KernelKind, MultiClassSvm, SvmParams};

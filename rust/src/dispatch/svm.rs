@@ -1,0 +1,577 @@
+//! Support Vector Machine, from scratch.
+//!
+//! Binary soft-margin SVM trained with (simplified) SMO [Platt 1998],
+//! RBF or linear kernel, extended to multi-class with one-vs-rest — the
+//! classifier behind the paper's adaptive dispatcher (§IV-C, Table I).
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Kernel choice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelKind {
+    Linear,
+    /// `exp(-gamma · ||x-y||²)`.
+    Rbf { gamma: f64 },
+}
+
+impl KernelKind {
+    fn eval(self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            KernelKind::Linear => a.iter().zip(b).map(|(x, y)| x * y).sum(),
+            KernelKind::Rbf { gamma } => {
+                let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                (-gamma * d2).exp()
+            }
+        }
+    }
+}
+
+/// SVM hyperparameters (C and kernel picked by cross-validation).
+#[derive(Debug, Clone, Copy)]
+pub struct SvmParams {
+    /// Soft-margin penalty.
+    pub c: f64,
+    pub kernel: KernelKind,
+    /// KKT violation tolerance.
+    pub tol: f64,
+    /// SMO passes without progress before stopping.
+    pub max_passes: usize,
+    /// Hard cap on sweep iterations.
+    pub max_iters: usize,
+    /// RNG seed for the j-choice in SMO.
+    pub seed: u64,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        Self {
+            c: 10.0,
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            tol: 1e-3,
+            max_passes: 8,
+            max_iters: 20_000,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Feature standardizer (zero mean, unit variance per dimension).
+#[derive(Debug, Clone)]
+pub struct Scaler {
+    mean: Vec<f64>,
+    std: Vec<f64>,
+}
+
+impl Scaler {
+    pub fn fit(xs: &[Vec<f64>]) -> Self {
+        let d = xs.first().map_or(0, Vec::len);
+        let n = xs.len().max(1) as f64;
+        let mut mean = vec![0.0; d];
+        for x in xs {
+            for (m, v) in mean.iter_mut().zip(x) {
+                *m += v / n;
+            }
+        }
+        let mut std = vec![0.0; d];
+        for x in xs {
+            for (s, (v, m)) in std.iter_mut().zip(x.iter().zip(&mean)) {
+                *s += (v - m) * (v - m) / n;
+            }
+        }
+        for s in &mut std {
+            *s = s.sqrt().max(1e-9);
+        }
+        Self { mean, std }
+    }
+
+    pub fn transform(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(self.mean.iter().zip(&self.std))
+            .map(|(v, (m, s))| (v - m) / s)
+            .collect()
+    }
+
+    pub fn transform_all(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        xs.iter().map(|x| self.transform(x)).collect()
+    }
+}
+
+/// A trained binary SVM (support vectors + duals + bias).
+#[derive(Debug, Clone)]
+pub struct BinarySvm {
+    kernel: KernelKind,
+    support: Vec<Vec<f64>>,
+    /// `alpha_i * y_i` per support vector.
+    coef: Vec<f64>,
+    bias: f64,
+}
+
+impl BinarySvm {
+    /// Train with simplified SMO. `ys` must be ±1.
+    pub fn train(xs: &[Vec<f64>], ys: &[f64], params: &SvmParams) -> Result<Self> {
+        let n = xs.len();
+        if n == 0 || ys.len() != n {
+            return Err(Error::Dispatch("empty or mismatched training set".into()));
+        }
+        if ys.iter().any(|&y| y != 1.0 && y != -1.0) {
+            return Err(Error::Dispatch("labels must be ±1".into()));
+        }
+        let k = |i: usize, j: usize| params.kernel.eval(&xs[i], &xs[j]);
+        let mut alpha = vec![0.0f64; n];
+        let mut b = 0.0f64;
+        let mut rng = Rng::seed_from_u64(params.seed);
+        let f = |alpha: &[f64], b: f64, i: usize| -> f64 {
+            let mut s = b;
+            for j in 0..n {
+                if alpha[j] != 0.0 {
+                    s += alpha[j] * ys[j] * k(j, i);
+                }
+            }
+            s
+        };
+        let mut passes = 0;
+        let mut iters = 0;
+        while passes < params.max_passes && iters < params.max_iters {
+            let mut changed = 0;
+            for i in 0..n {
+                iters += 1;
+                let ei = f(&alpha, b, i) - ys[i];
+                let violates = (ys[i] * ei < -params.tol && alpha[i] < params.c)
+                    || (ys[i] * ei > params.tol && alpha[i] > 0.0);
+                if !violates {
+                    continue;
+                }
+                // Pick j ≠ i at random (simplified heuristic).
+                let mut j = rng.range_usize(0, n - 1);
+                if j >= i {
+                    j += 1;
+                }
+                let ej = f(&alpha, b, j) - ys[j];
+                let (ai_old, aj_old) = (alpha[i], alpha[j]);
+                let (lo, hi) = if ys[i] != ys[j] {
+                    (
+                        (aj_old - ai_old).max(0.0),
+                        (params.c + aj_old - ai_old).min(params.c),
+                    )
+                } else {
+                    (
+                        (ai_old + aj_old - params.c).max(0.0),
+                        (ai_old + aj_old).min(params.c),
+                    )
+                };
+                if lo >= hi {
+                    continue;
+                }
+                let eta = 2.0 * k(i, j) - k(i, i) - k(j, j);
+                if eta >= 0.0 {
+                    continue;
+                }
+                let mut aj = aj_old - ys[j] * (ei - ej) / eta;
+                aj = aj.clamp(lo, hi);
+                if (aj - aj_old).abs() < 1e-7 {
+                    continue;
+                }
+                let ai = ai_old + ys[i] * ys[j] * (aj_old - aj);
+                alpha[i] = ai;
+                alpha[j] = aj;
+                let b1 = b - ei
+                    - ys[i] * (ai - ai_old) * k(i, i)
+                    - ys[j] * (aj - aj_old) * k(i, j);
+                let b2 = b - ej
+                    - ys[i] * (ai - ai_old) * k(i, j)
+                    - ys[j] * (aj - aj_old) * k(j, j);
+                b = if ai > 0.0 && ai < params.c {
+                    b1
+                } else if aj > 0.0 && aj < params.c {
+                    b2
+                } else {
+                    (b1 + b2) / 2.0
+                };
+                changed += 1;
+            }
+            if changed == 0 {
+                passes += 1;
+            } else {
+                passes = 0;
+            }
+        }
+        let mut support = Vec::new();
+        let mut coef = Vec::new();
+        for i in 0..n {
+            if alpha[i] > 1e-9 {
+                support.push(xs[i].clone());
+                coef.push(alpha[i] * ys[i]);
+            }
+        }
+        Ok(Self {
+            kernel: params.kernel,
+            support,
+            coef,
+            bias: b,
+        })
+    }
+
+    /// Signed decision value.
+    pub fn decision(&self, x: &[f64]) -> f64 {
+        let mut s = self.bias;
+        for (sv, c) in self.support.iter().zip(&self.coef) {
+            s += c * self.kernel.eval(sv, x);
+        }
+        s
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        if self.decision(x) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    pub fn n_support(&self) -> usize {
+        self.support.len()
+    }
+}
+
+/// One-vs-rest multi-class SVM.
+#[derive(Debug, Clone)]
+pub struct MultiClassSvm {
+    per_class: Vec<BinarySvm>,
+    /// Class ids present at training time (decision index → class id).
+    classes: Vec<usize>,
+}
+
+impl MultiClassSvm {
+    /// Train one binary SVM per distinct class.
+    pub fn train(xs: &[Vec<f64>], ys: &[usize], params: &SvmParams) -> Result<Self> {
+        let mut classes: Vec<usize> = ys.to_vec();
+        classes.sort_unstable();
+        classes.dedup();
+        if classes.len() < 2 {
+            // Degenerate: single class — still a valid (constant) model.
+            return Ok(Self {
+                per_class: Vec::new(),
+                classes,
+            });
+        }
+        let mut per_class = Vec::with_capacity(classes.len());
+        for &cl in &classes {
+            let bin_ys: Vec<f64> = ys.iter().map(|&y| if y == cl { 1.0 } else { -1.0 }).collect();
+            per_class.push(BinarySvm::train(xs, &bin_ys, params)?);
+        }
+        Ok(Self { per_class, classes })
+    }
+
+    /// Predicted class id (argmax of one-vs-rest decision values).
+    pub fn predict(&self, x: &[f64]) -> usize {
+        if self.per_class.is_empty() {
+            return self.classes.first().copied().unwrap_or(0);
+        }
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (svm, &cl) in self.per_class.iter().zip(&self.classes) {
+            let d = svm.decision(x);
+            if d > best.0 {
+                best = (d, cl);
+            }
+        }
+        best.1
+    }
+
+    /// Accuracy on a labeled set.
+    pub fn accuracy(&self, xs: &[Vec<f64>], ys: &[usize]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let correct = xs
+            .iter()
+            .zip(ys)
+            .filter(|(x, &y)| self.predict(x) == y)
+            .count();
+        correct as f64 / xs.len() as f64
+    }
+}
+
+/// Grid-search C/γ by `k`-fold cross-validation (the paper's five-fold
+/// protocol) and train on the full training set with the winner.
+pub fn train_with_cv(
+    xs: &[Vec<f64>],
+    ys: &[usize],
+    k: usize,
+    seed: u64,
+) -> Result<(MultiClassSvm, SvmParams, f64)> {
+    let cs = [1.0, 10.0, 100.0];
+    let gammas = [0.1, 0.5, 2.0];
+    let n = xs.len();
+    if n < k.max(2) {
+        return Err(Error::Dispatch(format!(
+            "need ≥ {k} samples for {k}-fold CV, got {n}"
+        )));
+    }
+    // Shuffled fold assignment.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(&mut order);
+    let mut best: Option<(f64, SvmParams)> = None;
+    for &c in &cs {
+        for &gamma in &gammas {
+            let params = SvmParams {
+                c,
+                kernel: KernelKind::Rbf { gamma },
+                seed,
+                ..Default::default()
+            };
+            let mut acc_sum = 0.0;
+            for fold in 0..k {
+                let (mut txs, mut tys, mut vxs, mut vys) =
+                    (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+                for (pos, &i) in order.iter().enumerate() {
+                    if pos % k == fold {
+                        vxs.push(xs[i].clone());
+                        vys.push(ys[i]);
+                    } else {
+                        txs.push(xs[i].clone());
+                        tys.push(ys[i]);
+                    }
+                }
+                let model = MultiClassSvm::train(&txs, &tys, &params)?;
+                acc_sum += model.accuracy(&vxs, &vys);
+            }
+            let acc = acc_sum / k as f64;
+            if best.as_ref().map_or(true, |(b, _)| acc > *b) {
+                best = Some((acc, params));
+            }
+        }
+    }
+    let (cv_acc, params) = best.expect("non-empty grid");
+    let model = MultiClassSvm::train(xs, ys, &params)?;
+    Ok((model, params, cv_acc))
+}
+
+
+// --- JSON persistence (offline substrate: util::json) ----------------------
+
+use crate::util::json::Value;
+
+impl KernelKind {
+    pub fn to_json(&self) -> Value {
+        match self {
+            KernelKind::Linear => Value::obj(vec![("kind", Value::Str("linear".into()))]),
+            KernelKind::Rbf { gamma } => Value::obj(vec![
+                ("kind", Value::Str("rbf".into())),
+                ("gamma", Value::Num(*gamma)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        match v.get("kind")?.as_str()? {
+            "linear" => Ok(KernelKind::Linear),
+            "rbf" => Ok(KernelKind::Rbf {
+                gamma: v.get("gamma")?.as_f64()?,
+            }),
+            other => Err(Error::Json(format!("unknown kernel {other:?}"))),
+        }
+    }
+}
+
+impl SvmParams {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("c", Value::Num(self.c)),
+            ("kernel", self.kernel.to_json()),
+            ("tol", Value::Num(self.tol)),
+            ("max_passes", Value::Num(self.max_passes as f64)),
+            ("max_iters", Value::Num(self.max_iters as f64)),
+            ("seed", Value::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            c: v.get("c")?.as_f64()?,
+            kernel: KernelKind::from_json(v.get("kernel")?)?,
+            tol: v.get("tol")?.as_f64()?,
+            max_passes: v.get("max_passes")?.as_usize()?,
+            max_iters: v.get("max_iters")?.as_usize()?,
+            seed: v.get("seed")?.as_f64()? as u64,
+        })
+    }
+}
+
+impl Scaler {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("mean", Value::arr_f64(&self.mean)),
+            ("std", Value::arr_f64(&self.std)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            mean: v.get("mean")?.vec_f64()?,
+            std: v.get("std")?.vec_f64()?,
+        })
+    }
+}
+
+impl BinarySvm {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("kernel", self.kernel.to_json()),
+            (
+                "support",
+                Value::Arr(self.support.iter().map(|s| Value::arr_f64(s)).collect()),
+            ),
+            ("coef", Value::arr_f64(&self.coef)),
+            ("bias", Value::Num(self.bias)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            kernel: KernelKind::from_json(v.get("kernel")?)?,
+            support: v
+                .get("support")?
+                .as_arr()?
+                .iter()
+                .map(Value::vec_f64)
+                .collect::<Result<_>>()?,
+            coef: v.get("coef")?.vec_f64()?,
+            bias: v.get("bias")?.as_f64()?,
+        })
+    }
+}
+
+impl MultiClassSvm {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "per_class",
+                Value::Arr(self.per_class.iter().map(BinarySvm::to_json).collect()),
+            ),
+            ("classes", Value::arr_usize(&self.classes)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            per_class: v
+                .get("per_class")?
+                .as_arr()?
+                .iter()
+                .map(BinarySvm::from_json)
+                .collect::<Result<_>>()?,
+            classes: v.get("classes")?.vec_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linearly_separable() -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..20 {
+            let t = i as f64 / 5.0;
+            xs.push(vec![t, t + 2.0]);
+            ys.push(1.0);
+            xs.push(vec![t, t - 2.0]);
+            ys.push(-1.0);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn binary_separable_is_learned() {
+        let (xs, ys) = linearly_separable();
+        let svm = BinarySvm::train(&xs, &ys, &SvmParams::default()).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(svm.predict(x), *y, "misclassified {x:?}");
+        }
+        assert!(svm.n_support() >= 2);
+    }
+
+    #[test]
+    fn rbf_learns_xor() {
+        // XOR — not linearly separable; RBF must handle it.
+        let xs: Vec<Vec<f64>> = vec![
+            vec![0.0, 0.0],
+            vec![1.0, 1.0],
+            vec![0.0, 1.0],
+            vec![1.0, 0.0],
+            vec![0.1, 0.1],
+            vec![0.9, 0.9],
+            vec![0.1, 0.9],
+            vec![0.9, 0.1],
+        ];
+        let ys = vec![-1.0, -1.0, 1.0, 1.0, -1.0, -1.0, 1.0, 1.0];
+        let params = SvmParams {
+            c: 100.0,
+            kernel: KernelKind::Rbf { gamma: 2.0 },
+            ..Default::default()
+        };
+        let svm = BinarySvm::train(&xs, &ys, &params).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(svm.predict(x), *y, "xor misclassified at {x:?}");
+        }
+    }
+
+    #[test]
+    fn multiclass_quadrants() {
+        // 4 classes = 4 quadrants.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..6 {
+            for j in 0..6 {
+                let (x, y) = (0.3 + i as f64 * 0.4, 0.3 + j as f64 * 0.4);
+                for (sx, sy, cl) in
+                    [(1.0, 1.0, 0usize), (-1.0, 1.0, 1), (-1.0, -1.0, 2), (1.0, -1.0, 3)]
+                {
+                    xs.push(vec![sx * x, sy * y]);
+                    ys.push(cl);
+                }
+            }
+        }
+        let model = MultiClassSvm::train(&xs, &ys, &SvmParams::default()).unwrap();
+        assert!(model.accuracy(&xs, &ys) > 0.97);
+        assert_eq!(model.predict(&[2.0, 2.0]), 0);
+        assert_eq!(model.predict(&[-2.0, -2.0]), 2);
+    }
+
+    #[test]
+    fn scaler_standardizes() {
+        let xs = vec![vec![10.0, 0.0], vec![20.0, 1.0], vec![30.0, 2.0]];
+        let sc = Scaler::fit(&xs);
+        let t = sc.transform_all(&xs);
+        let mean0: f64 = t.iter().map(|x| x[0]).sum::<f64>() / 3.0;
+        assert!(mean0.abs() < 1e-12);
+        assert!(t[0][0] < 0.0 && t[2][0] > 0.0);
+    }
+
+    #[test]
+    fn cv_picks_reasonable_params() {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..30 {
+            let t = i as f64 / 10.0;
+            xs.push(vec![t, 1.0]);
+            ys.push(0usize);
+            xs.push(vec![t, -1.0]);
+            ys.push(1usize);
+        }
+        let (model, _params, cv_acc) = train_with_cv(&xs, &ys, 5, 42).unwrap();
+        assert!(cv_acc > 0.9, "cv accuracy {cv_acc}");
+        assert!(model.accuracy(&xs, &ys) > 0.95);
+    }
+
+    #[test]
+    fn degenerate_single_class() {
+        let xs = vec![vec![1.0], vec![2.0]];
+        let ys = vec![3usize, 3];
+        let m = MultiClassSvm::train(&xs, &ys, &SvmParams::default()).unwrap();
+        assert_eq!(m.predict(&[5.0]), 3);
+    }
+}

@@ -1,0 +1,66 @@
+//! Crate-wide error type. Every fallible public API returns [`Result`].
+
+use thiserror::Error;
+
+/// Errors surfaced by the PCCL library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// A collective was invoked with a buffer whose length is incompatible
+    /// with the communicator size (e.g. reduce-scatter input not divisible
+    /// by `p`).
+    #[error("buffer size {len} incompatible with communicator size {size}: {why}")]
+    BadBufferSize {
+        len: usize,
+        size: usize,
+        why: &'static str,
+    },
+
+    /// A rank tried to communicate with a peer outside `0..size`.
+    #[error("peer rank {peer} out of range for communicator of size {size}")]
+    PeerOutOfRange { peer: usize, size: usize },
+
+    /// A receive timed out — the peer rank likely died or deadlocked.
+    #[error("recv from rank {src} (tag {tag:#x}) timed out after {ms} ms")]
+    RecvTimeout { src: usize, tag: u64, ms: u64 },
+
+    /// The transport was shut down while an operation was in flight.
+    #[error("transport closed while rank {rank} was communicating")]
+    TransportClosed { rank: usize },
+
+    /// Topology construction was asked for an impossible shape.
+    #[error("invalid topology: {0}")]
+    InvalidTopology(String),
+
+    /// An artifact produced by `make artifacts` is missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// The PJRT runtime failed to compile or execute an HLO module.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// SVM training / dispatcher errors.
+    #[error("dispatch error: {0}")]
+    Dispatch(String),
+
+    /// Simulator configuration errors.
+    #[error("netsim error: {0}")]
+    NetSim(String),
+
+    /// Anything I/O.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// JSON (manifest, model persistence).
+    #[error("json error: {0}")]
+    Json(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,51 @@
+//! # PCCL-RS — Performant Collective Communication Library (reproduction)
+//!
+//! A from-scratch Rust reproduction of *"The Big Send-off: Scalable and
+//! Performant Collectives for Deep Learning"* (CS.DC 2025): hierarchical
+//! all-gather / reduce-scatter / all-reduce collectives with ring and
+//! recursive doubling/halving inter-node backends, an SVM-based adaptive
+//! dispatcher, a real multi-rank data plane, and a discrete-event network
+//! simulator that regenerates every figure and table of the paper's
+//! evaluation at Frontier/Perlmutter scale.
+//!
+//! ## Layers
+//! * **L3** (this crate): communicators, collective algorithms, backends,
+//!   adaptive dispatch, network simulation, training drivers.
+//! * **L2** (`python/compile/model.py`, build time): JAX GPT `train_step`
+//!   AOT-lowered to HLO text, executed from [`runtime`] via PJRT.
+//! * **L1** (`python/compile/kernels/`, build time): Pallas reduction and
+//!   unshuffle kernels that lower into the same artifacts.
+//!
+//! ## Quickstart
+//! ```no_run
+//! use pccl::comm::CommWorld;
+//! use pccl::backends::{Backend, CollectiveOptions};
+//!
+//! let world = CommWorld::<f32>::new(8);
+//! let outs = world.try_run(move |comm| {
+//!     let mine = vec![comm.rank() as f32; 1024];
+//!     let opts = CollectiveOptions::default().backend(Backend::PcclRec);
+//!     pccl::backends::all_reduce(comm, &mine, &opts)
+//! });
+//! ```
+
+pub mod backends;
+pub mod bench;
+pub mod collectives;
+pub mod comm;
+pub mod config;
+pub mod dispatch;
+pub mod error;
+pub mod metrics;
+pub mod netsim;
+pub mod reduction;
+pub mod runtime;
+pub mod topology;
+pub mod train;
+pub mod util;
+pub mod workload;
+
+pub use backends::{Backend, CollectiveOptions};
+pub use comm::{CommWorld, Communicator};
+pub use error::{Error, Result};
+pub use topology::{Machine, Topology};

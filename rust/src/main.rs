@@ -1,0 +1,354 @@
+//! `pccl` — the leader CLI: benchmark the real data plane, regenerate the
+//! paper's figures/tables from the netsim, train/inspect the adaptive
+//! dispatcher, and run end-to-end DDP / ZeRO-3 training over the AOT
+//! artifacts.
+//!
+//! ```text
+//! pccl bench    [--collective all-gather|reduce-scatter|all-reduce]
+//!               [--backend vendor|cray-mpich|pccl_ring|pccl_rec|pccl_auto]
+//!               [--ranks 8] [--nodes 2] [--size-kb 1024] [--trials 10]
+//! pccl figures  <fig1|fig2|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|fig13|table1|all>
+//!               [--out results]
+//! pccl dispatch [--trials 10] [--save results/models]
+//! pccl train    <ddp|zero3> [--ranks 4] [--steps 100] [--lr 0.5]
+//!               [--backend pccl_rec] [--artifacts DIR]
+//! pccl info
+//! ```
+
+use std::path::PathBuf;
+
+use pccl::backends::{Backend, CollKind, CollectiveOptions};
+use pccl::bench::figures;
+use pccl::bench::Table;
+use pccl::comm::CommWorld;
+use pccl::dispatch::SvmDispatcher;
+use pccl::error::Result;
+use pccl::metrics::{fmt_secs, Stats, Timer};
+use pccl::topology::{Machine, Topology};
+use pccl::train::{ddp::run_ddp, zero3::run_zero3, DdpConfig, Zero3Config};
+use pccl::util::cli::Args;
+
+const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|info> [options]
+  pccl bench    [--collective C] [--backend B] [--ranks N] [--nodes N] [--size-kb K] [--trials T]
+  pccl figures  <fig1..fig13|table1|all> [--out DIR]
+  pccl dispatch [--trials T] [--save DIR]
+  pccl train    <ddp|zero3> [--ranks N] [--steps S] [--lr F] [--backend B] [--artifacts DIR]
+  pccl info";
+
+fn parse_collective(s: &str) -> Result<CollKind> {
+    CollKind::ALL
+        .iter()
+        .copied()
+        .find(|k| k.label() == s)
+        .ok_or_else(|| {
+            pccl::error::Error::Dispatch(format!(
+                "unknown collective {s:?} (all-gather|reduce-scatter|all-reduce)"
+            ))
+        })
+}
+
+fn parse_backend(s: &str) -> Result<Backend> {
+    Backend::CONCRETE
+        .iter()
+        .copied()
+        .chain([Backend::Auto])
+        .find(|b| b.label() == s)
+        .ok_or_else(|| {
+            pccl::error::Error::Dispatch(format!(
+                "unknown backend {s:?} (vendor|cray-mpich|pccl_ring|pccl_rec|pccl_auto)"
+            ))
+        })
+}
+
+fn write_table(t: &Table, out: &PathBuf, name: &str) -> Result<()> {
+    std::fs::create_dir_all(out)?;
+    print!("{}", t.render());
+    let path = out.join(format!("{name}.csv"));
+    t.write_csv(&path)?;
+    println!("→ {}\n", path.display());
+    Ok(())
+}
+
+fn run_figures(which: &str, out: &PathBuf) -> Result<()> {
+    let all = which == "all";
+    let mut matched = all;
+    if all || which == "fig1" {
+        matched = true;
+        write_table(&figures::fig1()?, out, "fig1")?;
+    }
+    if all || which == "fig2" {
+        matched = true;
+        println!("# Fig 2: message-size distributions");
+        println!(
+            "{:<8} {:<10} {:>6} {:>12} {:>12} {:>12}",
+            "fw", "model", "count", "min", "median", "max"
+        );
+        let mut csv = String::from("framework,model,count,min_bytes,median_bytes,max_bytes\n");
+        for (fw, model, count, min, med, max) in figures::fig2() {
+            println!(
+                "{:<8} {:<10} {:>6} {:>12} {:>12} {:>12}",
+                fw,
+                model,
+                count,
+                pccl::bench::fmt_bytes(min),
+                pccl::bench::fmt_bytes(med),
+                pccl::bench::fmt_bytes(max)
+            );
+            csv.push_str(&format!("{fw},{model},{count},{min},{med},{max}\n"));
+        }
+        std::fs::create_dir_all(out)?;
+        std::fs::write(out.join("fig2.csv"), csv)?;
+        println!();
+    }
+    if all || which == "fig3" {
+        matched = true;
+        let (t, counters) = figures::fig3()?;
+        write_table(&t, out, "fig3")?;
+        println!("# Fig 3 (middle/right): per-NIC packet counters, 256 MB all-gather, 64 GCDs");
+        for (lib, c) in counters {
+            println!(
+                "{lib:<14} posted={:?} non_posted={:?}",
+                c.posted_pkts.iter().map(|v| *v as u64).collect::<Vec<_>>(),
+                c.non_posted_pkts
+                    .iter()
+                    .map(|v| *v as u64)
+                    .collect::<Vec<_>>()
+            );
+        }
+        println!();
+    }
+    if all || which == "fig4" {
+        matched = true;
+        write_table(&figures::fig4()?, out, "fig4")?;
+    }
+    if all || which == "fig6" {
+        matched = true;
+        write_table(&figures::fig6()?, out, "fig6")?;
+    }
+    if all || which == "fig8" {
+        matched = true;
+        write_table(&figures::fig8_or_10(Machine::Perlmutter)?, out, "fig8")?;
+    }
+    if all || which == "fig9" {
+        matched = true;
+        write_table(&figures::fig9_or_11(Machine::Perlmutter)?, out, "fig9")?;
+    }
+    if all || which == "fig10" {
+        matched = true;
+        write_table(&figures::fig8_or_10(Machine::Frontier)?, out, "fig10")?;
+    }
+    if all || which == "fig11" {
+        matched = true;
+        write_table(&figures::fig9_or_11(Machine::Frontier)?, out, "fig11")?;
+    }
+    if all || which == "fig12" {
+        matched = true;
+        write_table(&figures::fig12()?, out, "fig12")?;
+    }
+    if all || which == "fig13" {
+        matched = true;
+        write_table(&figures::fig13()?, out, "fig13")?;
+    }
+    if all || which == "ablations" {
+        matched = true;
+        write_table(&figures::ablations()?, out, "ablations")?;
+    }
+    if all || which == "table1" {
+        matched = true;
+        print_table1(3, out)?;
+    }
+    if !matched {
+        eprintln!("unknown figure {which:?}");
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
+fn print_table1(trials: usize, out: &PathBuf) -> Result<()> {
+    println!("# Table I: SVM dispatcher performance on the unseen test set");
+    println!(
+        "{:<12} {:<16} {:>10} {:>10} {:>10}",
+        "machine", "collective", "test size", "correct", "accuracy"
+    );
+    let mut csv = String::from("machine,collective,test_size,correct,accuracy_pct\n");
+    for (machine, coll, size, correct, acc) in figures::table1(trials)? {
+        println!("{machine:<12} {coll:<16} {size:>10} {correct:>10} {acc:>9.1}%");
+        csv.push_str(&format!("{machine},{coll},{size},{correct},{acc:.1}\n"));
+    }
+    std::fs::create_dir_all(out)?;
+    std::fs::write(out.join("table1.csv"), csv)?;
+    println!();
+    Ok(())
+}
+
+fn run_bench(
+    collective: CollKind,
+    backend: Backend,
+    ranks: usize,
+    nodes: usize,
+    size_kb: usize,
+    trials: usize,
+) -> Result<()> {
+    let topo = if nodes > 1 && ranks % nodes == 0 {
+        Topology::new(nodes, ranks / nodes, 1)?
+    } else {
+        Topology::flat(ranks)
+    };
+    let elems = size_kb * 1024 / 4;
+    let world = CommWorld::<f32>::with_topology(topo);
+    let mut stats = Stats::new();
+    for _ in 0..trials {
+        let t = Timer::start();
+        world.run(move |c| {
+            let opts = CollectiveOptions::default().backend(backend);
+            match collective {
+                CollKind::AllGather => {
+                    let input = vec![c.rank() as f32; elems / c.size().max(1)];
+                    pccl::backends::all_gather(c, &input, &opts).map(|v| v.len())
+                }
+                CollKind::ReduceScatter => {
+                    let n = elems.div_ceil(c.size()) * c.size();
+                    let input = vec![1.0f32; n];
+                    pccl::backends::reduce_scatter(c, &input, &opts).map(|v| v.len())
+                }
+                CollKind::AllReduce => {
+                    let input = vec![1.0f32; elems];
+                    pccl::backends::all_reduce(c, &input, &opts).map(|v| v.len())
+                }
+            }
+            .expect("collective failed")
+        });
+        stats.push(t.secs());
+    }
+    println!(
+        "{} / {} on {} ranks ({} nodes), {} KiB/rank: mean {} ± {} over {} trials",
+        collective.label(),
+        backend.label(),
+        ranks,
+        nodes,
+        size_kb,
+        fmt_secs(stats.mean()),
+        fmt_secs(stats.stddev()),
+        trials
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    match cmd {
+        "bench" => {
+            let collective = parse_collective(args.get("collective").unwrap_or("all-gather"))?;
+            let backend = parse_backend(args.get("backend").unwrap_or("pccl_rec"))?;
+            run_bench(
+                collective,
+                backend,
+                args.get_parse("ranks", 8usize).unwrap(),
+                args.get_parse("nodes", 2usize).unwrap(),
+                args.get_parse("size-kb", 1024usize).unwrap(),
+                args.get_parse("trials", 10usize).unwrap(),
+            )?;
+        }
+        "figures" => {
+            let which = args.positional.get(1).cloned().unwrap_or_else(|| {
+                eprintln!("figures: missing figure id\n{USAGE}");
+                std::process::exit(2);
+            });
+            let out = PathBuf::from(args.get("out").unwrap_or("results"));
+            run_figures(&which, &out)?;
+        }
+        "dispatch" => {
+            let trials = args.get_parse("trials", 10usize).unwrap();
+            print_table1(trials, &PathBuf::from("results"))?;
+            if let Some(dir) = args.get("save") {
+                let dir = PathBuf::from(dir);
+                std::fs::create_dir_all(&dir)?;
+                for machine in [Machine::Frontier, Machine::Perlmutter] {
+                    let d = figures::trained_dispatcher(machine)?;
+                    let p = dir.join(format!("dispatcher-{}.json", machine.params().name));
+                    d.save(&p)?;
+                    println!("saved {}", p.display());
+                }
+                // Round-trip sanity.
+                let _ = SvmDispatcher::load(dir.join("dispatcher-frontier.json"))?;
+            }
+        }
+        "train" => {
+            let mode = args.positional.get(1).map(String::as_str).unwrap_or("");
+            let ranks = args.get_parse("ranks", 4usize).unwrap();
+            let steps = args.get_parse("steps", 100usize).unwrap();
+            let lr = args.get_parse("lr", 0.5f32).unwrap();
+            let backend = parse_backend(args.get("backend").unwrap_or("pccl_rec"))?;
+            let artifacts = args.get("artifacts").map(str::to_string);
+            match mode {
+                "ddp" => {
+                    let report = run_ddp(&DdpConfig {
+                        ranks,
+                        steps,
+                        lr,
+                        backend,
+                        artifacts,
+                        ..Default::default()
+                    })?;
+                    println!(
+                        "DDP: {} params, {} steps: loss {:.4} → {:.4}",
+                        report.param_count,
+                        steps,
+                        report.initial_loss(),
+                        report.final_loss()
+                    );
+                }
+                "zero3" => {
+                    let report = run_zero3(&Zero3Config {
+                        ranks,
+                        steps,
+                        lr,
+                        backend,
+                        artifacts,
+                        ..Default::default()
+                    })?;
+                    println!(
+                        "ZeRO-3: {} params ({} elems/shard), {} steps: final loss {:.4}",
+                        report.param_count,
+                        report.shard_elems,
+                        steps,
+                        report.final_loss()
+                    );
+                }
+                other => {
+                    eprintln!("unknown train mode {other:?} (use ddp|zero3)\n{USAGE}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        "info" => {
+            for m in [Machine::Frontier, Machine::Perlmutter] {
+                let p = m.params();
+                println!(
+                    "{:<12} {} GPUs/node, {} NICs/node @ {:.0} GB/s, vendor={}",
+                    p.name,
+                    p.gpus_per_node,
+                    p.nics_per_node,
+                    p.nic_bw / 1e9,
+                    m.vendor_name()
+                );
+            }
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Network simulator — reproduces the paper's Frontier/Perlmutter-scale
+//! experiments on commodity hardware (see DESIGN.md §1 for the
+//! substitution argument).
+
+pub mod counters;
+pub mod libmodel;
+pub mod sim;
+
+pub use counters::NicCounters;
+pub use libmodel::{simulate, LibModel};
+pub use sim::{NetSim, Phase, RoundCost};

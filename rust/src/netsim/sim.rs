@@ -1,0 +1,191 @@
+//! Round-synchronous network simulator core.
+//!
+//! The collectives under study (ring, recursive, tree, hierarchical) are
+//! globally synchronous: every rank executes the same sequence of
+//! *rounds*, and a round cannot start before the previous one finished.
+//! Simulation therefore reduces to costing each round — the completion
+//! time of its slowest resource — and summing. Per-round resource loads
+//! are produced by [`crate::netsim::libmodel`] from the same step/block
+//! index math the data plane executes
+//! ([`crate::collectives::schedule`]), which is what makes the simulated
+//! pattern the shipped pattern.
+//!
+//! Round cost = `alpha` (startup/protocol latency)
+//!            + max(busiest-NIC bytes / NIC bw, busiest intra-link bytes / link bw)
+//!            + local reduce bytes / reduce bw
+//!            + overflow-copy bytes / copy bw.
+
+use crate::topology::{Machine, MachineParams};
+use crate::util::rng::Rng;
+
+/// Cost description of one communication round (possibly repeated, e.g.
+/// the `p-1` identical steps of a ring).
+#[derive(Debug, Clone, Default)]
+pub struct RoundCost {
+    /// Human label for traces ("inter-ring", "intra-ag", "shuffle", ...).
+    pub label: &'static str,
+    /// Startup latency per round (s).
+    pub alpha: f64,
+    /// Bytes through the busiest NIC this round.
+    pub nic_bytes: f64,
+    /// Bytes through the busiest intra-node link this round.
+    pub intra_bytes: f64,
+    /// Local combine volume per GPU this round (bytes).
+    pub reduce_bytes: f64,
+    /// Bandwidth for the combine (GPU or CPU — Observation 1).
+    pub reduce_bw: f64,
+    /// Software-copy volume per GPU (Cassini overflow path, §VI-B).
+    pub copy_bytes: f64,
+    /// Bandwidth of the overflow copy path.
+    pub copy_bw: f64,
+    /// Number of identical repetitions of this round.
+    pub repeat: usize,
+}
+
+impl RoundCost {
+    /// Seconds for one repetition given machine bandwidths.
+    pub fn time_once(&self, p: &MachineParams) -> f64 {
+        let wire = (self.nic_bytes / p.nic_bw).max(self.intra_bytes / p.intra_bw);
+        let reduce = if self.reduce_bytes > 0.0 {
+            self.reduce_bytes / self.reduce_bw
+        } else {
+            0.0
+        };
+        let copy = if self.copy_bytes > 0.0 {
+            self.copy_bytes / self.copy_bw
+        } else {
+            0.0
+        };
+        self.alpha + wire + reduce + copy
+    }
+
+    /// Seconds for all repetitions.
+    pub fn time(&self, p: &MachineParams) -> f64 {
+        self.time_once(p) * self.repeat.max(1) as f64
+    }
+}
+
+/// A named sequence of rounds (one collective phase).
+#[derive(Debug, Clone, Default)]
+pub struct Phase {
+    pub label: &'static str,
+    pub rounds: Vec<RoundCost>,
+}
+
+impl Phase {
+    pub fn time(&self, p: &MachineParams) -> f64 {
+        self.rounds.iter().map(|r| r.time(p)).sum()
+    }
+}
+
+/// The simulator: machine params + jitter RNG.
+pub struct NetSim {
+    machine: Machine,
+    params: MachineParams,
+    rng: Rng,
+}
+
+impl NetSim {
+    pub fn new(machine: Machine, seed: u64) -> Self {
+        Self {
+            machine,
+            params: machine.params(),
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    pub fn machine(&self) -> Machine {
+        self.machine
+    }
+
+    pub fn params(&self) -> &MachineParams {
+        &self.params
+    }
+
+    /// Deterministic total time of a schedule (no jitter).
+    pub fn time_deterministic(&self, phases: &[Phase]) -> f64 {
+        phases.iter().map(|ph| ph.time(&self.params)).sum()
+    }
+
+    /// One simulated trial: deterministic time × lognormal jitter (the
+    /// paper averages ten trials; RCCL all-reduce is notably variable).
+    pub fn trial(&mut self, phases: &[Phase], extra_sigma: f64) -> f64 {
+        let t = self.time_deterministic(phases);
+        let sigma = self.params.jitter_sigma + extra_sigma;
+        if sigma <= 0.0 {
+            return t;
+        }
+        let z = self.rng.normal();
+        t * (sigma * z).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(alpha: f64, nic: f64, intra: f64, repeat: usize) -> RoundCost {
+        RoundCost {
+            label: "t",
+            alpha,
+            nic_bytes: nic,
+            intra_bytes: intra,
+            repeat,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn round_cost_is_max_of_resources() {
+        let p = Machine::Generic.params();
+        // 25 GB/s NIC, 50 GB/s intra (generic preset).
+        let r = round(0.0, 25.0e9, 25.0e9, 1);
+        // NIC takes 1 s, intra takes 0.5 s → max = 1 s.
+        assert!((r.time(&p) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeats_scale_linearly() {
+        let p = Machine::Generic.params();
+        let r1 = round(1e-6, 1e6, 0.0, 1);
+        let r10 = round(1e-6, 1e6, 0.0, 10);
+        assert!((r10.time(&p) - 10.0 * r1.time(&p)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduce_and_copy_terms_add() {
+        let p = Machine::Generic.params();
+        let mut r = round(0.0, 0.0, 0.0, 1);
+        r.reduce_bytes = p.gpu_reduce_bw; // 1 s of reduce
+        r.reduce_bw = p.gpu_reduce_bw;
+        r.copy_bytes = p.overflow_copy_bw; // 1 s of copy
+        r.copy_bw = p.overflow_copy_bw;
+        assert!((r.time(&p) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generic_machine_has_no_jitter() {
+        let mut sim = NetSim::new(Machine::Generic, 1);
+        let ph = Phase {
+            label: "x",
+            rounds: vec![round(1e-3, 0.0, 0.0, 5)],
+        };
+        let t1 = sim.trial(&[ph.clone()], 0.0);
+        let t2 = sim.trial(&[ph], 0.0);
+        assert_eq!(t1, t2);
+        assert!((t1 - 5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jitter_is_reproducible_by_seed() {
+        let ph = vec![Phase {
+            label: "x",
+            rounds: vec![round(1e-3, 1e7, 0.0, 3)],
+        }];
+        let mut a = NetSim::new(Machine::Frontier, 42);
+        let mut b = NetSim::new(Machine::Frontier, 42);
+        assert_eq!(a.trial(&ph, 0.0), b.trial(&ph, 0.0));
+        let mut c = NetSim::new(Machine::Frontier, 43);
+        assert_ne!(a.trial(&ph, 0.0), c.trial(&ph, 0.0));
+    }
+}

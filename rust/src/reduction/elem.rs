@@ -1,0 +1,118 @@
+//! Element types supported on the collective data path.
+
+use crate::util::bf16::Bf16;
+
+/// Runtime dtype tag — used for logging, netsim volume accounting, and the
+/// artifact registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    Bf16,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+            DType::Bf16 => 2,
+        }
+    }
+}
+
+/// An element type usable in collectives: sendable, reducible, testable.
+///
+/// This is the trait bound for the whole data plane — `Communicator<T>`,
+/// all collective algorithms, and the training drivers are generic over it.
+pub trait Elem: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
+    /// dtype tag for this element type.
+    const DTYPE: DType;
+    /// Additive identity.
+    fn zero() -> Self;
+    /// Elementwise sum — the reduction used by grad averaging.
+    fn add(self, other: Self) -> Self;
+    /// Elementwise max.
+    fn max_(self, other: Self) -> Self;
+    /// Elementwise min.
+    fn min_(self, other: Self) -> Self;
+    /// Lossless-enough conversion for test oracles and XLA interop.
+    fn to_f64(self) -> f64;
+    /// Inverse of [`Elem::to_f64`] (may round, e.g. bf16).
+    fn from_f64(v: f64) -> Self;
+}
+
+impl Elem for f32 {
+    const DTYPE: DType = DType::F32;
+    fn zero() -> Self {
+        0.0
+    }
+    fn add(self, other: Self) -> Self {
+        self + other
+    }
+    fn max_(self, other: Self) -> Self {
+        self.max(other)
+    }
+    fn min_(self, other: Self) -> Self {
+        self.min(other)
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+}
+
+impl Elem for f64 {
+    const DTYPE: DType = DType::F64;
+    fn zero() -> Self {
+        0.0
+    }
+    fn add(self, other: Self) -> Self {
+        self + other
+    }
+    fn max_(self, other: Self) -> Self {
+        self.max(other)
+    }
+    fn min_(self, other: Self) -> Self {
+        self.min(other)
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+}
+
+impl Elem for Bf16 {
+    const DTYPE: DType = DType::Bf16;
+    fn zero() -> Self {
+        Bf16::from_f32(0.0)
+    }
+    fn add(self, other: Self) -> Self {
+        Bf16::from_f32(self.to_f32() + other.to_f32())
+    }
+    fn max_(self, other: Self) -> Self {
+        if self.to_f32() >= other.to_f32() {
+            self
+        } else {
+            other
+        }
+    }
+    fn min_(self, other: Self) -> Self {
+        if self.to_f32() <= other.to_f32() {
+            self
+        } else {
+            other
+        }
+    }
+    fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        Bf16::from_f32(v as f32)
+    }
+}

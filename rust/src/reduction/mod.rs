@@ -1,0 +1,52 @@
+//! Local reduction (combine) kernels — the per-GPU compute inside
+//! reduce-scatter and all-reduce.
+//!
+//! The paper's Observation 1 is that Cray-MPICH performs reductions on the
+//! *CPU*, while performant libraries offload them to the GPU. In this
+//! reproduction the "GPU" path is the L1 Pallas reduction kernel, AOT-lowered
+//! to HLO and executed through PJRT ([`crate::runtime`]); the "CPU" path is
+//! the native Rust implementation in this module, which is also the fast path
+//! for chunks below the XLA dispatch overhead crossover.
+
+mod elem;
+mod native;
+pub mod offload;
+
+pub use elem::{DType, Elem};
+pub use native::{reduce_into, reduce_into_op, ReduceOp};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_f32() {
+        let mut acc = vec![1.0f32, 2.0, 3.0];
+        reduce_into(&mut acc, &[10.0, 20.0, 30.0]);
+        assert_eq!(acc, vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn sum_f64() {
+        let mut acc = vec![1.0f64; 17];
+        reduce_into(&mut acc, &vec![2.0f64; 17]);
+        assert!(acc.iter().all(|&x| x == 3.0));
+    }
+
+    #[test]
+    fn max_min_ops() {
+        let mut acc = vec![1.0f32, 5.0];
+        reduce_into_op(&mut acc, &[3.0, 2.0], ReduceOp::Max);
+        assert_eq!(acc, vec![3.0, 5.0]);
+        reduce_into_op(&mut acc, &[0.0, 9.0], ReduceOp::Min);
+        assert_eq!(acc, vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn bf16_sum_is_exact_for_small_ints() {
+        use crate::util::bf16::Bf16;
+        let mut acc = vec![Bf16::from_f32(1.0); 8];
+        reduce_into(&mut acc, &vec![Bf16::from_f32(2.0); 8]);
+        assert!(acc.iter().all(|&x| x.to_f32() == 3.0));
+    }
+}

@@ -1,0 +1,63 @@
+//! Native (host) vector reduction. Written so LLVM auto-vectorizes the
+//! inner loop; this is the sub-crossover fast path and the test oracle for
+//! the XLA-offloaded path.
+
+use super::Elem;
+
+/// Reduction operator carried by collective options.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ReduceOp {
+    /// Elementwise sum (gradient averaging) — the only op the paper needs,
+    /// and the default.
+    #[default]
+    Sum,
+    Max,
+    Min,
+}
+
+/// `acc[i] += src[i]` for all i.
+///
+/// # Panics
+/// If lengths differ (an internal invariant of the collectives; user-facing
+/// size checks happen at collective entry).
+#[inline]
+pub fn reduce_into<T: Elem>(acc: &mut [T], src: &[T]) {
+    assert_eq!(acc.len(), src.len(), "reduce_into length mismatch");
+    // Chunked loop: gives LLVM straight-line vectorizable bodies.
+    const LANES: usize = 16;
+    let n = acc.len();
+    let chunks = n / LANES;
+    let (acc_head, acc_tail) = acc.split_at_mut(chunks * LANES);
+    let (src_head, src_tail) = src.split_at(chunks * LANES);
+    for (a, s) in acc_head
+        .chunks_exact_mut(LANES)
+        .zip(src_head.chunks_exact(LANES))
+    {
+        for i in 0..LANES {
+            a[i] = a[i].add(s[i]);
+        }
+    }
+    for (a, s) in acc_tail.iter_mut().zip(src_tail) {
+        *a = a.add(*s);
+    }
+}
+
+/// `acc[i] = op(acc[i], src[i])` for all i.
+#[inline]
+pub fn reduce_into_op<T: Elem>(acc: &mut [T], src: &[T], op: ReduceOp) {
+    match op {
+        ReduceOp::Sum => reduce_into(acc, src),
+        ReduceOp::Max => {
+            assert_eq!(acc.len(), src.len(), "reduce_into_op length mismatch");
+            for (a, s) in acc.iter_mut().zip(src) {
+                *a = a.max_(*s);
+            }
+        }
+        ReduceOp::Min => {
+            assert_eq!(acc.len(), src.len(), "reduce_into_op length mismatch");
+            for (a, s) in acc.iter_mut().zip(src) {
+                *a = a.min_(*s);
+            }
+        }
+    }
+}

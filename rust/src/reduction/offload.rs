@@ -1,0 +1,106 @@
+//! XLA-offloaded reduction — the "GPU compute kernel" path.
+//!
+//! The combine step of reduce-scatter / all-reduce is executed by the L1
+//! Pallas reduction kernel, AOT-lowered to `artifacts/reduce_sum_<n>.hlo.txt`
+//! and run through the PJRT device service. This reproduces the paper's
+//! custom "MPI point-to-point + GPU vector reduction kernel" implementation
+//! (§III-B, Fig. 4) in this stack's terms.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::runtime::{Artifacts, DeviceHandle};
+
+use super::native;
+
+/// A combine function used by collectives: `acc += src`.
+///
+/// Collectives are generic over element type; the combine is injected so the
+/// same algorithm code can run with the native host reducer (default) or the
+/// XLA-offloaded kernel (f32 only).
+pub type CombineFn<T> = Arc<dyn Fn(&mut [T], &[T]) + Send + Sync>;
+
+/// The native (host) combine — works for every [`crate::reduction::Elem`].
+pub fn native_combine<T: crate::reduction::Elem>() -> CombineFn<T> {
+    Arc::new(|acc, src| native::reduce_into(acc, src))
+}
+
+/// XLA-offloaded f32 sum over fixed-size chunks.
+///
+/// Buffers are processed in `chunk`-element submissions (the artifact's
+/// static shape); a trailing partial chunk falls back to the native reducer
+/// rather than paying a pad-copy — measured faster for every tail size.
+#[derive(Clone)]
+pub struct XlaReducer {
+    dev: DeviceHandle,
+    artifact: String,
+    chunk: usize,
+}
+
+impl XlaReducer {
+    /// Pick the largest compiled `reduce_sum_<n>` artifact not exceeding
+    /// `max_chunk` (0 = no limit) and preload it.
+    pub fn from_artifacts(
+        arts: &Artifacts,
+        dev: DeviceHandle,
+        max_chunk: usize,
+    ) -> Result<Option<Self>> {
+        let mut best: Option<(usize, String)> = None;
+        for name in arts.names() {
+            if let Some(n) = name
+                .strip_prefix("reduce_sum_")
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                if (max_chunk == 0 || n <= max_chunk) && best.as_ref().map_or(true, |(b, _)| n > *b)
+                {
+                    best = Some((n, name.to_string()));
+                }
+            }
+        }
+        match best {
+            None => Ok(None),
+            Some((chunk, artifact)) => {
+                dev.preload(&[&artifact])?;
+                Ok(Some(Self {
+                    dev,
+                    artifact,
+                    chunk,
+                }))
+            }
+        }
+    }
+
+    /// Chunk size of the compiled kernel.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// `acc[i] += src[i]`, full chunks on the device, tail on the host.
+    pub fn reduce_into(&self, acc: &mut [f32], src: &[f32]) -> Result<()> {
+        assert_eq!(acc.len(), src.len(), "XlaReducer length mismatch");
+        let full = acc.len() / self.chunk * self.chunk;
+        let mut off = 0;
+        while off < full {
+            let end = off + self.chunk;
+            let out = self
+                .dev
+                .execute_f32_pair(&self.artifact, &acc[off..end], &src[off..end])?;
+            acc[off..end].copy_from_slice(&out);
+            off = end;
+        }
+        if full < acc.len() {
+            native::reduce_into(&mut acc[full..], &src[full..]);
+        }
+        Ok(())
+    }
+
+    /// Wrap as a [`CombineFn`] (errors panic — a failed device submission on
+    /// the collective hot path is unrecoverable, like a CUDA error).
+    pub fn combine_fn(&self) -> CombineFn<f32> {
+        let this = self.clone();
+        Arc::new(move |acc, src| {
+            this.reduce_into(acc, src)
+                .expect("XLA reduction failed on collective hot path")
+        })
+    }
+}

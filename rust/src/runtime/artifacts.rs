@@ -1,0 +1,275 @@
+//! Artifact registry — the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` plus one `*.hlo.txt`
+//! per compiled computation. The manifest records each computation's input
+//! and output tensor specs so the Rust side can validate calls without ever
+//! importing Python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Shape + dtype of one tensor crossing the AOT boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpecJson {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpecJson {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            shape: v.get("shape")?.vec_usize()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Input tensor specs, in call order.
+    pub inputs: Vec<TensorSpecJson>,
+    /// Output tensor specs (the lowered function returns a tuple).
+    pub outputs: Vec<TensorSpecJson>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpecJson>> {
+            v.get(key)?
+                .as_arr()?
+                .iter()
+                .map(TensorSpecJson::from_json)
+                .collect()
+        };
+        Ok(Self {
+            file: v.get("file")?.as_str()?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// Metadata for the L2 model: how to build/flatten the parameter pytree.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// Flattened parameter names, in the order `train_step` expects.
+    pub param_names: Vec<String>,
+    /// Shapes matching `param_names`.
+    pub param_shapes: Vec<Vec<usize>>,
+    /// Total parameter count.
+    pub param_count: usize,
+    /// Tokens per micro-batch row.
+    pub seq_len: usize,
+    /// Rows per rank per step.
+    pub batch_per_rank: usize,
+    /// Vocabulary size.
+    pub vocab_size: usize,
+}
+
+impl ModelMeta {
+    fn from_json(v: &Value) -> Result<Self> {
+        let param_names = v
+            .get("param_names")?
+            .as_arr()?
+            .iter()
+            .map(|n| Ok(n.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let param_shapes = v
+            .get("param_shapes")?
+            .as_arr()?
+            .iter()
+            .map(Value::vec_usize)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            param_names,
+            param_shapes,
+            param_count: v.get("param_count")?.as_usize()?,
+            seq_len: v.get("seq_len")?.as_usize()?,
+            batch_per_rank: v.get("batch_per_rank")?.as_usize()?,
+            vocab_size: v.get("vocab_size")?.as_usize()?,
+        })
+    }
+}
+
+/// `artifacts/manifest.json` root.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+    pub model: Option<ModelMeta>,
+}
+
+impl Manifest {
+    fn from_json(v: &Value) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (name, e) in v.get("entries")?.as_obj()? {
+            entries.insert(name.clone(), ArtifactEntry::from_json(e)?);
+        }
+        let model = match v.get_opt("model") {
+            Some(m) => Some(ModelMeta::from_json(m)?),
+            None => None,
+        };
+        Ok(Self {
+            version: v.get("version")?.as_usize()?,
+            entries,
+            model,
+        })
+    }
+}
+
+/// A loaded artifact directory.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl Artifacts {
+    /// Load `<dir>/manifest.json`. Fails with a clear message if
+    /// `make artifacts` has not been run.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                mpath.display()
+            ))
+        })?;
+        let value = Value::parse(&text)
+            .map_err(|e| Error::Artifact(format!("malformed {}: {e}", mpath.display())))?;
+        let manifest = Manifest::from_json(&value)
+            .map_err(|e| Error::Artifact(format!("bad manifest {}: {e}", mpath.display())))?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Default location: `$PCCL_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("PCCL_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Names of all registered computations.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.manifest.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Look up one computation.
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact named {name:?} in manifest")))
+    }
+
+    /// Absolute path of the HLO text for `name`, verified to exist.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let entry = self.entry(name)?;
+        let p = self.dir.join(&entry.file);
+        if !p.is_file() {
+            return Err(Error::Artifact(format!(
+                "artifact file {} missing (stale manifest? re-run `make artifacts`)",
+                p.display()
+            )));
+        }
+        Ok(p)
+    }
+
+    /// Model metadata; error if the manifest has no model section.
+    pub fn model(&self) -> Result<&ModelMeta> {
+        self.manifest
+            .model
+            .as_ref()
+            .ok_or_else(|| Error::Artifact("manifest has no model section".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "entries": {
+            "reduce_sum_1024": {
+              "file": "reduce_sum_1024.hlo.txt",
+              "inputs": [
+                {"shape": [1024], "dtype": "f32"},
+                {"shape": [1024], "dtype": "f32"}
+              ],
+              "outputs": [{"shape": [1024], "dtype": "f32"}]
+            }
+          },
+          "model": {
+            "param_names": ["w"],
+            "param_shapes": [[4, 2]],
+            "param_count": 8,
+            "seq_len": 16,
+            "batch_per_rank": 2,
+            "vocab_size": 64
+          }
+        }"#
+    }
+
+    #[test]
+    fn load_and_lookup() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("manifest.json"), sample_manifest()).unwrap();
+        std::fs::write(dir.path().join("reduce_sum_1024.hlo.txt"), "HloModule m").unwrap();
+        let arts = Artifacts::load(dir.path()).unwrap();
+        let e = arts.entry("reduce_sum_1024").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![1024]);
+        assert!(arts.hlo_path("reduce_sum_1024").is_ok());
+        assert!(arts.entry("nope").is_err());
+        let m = arts.model().unwrap();
+        assert_eq!(m.param_shapes[0], vec![4, 2]);
+        assert_eq!(m.vocab_size, 64);
+    }
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let err = Artifacts::load("/definitely/not/here").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("make artifacts"), "got: {msg}");
+    }
+
+    #[test]
+    fn stale_manifest_detected() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("manifest.json"), sample_manifest()).unwrap();
+        let arts = Artifacts::load(dir.path()).unwrap();
+        // entry exists but file does not
+        let err = arts.hlo_path("reduce_sum_1024").unwrap_err();
+        assert!(err.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn manifest_without_model_is_fine() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"version": 1, "entries": {}}"#,
+        )
+        .unwrap();
+        let arts = Artifacts::load(dir.path()).unwrap();
+        assert!(arts.model().is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Direct (single-thread) PJRT execution.
+//!
+//! The `xla` crate's `PjRtClient` wraps an `Rc`, so it is **not** `Send`.
+//! [`Runtime`] therefore lives on one thread; multi-rank use goes through
+//! [`crate::runtime::service`]'s device-service thread, which mirrors how a
+//! real GPU runtime serializes kernel launches onto a stream.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+
+use super::artifacts::{ArtifactEntry, Artifacts, TensorSpecJson};
+
+/// Host-side tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        HostTensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        HostTensor::I32 { data, shape }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "f32",
+            HostTensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Unwrap as f32 data, or error.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => Err(Error::Xla(format!(
+                "expected f32 tensor, got {}",
+                other.dtype_str()
+            ))),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpecJson) -> Result<Self> {
+        let shape = spec.shape.clone();
+        match spec.dtype.as_str() {
+            "f32" => Ok(HostTensor::F32 {
+                data: lit.to_vec::<f32>()?,
+                shape,
+            }),
+            "i32" => Ok(HostTensor::I32 {
+                data: lit.to_vec::<i32>()?,
+                shape,
+            }),
+            other => Err(Error::Xla(format!("unsupported artifact dtype {other:?}"))),
+        }
+    }
+}
+
+/// Spec for one tensor, re-exported at the runtime API level.
+pub type TensorSpec = TensorSpecJson;
+
+/// A compiled computation plus its manifest entry (for call validation).
+#[derive(Clone)]
+pub struct Executable {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    entry: ArtifactEntry,
+    name: String,
+}
+
+impl Executable {
+    /// Validate `inputs` against the manifest and execute.
+    ///
+    /// The AOT pipeline lowers with `return_tuple=True`, so the single
+    /// output buffer is a tuple that we decompose into one [`HostTensor`]
+    /// per manifest output spec.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(Error::Xla(format!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            if t.shape() != spec.shape.as_slice() || t.dtype_str() != spec.dtype {
+                return Err(Error::Xla(format!(
+                    "{}: input {i} mismatch: got {:?}/{}, manifest says {:?}/{}",
+                    self.name,
+                    t.shape(),
+                    t.dtype_str(),
+                    spec.shape,
+                    spec.dtype
+                )));
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Xla(format!("{}: empty execution result", self.name)))?
+            .to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        if parts.len() != self.entry.outputs.len() {
+            return Err(Error::Xla(format!(
+                "{}: manifest says {} outputs, executable returned {}",
+                self.name,
+                self.entry.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts
+            .iter()
+            .zip(&self.entry.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Convenience wrapper for all-f32 computations (the reduction kernels).
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let tensors: Vec<HostTensor> = inputs
+            .iter()
+            .zip(&self.entry.inputs)
+            .map(|(d, spec)| HostTensor::f32(d.to_vec(), spec.shape.clone()))
+            .collect();
+        self.run(&tensors)?
+            .into_iter()
+            .map(|t| t.into_f32())
+            .collect()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+}
+
+/// Single-thread PJRT runtime: one client, compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    arts: Artifacts,
+    cache: RefCell<HashMap<String, Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn new(arts: Artifacts) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            arts,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.arts
+    }
+
+    /// Load (compile-on-first-use) a named computation.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.arts.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {}", path.display())))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let entry = self.arts.entry(name)?.clone();
+        let executable = Executable {
+            exe: Rc::new(exe),
+            entry,
+            name: name.to_string(),
+        };
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime — loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them on the CPU
+//! PJRT client. This is the only place the crate touches XLA; Python is
+//! never on the request path.
+//!
+//! Interchange format is HLO **text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! `/opt/xla-example/README.md`).
+//!
+//! Because the `xla` crate's client is `Rc`-based (not `Send`), multi-rank
+//! execution goes through a dedicated device-service thread
+//! ([`DeviceService`]) that serializes submissions like a GPU stream;
+//! single-thread callers can use [`Runtime`] directly.
+
+mod artifacts;
+mod executable;
+mod service;
+
+pub use artifacts::{ArtifactEntry, Artifacts, Manifest, ModelMeta, TensorSpecJson};
+pub use executable::{Executable, HostTensor, Runtime, TensorSpec};
+pub use service::{DeviceHandle, DeviceService};

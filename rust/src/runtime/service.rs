@@ -1,0 +1,159 @@
+//! Device-service thread: multi-rank access to the (non-`Send`) PJRT
+//! runtime.
+//!
+//! The `xla` crate's client and executables are `Rc`-based, so they cannot
+//! be shared across rank threads. We model the device the way a GPU driver
+//! does: a single submission queue processed in order by a dedicated thread
+//! that owns the runtime. Rank threads hold a cloneable [`DeviceHandle`]
+//! and block on their own response channel — exactly the semantics of a
+//! synchronous kernel launch on a shared stream.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+use super::artifacts::Artifacts;
+use super::executable::{HostTensor, Runtime};
+
+enum Req {
+    Execute {
+        name: String,
+        inputs: Vec<HostTensor>,
+        resp: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    /// Compile ahead of time so first-step latency is predictable.
+    Preload {
+        names: Vec<String>,
+        resp: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the device-service thread.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: mpsc::Sender<Req>,
+}
+
+impl DeviceHandle {
+    /// Execute computation `name` with `inputs`; blocks until the device
+    /// thread finishes this submission.
+    pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Req::Execute {
+                name: name.to_string(),
+                inputs,
+                resp: rtx,
+            })
+            .map_err(|_| Error::TransportClosed { rank: usize::MAX })?;
+        rrx.recv()
+            .map_err(|_| Error::TransportClosed { rank: usize::MAX })?
+    }
+
+    /// Convenience for binary f32 kernels (the reduction artifacts):
+    /// submits `f(a, b)` where both operands are rank-1 `[n]` f32 tensors
+    /// and returns the single f32 output.
+    pub fn execute_f32_pair(&self, name: &str, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let n = a.len();
+        let inputs = vec![
+            HostTensor::f32(a.to_vec(), vec![n]),
+            HostTensor::f32(b.to_vec(), vec![n]),
+        ];
+        let mut out = self.execute(name, inputs)?;
+        if out.len() != 1 {
+            return Err(Error::Xla(format!(
+                "{name}: expected 1 output, got {}",
+                out.len()
+            )));
+        }
+        out.remove(0).into_f32()
+    }
+
+    /// Compile `names` now (first use otherwise pays JIT-compile latency).
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Req::Preload {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                resp: rtx,
+            })
+            .map_err(|_| Error::TransportClosed { rank: usize::MAX })?;
+        rrx.recv()
+            .map_err(|_| Error::TransportClosed { rank: usize::MAX })?
+    }
+}
+
+/// Owns the device thread; dropping shuts it down.
+pub struct DeviceService {
+    tx: mpsc::Sender<Req>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl DeviceService {
+    /// Spawn the device thread over an artifact directory.
+    pub fn spawn(arts: Artifacts) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        // Runtime construction happens *on* the device thread (the client is
+        // not Send); construction errors are reported through the first
+        // request instead. To fail fast, do a handshake:
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pccl-device".into())
+            .spawn(move || {
+                let rt = match Runtime::new(arts) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Execute { name, inputs, resp } => {
+                            let out = rt.load(&name).and_then(|exe| exe.run(&inputs));
+                            let _ = resp.send(out);
+                        }
+                        Req::Preload { names, resp } => {
+                            let mut out = Ok(());
+                            for n in &names {
+                                if let Err(e) = rt.load(n) {
+                                    out = Err(e);
+                                    break;
+                                }
+                            }
+                            let _ = resp.send(out);
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Xla("device thread died during startup".into()))??;
+        Ok(Self {
+            tx,
+            join: Some(join),
+        })
+    }
+
+    /// Get a cloneable handle for rank threads.
+    pub fn handle(&self) -> DeviceHandle {
+        DeviceHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for DeviceService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Cluster topology: nodes × GPUs-per-node × NICs-per-node, plus the
+//! GPU→NIC binding and the inter-/intra-node sub-communicator structure the
+//! paper's hierarchical collectives are built on (§IV-A, Fig. 5).
+
+mod machine;
+
+pub use machine::{Machine, MachineParams};
+
+use crate::error::{Error, Result};
+
+/// Static shape of the cluster a communicator spans.
+///
+/// Global rank `r` lives on node `r / gpus_per_node` with local id
+/// `r % gpus_per_node` (the "corresponding GPU" numbering of Fig. 5) and is
+/// bound to NIC `local_id / (gpus_per_node / nics_per_node)` of its node —
+/// on Frontier: GCDs 0,1 → NIC 0, GCDs 2,3 → NIC 1, etc. (§IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    nodes: usize,
+    gpus_per_node: usize,
+    nics_per_node: usize,
+}
+
+impl Topology {
+    /// Build a topology; validates divisibility of the NIC binding.
+    pub fn new(nodes: usize, gpus_per_node: usize, nics_per_node: usize) -> Result<Self> {
+        if nodes == 0 || gpus_per_node == 0 || nics_per_node == 0 {
+            return Err(Error::InvalidTopology(format!(
+                "all dimensions must be > 0 (got {nodes} nodes × {gpus_per_node} GPUs × {nics_per_node} NICs)"
+            )));
+        }
+        if gpus_per_node % nics_per_node != 0 {
+            return Err(Error::InvalidTopology(format!(
+                "gpus_per_node ({gpus_per_node}) must be divisible by nics_per_node ({nics_per_node})"
+            )));
+        }
+        Ok(Self {
+            nodes,
+            gpus_per_node,
+            nics_per_node,
+        })
+    }
+
+    /// Single-node topology for `size` ranks (flat testing).
+    pub fn flat(size: usize) -> Self {
+        Self {
+            nodes: 1,
+            gpus_per_node: size,
+            nics_per_node: 1,
+        }
+    }
+
+    /// Topology for `world` ranks on machine `m` (world must divide evenly
+    /// into nodes).
+    pub fn for_machine(m: Machine, world: usize) -> Result<Self> {
+        let p = m.params();
+        if world % p.gpus_per_node != 0 {
+            return Err(Error::InvalidTopology(format!(
+                "world size {world} not a multiple of {} GPUs/node on {}",
+                p.gpus_per_node, p.name
+            )));
+        }
+        Self::new(world / p.gpus_per_node, p.gpus_per_node, p.nics_per_node)
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn gpus_per_node(&self) -> usize {
+        self.gpus_per_node
+    }
+
+    pub fn nics_per_node(&self) -> usize {
+        self.nics_per_node
+    }
+
+    /// Total ranks (GPUs/GCDs).
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Node index of a global rank.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// Within-node id of a global rank.
+    pub fn local_id(&self, rank: usize) -> usize {
+        rank % self.gpus_per_node
+    }
+
+    /// NIC index (within its node) that `rank` is bound to.
+    pub fn nic_of(&self, rank: usize) -> usize {
+        self.local_id(rank) / (self.gpus_per_node / self.nics_per_node)
+    }
+
+    /// Global rank from (node, local id).
+    pub fn rank_of(&self, node: usize, local: usize) -> usize {
+        node * self.gpus_per_node + local
+    }
+
+    /// The inter-node sub-communicator of `rank`: all ranks across nodes
+    /// sharing its local id, in node order (Fig. 5 step 1). Length = nodes.
+    pub fn inter_node_group(&self, rank: usize) -> Vec<usize> {
+        let local = self.local_id(rank);
+        (0..self.nodes).map(|n| self.rank_of(n, local)).collect()
+    }
+
+    /// The intra-node sub-communicator of `rank`: all ranks on its node, in
+    /// local-id order (Fig. 5 step 2). Length = gpus_per_node.
+    pub fn intra_node_group(&self, rank: usize) -> Vec<usize> {
+        let node = self.node_of(rank);
+        (0..self.gpus_per_node)
+            .map(|l| self.rank_of(node, l))
+            .collect()
+    }
+
+    /// True if the hierarchical algorithms can run (both levels ≥ 1 and the
+    /// world splits exactly).
+    pub fn supports_hierarchical(&self) -> bool {
+        self.nodes >= 2 && self.gpus_per_node >= 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_nic_binding() {
+        // Frontier node: 8 GCDs, 4 NICs → pairs share a NIC (§IV-A).
+        let t = Topology::new(4, 8, 4).unwrap();
+        assert_eq!(t.world_size(), 32);
+        let nics: Vec<usize> = (0..8).map(|r| t.nic_of(r)).collect();
+        assert_eq!(nics, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        // Same binding on every node.
+        assert_eq!(t.nic_of(8 + 5), 2);
+    }
+
+    #[test]
+    fn groups_are_consistent() {
+        let t = Topology::new(3, 4, 2).unwrap();
+        // rank 6 = node 1, local 2
+        assert_eq!(t.node_of(6), 1);
+        assert_eq!(t.local_id(6), 2);
+        assert_eq!(t.inter_node_group(6), vec![2, 6, 10]);
+        assert_eq!(t.intra_node_group(6), vec![4, 5, 6, 7]);
+        // Every rank appears in exactly one inter group per local id and one
+        // intra group per node.
+        let mut seen = vec![0usize; t.world_size()];
+        for local in 0..t.gpus_per_node() {
+            for &r in &t.inter_node_group(local) {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn invalid_shapes_rejected() {
+        assert!(Topology::new(0, 8, 4).is_err());
+        assert!(Topology::new(2, 6, 4).is_err()); // 6 % 4 != 0
+        assert!(Topology::for_machine(Machine::Frontier, 12).is_err());
+    }
+
+    #[test]
+    fn machine_world_split() {
+        let t = Topology::for_machine(Machine::Frontier, 64).unwrap();
+        assert_eq!(t.nodes(), 8);
+        assert_eq!(t.gpus_per_node(), 8);
+        let t = Topology::for_machine(Machine::Perlmutter, 64).unwrap();
+        assert_eq!(t.nodes(), 16);
+        assert_eq!(t.gpus_per_node(), 4);
+    }
+}

@@ -1,0 +1,80 @@
+//! Gradient bucketing — PyTorch DDP splits the gradient all-reduce into
+//! 48–80 MB buckets and launches them as the backward pass produces them
+//! (§II-A). The bucket manager reproduces that communication pattern:
+//! fixed-size buckets over the flat gradient vector, all-reduced in
+//! *reverse* order (gradients materialize output-to-input).
+
+use crate::backends::{all_reduce, CollectiveOptions};
+use crate::comm::Communicator;
+use crate::error::Result;
+use crate::reduction::Elem;
+
+/// Byte ranges of each bucket over a flat gradient vector.
+pub fn bucket_ranges(total_elems: usize, bucket_elems: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(bucket_elems > 0, "bucket size must be positive");
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < total_elems {
+        let end = (start + bucket_elems).min(total_elems);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// All-reduce `grads` bucket by bucket (reverse order), in place.
+pub fn bucketed_all_reduce<T: Elem>(
+    comm: &mut Communicator<T>,
+    grads: &mut [T],
+    bucket_elems: usize,
+    opts: &CollectiveOptions<T>,
+) -> Result<()> {
+    for range in bucket_ranges(grads.len(), bucket_elems).into_iter().rev() {
+        let reduced = all_reduce(comm, &grads[range.clone()], opts)?;
+        grads[range].copy_from_slice(&reduced);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::Backend;
+    use crate::comm::CommWorld;
+    use crate::topology::Topology;
+
+    #[test]
+    fn ranges_cover_exactly_once() {
+        let ranges = bucket_ranges(100, 32);
+        assert_eq!(ranges.len(), 4);
+        assert_eq!(ranges[0], 0..32);
+        assert_eq!(ranges[3], 96..100);
+        let covered: usize = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn single_bucket_when_larger_than_total() {
+        let ranges = bucket_ranges(10, 1000);
+        assert_eq!(ranges, vec![0..10]);
+    }
+
+    #[test]
+    fn bucketed_equals_monolithic() {
+        let topo = Topology::new(2, 2, 1).unwrap();
+        let p = topo.world_size();
+        let n = 77; // not a multiple of the bucket size
+        let world = CommWorld::<f32>::with_topology(topo);
+        let outs = world.run(move |c| {
+            let base: Vec<f32> = (0..n).map(|i| (c.rank() * 100 + i) as f32).collect();
+            let opts = CollectiveOptions::default().backend(Backend::PcclRec);
+            let mono = all_reduce(c, &base, &opts).unwrap();
+            let mut bucketed = base.clone();
+            bucketed_all_reduce(c, &mut bucketed, 16, &opts).unwrap();
+            (mono, bucketed)
+        });
+        for (r, (mono, bucketed)) in outs.iter().enumerate() {
+            assert_eq!(mono, bucketed, "rank {r} (p={p})");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Distributed data parallelism (DDP) driver — the Fig. 13 workload, end
+//! to end: every rank holds a full parameter replica, runs the AOT
+//! `train_step` on its own micro-batch, all-reduces gradients through a
+//! PCCL backend, and applies an identical SGD update.
+
+use std::sync::{Arc, Mutex};
+
+
+use crate::backends::{all_reduce, Backend, CollectiveOptions};
+use crate::comm::CommWorld;
+use crate::error::{Error, Result};
+use crate::metrics::Timer;
+use crate::runtime::{Artifacts, DeviceService, HostTensor};
+use crate::topology::Topology;
+
+use super::data::batch_tokens;
+use super::optimizer::Sgd;
+use super::params::ParamSet;
+
+/// DDP run configuration.
+#[derive(Debug, Clone)]
+pub struct DdpConfig {
+    /// Rank threads ("GPUs").
+    pub ranks: usize,
+    /// Optional explicit topology (defaults to flat).
+    pub topology: Option<Topology>,
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub backend: Backend,
+    /// Gradient bucket size in KiB (`None` = one monolithic all-reduce).
+    /// PyTorch DDP uses 48–80 MB buckets (§II-A).
+    pub bucket_kb: Option<usize>,
+    /// Artifact directory (`None` → `$PCCL_ARTIFACTS` or `./artifacts`).
+    pub artifacts: Option<String>,
+    pub seed: u64,
+}
+
+impl Default for DdpConfig {
+    fn default() -> Self {
+        Self {
+            ranks: 4,
+            topology: None,
+            steps: 100,
+            lr: 0.5,
+            momentum: 0.0,
+            backend: Backend::PcclRec,
+            bucket_kb: None,
+            artifacts: None,
+            seed: 7,
+        }
+    }
+}
+
+/// Result of a DDP run.
+#[derive(Debug, Clone)]
+pub struct DdpReport {
+    /// Rank-averaged loss per step.
+    pub losses: Vec<f32>,
+    /// Wall time per step (seconds, measured on rank 0).
+    pub step_secs: Vec<f64>,
+    /// Parameter count of the trained model.
+    pub param_count: usize,
+}
+
+impl DdpReport {
+    pub fn initial_loss(&self) -> f32 {
+        self.losses.first().copied().unwrap_or(f32::NAN)
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+}
+
+fn load_artifacts(cfg_dir: &Option<String>) -> Result<Artifacts> {
+    match cfg_dir {
+        Some(d) => Artifacts::load(d),
+        None => Artifacts::load_default(),
+    }
+}
+
+/// Run DDP training; returns the loss curve and per-step timings.
+pub fn run_ddp(cfg: &DdpConfig) -> Result<DdpReport> {
+    let arts = load_artifacts(&cfg.artifacts)?;
+    let meta = arts.model()?.clone();
+    let service = DeviceService::spawn(arts)?;
+    let handle = service.handle();
+    handle.preload(&["init_params", "train_step"])?;
+
+    let topo = cfg.topology.unwrap_or_else(|| Topology::flat(cfg.ranks));
+    if topo.world_size() != cfg.ranks {
+        return Err(Error::InvalidTopology(format!(
+            "topology world {} != ranks {}",
+            topo.world_size(),
+            cfg.ranks
+        )));
+    }
+    let world = CommWorld::<f32>::with_topology(topo);
+    let cfg = cfg.clone();
+    let meta = Arc::new(meta);
+    let loss_acc: Arc<Mutex<Vec<Vec<f32>>>> =
+        Arc::new(Mutex::new(vec![Vec::new(); cfg.ranks]));
+    let times_acc: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let meta_c = Arc::clone(&meta);
+    let loss_c = Arc::clone(&loss_acc);
+    let times_c = Arc::clone(&times_acc);
+    let results: Result<Vec<()>> = world.try_run(move |comm| {
+        let rank = comm.rank();
+        let p = comm.size() as f32;
+        let mut params = ParamSet::init(&handle, &meta_c, cfg.seed as i32)?;
+        let mut opt = Sgd::new(cfg.lr, cfg.momentum);
+        let opts = CollectiveOptions::<f32>::default().backend(cfg.backend);
+        for step in 0..cfg.steps {
+            let timer = Timer::start();
+            let tokens = batch_tokens(
+                cfg.seed,
+                rank,
+                step,
+                meta_c.batch_per_rank,
+                meta_c.seq_len,
+                meta_c.vocab_size,
+            );
+            let mut inputs = params.tensors.clone();
+            inputs.push(HostTensor::i32(
+                tokens,
+                vec![meta_c.batch_per_rank, meta_c.seq_len + 1],
+            ));
+            let mut out = handle.execute("train_step", inputs)?;
+            // Outputs: [loss, grad_0, ..., grad_{P-1}].
+            let loss = out.remove(0).into_f32()?[0];
+            let mut summed = params.flatten_grads(&out)?;
+            // Gradient all-reduce (the collective under study) + average —
+            // bucketed like PyTorch DDP when configured.
+            match cfg.bucket_kb {
+                Some(kb) => {
+                    let bucket_elems = (kb * 1024 / 4).max(1);
+                    super::bucket::bucketed_all_reduce(comm, &mut summed, bucket_elems, &opts)?;
+                }
+                None => summed = all_reduce(comm, &summed, &opts)?,
+            }
+            for g in &mut summed {
+                *g /= p;
+            }
+            let mut flat = params.flatten()?;
+            opt.step(&mut flat, &summed);
+            params.load_flat(&flat)?;
+            loss_c.lock().unwrap()[rank].push(loss);
+            if rank == 0 {
+                times_c.lock().unwrap().push(timer.secs());
+            }
+        }
+        Ok(())
+    });
+    results?;
+
+    let per_rank = Arc::try_unwrap(loss_acc)
+        .map_err(|_| Error::Dispatch("loss accumulator still shared".into()))?
+        .into_inner()
+        .unwrap();
+    let steps = per_rank[0].len();
+    let losses: Vec<f32> = (0..steps)
+        .map(|s| per_rank.iter().map(|r| r[s]).sum::<f32>() / per_rank.len() as f32)
+        .collect();
+    let step_secs = Arc::try_unwrap(times_acc).unwrap().into_inner().unwrap();
+    Ok(DdpReport {
+        losses,
+        step_secs,
+        param_count: meta.param_count,
+    })
+}

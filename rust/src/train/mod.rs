@@ -1,0 +1,14 @@
+//! Distributed training drivers over the PCCL data plane + PJRT runtime:
+//! DDP (all-reduce of gradients, Fig. 13's workload) and ZeRO-3-style
+//! sharded data parallelism (all-gather params / reduce-scatter grads,
+//! Fig. 12's workload).
+
+pub mod bucket;
+pub mod data;
+pub mod ddp;
+pub mod optimizer;
+pub mod params;
+pub mod zero3;
+
+pub use ddp::{DdpConfig, DdpReport};
+pub use zero3::{Zero3Config, Zero3Report};

@@ -1,0 +1,134 @@
+//! Host-side optimizers applied after gradient communication.
+//!
+//! The AOT `train_step` returns (loss, grads); the collective layer
+//! averages grads across ranks; these optimizers apply the update. They
+//! operate on the *flat* parameter vector — the same layout the ZeRO-3
+//! driver shards.
+
+
+/// Plain SGD with optional momentum.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Self {
+            lr,
+            momentum,
+            velocity: Vec::new(),
+        }
+    }
+
+    /// `params -= lr · (grad + momentum·v)`; lazily sizes the velocity.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len(), "sgd length mismatch");
+        if self.momentum == 0.0 {
+            for (p, g) in params.iter_mut().zip(grads) {
+                *p -= self.lr * g;
+            }
+            return;
+        }
+        if self.velocity.len() != params.len() {
+            self.velocity = vec![0.0; params.len()];
+        }
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(&mut self.velocity) {
+            *v = self.momentum * *v + g;
+            *p -= self.lr * *v;
+        }
+    }
+}
+
+/// AdamW (decoupled weight decay).
+#[derive(Debug, Clone)]
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    t: i32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl AdamW {
+    pub fn new(lr: f32) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len(), "adamw length mismatch");
+        if self.m.len() != params.len() {
+            self.m = vec![0.0; params.len()];
+            self.v = vec![0.0; params.len()];
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -=
+                self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * params[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        // minimize f(x) = x², grad = 2x
+        let mut x = vec![10.0f32];
+        let mut opt = Sgd::new(0.1, 0.0);
+        for _ in 0..100 {
+            let g = vec![2.0 * x[0]];
+            opt.step(&mut x, &g);
+        }
+        assert!(x[0].abs() < 1e-3);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let run = |momentum: f32| {
+            let mut x = vec![10.0f32];
+            let mut opt = Sgd::new(0.02, momentum);
+            for _ in 0..40 {
+                let g = vec![2.0 * x[0]];
+                opt.step(&mut x, &g);
+            }
+            x[0].abs()
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+
+    #[test]
+    fn adamw_descends_and_decays() {
+        let mut x = vec![5.0f32, -5.0];
+        let mut opt = AdamW::new(0.1);
+        opt.weight_decay = 0.01;
+        for _ in 0..300 {
+            let g = vec![2.0 * x[0], 2.0 * x[1]];
+            opt.step(&mut x, &g);
+        }
+        assert!(x[0].abs() < 1e-2 && x[1].abs() < 1e-2);
+    }
+}

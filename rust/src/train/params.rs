@@ -1,0 +1,107 @@
+//! Parameter-set plumbing between the flat vectors the collectives move
+//! and the per-tensor `HostTensor` lists the AOT `train_step` consumes.
+
+use crate::error::{Error, Result};
+use crate::runtime::{DeviceHandle, HostTensor, ModelMeta};
+
+/// The model's parameters as per-tensor buffers, in `train_step` order.
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub tensors: Vec<HostTensor>,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl ParamSet {
+    /// Initialize via the AOT `init_params(seed)` computation — identical
+    /// JAX initialization on every rank, Python-free.
+    pub fn init(dev: &DeviceHandle, meta: &ModelMeta, seed: i32) -> Result<Self> {
+        let out = dev.execute(
+            "init_params",
+            vec![HostTensor::i32(vec![seed], vec![])],
+        )?;
+        if out.len() != meta.param_shapes.len() {
+            return Err(Error::Artifact(format!(
+                "init_params returned {} tensors, manifest says {}",
+                out.len(),
+                meta.param_shapes.len()
+            )));
+        }
+        Ok(Self {
+            tensors: out,
+            shapes: meta.param_shapes.clone(),
+        })
+    }
+
+    /// Total element count.
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(HostTensor::len).sum()
+    }
+
+    /// Concatenate all tensors into one flat f32 vector (collective order).
+    pub fn flatten(&self) -> Result<Vec<f32>> {
+        let mut flat = Vec::with_capacity(self.num_elements());
+        for t in &self.tensors {
+            match t {
+                HostTensor::F32 { data, .. } => flat.extend_from_slice(data),
+                other => {
+                    return Err(Error::Artifact(format!(
+                        "non-f32 parameter tensor ({})",
+                        other.dtype_str()
+                    )))
+                }
+            }
+        }
+        Ok(flat)
+    }
+
+    /// Overwrite the tensors from a flat vector (inverse of `flatten`).
+    pub fn load_flat(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.num_elements() {
+            return Err(Error::BadBufferSize {
+                len: flat.len(),
+                size: self.num_elements(),
+                why: "flat parameter vector has wrong length",
+            });
+        }
+        let mut off = 0;
+        for t in &mut self.tensors {
+            let n = t.len();
+            if let HostTensor::F32 { data, .. } = t {
+                data.copy_from_slice(&flat[off..off + n]);
+            }
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// Flatten a list of gradient tensors with the same shapes.
+    pub fn flatten_grads(&self, grads: &[HostTensor]) -> Result<Vec<f32>> {
+        if grads.len() != self.tensors.len() {
+            return Err(Error::Artifact(format!(
+                "got {} grad tensors, expected {}",
+                grads.len(),
+                self.tensors.len()
+            )));
+        }
+        let mut flat = Vec::with_capacity(self.num_elements());
+        for (g, shape) in grads.iter().zip(&self.shapes) {
+            if g.shape() != shape.as_slice() {
+                return Err(Error::Artifact(format!(
+                    "grad shape {:?} != param shape {:?}",
+                    g.shape(),
+                    shape
+                )));
+            }
+            match g {
+                HostTensor::F32 { data, .. } => flat.extend_from_slice(data),
+                other => {
+                    return Err(Error::Artifact(format!(
+                        "non-f32 gradient ({})",
+                        other.dtype_str()
+                    )))
+                }
+            }
+        }
+        Ok(flat)
+    }
+}

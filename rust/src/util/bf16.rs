@@ -1,0 +1,89 @@
+//! bfloat16 — the training dtype of the paper's workloads, implemented as
+//! a truncated-f32 wrapper (round-to-nearest-even on conversion).
+
+/// A bfloat16 value (1 sign, 8 exponent, 7 mantissa bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+
+    /// Round-to-nearest-even conversion from f32.
+    pub fn from_f32(v: f32) -> Self {
+        let bits = v.to_bits();
+        if v.is_nan() {
+            // Preserve NaN, force a quiet mantissa bit.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let _ = round_bit;
+        Bf16((rounded >> 16) as u16)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(v: f32) -> Self {
+        Bf16::from_f32(v)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(v: Bf16) -> f32 {
+        v.to_f32()
+    }
+}
+
+impl std::fmt::Display for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -256..=256 {
+            let v = i as f32;
+            assert_eq!(Bf16::from_f32(v).to_f32(), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1.0 + 2^-8 is exactly between bf16(1.0) and the next value
+        // 1.0078125; nearest-even rounds down to 1.0.
+        let v = 1.0f32 + 2f32.powi(-8);
+        assert_eq!(Bf16::from_f32(v).to_f32(), 1.0);
+        // Slightly above the midpoint rounds up.
+        let v = 1.0f32 + 2f32.powi(-8) + 2f32.powi(-12);
+        assert_eq!(Bf16::from_f32(v).to_f32(), 1.0078125);
+    }
+
+    #[test]
+    fn specials() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(-0.0).to_f32(), 0.0);
+        assert!(Bf16::from_f32(-0.0).to_f32().is_sign_negative());
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut x = 0.001f32;
+        while x < 1e6 {
+            let rt = Bf16::from_f32(x).to_f32();
+            let rel = ((rt - x) / x).abs();
+            assert!(rel <= 0.00391 + 1e-7, "x={x} rt={rt} rel={rel}");
+            x *= 1.7;
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Tiny CLI argument parser: subcommand + `--flag value` / `--flag` pairs
+//! with typed accessors and helpful errors. Powers the `pccl` binary.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare -- is not supported".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("invalid value for --{key}: {v:?}")),
+        }
+    }
+
+    /// Reject unknown options (catch typos).
+    pub fn expect_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown option --{k} (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positionals_options_flags() {
+        let a = parse("figures fig1 --out results --trials 5 --verbose");
+        assert_eq!(a.positional, vec!["figures", "fig1"]);
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(a.get_parse("trials", 10usize).unwrap(), 5);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --ranks=16 --size-kb=64");
+        assert_eq!(a.get_parse("ranks", 0usize).unwrap(), 16);
+        assert_eq!(a.get_parse("size-kb", 0usize).unwrap(), 64);
+    }
+
+    #[test]
+    fn defaults_and_bad_values() {
+        let a = parse("x");
+        assert_eq!(a.get_parse("missing", 42i32).unwrap(), 42);
+        let a = parse("x --n abc");
+        assert!(a.get_parse("n", 0i32).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("x --tyop 3");
+        assert!(a.expect_known(&["typo"]).is_err());
+        assert!(a.expect_known(&["tyop"]).is_ok());
+    }
+}

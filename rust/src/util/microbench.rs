@@ -1,0 +1,131 @@
+//! Micro-benchmark harness for the `cargo bench` targets (offline stand-in
+//! for criterion): warmup, timed iterations until a wall budget, mean ±
+//! stddev, ns/iter and throughput reporting.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::Stats;
+
+/// One benchmark group's configuration.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    budget: Duration,
+    min_iters: u32,
+}
+
+/// A finished measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        let thr = self
+            .bytes_per_iter
+            .map(|b| {
+                let gbs = b as f64 / (self.mean_ns * 1e-9) / 1e9;
+                format!("  {gbs:>8.2} GB/s")
+            })
+            .unwrap_or_default();
+        println!(
+            "{:<52} {:>12.0} ns/iter (± {:>8.0})  {:>8} iters{}",
+            self.name, self.mean_ns, self.stddev_ns, self.iters, thr
+        );
+    }
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_millis(1500),
+            min_iters: 10,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn budget(mut self, d: Duration) -> Self {
+        self.budget = d;
+        self
+    }
+
+    /// Run `f` repeatedly; returns and prints the measurement.
+    pub fn run<R>(&self, mut f: impl FnMut() -> R) -> Measurement {
+        self.run_inner(&mut f, None)
+    }
+
+    /// Like [`Bench::run`], reporting throughput for `bytes` per iteration.
+    pub fn run_bytes<R>(&self, bytes: u64, mut f: impl FnMut() -> R) -> Measurement {
+        self.run_inner(&mut f, Some(bytes))
+    }
+
+    fn run_inner<R>(&self, f: &mut impl FnMut() -> R, bytes: Option<u64>) -> Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut stats = Stats::new();
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.budget || iters < self.min_iters as u64 {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            stats.push(t.elapsed().as_nanos() as f64);
+            iters += 1;
+            if iters > 10_000_000 {
+                break;
+            }
+        }
+        let m = Measurement {
+            name: self.name.clone(),
+            iters,
+            mean_ns: stats.mean(),
+            stddev_ns: stats.stddev(),
+            bytes_per_iter: bytes,
+        };
+        m.report();
+        m
+    }
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = Bench::new("noop")
+            .warmup(Duration::from_millis(1))
+            .budget(Duration::from_millis(10))
+            .run(|| 1 + 1);
+        assert!(m.iters >= 10);
+        assert!(m.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn throughput_is_reported() {
+        let m = Bench::new("copy")
+            .warmup(Duration::from_millis(1))
+            .budget(Duration::from_millis(10))
+            .run_bytes(1024, || vec![0u8; 1024]);
+        assert_eq!(m.bytes_per_iter, Some(1024));
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree substrates for a fully offline build: deterministic RNG,
+//! JSON, bf16, CLI parsing, a micro-benchmark harness, a property-testing
+//! helper, and temp-dir management. (The build environment ships only the
+//! `xla` bindings; everything else is built here, per the from-scratch
+//! mandate.)
+
+pub mod bf16;
+pub mod cli;
+pub mod json;
+pub mod microbench;
+pub mod prop;
+pub mod rng;
+pub mod tmp;

@@ -1,0 +1,66 @@
+//! Property-testing helper (offline stand-in for proptest): run a
+//! predicate over many seeded random cases; on failure report the failing
+//! seed so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `f`, each with a fresh deterministic RNG.
+/// Panics with the failing case index + seed on first failure.
+pub fn check(name: &str, cases: usize, base_seed: u64, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random vector of f32 in [-scale, scale].
+pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| (rng.f32() * 2.0 - 1.0) * scale)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, 1, |rng| {
+            count += 1;
+            assert!(rng.f64() < 1.0);
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails", 10, 2, |rng| {
+                let v = rng.range_usize(0, 100);
+                assert!(v < 101); // always true
+                assert!(v != v || false == true || v < 1000); // true
+                panic!("boom");
+            });
+        });
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("case 0"), "{msg}");
+        assert!(msg.contains("seed"), "{msg}");
+    }
+}

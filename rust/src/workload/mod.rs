@@ -1,0 +1,9 @@
+//! DL workload models: message-size distributions (Fig. 2), transformer
+//! configurations (Table II), and the analytic step-time model behind the
+//! ZeRO-3 / DDP strong-scaling figures (Figs. 12–13).
+
+pub mod msgsizes;
+pub mod steptime;
+pub mod transformer;
+
+pub use transformer::{TransformerConfig, GPT_13B, GPT_1_3B, GPT_7B};

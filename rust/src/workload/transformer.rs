@@ -1,0 +1,97 @@
+//! GPT-style transformer configurations (Table II) and parameter
+//! accounting used by the message-size and step-time models.
+
+
+/// Architecture hyperparameters of a GPT-style decoder (Table II; the
+/// hyperparameters come from Zhang et al. / OPT).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransformerConfig {
+    pub name: &'static str,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub seq: usize,
+}
+
+/// GPT-7B (ZeRO-3 experiments, Fig. 12).
+pub const GPT_7B: TransformerConfig = TransformerConfig {
+    name: "GPT-7B",
+    layers: 32,
+    hidden: 4096,
+    heads: 32,
+    vocab: 50272,
+    seq: 2048,
+};
+
+/// GPT-13B (ZeRO-3 experiments, Fig. 12).
+pub const GPT_13B: TransformerConfig = TransformerConfig {
+    name: "GPT-13B",
+    layers: 40,
+    hidden: 5120,
+    heads: 40,
+    vocab: 50272,
+    seq: 2048,
+};
+
+/// GPT-1.3B (DDP experiments, Fig. 13).
+pub const GPT_1_3B: TransformerConfig = TransformerConfig {
+    name: "GPT-1.3B",
+    layers: 24,
+    hidden: 2048,
+    heads: 32,
+    vocab: 50272,
+    seq: 2048,
+};
+
+impl TransformerConfig {
+    /// Parameters in one transformer block: attention (QKV + output
+    /// projection) + 4× MLP + layer norms.
+    pub fn block_params(&self) -> usize {
+        let h = self.hidden;
+        // qkv: 3h², attn out: h², mlp: 4h² + 4h², biases/norms ≈ 13h
+        12 * h * h + 13 * h
+    }
+
+    /// Total parameters (blocks + embeddings + final norm).
+    pub fn param_count(&self) -> usize {
+        self.layers * self.block_params() + self.vocab * self.hidden + 2 * self.hidden
+    }
+
+    /// The per-linear-layer weight shapes AxoNN communicates separately
+    /// (Fig. 2's wide distribution): qkv, attn-proj, mlp-up, mlp-down.
+    pub fn linear_layer_params(&self) -> Vec<usize> {
+        let h = self.hidden;
+        vec![3 * h * h, h * h, 4 * h * h, 4 * h * h]
+    }
+
+    /// Approximate training flops per token (the standard 6·P estimate:
+    /// forward 2·P, backward 4·P).
+    pub fn flops_per_token(&self) -> f64 {
+        6.0 * self.param_count() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_model_names() {
+        // Within 15% of the nominal size.
+        let b = 1.0e9;
+        let p7 = GPT_7B.param_count() as f64;
+        let p13 = GPT_13B.param_count() as f64;
+        let p13b = GPT_1_3B.param_count() as f64;
+        assert!((p7 / (6.9 * b) - 1.0).abs() < 0.15, "7B → {p7}");
+        assert!((p13 / (13.0 * b) - 1.0).abs() < 0.15, "13B → {p13}");
+        assert!((p13b / (1.3 * b) - 1.0).abs() < 0.15, "1.3B → {p13b}");
+    }
+
+    #[test]
+    fn linear_layers_sum_close_to_block() {
+        let lin: usize = GPT_7B.linear_layer_params().iter().sum();
+        assert!(lin <= GPT_7B.block_params());
+        assert!(lin * 10 >= GPT_7B.block_params() * 9);
+    }
+}

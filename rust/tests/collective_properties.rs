@@ -1,0 +1,292 @@
+//! Property tests: every backend × every collective ≡ the naive oracle for
+//! randomized element counts, rank counts, topologies, and dtypes — the
+//! core correctness invariant of the library.
+
+use pccl::backends::{all_gather, all_reduce, reduce_scatter, Backend, CollectiveOptions};
+use pccl::collectives::oracle;
+use pccl::comm::CommWorld;
+use pccl::topology::Topology;
+use pccl::util::bf16::Bf16;
+use pccl::util::prop::{check, vec_f32};
+use pccl::util::rng::Rng;
+
+fn random_topology(rng: &mut Rng) -> Topology {
+    // Mix of flat, hierarchical, non-power-of-two shapes.
+    match rng.range_usize(0, 4) {
+        0 => Topology::flat(rng.range_usize(1, 10)),
+        1 => Topology::new(rng.range_usize(2, 5), rng.range_usize(2, 5), 1).unwrap(),
+        2 => Topology::new(rng.range_usize(2, 4), 4, rng.range_usize(1, 3) * 2).unwrap(),
+        _ => Topology::new(3, rng.range_usize(2, 4), 1).unwrap(), // non-pow2 nodes
+    }
+}
+
+fn per_rank_inputs(rng: &mut Rng, p: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..p).map(|_| vec_f32(rng, len, 100.0)).collect()
+}
+
+#[test]
+fn prop_all_gather_matches_oracle_every_backend() {
+    check("all_gather ≡ oracle", 24, 0xA6, |rng| {
+        let topo = random_topology(rng);
+        let p = topo.world_size();
+        let m = rng.range_usize(1, 40);
+        let inputs = per_rank_inputs(rng, p, m);
+        let expect = oracle::all_gather(&inputs);
+        let backend = Backend::CONCRETE[rng.range_usize(0, 4)];
+        let world = CommWorld::<f32>::with_topology(topo);
+        let ins = inputs.clone();
+        let outs = world.run(move |c| {
+            let opts = CollectiveOptions::default().backend(backend);
+            all_gather(c, &ins[c.rank()], &opts).unwrap()
+        });
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o, &expect, "backend={backend:?} rank={r} p={p} m={m}");
+        }
+    });
+}
+
+#[test]
+fn prop_reduce_scatter_matches_oracle_every_backend() {
+    check("reduce_scatter ≡ oracle", 24, 0x125, |rng| {
+        let topo = random_topology(rng);
+        let p = topo.world_size();
+        let b = rng.range_usize(1, 20);
+        let inputs = per_rank_inputs(rng, p, p * b);
+        let backend = Backend::CONCRETE[rng.range_usize(0, 4)];
+        let world = CommWorld::<f32>::with_topology(topo);
+        let ins = inputs.clone();
+        let outs = world.run(move |c| {
+            let opts = CollectiveOptions::default().backend(backend);
+            reduce_scatter(c, &ins[c.rank()], &opts).unwrap()
+        });
+        for (r, o) in outs.iter().enumerate() {
+            let expect = oracle::reduce_scatter(&inputs, r);
+            for (got, want) in o.iter().zip(&expect) {
+                assert!(
+                    (got - want).abs() <= want.abs() * 1e-5 + 1e-4,
+                    "backend={backend:?} rank={r}: {got} vs {want}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_all_reduce_matches_oracle_every_backend() {
+    check("all_reduce ≡ oracle", 24, 0xAA, |rng| {
+        let topo = random_topology(rng);
+        let p = topo.world_size();
+        let n = rng.range_usize(1, 70); // deliberately often unaligned to p
+        let inputs = per_rank_inputs(rng, p, n);
+        let expect = oracle::all_reduce(&inputs);
+        let backend = Backend::CONCRETE[rng.range_usize(0, 4)];
+        let world = CommWorld::<f32>::with_topology(topo);
+        let ins = inputs.clone();
+        let outs = world.run(move |c| {
+            let opts = CollectiveOptions::default().backend(backend);
+            all_reduce(c, &ins[c.rank()], &opts).unwrap()
+        });
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o.len(), n);
+            for (got, want) in o.iter().zip(&expect) {
+                assert!(
+                    (got - want).abs() <= want.abs() * 1e-5 + 1e-4,
+                    "backend={backend:?} rank={r}: {got} vs {want}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_backends_agree_with_each_other() {
+    // Hierarchical ≡ flat: all backends produce identical all-gather bytes
+    // and near-identical reductions on the same inputs.
+    check("backends agree", 12, 0xB0, |rng| {
+        let topo = Topology::new(2, rng.range_usize(2, 5), 1).unwrap();
+        let p = topo.world_size();
+        let n = p * rng.range_usize(1, 8);
+        let inputs = per_rank_inputs(rng, p, n);
+        let mut results: Vec<Vec<Vec<f32>>> = Vec::new();
+        for backend in Backend::CONCRETE {
+            let world = CommWorld::<f32>::with_topology(topo);
+            let ins = inputs.clone();
+            results.push(world.run(move |c| {
+                let opts = CollectiveOptions::default().backend(backend);
+                reduce_scatter(c, &ins[c.rank()], &opts).unwrap()
+            }));
+        }
+        for other in &results[1..] {
+            for (r, (a, b)) in results[0].iter().zip(other).enumerate() {
+                for (x, y) in a.iter().zip(b) {
+                    assert!((x - y).abs() <= x.abs() * 1e-5 + 1e-4, "rank {r}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn generic_dtypes_f64_and_bf16() {
+    // f64 exact, bf16 within truncation error.
+    let topo = Topology::new(2, 2, 1).unwrap();
+    let world = CommWorld::<f64>::with_topology(topo);
+    let outs = world.run(|c| {
+        let input: Vec<f64> = (0..8).map(|i| (c.rank() * 10 + i) as f64 * 0.5).collect();
+        let opts = CollectiveOptions::default().backend(Backend::PcclRec);
+        all_reduce(c, &input, &opts).unwrap()
+    });
+    let ins: Vec<Vec<f64>> = (0..4)
+        .map(|r| (0..8).map(|i| (r * 10 + i) as f64 * 0.5).collect())
+        .collect();
+    assert_eq!(outs[0], oracle::all_reduce(&ins));
+
+    let world = CommWorld::<Bf16>::with_topology(topo);
+    let outs = world.run(|c| {
+        let input: Vec<Bf16> = (0..4).map(|i| Bf16::from_f32((c.rank() + i) as f32)).collect();
+        let opts = CollectiveOptions::default().backend(Backend::PcclRing);
+        all_gather(c, &input, &opts).unwrap()
+    });
+    assert_eq!(outs[0].len(), 16);
+    assert_eq!(outs[0][5].to_f32(), 2.0); // rank 1, i=1
+}
+
+#[test]
+fn repeated_collectives_interleave_safely() {
+    // Many back-to-back ops on the same communicator (tag freshness) plus
+    // alternating backends.
+    let topo = Topology::new(2, 4, 2).unwrap();
+    let world = CommWorld::<f32>::with_topology(topo);
+    let outs = world.run(|c| {
+        let mut acc = 0.0f32;
+        for round in 0..12 {
+            let backend = Backend::CONCRETE[round % 4];
+            let opts = CollectiveOptions::default().backend(backend);
+            let input = vec![(c.rank() + round) as f32; 16];
+            let out = all_reduce(c, &input, &opts).unwrap();
+            acc += out[0];
+        }
+        acc
+    });
+    // Round r: sum over ranks of (rank + r) = 28 + 8r; total over rounds.
+    let expect: f32 = (0..12).map(|r| 28.0 + 8.0 * r as f32).sum();
+    for o in outs {
+        assert_eq!(o, expect);
+    }
+}
+
+#[test]
+fn large_buffer_smoke() {
+    // 4 MiB per rank through the hierarchical path.
+    let topo = Topology::new(2, 4, 2).unwrap();
+    let world = CommWorld::<f32>::with_topology(topo);
+    let n = 1 << 20;
+    let outs = world.run(move |c| {
+        let input = vec![1.0f32; n];
+        let opts = CollectiveOptions::default().backend(Backend::PcclRec);
+        all_reduce(c, &input, &opts).unwrap()
+    });
+    assert!(outs.iter().all(|o| o.len() == n && o[0] == 8.0 && o[n - 1] == 8.0));
+}
+
+#[test]
+fn max_min_ops_through_public_api() {
+    use pccl::reduction::ReduceOp;
+    let topo = Topology::new(2, 2, 1).unwrap();
+    let world = CommWorld::<f32>::with_topology(topo);
+    let outs = world.run(|c| {
+        let input = vec![c.rank() as f32, -(c.rank() as f32)];
+        let max = all_reduce(
+            c,
+            &input,
+            &CollectiveOptions::default().op(ReduceOp::Max),
+        )
+        .unwrap();
+        let min = all_reduce(
+            c,
+            &input,
+            &CollectiveOptions::default()
+                .backend(Backend::Vendor)
+                .op(ReduceOp::Min),
+        )
+        .unwrap();
+        (max, min)
+    });
+    for (max, min) in outs {
+        assert_eq!(max, vec![3.0, 0.0]);
+        assert_eq!(min, vec![0.0, -3.0]);
+    }
+}
+
+#[test]
+fn rooted_collectives_compose_with_training_pattern() {
+    // ZeRO-init pattern: root broadcasts params, ranks compute, reduce to
+    // root, root scatters — a realistic composition over one communicator.
+    use pccl::backends::{broadcast, gather, reduce, scatter};
+    let topo = Topology::new(2, 3, 1).unwrap();
+    let world = CommWorld::<f32>::with_topology(topo);
+    let outs = world.run(move |c| {
+        let params = broadcast(c, &vec![1.5f32; 6], 0).unwrap();
+        let local: Vec<f32> = params.iter().map(|v| v * (c.rank() + 1) as f32).collect();
+        let opts = CollectiveOptions::default();
+        let summed = reduce(c, &local, 0, &opts).unwrap();
+        let shard = if c.rank() == 0 {
+            scatter(c, &summed, 0).unwrap()
+        } else {
+            scatter(c, &[], 0).unwrap()
+        };
+        let all = gather(c, &shard, 0).unwrap();
+        (shard, all)
+    });
+    // sum over ranks of 1.5·(r+1) = 1.5·21 = 31.5 elementwise.
+    let total = 1.5 * (1..=6).sum::<usize>() as f32;
+    for (r, (shard, all)) in outs.iter().enumerate() {
+        assert_eq!(shard, &vec![total; 1], "rank {r}");
+        if r == 0 {
+            assert_eq!(all, &vec![total; 6]);
+        }
+    }
+}
+
+#[test]
+fn prop_pipelined_all_gather_matches_plain() {
+    use pccl::collectives::{hier_all_gather, pipelined_hier_all_gather, InterAlgo};
+    check("pipelined ≡ plain", 12, 0xD1, |rng| {
+        let topo = Topology::new(rng.range_usize(2, 5), rng.range_usize(2, 4), 1).unwrap();
+        let chunks = 1 << rng.range_usize(0, 3);
+        let m = chunks * rng.range_usize(1, 6);
+        let world = CommWorld::<f32>::with_topology(topo);
+        let outs = world.run(move |c| {
+            let input: Vec<f32> = (0..m).map(|i| (c.rank() * 31 + i) as f32).collect();
+            let plain = hier_all_gather(c, &input, InterAlgo::Rec).unwrap();
+            let piped =
+                pipelined_hier_all_gather(c, &input, InterAlgo::Rec, chunks).unwrap();
+            (plain, piped)
+        });
+        for (plain, piped) in outs {
+            assert_eq!(plain, piped);
+        }
+    });
+}
+
+#[test]
+fn stress_many_small_ops_many_ranks() {
+    // 12 ranks × 60 small collectives: exercises tag namespacing, mailbox
+    // stashing, and sub-communicator reuse under pressure.
+    let topo = Topology::new(3, 4, 2).unwrap();
+    let world = CommWorld::<f32>::with_topology(topo);
+    let outs = world.run(|c| {
+        let mut checksum = 0.0f64;
+        for i in 0..60 {
+            let opts =
+                CollectiveOptions::default().backend(Backend::CONCRETE[i % 4]);
+            let v = all_reduce(c, &[1.0, c.rank() as f32], &opts).unwrap();
+            checksum += (v[0] + v[1]) as f64;
+        }
+        checksum
+    });
+    // Each op: sum of ones = 12; sum of ranks = 66 → 78 per op.
+    for o in outs {
+        assert_eq!(o, 60.0 * 78.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Failure injection: dead ranks, malformed buffers, missing/corrupt
+//! artifacts — every failure must surface as a typed error, never a hang.
+
+use std::time::Duration;
+
+use pccl::backends::{all_gather, reduce_scatter, Backend, CollectiveOptions};
+use pccl::comm::{Comm, CommWorld};
+use pccl::error::Error;
+use pccl::runtime::{Artifacts, DeviceService};
+use pccl::topology::Topology;
+use pccl::util::tmp::TempDir;
+
+#[test]
+fn dead_rank_times_out_cleanly() {
+    // Rank 1 exits immediately; the others' ring all-gather must fail with
+    // RecvTimeout (or TransportClosed), not deadlock.
+    let world = CommWorld::<f32>::new(3);
+    let outs = world.run(|c| {
+        c.set_timeout(Duration::from_millis(100));
+        if c.rank() == 1 {
+            return Ok(Vec::new()); // dies before participating
+        }
+        let opts = CollectiveOptions::default().backend(Backend::Vendor);
+        all_gather(c, &[1.0, 2.0], &opts)
+    });
+    assert!(outs[1].as_ref().unwrap().is_empty());
+    for r in [0, 2] {
+        match &outs[r] {
+            Err(Error::RecvTimeout { .. }) | Err(Error::TransportClosed { .. }) => {}
+            other => panic!("rank {r}: expected timeout, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn slow_rank_is_not_a_failure() {
+    // A rank that is merely slow (sleeps) must not trip others' timeouts
+    // when the timeout budget is generous.
+    let world = CommWorld::<f32>::new(4);
+    let outs = world.run(|c| {
+        if c.rank() == 2 {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let opts = CollectiveOptions::default().backend(Backend::PcclRec);
+        all_gather(c, &[c.rank() as f32], &opts)
+    });
+    for o in outs {
+        assert_eq!(o.unwrap(), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+}
+
+#[test]
+fn bad_buffer_sizes_are_rejected_not_hung() {
+    let world = CommWorld::<f32>::new(4);
+    let outs = world.run(|c| {
+        let opts = CollectiveOptions::default().backend(Backend::PcclRing);
+        // 7 elements not divisible by 4 ranks.
+        reduce_scatter(c, &[0.0; 7], &opts)
+    });
+    for o in outs {
+        match o {
+            Err(Error::BadBufferSize { len: 7, .. }) => {}
+            other => panic!("expected BadBufferSize, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn empty_input_rejected() {
+    let world = CommWorld::<f32>::new(2);
+    let outs = world.run(|c| {
+        let opts = CollectiveOptions::default();
+        all_gather(c, &[], &opts)
+    });
+    assert!(outs.iter().all(|o| o.is_err()));
+}
+
+#[test]
+fn mismatched_topology_is_rejected() {
+    // Communicator construction validates topology vs transport size.
+    let (_hub, mut eps) = pccl::comm::TransportHub::<f32>::new(4);
+    let ep = eps.remove(0);
+    match pccl::comm::Communicator::new(ep, Topology::flat(8)) {
+        Err(Error::InvalidTopology(_)) => {}
+        Err(other) => panic!("expected InvalidTopology, got {other}"),
+        Ok(_) => panic!("mismatched topology accepted"),
+    }
+}
+
+#[test]
+fn missing_artifact_dir_is_actionable() {
+    let err = Artifacts::load("/no/such/dir").unwrap_err();
+    assert!(err.to_string().contains("make artifacts"));
+}
+
+#[test]
+fn truncated_hlo_artifact_fails_at_compile_not_hang() {
+    let dir = TempDir::new().unwrap();
+    std::fs::write(
+        dir.path().join("manifest.json"),
+        r#"{"version":1,"entries":{"broken":{"file":"broken.hlo.txt",
+            "inputs":[{"shape":[4],"dtype":"f32"}],
+            "outputs":[{"shape":[4],"dtype":"f32"}]}}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.path().join("broken.hlo.txt"), "HloModule broken, entry").unwrap();
+    let arts = Artifacts::load(dir.path()).unwrap();
+    let service = DeviceService::spawn(arts).unwrap();
+    let err = service.handle().preload(&["broken"]).unwrap_err();
+    assert!(matches!(err, Error::Xla(_)), "got {err:?}");
+}
+
+#[test]
+fn unknown_artifact_name_is_typed() {
+    let dir = TempDir::new().unwrap();
+    std::fs::write(dir.path().join("manifest.json"), r#"{"version":1,"entries":{}}"#).unwrap();
+    let arts = Artifacts::load(dir.path()).unwrap();
+    let service = DeviceService::spawn(arts).unwrap();
+    let err = service.handle().execute("nope", vec![]).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "got {err:?}");
+}
+
+#[test]
+fn corrupt_manifest_json_is_typed() {
+    let dir = TempDir::new().unwrap();
+    std::fs::write(dir.path().join("manifest.json"), "{not json").unwrap();
+    let err = Artifacts::load(dir.path()).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)));
+    assert!(err.to_string().contains("malformed"));
+}
+
+#[test]
+fn peer_out_of_range_detected() {
+    let world = CommWorld::<f32>::new(2);
+    let outs = world.run(|c| {
+        c.begin_op();
+        c.send(5, 0, vec![1.0])
+    });
+    for o in outs {
+        assert!(matches!(o, Err(Error::PeerOutOfRange { peer: 5, size: 2 })));
+    }
+}

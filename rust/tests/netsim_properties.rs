@@ -1,0 +1,249 @@
+//! Netsim invariants and paper-shape checks: byte conservation, routing
+//! signatures, monotonicity, regime crossovers, and dispatcher quality —
+//! the properties that make the simulated figures trustworthy.
+
+use pccl::backends::{Backend, CollKind};
+use pccl::dispatch::{Dataset, SvmDispatcher};
+use pccl::netsim::counters::PACKET_BYTES;
+use pccl::netsim::libmodel::{schedule, simulate, LibModel};
+use pccl::topology::Machine;
+use pccl::util::prop::check;
+use pccl::util::rng::Rng;
+
+const MB: usize = 1 << 20;
+
+fn rand_cfg(rng: &mut Rng) -> (usize, usize) {
+    let msg = (1 << rng.range_usize(20, 31)) as usize; // 1 MB .. 1 GB
+    let ranks = 8 << rng.range_usize(0, 9); // 8 .. 2048
+    (msg, ranks)
+}
+
+#[test]
+fn prop_counters_conserve_inter_node_volume() {
+    // For ring-based all-gather, the total posted bytes per node must be
+    // ~the algorithm's analytic inter-node volume: steps · block.
+    check("byte conservation", 20, 0xC0, |rng| {
+        let (msg, ranks) = rand_cfg(rng);
+        for lib in [LibModel::Vendor, LibModel::CrayMpich, LibModel::Custom] {
+            let (_, counters, _) =
+                schedule(Machine::Frontier, lib, CollKind::AllGather, msg, ranks).unwrap();
+            let posted_bytes = counters.total_posted() * PACKET_BYTES;
+            let expect = (ranks - 1) as f64 * (msg as f64 / ranks as f64);
+            let rel = (posted_bytes - expect).abs() / expect;
+            assert!(rel < 1e-6, "{lib:?}: posted {posted_bytes} vs {expect}");
+            // Reads mirror writes.
+            let read_bytes = counters.total_non_posted() * PACKET_BYTES;
+            assert!((read_bytes - expect).abs() / expect < 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_routing_signatures() {
+    // Observation 1's counter signatures hold for every configuration:
+    // Cray-MPICH single-NIC, vendor and PCCL even.
+    check("routing signatures", 16, 0xC1, |rng| {
+        let (msg, ranks) = rand_cfg(rng);
+        let (_, cray, _) =
+            schedule(Machine::Frontier, LibModel::CrayMpich, CollKind::AllGather, msg, ranks)
+                .unwrap();
+        assert!(cray.posted_pkts[0] > 0.0);
+        assert!(cray.posted_pkts[1..].iter().all(|&v| v == 0.0));
+        assert!(cray.non_posted_pkts[3] > 0.0);
+        assert!(cray.non_posted_pkts[..3].iter().all(|&v| v == 0.0));
+        let (_, c, _) =
+            schedule(Machine::Frontier, LibModel::Vendor, CollKind::AllGather, msg, ranks)
+                .unwrap();
+        assert!((c.posted_imbalance() - 1.0).abs() < 1e-6);
+        // PCCL spreads inter-node traffic evenly — meaningful only with
+        // more than one node (below that there is no inter-node traffic).
+        if ranks > 8 {
+            for lib in [LibModel::PcclRing, LibModel::PcclRec] {
+                let (_, c, _) =
+                    schedule(Machine::Frontier, lib, CollKind::AllGather, msg, ranks).unwrap();
+                assert!(
+                    (c.posted_imbalance() - 1.0).abs() < 1e-6,
+                    "{lib:?} imbalance {}",
+                    c.posted_imbalance()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_times_monotone_in_message_size() {
+    check("monotone in msg", 16, 0xC2, |rng| {
+        let ranks = 8 << rng.range_usize(0, 9);
+        let kind = [CollKind::AllGather, CollKind::ReduceScatter, CollKind::AllReduce]
+            [rng.range_usize(0, 3)];
+        for lib in [
+            LibModel::Vendor,
+            LibModel::CrayMpich,
+            LibModel::PcclRing,
+            LibModel::PcclRec,
+        ] {
+            let mut prev = 0.0;
+            for mb in [1usize, 8, 64, 512] {
+                let t = simulate(Machine::Frontier, lib, kind, mb * MB, ranks, 1, 1)
+                    .unwrap()
+                    .stats
+                    .mean();
+                assert!(
+                    t >= prev,
+                    "{lib:?} {kind:?} p={ranks}: t({mb} MB)={t} < {prev}"
+                );
+                prev = t;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_vendor_latency_grows_linearly_pccl_log() {
+    // Fig 1 / Obs 2: flat-ring latency term is linear in p; PCCL's is
+    // logarithmic — so the ratio t(4p)/t(p) at small message must be ≈4×
+    // larger for vendor than for PCCL_rec.
+    check("latency scaling", 8, 0xC3, |rng| {
+        let p0 = 64 << rng.range_usize(0, 3);
+        let msg = 1 * MB; // latency-dominated
+        let t = |lib, p| {
+            simulate(Machine::Frontier, lib, CollKind::AllGather, msg, p, 1, 1)
+                .unwrap()
+                .stats
+                .mean()
+        };
+        let vendor_growth = t(LibModel::Vendor, 4 * p0) / t(LibModel::Vendor, p0);
+        let pccl_growth = t(LibModel::PcclRec, 4 * p0) / t(LibModel::PcclRec, p0);
+        assert!(
+            vendor_growth > 2.0 * pccl_growth,
+            "vendor {vendor_growth:.2} vs pccl {pccl_growth:.2} at p0={p0}"
+        );
+    });
+}
+
+#[test]
+fn paper_headline_speedups_hold_in_band() {
+    // The abstract's numbers, as order-of-magnitude bands on 2048 GCDs of
+    // Frontier vs RCCL: 168× RS (we demand >25), 33× AG (>10), 10× AR (>2)
+    // and the corresponding Perlmutter gains stay modest (<20×).
+    let speedup = |machine, kind, msg| {
+        let v = simulate(machine, LibModel::Vendor, kind, msg, 2048, 10, 5)
+            .unwrap()
+            .stats
+            .mean();
+        let p = simulate(machine, LibModel::PcclRec, kind, msg, 2048, 10, 5)
+            .unwrap()
+            .stats
+            .mean();
+        v / p
+    };
+    let ag = speedup(Machine::Frontier, CollKind::AllGather, 32 * MB);
+    let rs = speedup(Machine::Frontier, CollKind::ReduceScatter, 16 * MB);
+    let ar = speedup(Machine::Frontier, CollKind::AllReduce, 16 * MB);
+    assert!(ag > 10.0, "Frontier AG speedup {ag:.1}");
+    assert!(rs > 25.0 && rs > ag, "Frontier RS speedup {rs:.1}");
+    assert!(ar > 2.0, "Frontier AR speedup {ar:.1}");
+
+    let ag_p = speedup(Machine::Perlmutter, CollKind::AllGather, 32 * MB);
+    assert!(
+        ag_p > 1.5 && ag_p < 20.0,
+        "Perlmutter AG speedup {ag_p:.1} should be modest"
+    );
+    let ar_p = speedup(Machine::Perlmutter, CollKind::AllReduce, 64 * MB);
+    assert!(
+        ar_p > 0.4 && ar_p < 3.0,
+        "Perlmutter AR ≈ parity, got {ar_p:.1}"
+    );
+}
+
+#[test]
+fn bandwidth_bound_regime_vendor_wins() {
+    // Top-left of the heatmaps: large msg, few ranks — vendor ring ≥ PCCL.
+    let v = simulate(Machine::Frontier, LibModel::Vendor, CollKind::AllGather, 1024 * MB, 32, 1, 1)
+        .unwrap()
+        .stats
+        .mean();
+    let p = simulate(Machine::Frontier, LibModel::PcclRec, CollKind::AllGather, 1024 * MB, 32, 1, 1)
+        .unwrap()
+        .stats
+        .mean();
+    assert!(v < p, "vendor {v} should beat pccl {p} bandwidth-bound");
+}
+
+#[test]
+fn dataset_labels_are_argmin_by_construction() {
+    let d = Dataset::build(
+        Machine::Frontier,
+        CollKind::ReduceScatter,
+        &[4, 64, 1024],
+        &[32, 256, 2048],
+        3,
+        9,
+    )
+    .unwrap();
+    for s in &d.samples {
+        let labeled = Backend::CONCRETE[s.label];
+        let labeled_lib = LibModel::from_backend(labeled).unwrap();
+        let t_label = simulate(
+            Machine::Frontier,
+            labeled_lib,
+            CollKind::ReduceScatter,
+            s.msg,
+            s.ranks,
+            3,
+            9,
+        )
+        .unwrap()
+        .stats
+        .mean();
+        for b in Backend::CONCRETE {
+            let lib = LibModel::from_backend(b).unwrap();
+            let t = simulate(Machine::Frontier, lib, CollKind::ReduceScatter, s.msg, s.ranks, 3, 9)
+                .unwrap()
+                .stats
+                .mean();
+            assert!(
+                t_label <= t * 1.0000001,
+                "label {labeled:?} not argmin at msg={} p={}",
+                s.msg,
+                s.ranks
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatcher_beats_every_fixed_backend_overall() {
+    // The adaptive dispatcher's whole point: over a grid spanning both
+    // regimes, total time with dispatch ≤ total time of the best single
+    // backend.
+    let sizes = [16usize, 64, 256, 1024];
+    let ranks = [32usize, 128, 512, 2048];
+    let d = SvmDispatcher::train(Machine::Frontier, &sizes, &ranks, 3, 21).unwrap();
+    let mut fixed_totals = vec![0.0f64; Backend::CONCRETE.len()];
+    let mut auto_total = 0.0;
+    for &mb in &sizes {
+        for &p in &ranks {
+            for (i, b) in Backend::CONCRETE.iter().enumerate() {
+                let lib = LibModel::from_backend(*b).unwrap();
+                fixed_totals[i] +=
+                    simulate(Machine::Frontier, lib, CollKind::AllGather, mb * MB, p, 3, 2)
+                        .unwrap()
+                        .stats
+                        .mean();
+            }
+            let chosen = d.choose(CollKind::AllGather, mb * MB, p);
+            let lib = LibModel::from_backend(chosen).unwrap();
+            auto_total += simulate(Machine::Frontier, lib, CollKind::AllGather, mb * MB, p, 3, 2)
+                .unwrap()
+                .stats
+                .mean();
+        }
+    }
+    let best_fixed = fixed_totals.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(
+        auto_total <= best_fixed * 1.02,
+        "auto {auto_total} vs best fixed {best_fixed}"
+    );
+}

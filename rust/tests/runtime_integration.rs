@@ -1,0 +1,148 @@
+//! Integration over the AOT artifacts (requires `make artifacts`; every
+//! test skips with a notice when the artifacts are absent so plain
+//! `cargo test` stays green in a fresh checkout).
+
+use pccl::reduction::offload::XlaReducer;
+use pccl::reduction::reduce_into;
+use pccl::runtime::{Artifacts, DeviceService, HostTensor};
+
+fn artifacts_or_skip() -> Option<Artifacts> {
+    match Artifacts::load_default() {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_names_all_resolve() {
+    let Some(arts) = artifacts_or_skip() else { return };
+    for name in arts.names() {
+        assert!(arts.hlo_path(name).is_ok(), "{name} missing on disk");
+    }
+    let meta = arts.model().expect("model metadata");
+    assert_eq!(meta.param_names.len(), meta.param_shapes.len());
+    let count: usize = meta
+        .param_shapes
+        .iter()
+        .map(|s| s.iter().product::<usize>())
+        .sum();
+    assert_eq!(count, meta.param_count);
+}
+
+#[test]
+fn xla_reduce_matches_native() {
+    let Some(arts) = artifacts_or_skip() else { return };
+    let service = DeviceService::spawn(arts.clone()).unwrap();
+    let reducer = XlaReducer::from_artifacts(&arts, service.handle(), 0)
+        .unwrap()
+        .expect("reduce_sum artifact");
+    let n = reducer.chunk() + 1000; // exercise device chunks + host tail
+    let mut acc_xla: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.5).collect();
+    let src: Vec<f32> = (0..n).map(|i| (i % 31) as f32 * 0.25).collect();
+    let mut acc_native = acc_xla.clone();
+    reducer.reduce_into(&mut acc_xla, &src).unwrap();
+    reduce_into(&mut acc_native, &src);
+    assert_eq!(acc_xla, acc_native);
+}
+
+#[test]
+fn unshuffle_artifact_matches_native_transpose() {
+    let Some(arts) = artifacts_or_skip() else { return };
+    let name = arts
+        .names()
+        .find(|n| n.starts_with("unshuffle_"))
+        .expect("unshuffle artifact")
+        .to_string();
+    // Parse NxMxB from the name.
+    let dims: Vec<usize> = name
+        .trim_start_matches("unshuffle_")
+        .split('x')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let (n_nodes, m_local, block) = (dims[0], dims[1], dims[2]);
+    let total = n_nodes * m_local * block;
+    let service = DeviceService::spawn(arts).unwrap();
+    let buf: Vec<f32> = (0..total).map(|i| i as f32).collect();
+    let out = service
+        .handle()
+        .execute("unshuffle_4x2x1024", vec![HostTensor::f32(buf.clone(), vec![total])])
+        .unwrap();
+    let got = out.into_iter().next().unwrap().into_f32().unwrap();
+    let want = pccl::collectives::unshuffle(&buf, n_nodes, m_local, block);
+    assert_eq!(got, want, "L1 kernel ≠ L3 native shuffle");
+}
+
+#[test]
+fn init_params_deterministic_across_calls() {
+    let Some(arts) = artifacts_or_skip() else { return };
+    let meta = arts.model().unwrap().clone();
+    let service = DeviceService::spawn(arts).unwrap();
+    let h = service.handle();
+    let seed = HostTensor::i32(vec![7], vec![]);
+    let a = h.execute("init_params", vec![seed.clone()]).unwrap();
+    let b = h.execute("init_params", vec![seed]).unwrap();
+    let c = h
+        .execute("init_params", vec![HostTensor::i32(vec![8], vec![])])
+        .unwrap();
+    assert_eq!(a.len(), meta.param_shapes.len());
+    assert_eq!(a, b, "same seed must give identical params");
+    assert_ne!(a, c, "different seed must differ");
+}
+
+#[test]
+fn train_step_single_rank_learns() {
+    let Some(arts) = artifacts_or_skip() else { return };
+    let meta = arts.model().unwrap().clone();
+    let service = DeviceService::spawn(arts).unwrap();
+    let h = service.handle();
+    let mut params = pccl::train::params::ParamSet::init(&h, &meta, 3).unwrap();
+    let mut first = None;
+    let mut last = 0.0f32;
+    let mut opt = pccl::train::optimizer::Sgd::new(0.5, 0.0);
+    for step in 0..8 {
+        let tokens = pccl::train::data::batch_tokens(
+            1,
+            0,
+            step,
+            meta.batch_per_rank,
+            meta.seq_len,
+            meta.vocab_size,
+        );
+        let mut inputs = params.tensors.clone();
+        inputs.push(HostTensor::i32(
+            tokens,
+            vec![meta.batch_per_rank, meta.seq_len + 1],
+        ));
+        let mut out = h.execute("train_step", inputs).unwrap();
+        let loss = out.remove(0).into_f32().unwrap()[0];
+        first.get_or_insert(loss);
+        last = loss;
+        let grads = params.flatten_grads(&out).unwrap();
+        let mut flat = params.flatten().unwrap();
+        opt.step(&mut flat, &grads);
+        params.load_flat(&flat).unwrap();
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first,
+        "loss should decrease within 8 steps: {first} → {last}"
+    );
+    // Fresh init predicts ~uniform: loss ≈ ln(vocab).
+    let expect = (meta.vocab_size as f32).ln();
+    assert!((first - expect).abs() < 1.0, "init loss {first} vs ln(V)={expect}");
+}
+
+#[test]
+fn train_step_input_validation() {
+    let Some(arts) = artifacts_or_skip() else { return };
+    let service = DeviceService::spawn(arts).unwrap();
+    // Wrong arity.
+    let err = service
+        .handle()
+        .execute("train_step", vec![HostTensor::i32(vec![0], vec![1])])
+        .unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+}
