@@ -1,6 +1,10 @@
-//! Adaptive dispatching demo: train the SVM dispatcher on netsim sweep
-//! data for Frontier, print its decision map, and use it through the
-//! `Backend::Auto` path of the public API.
+//! Adaptive dispatching, end to end: train the SVM dispatcher on the
+//! Frontier netsim sweep, show that different (collective, size, ranks)
+//! points route to different backends through the trained model, persist
+//! the model via the artifact registry, run a *measured* sweep of the real
+//! data plane with the multi-rank launcher and train a second dispatcher
+//! on those timings, and finally route real collectives through
+//! `Backend::Auto` via the `Pccl` facade.
 //!
 //! ```bash
 //! cargo run --release --example dispatch_demo
@@ -8,13 +12,32 @@
 
 use std::sync::Arc;
 
-use pccl::backends::{all_gather, Backend, CollKind, CollectiveOptions};
-use pccl::comm::CommWorld;
+use pccl::backends::CollKind;
+use pccl::collectives::Pccl;
 use pccl::dispatch::SvmDispatcher;
-use pccl::topology::Machine;
+use pccl::runtime::{Artifacts, Launcher, LauncherConfig};
+use pccl::topology::{Machine, Topology};
+
+fn print_decision_map(d: &SvmDispatcher, sizes_mb: &[usize], ranks: &[usize]) {
+    print!("{:>8}", "");
+    for p in ranks {
+        print!("{p:>12}");
+    }
+    println!();
+    for &mb in sizes_mb {
+        print!("{mb:>6}MB");
+        for &p in ranks {
+            let b = d.choose(CollKind::AllGather, mb << 20, p);
+            print!(" {:>11}", b.label());
+        }
+        println!();
+    }
+}
 
 fn main() -> pccl::Result<()> {
-    println!("training SVM dispatcher on Frontier sweep data...");
+    // 1. Train on the Frontier netsim sweep (the paper's protocol:
+    //    message-size × rank-count grid, argmin-labeled, 5-fold CV).
+    println!("training SVM dispatcher on the Frontier netsim sweep...");
     let dispatcher = Arc::new(SvmDispatcher::train(
         Machine::Frontier,
         &[16, 32, 64, 128, 256, 512, 1024],
@@ -23,38 +46,61 @@ fn main() -> pccl::Result<()> {
         42,
     )?);
 
-    // Decision map over the paper's heatmap grid (Fig. 11 structure).
-    println!("\nall-gather backend decision map (rows = msg MiB, cols = ranks):");
-    print!("{:>8}", "");
-    for p in [32, 128, 512, 2048] {
-        print!("{p:>12}");
-    }
-    println!();
-    for mb in [16usize, 64, 256, 1024] {
-        print!("{mb:>6}MB");
-        for p in [32usize, 128, 512, 2048] {
-            let b = dispatcher.choose(CollKind::AllGather, mb << 20, p);
-            print!(" {:>11}", b.label());
-        }
-        println!();
-    }
+    println!("\nall-gather decision map (rows = msg MiB, cols = ranks):");
+    print_decision_map(&dispatcher, &[16, 64, 256, 1024], &[32, 128, 512, 2048]);
 
-    // Table I rows for this machine.
-    println!("\ndispatcher test accuracy:");
+    println!("\ndispatcher test accuracy (Table I rows):");
     for (coll, size, correct, acc) in dispatcher.table1() {
         println!("  {coll:<16} {correct}/{size} = {acc:.1}%");
     }
 
-    // Use it through the public API on the real data plane.
-    let chooser = dispatcher.chooser();
-    let world = CommWorld::<f32>::new(8);
+    // The headline property: the trained SVM sends different (collective,
+    // size, ranks) points to different backends.
+    let bw = dispatcher.choose(CollKind::AllGather, 1024 << 20, 32);
+    let lat = dispatcher.choose(CollKind::AllGather, 16 << 20, 2048);
+    assert_ne!(bw, lat, "trained dispatcher must split the regimes");
+    println!("\nbandwidth-bound (1 GiB × 32 ranks)   → {}", bw.label());
+    println!("latency-bound   (16 MiB × 2048 ranks) → {}", lat.label());
+
+    // 2. Persist via the artifact registry; reload and verify routing.
+    let arts = Artifacts::open_or_init(Artifacts::default_dir())?;
+    let path = arts.save_dispatcher(&dispatcher)?;
+    let reloaded = arts.load_dispatcher(Machine::Frontier)?;
+    assert_eq!(reloaded.choose(CollKind::AllGather, 16 << 20, 2048), lat);
+    println!("\npersisted dispatcher artifact → {}", path.display());
+
+    // 3. Measured sweep of the real data plane: the multi-rank launcher
+    //    spawns rank threads over the in-memory transport and times every
+    //    backend, and a second dispatcher trains on those measurements.
+    println!("\nmeasuring the real data plane (in-process rank threads)...");
+    let launcher = Launcher::new(LauncherConfig {
+        topologies: vec![
+            Topology::flat(2),
+            Topology::new(2, 2, 1)?,
+            Topology::new(2, 4, 2)?,
+        ],
+        elem_counts: vec![1 << 10, 1 << 14, 1 << 17],
+        trials: 3,
+        inner_iters: 4,
+    });
+    let sweep = launcher.sweep()?;
+    println!("  {} measured cells", sweep.cells.len());
+    let measured = sweep.train_dispatcher(Machine::Generic, 7)?;
+    println!("  measured-data dispatcher accuracy:");
+    for (coll, size, correct, acc) in measured.table1() {
+        println!("    {coll:<16} {correct}/{size} = {acc:.1}%");
+    }
+
+    // 4. Route real collectives through Backend::Auto via the facade.
+    let pccl_auto = Pccl::<f32>::with_dispatcher(Arc::clone(&dispatcher));
+    let world = pccl::comm::CommWorld::<f32>::new(8);
+    let facade = pccl_auto.clone();
     let outs = world.try_run(move |comm| {
-        let opts = CollectiveOptions::default()
-            .backend(Backend::Auto)
-            .chooser(chooser.clone());
-        all_gather(comm, &[comm.rank() as f32; 256], &opts)
+        let ag = facade.all_gather(comm, &[comm.rank() as f32; 256])?;
+        let ar = facade.all_reduce(comm, &[1.0f32; 64])?;
+        Ok((ag.len(), ar[0]))
     })?;
-    assert_eq!(outs[0].len(), 8 * 256);
-    println!("\nAuto-dispatched all-gather over 8 ranks OK");
+    assert!(outs.iter().all(|&(n, s)| n == 8 * 256 && s == 8.0));
+    println!("\nauto-dispatched all-gather + all-reduce over 8 ranks OK");
     Ok(())
 }

@@ -81,7 +81,12 @@ def init_params(seed, cfg: ModelConfig) -> List[jax.Array]:
             params.append(jnp.zeros(shape, jnp.float32))
         else:
             fan_in = shape[0] if len(shape) > 1 else shape[0]
-            scale = 0.02 if "emb" in name else 1.0 / jnp.sqrt(fan_in)
+            # GPT-2-style: small embeddings AND a small LM head, so a fresh
+            # model predicts near-uniform (init loss ≈ ln vocab).
+            if "emb" in name or name == "head":
+                scale = 0.02
+            else:
+                scale = 1.0 / jnp.sqrt(fan_in)
             params.append(scale * jax.random.normal(sub, shape, jnp.float32))
     return params
 

@@ -1,0 +1,60 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The CI image is offline, so property tests degrade to a fixed number of
+seeded random examples per test. The API surface is the small subset the
+kernel tests use: ``given``, ``settings``, ``strategies.integers``,
+``strategies.sampled_from``. With real hypothesis installed the tests
+import it instead and get full shrinking/replay behaviour.
+"""
+
+import random
+
+_FALLBACK_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(options):
+    opts = list(options)
+    return _Strategy(lambda rng: rng.choice(opts))
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+
+
+def settings(max_examples=_FALLBACK_EXAMPLES, deadline=None):
+    del deadline  # no deadlines in the fallback
+
+    def deco(f):
+        f._max_examples = max_examples
+        return f
+
+    return deco
+
+
+def given(**strats):
+    def deco(f):
+        # Deliberately zero-arg (no functools.wraps): pytest must not
+        # mistake the drawn parameters for fixtures.
+        def wrapper():
+            rng = random.Random(0xC0FFEE)
+            n = min(getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                f(**drawn)
+
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+
+    return deco

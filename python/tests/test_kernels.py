@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from compile.kernels import fused, ref
 from compile.kernels import reduce as kreduce

@@ -24,9 +24,7 @@ use crate::reduction::offload::{native_combine, CombineFn};
 use crate::reduction::{reduce_into_op, Elem, ReduceOp};
 
 /// Which collective implementation handles a call.
-#[derive(
-    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
-)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Backend {
     /// The GPU vendor library (NCCL on Perlmutter, RCCL on Frontier):
     /// flat ring all-gather/reduce-scatter, double-binary-tree all-reduce.
@@ -209,7 +207,9 @@ pub fn reduce_scatter<T: Elem>(
             ring_reduce_scatter(c, input, &cpu)
         }
         Backend::Vendor => ring_reduce_scatter(c, input, &opts.effective_combine()),
-        Backend::PcclRing => hier_reduce_scatter(c, input, &opts.effective_combine(), InterAlgo::Ring),
+        Backend::PcclRing => {
+            hier_reduce_scatter(c, input, &opts.effective_combine(), InterAlgo::Ring)
+        }
         Backend::PcclRec | Backend::Auto => {
             hier_reduce_scatter(c, input, &opts.effective_combine(), InterAlgo::Rec)
         }

@@ -90,9 +90,9 @@ pub fn fig4() -> Result<Table> {
     let mut t = Table::new("Fig 4: reduce-scatter, Cray-MPICH vs RCCL vs custom p2p+GPU");
     for &msg in &[256 * MB, 512 * MB] {
         for &p in &[8, 16, 32, 64] {
-            sim_cell(&mut t, Machine::Frontier, LibModel::CrayMpich, CollKind::ReduceScatter, msg, p)?;
-            sim_cell(&mut t, Machine::Frontier, LibModel::Vendor, CollKind::ReduceScatter, msg, p)?;
-            sim_cell(&mut t, Machine::Frontier, LibModel::Custom, CollKind::ReduceScatter, msg, p)?;
+            for lib in [LibModel::CrayMpich, LibModel::Vendor, LibModel::Custom] {
+                sim_cell(&mut t, Machine::Frontier, lib, CollKind::ReduceScatter, msg, p)?;
+            }
         }
     }
     Ok(t)
@@ -104,8 +104,9 @@ pub fn fig6() -> Result<Table> {
     let mut t = Table::new("Fig 6: rec-halving/ring speedup heatmap (reduce-scatter)");
     for &mb in &[1usize, 4, 16, 64, 256, 1024] {
         for &p in &[8usize, 32, 128, 512, 2048] {
-            let ring = simulate(Machine::Frontier, LibModel::PcclRing, CollKind::ReduceScatter, mb * MB, p, TRIALS, SEED)?;
-            let rec = simulate(Machine::Frontier, LibModel::PcclRec, CollKind::ReduceScatter, mb * MB, p, TRIALS, SEED)?;
+            let rs = CollKind::ReduceScatter;
+            let ring = simulate(Machine::Frontier, LibModel::PcclRing, rs, mb * MB, p, TRIALS, SEED)?;
+            let rec = simulate(Machine::Frontier, LibModel::PcclRec, rs, mb * MB, p, TRIALS, SEED)?;
             // Encode the speedup as "mean" of a one-sample stat.
             t.push(
                 "rec_over_ring",
@@ -353,23 +354,18 @@ mod ablation_tests {
         let v = t.mean("nccl", 16 * MB, 2048);
         // Label on InfiniBand is also "nccl" — disambiguate via fresh sims.
         let _ = v;
-        let v = simulate(Machine::InfiniBand, LibModel::Vendor, CollKind::AllGather, 16 * MB, 2048, 5, 3)
-            .unwrap()
-            .stats
-            .mean();
-        let p = simulate(Machine::InfiniBand, LibModel::PcclRec, CollKind::AllGather, 16 * MB, 2048, 5, 3)
-            .unwrap()
-            .stats
-            .mean();
+        let ag = CollKind::AllGather;
+        let sim = |machine, lib| {
+            simulate(machine, lib, ag, 16 * MB, 2048, 5, 3)
+                .unwrap()
+                .stats
+                .mean()
+        };
+        let v = sim(Machine::InfiniBand, LibModel::Vendor);
+        let p = sim(Machine::InfiniBand, LibModel::PcclRec);
         let ib_speedup = v / p;
-        let vf = simulate(Machine::Frontier, LibModel::Vendor, CollKind::AllGather, 16 * MB, 2048, 5, 3)
-            .unwrap()
-            .stats
-            .mean();
-        let pf = simulate(Machine::Frontier, LibModel::PcclRec, CollKind::AllGather, 16 * MB, 2048, 5, 3)
-            .unwrap()
-            .stats
-            .mean();
+        let vf = sim(Machine::Frontier, LibModel::Vendor);
+        let pf = sim(Machine::Frontier, LibModel::PcclRec);
         assert!(ib_speedup > 1.0, "PCCL should still win at scale on IB: {ib_speedup:.2}");
         assert!(ib_speedup < vf / pf, "IB gap must be smaller than Frontier's");
     }

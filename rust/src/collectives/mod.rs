@@ -15,6 +15,7 @@
 
 mod hierarchical;
 pub mod oracle;
+mod pccl;
 mod pipelined;
 mod pt2pt;
 mod recursive;
@@ -24,6 +25,7 @@ mod shuffle;
 mod tree;
 
 pub use hierarchical::{hier_all_gather, hier_all_reduce, hier_reduce_scatter, InterAlgo};
+pub use pccl::Pccl;
 pub use pipelined::pipelined_hier_all_gather;
 pub use pt2pt::{broadcast, gather, reduce, scatter};
 pub use recursive::{rec_all_gather, rec_all_reduce, rec_reduce_scatter};

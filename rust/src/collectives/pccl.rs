@@ -1,0 +1,215 @@
+//! `Pccl` — the library facade that closes the selection loop: one object
+//! owning the collective options, routing every `all_gather` /
+//! `reduce_scatter` / `all_reduce` through the trained adaptive dispatcher
+//! (§IV-C) when a model is available, and through the paper's coarse
+//! regime heuristic otherwise.
+//!
+//! Training drivers ([`crate::train::ddp`], [`crate::train::zero3`]) and
+//! the examples construct their options through this facade, so a
+//! dispatcher persisted by `pccl dispatch --save` / `dispatch_demo` is
+//! consulted on every collective call with `Backend::Auto`.
+
+use std::sync::Arc;
+
+use crate::backends::{self, Backend, CollKind, CollectiveOptions};
+use crate::comm::Communicator;
+use crate::dispatch::SvmDispatcher;
+use crate::error::Result;
+use crate::reduction::Elem;
+use crate::runtime::Artifacts;
+use crate::topology::Machine;
+
+/// Facade over the collective entry points with adaptive backend routing.
+#[derive(Clone)]
+pub struct Pccl<T: Elem> {
+    opts: CollectiveOptions<T>,
+    dispatcher: Option<Arc<SvmDispatcher>>,
+}
+
+impl<T: Elem> Default for Pccl<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Elem> Pccl<T> {
+    /// Adaptive facade with no trained model: `Backend::Auto` resolves via
+    /// the built-in regime heuristic (vendor when bandwidth-bound,
+    /// hierarchical recursive when latency-bound).
+    pub fn new() -> Self {
+        Self {
+            opts: CollectiveOptions::default().backend(Backend::Auto),
+            dispatcher: None,
+        }
+    }
+
+    /// Fixed-backend facade (`Backend::Auto` behaves like [`Pccl::new`]).
+    pub fn with_backend(backend: Backend) -> Self {
+        Self {
+            opts: CollectiveOptions::default().backend(backend),
+            dispatcher: None,
+        }
+    }
+
+    /// Route `Backend::Auto` through a trained dispatcher.
+    pub fn with_dispatcher(dispatcher: Arc<SvmDispatcher>) -> Self {
+        let opts = CollectiveOptions::default()
+            .backend(Backend::Auto)
+            .chooser(dispatcher.chooser());
+        Self { opts, dispatcher: Some(dispatcher) }
+    }
+
+    /// Load the dispatcher trained for `machine` from the default artifact
+    /// directory; heuristic fallback when no artifact exists. A *corrupt*
+    /// artifact also falls back, but loudly (stderr) — silently demoting a
+    /// trained model to the heuristic would mask real breakage.
+    pub fn from_artifacts(machine: Machine) -> Self {
+        Self::fallback_on(Artifacts::load_default().and_then(|a| a.load_dispatcher(machine)))
+    }
+
+    /// Adaptive facade for a training run: `Backend::Auto` consults
+    /// whichever dispatcher artifact is persisted in `artifact_dir` (or the
+    /// default directory), falling back to the heuristic; any other
+    /// backend is pinned.
+    pub fn for_training(backend: Backend, artifact_dir: Option<&str>) -> Self {
+        if backend != Backend::Auto {
+            return Self::with_backend(backend);
+        }
+        let arts = match artifact_dir {
+            Some(d) => Artifacts::load(d),
+            None => Artifacts::load_default(),
+        };
+        Self::fallback_on(arts.and_then(|a| a.load_any_dispatcher()))
+    }
+
+    /// Heuristic fallback that distinguishes "no artifact" (expected,
+    /// silent) from "artifact present but unloadable" (warned).
+    fn fallback_on(loaded: Result<SvmDispatcher>) -> Self {
+        match loaded {
+            Ok(d) => Self::with_dispatcher(Arc::new(d)),
+            // Missing directory / missing dispatcher file both surface as
+            // Artifact (or Io for an absent dir) — the expected cold path.
+            Err(crate::error::Error::Artifact(_)) | Err(crate::error::Error::Io(_)) => Self::new(),
+            Err(e) => {
+                eprintln!(
+                    "warning: dispatcher artifact present but unloadable ({e}); \
+                     falling back to the regime heuristic"
+                );
+                Self::new()
+            }
+        }
+    }
+
+    /// Whether a trained model (vs. the heuristic) backs `Backend::Auto`.
+    pub fn is_trained(&self) -> bool {
+        self.dispatcher.is_some()
+    }
+
+    /// The trained dispatcher, when present.
+    pub fn dispatcher(&self) -> Option<&Arc<SvmDispatcher>> {
+        self.dispatcher.as_ref()
+    }
+
+    /// The underlying options (for APIs that take `CollectiveOptions`,
+    /// e.g. bucketed all-reduce).
+    pub fn options(&self) -> &CollectiveOptions<T> {
+        &self.opts
+    }
+
+    /// Which backend a call of this shape would take (introspection).
+    pub fn route(&self, kind: CollKind, msg_bytes: usize, ranks: usize) -> Backend {
+        self.opts.resolve(kind, msg_bytes, ranks)
+    }
+
+    /// All-gather through the routed backend.
+    pub fn all_gather(&self, c: &mut Communicator<T>, input: &[T]) -> Result<Vec<T>> {
+        backends::all_gather(c, input, &self.opts)
+    }
+
+    /// Reduce-scatter through the routed backend.
+    pub fn reduce_scatter(&self, c: &mut Communicator<T>, input: &[T]) -> Result<Vec<T>> {
+        backends::reduce_scatter(c, input, &self.opts)
+    }
+
+    /// All-reduce through the routed backend.
+    pub fn all_reduce(&self, c: &mut Communicator<T>, input: &[T]) -> Result<Vec<T>> {
+        backends::all_reduce(c, input, &self.opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::oracle;
+    use crate::comm::CommWorld;
+    use crate::topology::Topology;
+
+    #[test]
+    fn untrained_facade_uses_regime_heuristic() {
+        let pccl = Pccl::<f32>::new();
+        assert!(!pccl.is_trained());
+        assert_eq!(pccl.route(CollKind::AllGather, 512 << 20, 16), Backend::Vendor);
+        assert_eq!(pccl.route(CollKind::AllGather, 16 << 20, 2048), Backend::PcclRec);
+    }
+
+    #[test]
+    fn trained_facade_routes_through_svm_and_runs() {
+        let dispatcher = Arc::new(
+            SvmDispatcher::train(
+                Machine::Frontier,
+                &[16, 64, 256, 1024],
+                &[32, 128, 512, 2048],
+                3,
+                11,
+            )
+            .unwrap(),
+        );
+        let pccl = Pccl::<f32>::with_dispatcher(dispatcher);
+        assert!(pccl.is_trained());
+        // The two regimes resolve to different backends through the SVM.
+        let bw = pccl.route(CollKind::AllGather, 1024 << 20, 32);
+        let lat = pccl.route(CollKind::AllGather, 16 << 20, 2048);
+        assert_ne!(bw, lat, "dispatcher must split the regimes");
+        // And real collectives execute correctly through the facade.
+        let topo = Topology::new(2, 3, 1).unwrap();
+        let p = topo.world_size();
+        let world = CommWorld::<f32>::with_topology(topo);
+        let pccl2 = pccl.clone();
+        let outs = world
+            .try_run(move |c| {
+                let ag = pccl2.all_gather(c, &[c.rank() as f32; 4])?;
+                let ar = pccl2.all_reduce(c, &[1.0; 5])?;
+                Ok((ag, ar))
+            })
+            .unwrap();
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| vec![r as f32; 4]).collect();
+        for (ag, ar) in outs {
+            assert_eq!(ag, oracle::all_gather(&ins));
+            assert_eq!(ar, vec![p as f32; 5]);
+        }
+    }
+
+    #[test]
+    fn for_training_pins_fixed_backends() {
+        let pccl = Pccl::<f32>::for_training(Backend::PcclRing, None);
+        assert!(!pccl.is_trained());
+        assert_eq!(pccl.route(CollKind::AllReduce, 1 << 20, 8), Backend::PcclRing);
+    }
+
+    #[test]
+    fn for_training_auto_without_artifacts_falls_back_to_heuristic() {
+        let pccl = Pccl::<f32>::for_training(Backend::Auto, Some("/definitely/not/here"));
+        assert!(!pccl.is_trained());
+        assert_eq!(pccl.route(CollKind::AllGather, 16 << 20, 2048), Backend::PcclRec);
+    }
+
+    #[test]
+    fn for_training_auto_loads_persisted_artifact() {
+        let dir = crate::util::tmp::TempDir::new().unwrap();
+        let arts = Artifacts::open_or_init(dir.path()).unwrap();
+        let d = SvmDispatcher::train(Machine::Frontier, &[16, 1024], &[32, 2048], 2, 7).unwrap();
+        arts.save_dispatcher(&d).unwrap();
+        let pccl = Pccl::<f32>::for_training(Backend::Auto, dir.path().to_str());
+        assert!(pccl.is_trained());
+    }
+}

@@ -53,9 +53,8 @@ pub fn tree_all_reduce<T: Elem, C: Comm<T>>(
         let src = r & !(recv_mask);
         let step = 0x100 + recv_mask.trailing_zeros();
         acc = c.recv(src, step)?;
-    } else {
-        recv_mask = p.next_power_of_two();
     }
+    // Root keeps its initial recv_mask = next_power_of_two(p).
     let mut child_mask = recv_mask >> 1;
     while child_mask > 0 {
         let dst = r | child_mask;

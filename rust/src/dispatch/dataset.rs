@@ -3,7 +3,7 @@
 //! label the configuration with the fastest backend's class id.
 
 use crate::backends::{Backend, CollKind};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::netsim::libmodel::{simulate, LibModel};
 use crate::topology::Machine;
 use crate::util::rng::Rng;
@@ -67,6 +67,33 @@ impl Dataset {
             }
         }
         Ok(Self { samples })
+    }
+
+    /// Label one configuration from *measured* per-backend mean times —
+    /// the data-plane twin of the netsim sweep in [`Dataset::build`]. The
+    /// label is the argmin backend's class id.
+    pub fn push_measured(
+        &mut self,
+        msg: usize,
+        ranks: usize,
+        times: &[(Backend, f64)],
+    ) -> Result<()> {
+        let mut best: Option<(f64, usize)> = None;
+        for &(backend, t) in times {
+            let class = backend.class_id().ok_or_else(|| {
+                Error::Dispatch(format!("backend {backend:?} is not dispatchable"))
+            })?;
+            if best.map_or(true, |(b, _)| t < b) {
+                best = Some((t, class));
+            }
+        }
+        let Some((_, label)) = best else {
+            return Err(Error::Dispatch(format!(
+                "no measurements for configuration msg={msg} ranks={ranks}"
+            )));
+        };
+        self.samples.push(Sample { features: features(msg, ranks), label, msg, ranks });
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -167,6 +194,26 @@ mod tests {
         let counts = test.class_counts();
         assert_eq!(counts[&0], 5);
         assert_eq!(counts[&1], 5);
+    }
+
+    #[test]
+    fn push_measured_labels_argmin() {
+        let mut d = Dataset::default();
+        d.push_measured(
+            64 << 20,
+            128,
+            &[
+                (Backend::Vendor, 3.0e-3),
+                (Backend::CrayMpich, 9.0e-3),
+                (Backend::PcclRing, 2.5e-3),
+                (Backend::PcclRec, 2.0e-3),
+            ],
+        )
+        .unwrap();
+        assert_eq!(d.samples[0].label, Backend::PcclRec.class_id().unwrap());
+        assert_eq!(d.samples[0].msg, 64 << 20);
+        assert!(d.push_measured(1, 1, &[]).is_err());
+        assert!(d.push_measured(1, 1, &[(Backend::Auto, 1.0)]).is_err());
     }
 
     #[test]

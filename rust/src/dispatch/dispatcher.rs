@@ -5,7 +5,6 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-
 use crate::backends::{Backend, Chooser, CollKind};
 use crate::error::{Error, Result};
 use crate::topology::Machine;
@@ -30,7 +29,57 @@ pub struct DispatcherModel {
 }
 
 impl DispatcherModel {
-    fn to_json(&self) -> Value {
+    /// Fit one collective model on a labeled dataset, whatever produced it
+    /// (netsim sweep or measured data-plane sweep): stratified 80/20
+    /// split, k-fold CV hyperparameter selection with `k = min(5, train)`.
+    pub fn fit(data: &Dataset, seed: u64) -> Result<Self> {
+        let (train, test) = data.stratified_split(0.2, seed ^ 0xA5A5);
+        let (txs_raw, tys) = train.xy();
+        if tys.len() < 2 {
+            return Err(Error::Dispatch(format!(
+                "need ≥ 2 training samples to fit a dispatcher model, got {}",
+                tys.len()
+            )));
+        }
+        let scaler = Scaler::fit(&txs_raw);
+        let txs = scaler.transform_all(&txs_raw);
+        let k = tys.len().min(5);
+        let (svm, params, cv_accuracy) = train_with_cv(&txs, &tys, k, seed)?;
+        let (vxs_raw, vys) = test.xy();
+        let vxs = scaler.transform_all(&vxs_raw);
+        let test_correct = vxs
+            .iter()
+            .zip(&vys)
+            .filter(|(x, &y)| svm.predict(x) == y)
+            .count();
+        // Small (measured) datasets can stratify into an empty test set;
+        // report the CV estimate then instead of a misleading 0% — a
+        // consumer can tell the difference via `test_size == 0`.
+        let test_accuracy = if vys.is_empty() {
+            cv_accuracy
+        } else {
+            test_correct as f64 / vys.len() as f64
+        };
+        Ok(DispatcherModel {
+            scaler,
+            svm,
+            params,
+            cv_accuracy,
+            test_accuracy,
+            test_size: vys.len(),
+            test_correct,
+            train_size: tys.len(),
+        })
+    }
+
+    /// Predicted backend for a raw (message bytes, rank count) call site.
+    pub fn predict(&self, msg_bytes: usize, ranks: usize) -> Backend {
+        let x = self.scaler.transform(&features(msg_bytes, ranks));
+        Backend::CONCRETE[self.svm.predict(&x).min(Backend::CONCRETE.len() - 1)]
+    }
+
+    /// Serialize for persistence (the dispatcher artifact format).
+    pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("scaler", self.scaler.to_json()),
             ("svm", self.svm.to_json()),
@@ -43,7 +92,8 @@ impl DispatcherModel {
         ])
     }
 
-    fn from_json(v: &Value) -> Result<Self> {
+    /// Parse a persisted model (inverse of [`DispatcherModel::to_json`]).
+    pub fn from_json(v: &Value) -> Result<Self> {
         Ok(Self {
             scaler: Scaler::from_json(v.get("scaler")?)?,
             svm: MultiClassSvm::from_json(v.get("svm")?)?,
@@ -79,39 +129,24 @@ impl SvmDispatcher {
         trials: usize,
         seed: u64,
     ) -> Result<Self> {
-        let mut models = BTreeMap::new();
+        let mut datasets = Vec::new();
         for kind in CollKind::ALL {
-            let data = Dataset::build(machine, kind, sizes_mb, ranks, trials, seed)?;
-            let (train, test) = data.stratified_split(0.2, seed ^ 0xA5A5);
-            let (txs_raw, tys) = train.xy();
-            let scaler = Scaler::fit(&txs_raw);
-            let txs = scaler.transform_all(&txs_raw);
-            let (svm, params, cv_accuracy) = train_with_cv(&txs, &tys, 5, seed)?;
-            let (vxs_raw, vys) = test.xy();
-            let vxs = scaler.transform_all(&vxs_raw);
-            let test_correct = vxs
-                .iter()
-                .zip(&vys)
-                .filter(|(x, &y)| svm.predict(x) == y)
-                .count();
-            let test_accuracy = if vys.is_empty() {
-                0.0
-            } else {
-                test_correct as f64 / vys.len() as f64
-            };
-            models.insert(
-                kind_key(kind),
-                DispatcherModel {
-                    scaler,
-                    svm,
-                    params,
-                    cv_accuracy,
-                    test_accuracy,
-                    test_size: vys.len(),
-                    test_correct,
-                    train_size: tys.len(),
-                },
-            );
+            datasets.push((kind, Dataset::build(machine, kind, sizes_mb, ranks, trials, seed)?));
+        }
+        Self::from_datasets(machine, datasets, seed)
+    }
+
+    /// Train from pre-built labeled datasets — the shared trunk of the
+    /// netsim path ([`SvmDispatcher::train`]) and the measured data-plane
+    /// path ([`crate::runtime::MeasuredSweep::train_dispatcher`]).
+    pub fn from_datasets(
+        machine: Machine,
+        datasets: impl IntoIterator<Item = (CollKind, Dataset)>,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut models = BTreeMap::new();
+        for (kind, data) in datasets {
+            models.insert(kind_key(kind), DispatcherModel::fit(&data, seed)?);
         }
         Ok(Self { machine, models })
     }
@@ -126,10 +161,7 @@ impl SvmDispatcher {
     /// Predict the fastest backend for a call site.
     pub fn choose(&self, kind: CollKind, msg_bytes: usize, ranks: usize) -> Backend {
         match self.model(kind) {
-            Ok(m) => {
-                let x = m.scaler.transform(&features(msg_bytes, ranks));
-                Backend::CONCRETE[m.svm.predict(&x).min(Backend::CONCRETE.len() - 1)]
-            }
+            Ok(m) => m.predict(msg_bytes, ranks),
             Err(_) => Backend::PcclRec,
         }
     }
@@ -260,6 +292,33 @@ mod tests {
                     d2.choose(kind, mb << 20, p_)
                 );
             }
+        }
+    }
+
+    #[test]
+    fn dispatcher_model_json_roundtrip_identical_predictions() {
+        // to_json → serialize → parse → identical predictions on a
+        // held-out grid of (message size, rank count) points that the
+        // training sweep never visited.
+        let d = quick_dispatcher();
+        for kind in CollKind::ALL {
+            let m = d.model(kind).unwrap();
+            let text = m.to_json().to_string();
+            let back = DispatcherModel::from_json(&Value::parse(&text).unwrap()).unwrap();
+            for mb in [1usize, 8, 48, 192, 768, 1536, 4096] {
+                for p in [16usize, 96, 384, 1536, 4096] {
+                    assert_eq!(
+                        m.predict(mb << 20, p),
+                        back.predict(mb << 20, p),
+                        "{} mb={mb} p={p}",
+                        kind.label()
+                    );
+                }
+            }
+            assert_eq!(m.cv_accuracy, back.cv_accuracy);
+            assert_eq!(m.test_accuracy, back.test_accuracy);
+            assert_eq!(m.test_size, back.test_size);
+            assert_eq!(m.train_size, back.train_size);
         }
     }
 

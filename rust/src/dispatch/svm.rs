@@ -348,7 +348,6 @@ pub fn train_with_cv(
     Ok((model, params, cv_acc))
 }
 
-
 // --- JSON persistence (offline substrate: util::json) ----------------------
 
 use crate::util::json::Value;

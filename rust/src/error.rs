@@ -1,14 +1,16 @@
 //! Crate-wide error type. Every fallible public API returns [`Result`].
+//!
+//! Hand-rolled `Display`/`Error` impls keep the crate dependency-free (the
+//! build must work fully offline — no crates.io access).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the PCCL library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A collective was invoked with a buffer whose length is incompatible
     /// with the communicator size (e.g. reduce-scatter input not divisible
     /// by `p`).
-    #[error("buffer size {len} incompatible with communicator size {size}: {why}")]
     BadBufferSize {
         len: usize,
         size: usize,
@@ -16,51 +18,97 @@ pub enum Error {
     },
 
     /// A rank tried to communicate with a peer outside `0..size`.
-    #[error("peer rank {peer} out of range for communicator of size {size}")]
     PeerOutOfRange { peer: usize, size: usize },
 
     /// A receive timed out — the peer rank likely died or deadlocked.
-    #[error("recv from rank {src} (tag {tag:#x}) timed out after {ms} ms")]
     RecvTimeout { src: usize, tag: u64, ms: u64 },
 
     /// The transport was shut down while an operation was in flight.
-    #[error("transport closed while rank {rank} was communicating")]
     TransportClosed { rank: usize },
 
     /// Topology construction was asked for an impossible shape.
-    #[error("invalid topology: {0}")]
     InvalidTopology(String),
 
     /// An artifact produced by `make artifacts` is missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// The PJRT runtime failed to compile or execute an HLO module.
-    #[error("xla runtime error: {0}")]
+    /// The PJRT runtime failed to compile or execute an HLO module (or the
+    /// build carries only the offline stub backend).
     Xla(String),
 
     /// SVM training / dispatcher errors.
-    #[error("dispatch error: {0}")]
     Dispatch(String),
 
     /// Simulator configuration errors.
-    #[error("netsim error: {0}")]
     NetSim(String),
 
     /// Anything I/O.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON (manifest, model persistence).
-    #[error("json error: {0}")]
     Json(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::BadBufferSize { len, size, why } => {
+                write!(f, "buffer size {len} incompatible with communicator size {size}: {why}")
+            }
+            Error::PeerOutOfRange { peer, size } => {
+                write!(f, "peer rank {peer} out of range for communicator of size {size}")
+            }
+            Error::RecvTimeout { src, tag, ms } => {
+                write!(f, "recv from rank {src} (tag {tag:#x}) timed out after {ms} ms")
+            }
+            Error::TransportClosed { rank } => {
+                write!(f, "transport closed while rank {rank} was communicating")
+            }
+            Error::InvalidTopology(m) => write!(f, "invalid topology: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Dispatch(m) => write!(f, "dispatch error: {m}"),
+            Error::NetSim(m) => write!(f, "netsim error: {m}"),
+            // Transparent: the io error's own message is the message.
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_seed_format() {
+        let e = Error::BadBufferSize { len: 7, size: 3, why: "nope" };
+        assert_eq!(
+            e.to_string(),
+            "buffer size 7 incompatible with communicator size 3: nope"
+        );
+        let e = Error::RecvTimeout { src: 2, tag: 0x10, ms: 50 };
+        assert!(e.to_string().contains("tag 0x10"));
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

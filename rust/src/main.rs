@@ -12,10 +12,11 @@
 //! pccl dispatch [--trials 10] [--save results/models]
 //! pccl train    <ddp|zero3> [--ranks 4] [--steps 100] [--lr 0.5]
 //!               [--backend pccl_rec] [--artifacts DIR]
+//! pccl smoke    [--out BENCH_smoke.json]
 //! pccl info
 //! ```
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use pccl::backends::{Backend, CollKind, CollectiveOptions};
 use pccl::bench::figures;
@@ -28,11 +29,12 @@ use pccl::topology::{Machine, Topology};
 use pccl::train::{ddp::run_ddp, zero3::run_zero3, DdpConfig, Zero3Config};
 use pccl::util::cli::Args;
 
-const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|info> [options]
+const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|smoke|info> [options]
   pccl bench    [--collective C] [--backend B] [--ranks N] [--nodes N] [--size-kb K] [--trials T]
   pccl figures  <fig1..fig13|table1|all> [--out DIR]
   pccl dispatch [--trials T] [--save DIR]
   pccl train    <ddp|zero3> [--ranks N] [--steps S] [--lr F] [--backend B] [--artifacts DIR]
+  pccl smoke    [--out FILE]   (quick measured bench of every backend; writes JSON)
   pccl info";
 
 fn parse_collective(s: &str) -> Result<CollKind> {
@@ -60,7 +62,7 @@ fn parse_backend(s: &str) -> Result<Backend> {
         })
 }
 
-fn write_table(t: &Table, out: &PathBuf, name: &str) -> Result<()> {
+fn write_table(t: &Table, out: &Path, name: &str) -> Result<()> {
     std::fs::create_dir_all(out)?;
     print!("{}", t.render());
     let path = out.join(format!("{name}.csv"));
@@ -69,7 +71,7 @@ fn write_table(t: &Table, out: &PathBuf, name: &str) -> Result<()> {
     Ok(())
 }
 
-fn run_figures(which: &str, out: &PathBuf) -> Result<()> {
+fn run_figures(which: &str, out: &Path) -> Result<()> {
     let all = which == "all";
     let mut matched = all;
     if all || which == "fig1" {
@@ -165,7 +167,7 @@ fn run_figures(which: &str, out: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn print_table1(trials: usize, out: &PathBuf) -> Result<()> {
+fn print_table1(trials: usize, out: &Path) -> Result<()> {
     println!("# Table I: SVM dispatcher performance on the unseen test set");
     println!(
         "{:<12} {:<16} {:>10} {:>10} {:>10}",
@@ -232,6 +234,58 @@ fn run_bench(
         fmt_secs(stats.stddev()),
         trials
     );
+    Ok(())
+}
+
+/// Quick measured bench of the real data plane (few sizes, few reps):
+/// every backend × collective over two small topologies, written as JSON
+/// so CI can archive the perf trajectory run over run.
+fn run_smoke(out: &Path) -> Result<()> {
+    use pccl::runtime::{Launcher, LauncherConfig};
+    use pccl::util::json::Value;
+
+    let launcher = Launcher::new(LauncherConfig::smoke());
+    let t = Timer::start();
+    let sweep = launcher.sweep()?;
+    let wall = t.secs();
+    let cells: Vec<Value> = sweep
+        .cells
+        .iter()
+        .map(|c| {
+            Value::obj(vec![
+                ("collective", Value::Str(c.kind.label().to_string())),
+                ("backend", Value::Str(c.backend.label().to_string())),
+                ("msg_bytes", Value::Num(c.msg_bytes as f64)),
+                ("ranks", Value::Num(c.ranks as f64)),
+                ("mean_s", Value::Num(c.stats.mean())),
+                ("stddev_s", Value::Num(c.stats.stddev())),
+                ("trials", Value::Num(c.stats.count() as f64)),
+            ])
+        })
+        .collect();
+    let doc = Value::obj(vec![
+        ("schema", Value::Num(1.0)),
+        ("suite", Value::Str("pccl-smoke".to_string())),
+        ("wall_s", Value::Num(wall)),
+        ("cells", Value::Arr(cells)),
+    ]);
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(out, doc.to_string())?;
+    for c in &sweep.cells {
+        println!(
+            "{:<16} {:<12} {:>10} B {:>4} ranks  {}",
+            c.kind.label(),
+            c.backend.label(),
+            c.msg_bytes,
+            c.ranks,
+            fmt_secs(c.stats.mean())
+        );
+    }
+    println!("{} cells in {:.1}s → {}", sweep.cells.len(), wall, out.display());
     Ok(())
 }
 
@@ -331,6 +385,10 @@ fn main() -> Result<()> {
                     std::process::exit(2);
                 }
             }
+        }
+        "smoke" => {
+            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_smoke.json"));
+            run_smoke(&out)?;
         }
         "info" => {
             for m in [Machine::Frontier, Machine::Perlmutter] {

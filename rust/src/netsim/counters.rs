@@ -10,7 +10,6 @@
 //! The simulator maintains these per NIC for a representative node (the
 //! collectives are node-symmetric).
 
-
 /// Bytes per network packet used when converting modeled volumes to packet
 /// counts (Slingshot MTU-sized transfers).
 pub const PACKET_BYTES: f64 = 2048.0;

@@ -495,9 +495,8 @@ fn vendor_pat_phases(
 ) -> Vec<Phase> {
     if kind == CollKind::AllReduce {
         // PAT does not change all-reduce (already double binary tree).
-        let topo_dummy = Topology::flat(ranks);
-        let _ = topo_dummy;
-        return vendor_phases(mp, &Topology::flat(ranks), kind, msg, ranks, b, counters, extra_sigma);
+        let topo = Topology::flat(ranks);
+        return vendor_phases(mp, &topo, kind, msg, ranks, b, counters, extra_sigma);
     }
     let c = mp.nics_per_node as f64;
     let m_local = mp.gpus_per_node as f64;

@@ -9,7 +9,9 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::dispatch::SvmDispatcher;
 use crate::error::{Error, Result};
+use crate::topology::Machine;
 use crate::util::json::Value;
 
 /// Shape + dtype of one tensor crossing the AOT boundary.
@@ -152,7 +154,24 @@ impl Artifacts {
 
     /// Default location: `$PCCL_ARTIFACTS` or `./artifacts`.
     pub fn load_default() -> Result<Self> {
-        let dir = std::env::var("PCCL_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Self::default_dir())
+    }
+
+    /// The default artifact directory (`$PCCL_ARTIFACTS` or `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(std::env::var("PCCL_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()))
+    }
+
+    /// Open an artifact directory, creating it (with an empty manifest)
+    /// when missing — used by flows that *produce* artifacts, such as
+    /// persisting a trained dispatcher, where `make artifacts` need not
+    /// have run.
+    pub fn open_or_init(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        if !dir.join("manifest.json").is_file() {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(dir.join("manifest.json"), r#"{"version":1,"entries":{}}"#)?;
+        }
         Self::load(dir)
     }
 
@@ -196,6 +215,56 @@ impl Artifacts {
             .model
             .as_ref()
             .ok_or_else(|| Error::Artifact("manifest has no model section".into()))
+    }
+
+    // --- dispatcher persistence ------------------------------------------
+    //
+    // Trained dispatcher models are artifacts too: train once (netsim or
+    // measured sweep), ship with the library, load at run time — the
+    // paper's per-machine model files (§IV-C).
+
+    /// Canonical path of the persisted dispatcher for `machine`.
+    pub fn dispatcher_path(&self, machine: Machine) -> PathBuf {
+        self.dir.join(format!("dispatcher-{}.json", machine.params().name))
+    }
+
+    /// Persist a trained dispatcher next to the compiled computations.
+    pub fn save_dispatcher(&self, dispatcher: &SvmDispatcher) -> Result<PathBuf> {
+        let path = self.dispatcher_path(dispatcher.machine);
+        dispatcher.save(&path)?;
+        Ok(path)
+    }
+
+    /// Load the persisted dispatcher trained for `machine`.
+    pub fn load_dispatcher(&self, machine: Machine) -> Result<SvmDispatcher> {
+        let path = self.dispatcher_path(machine);
+        if !path.is_file() {
+            return Err(Error::Artifact(format!(
+                "no dispatcher artifact at {} (train one with `pccl dispatch --save` \
+                 or `cargo run --example dispatch_demo`)",
+                path.display()
+            )));
+        }
+        SvmDispatcher::load(path)
+    }
+
+    /// Load whichever dispatcher artifact is present (machine-agnostic
+    /// lookup for run-time selection when the deployment machine is not
+    /// pinned). Preference follows `dispatcher-*.json` name order.
+    pub fn load_any_dispatcher(&self) -> Result<SvmDispatcher> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("dispatcher-") && n.ends_with(".json"))
+            .collect();
+        names.sort();
+        match names.first() {
+            Some(name) => SvmDispatcher::load(self.dir.join(name)),
+            None => Err(Error::Artifact(format!(
+                "no dispatcher-*.json artifact in {}",
+                self.dir.display()
+            ))),
+        }
     }
 }
 
@@ -259,6 +328,39 @@ mod tests {
         // entry exists but file does not
         let err = arts.hlo_path("reduce_sum_1024").unwrap_err();
         assert!(err.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn open_or_init_creates_empty_manifest() {
+        let dir = TempDir::new().unwrap();
+        let sub = dir.path().join("arts");
+        let arts = Artifacts::open_or_init(&sub).unwrap();
+        assert_eq!(arts.names().count(), 0);
+        // Idempotent: a second open sees the same (empty) registry.
+        let again = Artifacts::open_or_init(&sub).unwrap();
+        assert_eq!(again.manifest().version, 1);
+        // Does not clobber an existing manifest.
+        std::fs::write(sub.join("manifest.json"), sample_manifest()).unwrap();
+        let full = Artifacts::open_or_init(&sub).unwrap();
+        assert_eq!(full.names().count(), 1);
+    }
+
+    #[test]
+    fn dispatcher_save_load_roundtrip_via_registry() {
+        let dir = TempDir::new().unwrap();
+        let arts = Artifacts::open_or_init(dir.path()).unwrap();
+        assert!(arts.load_dispatcher(Machine::Frontier).is_err());
+        assert!(arts.load_any_dispatcher().is_err());
+        let d = SvmDispatcher::train(Machine::Frontier, &[16, 1024], &[32, 2048], 2, 5).unwrap();
+        let path = arts.save_dispatcher(&d).unwrap();
+        assert!(path.ends_with("dispatcher-frontier.json"));
+        let back = arts.load_dispatcher(Machine::Frontier).unwrap();
+        let any = arts.load_any_dispatcher().unwrap();
+        for (mb, p) in [(16usize, 2048usize), (1024, 32)] {
+            let kind = crate::backends::CollKind::AllGather;
+            assert_eq!(d.choose(kind, mb << 20, p), back.choose(kind, mb << 20, p));
+            assert_eq!(d.choose(kind, mb << 20, p), any.choose(kind, mb << 20, p));
+        }
     }
 
     #[test]

@@ -4,6 +4,10 @@
 //! [`Runtime`] therefore lives on one thread; multi-rank use goes through
 //! [`crate::runtime::service`]'s device-service thread, which mirrors how a
 //! real GPU runtime serializes kernel launches onto a stream.
+//!
+//! This offline build links the in-tree [`super::xla_stub`] instead of the
+//! real bindings (see that module's docs); swapping the import below is the
+//! only change needed to restore real PJRT execution.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -12,6 +16,7 @@ use std::rc::Rc;
 use crate::error::{Error, Result};
 
 use super::artifacts::{ArtifactEntry, Artifacts, TensorSpecJson};
+use super::xla_stub as xla;
 
 /// Host-side tensor crossing the PJRT boundary.
 #[derive(Debug, Clone, PartialEq)]
@@ -70,7 +75,7 @@ impl HostTensor {
             HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
             HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
         };
-        Ok(lit.reshape(&dims)?)
+        lit.reshape(&dims)
     }
 
     fn from_literal(lit: &xla::Literal, spec: &TensorSpecJson) -> Result<Self> {

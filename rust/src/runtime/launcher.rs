@@ -1,0 +1,323 @@
+//! Multi-rank in-process launcher: spawn `P` rank threads over the
+//! in-memory transport ([`crate::comm::TransportHub`] endpoints) and
+//! *measure* every registered backend across a message-size × rank-count
+//! sweep.
+//!
+//! This is the measured counterpart of the netsim sweep that trains the
+//! adaptive dispatcher (§IV-C): the netsim path predicts Frontier/
+//! Perlmutter-scale timings, while this path times the actual data plane
+//! on the machine at hand. Both feed the same
+//! [`crate::dispatch::Dataset`] → [`crate::dispatch::SvmDispatcher`]
+//! pipeline, so "train on your own measurements" is a first-class flow.
+
+use std::time::Instant;
+
+use crate::backends::{
+    all_gather, all_reduce, reduce_scatter, Backend, CollKind, CollectiveOptions,
+};
+use crate::comm::{Communicator, TransportHub};
+use crate::dispatch::{Dataset, SvmDispatcher};
+use crate::error::{Error, Result};
+use crate::metrics::Stats;
+use crate::topology::{Machine, Topology};
+
+/// One measured sweep cell: trial statistics for a backend at a
+/// (collective, message size, rank count) configuration.
+#[derive(Debug, Clone)]
+pub struct MeasuredCell {
+    pub kind: CollKind,
+    pub backend: Backend,
+    /// Message bytes under the paper's §III-A convention (all-gather:
+    /// output per GPU; reduce-scatter / all-reduce: input per GPU).
+    pub msg_bytes: usize,
+    pub ranks: usize,
+    pub stats: Stats,
+}
+
+/// Sweep configuration for the launcher.
+#[derive(Debug, Clone)]
+pub struct LauncherConfig {
+    /// Topologies to measure (world size and hierarchy come from each).
+    pub topologies: Vec<Topology>,
+    /// Message element counts (f32) per configuration, §III-A convention.
+    pub elem_counts: Vec<usize>,
+    /// Timed repetitions (world launches) per cell.
+    pub trials: usize,
+    /// Back-to-back collectives inside one timed launch — amortizes thread
+    /// spawn/join so the sample reflects the per-collective hot path.
+    pub inner_iters: usize,
+}
+
+impl Default for LauncherConfig {
+    fn default() -> Self {
+        Self {
+            topologies: vec![Topology::flat(4), Topology::new(2, 4, 2).expect("static shape")],
+            elem_counts: vec![1 << 10, 1 << 14, 1 << 17],
+            trials: 3,
+            inner_iters: 8,
+        }
+    }
+}
+
+impl LauncherConfig {
+    /// CI-sized preset: few sizes, few reps — finishes in seconds.
+    pub fn smoke() -> Self {
+        Self {
+            topologies: vec![Topology::flat(2), Topology::new(2, 2, 1).expect("static shape")],
+            elem_counts: vec![1 << 10, 1 << 14],
+            trials: 2,
+            inner_iters: 4,
+        }
+    }
+}
+
+/// A completed measurement sweep over the real data plane.
+#[derive(Debug, Clone, Default)]
+pub struct MeasuredSweep {
+    pub cells: Vec<MeasuredCell>,
+}
+
+impl MeasuredSweep {
+    /// Labeled dataset for one collective: each (size, ranks) configuration
+    /// is labeled with its measured-fastest backend.
+    pub fn dataset(&self, kind: CollKind) -> Result<Dataset> {
+        let mut data = Dataset::default();
+        // Group cells by configuration, preserving sweep order.
+        let mut configs: Vec<(usize, usize)> = Vec::new();
+        for c in self.cells.iter().filter(|c| c.kind == kind) {
+            if !configs.contains(&(c.msg_bytes, c.ranks)) {
+                configs.push((c.msg_bytes, c.ranks));
+            }
+        }
+        for (msg, ranks) in configs {
+            let times: Vec<(Backend, f64)> = self
+                .cells
+                .iter()
+                .filter(|c| c.kind == kind && c.msg_bytes == msg && c.ranks == ranks)
+                .map(|c| (c.backend, c.stats.mean()))
+                .collect();
+            data.push_measured(msg, ranks, &times)?;
+        }
+        Ok(data)
+    }
+
+    /// One labeled dataset per collective.
+    pub fn datasets(&self) -> Result<Vec<(CollKind, Dataset)>> {
+        CollKind::ALL
+            .iter()
+            .map(|&kind| Ok((kind, self.dataset(kind)?)))
+            .collect()
+    }
+
+    /// Train the adaptive dispatcher on the measured timings — the
+    /// measurement-to-selection loop closed end to end.
+    pub fn train_dispatcher(&self, machine: Machine, seed: u64) -> Result<SvmDispatcher> {
+        SvmDispatcher::from_datasets(machine, self.datasets()?, seed)
+    }
+}
+
+/// Spawns rank threads over the in-memory transport and times collectives.
+#[derive(Debug, Clone, Default)]
+pub struct Launcher {
+    cfg: LauncherConfig,
+}
+
+/// Realized buffer shape for one cell: (input elements per rank, message
+/// bytes under the §III-A convention).
+fn cell_shape(kind: CollKind, elems: usize, p: usize) -> (usize, usize) {
+    match kind {
+        // msg = output bytes per GPU → input block is msg / p.
+        CollKind::AllGather => {
+            let block = (elems / p).max(1);
+            (block, block * p * 4)
+        }
+        // msg = input bytes per GPU, which must divide by p.
+        CollKind::ReduceScatter => {
+            let n = elems.div_ceil(p) * p;
+            (n, n * 4)
+        }
+        CollKind::AllReduce => {
+            let n = elems.max(1);
+            (n, n * 4)
+        }
+    }
+}
+
+impl Launcher {
+    pub fn new(cfg: LauncherConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> &LauncherConfig {
+        &self.cfg
+    }
+
+    /// Run one SPMD closure over `topo`: builds a fresh transport, spawns
+    /// one named thread per rank holding its [`crate::comm::Endpoint`], and
+    /// joins per-rank results in rank order. Unlike
+    /// [`crate::comm::CommWorld::run`], errors (including rank panics) are
+    /// returned, not propagated as panics — the sweep must survive a bad
+    /// configuration.
+    pub fn launch<T, R, F>(&self, topo: Topology, f: F) -> Result<Vec<R>>
+    where
+        T: Send + 'static,
+        R: Send,
+        F: Fn(&mut Communicator<T>) -> Result<R> + Sync,
+    {
+        let (_hub, eps) = TransportHub::<T>::new(topo.world_size());
+        let results: Vec<Result<R>> = std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|ep| {
+                    std::thread::Builder::new()
+                        .name(format!("pccl-launch-{}", ep.rank()))
+                        .spawn_scoped(s, move || -> Result<R> {
+                            let mut comm = Communicator::new(ep, topo)?;
+                            f(&mut comm)
+                        })
+                        .expect("spawn rank thread")
+                })
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(rank, h)| {
+                    // A panicked rank is a dead data-plane endpoint, not a
+                    // dispatcher problem — surface it as the transport
+                    // failure its peers would observe.
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::TransportClosed { rank }))
+                })
+                .collect()
+        });
+        results.into_iter().collect()
+    }
+
+    /// Time one (topology, collective, backend, size) cell: rank 0's wall
+    /// time over `inner_iters` back-to-back collectives per trial (the
+    /// collectives are globally synchronizing, so every rank finishes
+    /// together).
+    pub fn time_cell(
+        &self,
+        topo: Topology,
+        kind: CollKind,
+        backend: Backend,
+        elems: usize,
+    ) -> Result<MeasuredCell> {
+        let p = topo.world_size();
+        let (input_len, msg_bytes) = cell_shape(kind, elems, p);
+        let inner = self.cfg.inner_iters.max(1);
+        let mut stats = Stats::new();
+        for _ in 0..self.cfg.trials.max(1) {
+            let secs = self.launch::<f32, _, _>(topo, move |comm| {
+                let opts = CollectiveOptions::<f32>::default().backend(backend);
+                let input = vec![comm.rank() as f32; input_len];
+                let start = Instant::now();
+                for _ in 0..inner {
+                    match kind {
+                        CollKind::AllGather => {
+                            all_gather(comm, &input, &opts)?;
+                        }
+                        CollKind::ReduceScatter => {
+                            reduce_scatter(comm, &input, &opts)?;
+                        }
+                        CollKind::AllReduce => {
+                            all_reduce(comm, &input, &opts)?;
+                        }
+                    }
+                }
+                Ok(start.elapsed().as_secs_f64() / inner as f64)
+            })?;
+            stats.push(secs[0]);
+        }
+        Ok(MeasuredCell { kind, backend, msg_bytes, ranks: p, stats })
+    }
+
+    /// The full sweep: every registered backend × every collective × every
+    /// (size, topology) cell of the configuration.
+    pub fn sweep(&self) -> Result<MeasuredSweep> {
+        let mut cells = Vec::new();
+        for &topo in &self.cfg.topologies {
+            for &elems in &self.cfg.elem_counts {
+                for kind in CollKind::ALL {
+                    for backend in Backend::CONCRETE {
+                        cells.push(self.time_cell(topo, kind, backend, elems)?);
+                    }
+                }
+            }
+        }
+        Ok(MeasuredSweep { cells })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_runs_spmd_and_orders_results() {
+        let launcher = Launcher::default();
+        let outs = launcher
+            .launch::<f32, _, _>(Topology::flat(5), |c| {
+                use crate::comm::Comm;
+                c.begin_op();
+                let p = c.size();
+                let r = c.rank();
+                c.send((r + 1) % p, 0, vec![r as f32])?;
+                Ok(c.recv((r + p - 1) % p, 0)?[0])
+            })
+            .unwrap();
+        assert_eq!(outs, vec![4.0, 0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn launch_surfaces_rank_errors_instead_of_panicking() {
+        let launcher = Launcher::default();
+        let err = launcher
+            .launch::<f32, _, _>(Topology::flat(2), |c| {
+                if c.rank() == 0 {
+                    Err(Error::Dispatch("boom".into()))
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn cell_shapes_follow_paper_convention() {
+        // All-gather: elems is the output size; input block = elems / p.
+        assert_eq!(cell_shape(CollKind::AllGather, 64, 4), (16, 256));
+        // Reduce-scatter: input rounded up to a multiple of p.
+        assert_eq!(cell_shape(CollKind::ReduceScatter, 10, 4), (12, 48));
+        assert_eq!(cell_shape(CollKind::AllReduce, 10, 4), (10, 40));
+    }
+
+    #[test]
+    fn sweep_covers_every_backend_and_trains_a_dispatcher() {
+        let launcher = Launcher::new(LauncherConfig {
+            topologies: vec![Topology::flat(2), Topology::new(2, 2, 1).unwrap()],
+            elem_counts: vec![256, 4096],
+            trials: 2,
+            inner_iters: 2,
+        });
+        let sweep = launcher.sweep().unwrap();
+        // 2 topologies × 2 sizes × 3 collectives × 4 backends.
+        assert_eq!(sweep.cells.len(), 2 * 2 * 3 * 4);
+        assert!(sweep.cells.iter().all(|c| c.stats.count() == 2));
+        assert!(sweep.cells.iter().all(|c| c.stats.mean() > 0.0));
+        for kind in CollKind::ALL {
+            let d = sweep.dataset(kind).unwrap();
+            assert_eq!(d.len(), 4, "one labeled sample per configuration");
+        }
+        // The measurement-to-selection loop closes: a dispatcher trains on
+        // the measured data and yields a dispatchable backend everywhere.
+        let dispatcher = sweep.train_dispatcher(Machine::Generic, 11).unwrap();
+        for kind in CollKind::ALL {
+            let b = dispatcher.choose(kind, 4096 * 4, 4);
+            assert!(Backend::CONCRETE.contains(&b));
+        }
+    }
+}

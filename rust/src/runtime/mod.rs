@@ -1,22 +1,31 @@
-//! PJRT runtime — loads the HLO-text artifacts produced by
-//! `python/compile/aot.py` (`make artifacts`) and executes them on the CPU
-//! PJRT client. This is the only place the crate touches XLA; Python is
-//! never on the request path.
+//! Runtime layer: AOT artifact registry, PJRT execution plumbing, and the
+//! multi-rank launcher that measures the data plane.
+//!
+//! * [`Artifacts`] — loads the HLO-text artifacts produced by
+//!   `python/compile/aot.py` (`make artifacts`) and persists trained
+//!   dispatcher models next to them.
+//! * [`Runtime`] / [`DeviceService`] — execute compiled computations. The
+//!   `xla` crate's client is `Rc`-based (not `Send`), so multi-rank
+//!   execution goes through a dedicated device-service thread that
+//!   serializes submissions like a GPU stream. In this offline build the
+//!   bindings are the in-tree stub ([`xla_stub`]) — the plumbing is fully
+//!   functional and tested, while HLO *compilation* reports a typed error
+//!   until the real bindings are linked (one import swap).
+//! * [`Launcher`] — spawns rank threads over the in-memory transport and
+//!   times every backend across a message-size × rank-count sweep; the
+//!   timings feed the adaptive dispatcher's training pipeline.
 //!
 //! Interchange format is HLO **text**, not serialized `HloModuleProto`:
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
-//! 0.5.1 rejects; the text parser reassigns ids (see
-//! `/opt/xla-example/README.md`).
-//!
-//! Because the `xla` crate's client is `Rc`-based (not `Send`), multi-rank
-//! execution goes through a dedicated device-service thread
-//! ([`DeviceService`]) that serializes submissions like a GPU stream;
-//! single-thread callers can use [`Runtime`] directly.
+//! 0.5.1 rejects; the text parser reassigns ids.
 
 mod artifacts;
 mod executable;
+mod launcher;
 mod service;
+pub(crate) mod xla_stub;
 
 pub use artifacts::{ArtifactEntry, Artifacts, Manifest, ModelMeta, TensorSpecJson};
 pub use executable::{Executable, HostTensor, Runtime, TensorSpec};
+pub use launcher::{Launcher, LauncherConfig, MeasuredCell, MeasuredSweep};
 pub use service::{DeviceHandle, DeviceService};

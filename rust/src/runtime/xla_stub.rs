@@ -1,0 +1,205 @@
+//! Offline stand-in for the `xla` (PJRT) bindings.
+//!
+//! The runtime layer was written against the xla-rs PJRT API, but that
+//! crate (and its native XLA toolchain) cannot be vendored into this
+//! offline, dependency-free build. This module provides the same type
+//! surface so the whole crate compiles and the artifact-registry /
+//! device-service plumbing stays fully testable; the one operation a stub
+//! cannot honestly perform — compiling an HLO module to executable code —
+//! returns a typed [`Error::Xla`] instead. Tests and examples that need
+//! compiled artifacts already skip when `make artifacts` has not produced
+//! them, so a fresh checkout builds and tests green.
+//!
+//! Re-enabling real PJRT execution is a one-line import swap in
+//! `runtime/executable.rs` (`use super::xla_stub as xla;` → `use xla;`)
+//! plus the upstream dependency.
+
+use crate::error::{Error, Result};
+
+fn unavailable(what: &str) -> Error {
+    Error::Xla(format!(
+        "{what}: PJRT backend not available in this build (offline stub); \
+         the data plane, netsim, and dispatcher paths are unaffected"
+    ))
+}
+
+/// Payload of a host literal (the two dtypes crossing the AOT boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(data: &[Self]) -> Payload;
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Payload {
+        Payload::F32(data.to_vec())
+    }
+
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.payload {
+            Payload::F32(v) => Ok(v.clone()),
+            Payload::I32(_) => Err(Error::Xla("literal is i32, expected f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Payload {
+        Payload::I32(data.to_vec())
+    }
+
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.payload {
+            Payload::I32(v) => Ok(v.clone()),
+            Payload::F32(_) => Err(Error::Xla("literal is f32, expected i32".into())),
+        }
+    }
+}
+
+/// Host-side literal: rank-1 storage plus logical dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let n = data.len() as i64;
+        Literal { payload: T::wrap(data), dims: vec![n] }
+    }
+
+    /// Reinterpret the element buffer under new dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match &self.payload {
+            Payload::F32(v) => v.len() as i64,
+            Payload::I32(v) => v.len() as i64,
+        };
+        if want != have {
+            return Err(Error::Xla(format!("cannot reshape {have} elements to {dims:?}")));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    /// Decompose a tuple literal — the stub never produces tuples, so this
+    /// only exists for type compatibility with the execution path.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("decompose tuple literal"))
+    }
+}
+
+/// Device buffer handed back by an execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("transfer device buffer to host"))
+    }
+}
+
+/// Parsed (held, in the stub) HLO text module.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact. I/O errors surface as [`Error::Io`];
+    /// compilation is where the stub declines.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation wrapper around a module proto.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _text_len: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text_len: proto.text.len() }
+    }
+}
+
+/// Compiled executable. Never constructed by the stub (compilation always
+/// fails), so its methods are unreachable but type-complete.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute computation"))
+    }
+}
+
+/// PJRT client. Construction succeeds (the registry and device-service
+/// plumbing must work without artifacts); compilation reports the stub.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile HLO module"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap().len(), 4);
+        assert!(lit.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_constructs_compile_declines() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        match client.compile(&comp) {
+            Err(Error::Xla(msg)) => assert!(msg.contains("stub"), "{msg}"),
+            other => panic!("expected stub Xla error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_hlo_file_is_io_error() {
+        match HloModuleProto::from_text_file("/no/such/file.hlo.txt") {
+            Err(Error::Io(_)) => {}
+            other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+}

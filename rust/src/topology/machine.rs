@@ -8,7 +8,6 @@
 //! reproduced figures are insensitive to ±2× changes in these values; the
 //! netsim property tests pin the invariants that matter.
 
-
 /// Supported machine models.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Machine {

@@ -5,8 +5,8 @@
 
 use std::sync::{Arc, Mutex};
 
-
-use crate::backends::{all_reduce, Backend, CollectiveOptions};
+use crate::backends::Backend;
+use crate::collectives::Pccl;
 use crate::comm::CommWorld;
 use crate::error::{Error, Result};
 use crate::metrics::Timer;
@@ -97,6 +97,9 @@ pub fn run_ddp(cfg: &DdpConfig) -> Result<DdpReport> {
         )));
     }
     let world = CommWorld::<f32>::with_topology(topo);
+    // Backend::Auto routes through the persisted dispatcher artifact when
+    // one exists (heuristic fallback otherwise); fixed backends bypass it.
+    let pccl = Pccl::<f32>::for_training(cfg.backend, cfg.artifacts.as_deref());
     let cfg = cfg.clone();
     let meta = Arc::new(meta);
     let loss_acc: Arc<Mutex<Vec<Vec<f32>>>> =
@@ -111,7 +114,6 @@ pub fn run_ddp(cfg: &DdpConfig) -> Result<DdpReport> {
         let p = comm.size() as f32;
         let mut params = ParamSet::init(&handle, &meta_c, cfg.seed as i32)?;
         let mut opt = Sgd::new(cfg.lr, cfg.momentum);
-        let opts = CollectiveOptions::<f32>::default().backend(cfg.backend);
         for step in 0..cfg.steps {
             let timer = Timer::start();
             let tokens = batch_tokens(
@@ -136,9 +138,14 @@ pub fn run_ddp(cfg: &DdpConfig) -> Result<DdpReport> {
             match cfg.bucket_kb {
                 Some(kb) => {
                     let bucket_elems = (kb * 1024 / 4).max(1);
-                    super::bucket::bucketed_all_reduce(comm, &mut summed, bucket_elems, &opts)?;
+                    super::bucket::bucketed_all_reduce(
+                        comm,
+                        &mut summed,
+                        bucket_elems,
+                        pccl.options(),
+                    )?;
                 }
-                None => summed = all_reduce(comm, &summed, &opts)?,
+                None => summed = pccl.all_reduce(comm, &summed)?,
             }
             for g in &mut summed {
                 *g /= p;

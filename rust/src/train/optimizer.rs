@@ -5,7 +5,6 @@
 //! operate on the *flat* parameter vector — the same layout the ZeRO-3
 //! driver shards.
 
-
 /// Plain SGD with optional momentum.
 #[derive(Debug, Clone)]
 pub struct Sgd {

@@ -7,8 +7,8 @@
 
 use std::sync::{Arc, Mutex};
 
-
-use crate::backends::{all_gather, reduce_scatter, Backend, CollectiveOptions};
+use crate::backends::Backend;
+use crate::collectives::Pccl;
 use crate::comm::CommWorld;
 use crate::error::{Error, Result};
 use crate::metrics::Timer;
@@ -83,6 +83,9 @@ pub fn run_zero3(cfg: &Zero3Config) -> Result<Zero3Report> {
         )));
     }
     let world = CommWorld::<f32>::with_topology(topo);
+    // Backend::Auto routes through the persisted dispatcher artifact when
+    // one exists (heuristic fallback otherwise); fixed backends bypass it.
+    let pccl = Pccl::<f32>::for_training(cfg.backend, cfg.artifacts.as_deref());
     let cfg = cfg.clone();
     let meta = Arc::new(meta);
     let loss_acc: Arc<Mutex<Vec<Vec<f32>>>> =
@@ -112,11 +115,10 @@ pub fn run_zero3(cfg: &Zero3Config) -> Result<Zero3Report> {
             *shard_c.lock().unwrap() = shard_len;
         }
         let mut opt = Sgd::new(cfg.lr, cfg.momentum);
-        let opts = CollectiveOptions::<f32>::default().backend(cfg.backend);
         for step in 0..cfg.steps {
             let timer = Timer::start();
             // 1. All-gather the full parameter vector from shards.
-            let mut full = all_gather(comm, &shard, &opts)?;
+            let mut full = pccl.all_gather(comm, &shard)?;
             full.truncate(n);
             params.load_flat(&full)?;
             // 2. Local forward/backward via the AOT step.
@@ -139,7 +141,7 @@ pub fn run_zero3(cfg: &Zero3Config) -> Result<Zero3Report> {
             //    for its own shard.
             let mut grad_flat = params.flatten_grads(&out)?;
             grad_flat.resize(padded, 0.0);
-            let mut grad_shard = reduce_scatter(comm, &grad_flat, &opts)?;
+            let mut grad_shard = pccl.reduce_scatter(comm, &grad_flat)?;
             for g in &mut grad_shard {
                 *g /= p as f32;
             }

@@ -121,13 +121,6 @@ impl Value {
 
     // --- writer ----------------------------------------------------------
 
-    /// Compact serialization.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Value::Null => out.push_str("null"),
@@ -163,6 +156,15 @@ impl Value {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (so `value.to_string()` is the wire format).
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -422,7 +424,11 @@ mod prop_tests {
                         .collect(),
                 )
             }
-            4 => Value::Arr((0..rng.range_usize(0, 4)).map(|_| random_value(rng, depth - 1)).collect()),
+            4 => Value::Arr(
+                (0..rng.range_usize(0, 4))
+                    .map(|_| random_value(rng, depth - 1))
+                    .collect(),
+            ),
             _ => Value::Obj(
                 (0..rng.range_usize(0, 4))
                     .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))

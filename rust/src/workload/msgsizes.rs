@@ -2,7 +2,6 @@
 //! (Fig. 2): what sizes do FSDP, DeepSpeed ZeRO-3, AxoNN, and PyTorch DDP
 //! actually put on the wire for a given model?
 
-
 use super::transformer::TransformerConfig;
 
 /// Framework whose communication pattern is modeled.

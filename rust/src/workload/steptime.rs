@@ -2,7 +2,6 @@
 //! compute time from the 6·P flop estimate, communication time from the
 //! netsim library models, partial overlap between the two.
 
-
 use crate::backends::CollKind;
 use crate::error::Result;
 use crate::netsim::libmodel::{simulate, LibModel};

@@ -1,7 +1,6 @@
 //! GPT-style transformer configurations (Table II) and parameter
 //! accounting used by the message-size and step-time models.
 
-
 /// Architecture hyperparameters of a GPT-style decoder (Table II; the
 /// hyperparameters come from Zhang et al. / OPT).
 #[derive(Debug, Clone, PartialEq, Eq)]
