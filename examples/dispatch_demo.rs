@@ -69,10 +69,11 @@ fn main() -> pccl::Result<()> {
     assert_eq!(reloaded.choose(CollKind::AllGather, 16 << 20, 2048), lat);
     println!("\npersisted dispatcher artifact → {}", path.display());
 
-    // 3. Measured sweep of the real data plane: the multi-rank launcher
-    //    spawns rank threads over the in-memory transport and times every
-    //    backend, and a second dispatcher trains on those measurements.
-    println!("\nmeasuring the real data plane (in-process rank threads)...");
+    // 3. Measured sweep of the real data plane in persistent-world mode:
+    //    pinned rank threads serve every trial from a work queue (world
+    //    setup amortized, warmup before each timed section), and a second
+    //    dispatcher trains on those measurements.
+    println!("\nmeasuring the real data plane (persistent world, pinned rank threads)...");
     let launcher = Launcher::new(LauncherConfig {
         topologies: vec![
             Topology::flat(2),
@@ -82,9 +83,15 @@ fn main() -> pccl::Result<()> {
         elem_counts: vec![1 << 10, 1 << 14, 1 << 17],
         trials: 3,
         inner_iters: 4,
+        warmup_iters: 1,
+        persistent: true,
     });
     let sweep = launcher.sweep()?;
-    println!("  {} measured cells", sweep.cells.len());
+    println!(
+        "  {} measured cells, {} moved per sweep pass",
+        sweep.cells.len(),
+        pccl::metrics::fmt_bytes(sweep.total_bytes_per_op())
+    );
     let measured = sweep.train_dispatcher(Machine::Generic, 7)?;
     println!("  measured-data dispatcher accuracy:");
     for (coll, size, correct, acc) in measured.table1() {

@@ -15,10 +15,10 @@
 use std::sync::Arc;
 
 use crate::collectives::{
-    hier_all_gather, hier_all_reduce, hier_reduce_scatter, ring_all_gather, ring_all_reduce,
-    ring_reduce_scatter, tree_all_reduce, InterAlgo,
+    hier_all_gather, hier_all_gather_chunks, hier_all_reduce, hier_reduce_scatter, ring_all_gather,
+    ring_all_gather_chunks, ring_all_reduce, ring_reduce_scatter, tree_all_reduce, InterAlgo,
 };
-use crate::comm::Communicator;
+use crate::comm::{Chunk, Communicator};
 use crate::error::Result;
 use crate::reduction::offload::{native_combine, CombineFn};
 use crate::reduction::{reduce_into_op, Elem, ReduceOp};
@@ -187,6 +187,22 @@ pub fn all_gather<T: Elem>(
         Backend::Vendor | Backend::CrayMpich => ring_all_gather(c, input),
         Backend::PcclRing => hier_all_gather(c, input, InterAlgo::Ring),
         Backend::PcclRec | Backend::Auto => hier_all_gather(c, input, InterAlgo::Rec),
+    }
+}
+
+/// All-gather through the selected backend, returning the per-rank blocks
+/// as zero-copy chunk views (the allocation-free hot path; see the
+/// ownership model in [`crate::collectives`]).
+pub fn all_gather_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    opts: &CollectiveOptions<T>,
+) -> Result<Vec<Chunk<T>>> {
+    let bytes = input.len() * std::mem::size_of::<T>() * c.size(); // output buffer size
+    match opts.resolve(CollKind::AllGather, bytes, c.size()) {
+        Backend::Vendor | Backend::CrayMpich => ring_all_gather_chunks(c, input),
+        Backend::PcclRing => hier_all_gather_chunks(c, input, InterAlgo::Ring),
+        Backend::PcclRec | Backend::Auto => hier_all_gather_chunks(c, input, InterAlgo::Rec),
     }
 }
 

@@ -28,7 +28,10 @@ fn sim_cell(
     ranks: usize,
 ) -> Result<()> {
     let out = simulate(machine, lib, kind, msg, ranks, TRIALS, SEED)?;
-    table.push(lib.label(machine), msg, ranks, out.stats);
+    // Record the modeled per-node NIC write volume next to the timing so
+    // the CSV artifacts carry bytes moved per collective.
+    let moved = out.counters.posted_bytes();
+    table.push_with_bytes(lib.label(machine), msg, ranks, out.stats, moved);
     Ok(())
 }
 
@@ -105,7 +108,8 @@ pub fn fig6() -> Result<Table> {
     for &mb in &[1usize, 4, 16, 64, 256, 1024] {
         for &p in &[8usize, 32, 128, 512, 2048] {
             let rs = CollKind::ReduceScatter;
-            let ring = simulate(Machine::Frontier, LibModel::PcclRing, rs, mb * MB, p, TRIALS, SEED)?;
+            let ring =
+                simulate(Machine::Frontier, LibModel::PcclRing, rs, mb * MB, p, TRIALS, SEED)?;
             let rec = simulate(Machine::Frontier, LibModel::PcclRec, rs, mb * MB, p, TRIALS, SEED)?;
             // Encode the speedup as "mean" of a one-sample stat.
             t.push(

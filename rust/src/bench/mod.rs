@@ -20,6 +20,9 @@ pub struct Cell {
     pub ranks: usize,
     /// Trial statistics (seconds).
     pub stats: Stats,
+    /// Bytes actually moved per op (NIC/transport counters), when known —
+    /// the BENCH artifacts record traffic volume next to the timings.
+    pub moved_bytes: Option<f64>,
 }
 
 /// A complete table keyed by (series, bytes, ranks).
@@ -43,6 +46,25 @@ impl Table {
             bytes,
             ranks,
             stats,
+            moved_bytes: None,
+        });
+    }
+
+    /// Push a cell that also records the bytes moved per op.
+    pub fn push_with_bytes(
+        &mut self,
+        series: impl Into<String>,
+        bytes: usize,
+        ranks: usize,
+        stats: Stats,
+        moved_bytes: f64,
+    ) {
+        self.cells.push(Cell {
+            series: series.into(),
+            bytes,
+            ranks,
+            stats,
+            moved_bytes: Some(moved_bytes),
         });
     }
 
@@ -75,37 +97,36 @@ impl Table {
         out
     }
 
-    /// Write CSV: `series,bytes,ranks,mean_s,stddev_s,min_s,max_s`.
+    /// Write CSV: `series,bytes,ranks,mean_s,stddev_s,min_s,max_s,moved_bytes`
+    /// (`moved_bytes` empty when the cell carries no traffic counters).
     pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "series,bytes,ranks,mean_s,stddev_s,min_s,max_s")?;
+        writeln!(f, "series,bytes,ranks,mean_s,stddev_s,min_s,max_s,moved_bytes")?;
         for c in &self.cells {
+            let moved = c
+                .moved_bytes
+                .map(|b| format!("{b:.0}"))
+                .unwrap_or_default();
             writeln!(
                 f,
-                "{},{},{},{:.9},{:.9},{:.9},{:.9}",
+                "{},{},{},{:.9},{:.9},{:.9},{:.9},{}",
                 c.series,
                 c.bytes,
                 c.ranks,
                 c.stats.mean(),
                 c.stats.stddev(),
                 c.stats.min(),
-                c.stats.max()
+                c.stats.max(),
+                moved
             )?;
         }
         Ok(())
     }
 }
 
-/// Human-readable byte size (powers of two, like the paper's MB axes).
+/// Human-readable byte size (delegates to [`crate::metrics::fmt_bytes`]).
 pub fn fmt_bytes(b: usize) -> String {
-    const MB: usize = 1024 * 1024;
-    if b >= MB && b % MB == 0 {
-        format!("{} MB", b / MB)
-    } else if b >= 1024 && b % 1024 == 0 {
-        format!("{} KB", b / 1024)
-    } else {
-        format!("{b} B")
-    }
+    crate::metrics::fmt_bytes(b as u64)
 }
 
 #[cfg(test)]
@@ -116,7 +137,7 @@ mod tests {
     fn table_roundtrip() {
         let mut t = Table::new("fig-x");
         t.push("rccl", 64 << 20, 128, Stats::from_iter([1.0, 2.0]));
-        t.push("pccl", 64 << 20, 128, Stats::from_iter([0.5]));
+        t.push_with_bytes("pccl", 64 << 20, 128, Stats::from_iter([0.5]), 4096.0);
         assert_eq!(t.mean("rccl", 64 << 20, 128), Some(1.5));
         let r = t.render();
         assert!(r.contains("64 MB"));
@@ -126,6 +147,8 @@ mod tests {
         let text = std::fs::read_to_string(p).unwrap();
         assert!(text.lines().count() == 3);
         assert!(text.contains("rccl,67108864,128"));
+        assert!(text.contains("moved_bytes"));
+        assert!(text.lines().nth(2).unwrap().ends_with(",4096"));
     }
 
     #[test]

@@ -12,14 +12,21 @@
 //! recursive doubling/halving (`PCCL_rec`) backend; recursive requires a
 //! power-of-two node count and otherwise falls back to ring (logged by the
 //! caller via [`InterAlgo::effective`]).
+//!
+//! Over the chunked plane the all-gather is copy-free end to end: the
+//! inter phase yields one chunk per node, the intra ring forwards those
+//! *views* (`n` messages per step, zero bytes moved), and the unshuffle is
+//! a pointer permutation of the output list — each block reaches every
+//! rank still backed by its origin rank's input storage. The seed path
+//! re-materialized `p·m` elements at this layer.
 
-use crate::comm::{Comm, Communicator};
+use crate::comm::{Chunk, Comm, Communicator};
 use crate::error::Result;
 use crate::reduction::offload::CombineFn;
 use crate::reduction::Elem;
 
-use super::recursive::{rec_all_gather, rec_reduce_scatter};
-use super::ring::{ring_all_gather, ring_reduce_scatter};
+use super::recursive::{rec_all_gather_chunks, rec_reduce_scatter};
+use super::ring::{ring_all_gather_chunks, ring_reduce_scatter};
 use super::{check_all_gather, check_reduce_scatter};
 
 /// Inter-node algorithm choice for the hierarchical collectives.
@@ -41,16 +48,16 @@ impl InterAlgo {
     }
 }
 
-fn inter_all_gather<T: Elem>(
+fn inter_all_gather_chunks<T: Elem>(
     c: &mut Communicator<T>,
-    input: &[T],
+    input: Chunk<T>,
     algo: InterAlgo,
-) -> Result<Vec<T>> {
+) -> Result<Vec<Chunk<T>>> {
     let n = c.topology().nodes();
     let mut inter = c.inter_node()?;
     match algo.effective(n) {
-        InterAlgo::Ring => ring_all_gather(&mut inter, input),
-        InterAlgo::Rec => rec_all_gather(&mut inter, input),
+        InterAlgo::Ring => ring_all_gather_chunks(&mut inter, input),
+        InterAlgo::Rec => rec_all_gather_chunks(&mut inter, input),
     }
 }
 
@@ -68,61 +75,80 @@ fn inter_reduce_scatter<T: Elem>(
     }
 }
 
-/// Two-level all-gather. Falls back to the flat algorithm when the
-/// topology has a single node (or single GPU per node).
+/// Two-level all-gather over chunks: returns the `p` per-rank blocks in
+/// global rank order, each a zero-copy view of the origin rank's input
+/// storage. Falls back to the flat algorithm when the topology has a
+/// single node (or single GPU per node).
 ///
-/// Hot-path note (§Perf): Step 2 and Step 3 are fused — the intra-node
-/// ring places each received inter-node buffer directly at its final
-/// (node, local) offsets, eliminating the `p·m` staging buffer and the
-/// full-output transpose copy. (The standalone transpose remains available
-/// as [`super::unshuffle`] / the L1 kernel for implementations that cannot
-/// fuse.)
+/// Hot-path note (§Perf): the intra phase forwards the inter-phase chunk
+/// *list* (`n` messages per ring step instead of one concatenated buffer)
+/// and the Step-3 unshuffle degenerates to placing views at their final
+/// `(node, local)` positions — no staging buffer, no transpose copy, no
+/// per-hop materialization.
+pub fn hier_all_gather_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    inter: InterAlgo,
+) -> Result<Vec<Chunk<T>>> {
+    check_all_gather(input.as_slice())?;
+    let topo = c.topology();
+    if !topo.supports_hierarchical() {
+        // Degenerate hierarchy: one level is the whole world.
+        return match inter.effective(c.size()) {
+            InterAlgo::Ring => ring_all_gather_chunks(c, input),
+            InterAlgo::Rec => rec_all_gather_chunks(c, input),
+        };
+    }
+    let n = topo.nodes();
+    let m_local = topo.gpus_per_node();
+    let p = n * m_local;
+    // Step 1: concurrent inter-node all-gathers (one per local id). Chunk
+    // `node` holds the input of global rank (node·M + our local id).
+    let node_chunks = inter_all_gather_chunks(c, input, inter)?;
+    debug_assert_eq!(node_chunks.len(), n);
+    // Steps 2+3 fused: the intra-node ring forwards the chunk views; each
+    // arrival is placed straight at its final (node, local) slot.
+    let mut out: Vec<Option<Chunk<T>>> = vec![None; p];
+    let mut intra = c.intra_node()?;
+    let l = intra.rank();
+    for (node, ch) in node_chunks.iter().enumerate() {
+        out[node * m_local + l] = Some(ch.clone());
+    }
+    if m_local > 1 {
+        intra.begin_op();
+        let right = (l + 1) % m_local;
+        let left = (l + m_local - 1) % m_local;
+        let mut current = node_chunks;
+        for s in 0..m_local - 1 {
+            let recv_l = super::schedule::ring::ag_recv_block(l, m_local, s);
+            for (j, ch) in current.iter().enumerate() {
+                intra.send_slice(right, (s * n + j) as u32, ch.clone())?;
+            }
+            let mut got = Vec::with_capacity(n);
+            for j in 0..n {
+                got.push(intra.recv_chunk(left, (s * n + j) as u32)?);
+            }
+            for (j, ch) in got.iter().enumerate() {
+                out[j * m_local + recv_l] = Some(ch.clone());
+            }
+            current = got;
+        }
+    }
+    Ok(out
+        .into_iter()
+        .map(|b| b.expect("hierarchical schedule covers every rank"))
+        .collect())
+}
+
+/// Two-level all-gather, slice API: wraps the input once and materializes
+/// the contiguous output once; everything in between is chunk forwarding.
 pub fn hier_all_gather<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
     inter: InterAlgo,
 ) -> Result<Vec<T>> {
-    check_all_gather(input)?;
-    let topo = c.topology();
-    if !topo.supports_hierarchical() {
-        // Degenerate hierarchy: one level is the whole world.
-        return match inter.effective(c.size()) {
-            InterAlgo::Ring => ring_all_gather(c, input),
-            InterAlgo::Rec => rec_all_gather(c, input),
-        };
-    }
-    let n = topo.nodes();
-    let m_local = topo.gpus_per_node();
-    let block = input.len();
-    // Step 1: concurrent inter-node all-gathers (one per local id).
-    let buf1 = inter_all_gather(c, input, inter)?;
-    debug_assert_eq!(buf1.len(), n * block);
-    // Steps 2+3 fused: intra-node ring all-gather with unshuffled placement.
-    let mut out = vec![T::zero(); m_local * n * block];
-    let place = |out: &mut [T], local_id: usize, data: &[T]| {
-        // data = node-ordered inter result of `local_id`; final position of
-        // its node-n block is global rank (n·M + local_id).
-        for (node, chunk) in data.chunks_exact(block).enumerate() {
-            let dst = (node * m_local + local_id) * block;
-            out[dst..dst + block].copy_from_slice(chunk);
-        }
-    };
-    let mut intra = c.intra_node()?;
-    let l = intra.rank();
-    place(&mut out, l, &buf1);
-    if m_local > 1 {
-        intra.begin_op();
-        let right = (l + 1) % m_local;
-        let left = (l + m_local - 1) % m_local;
-        let mut current = buf1;
-        for s in 0..m_local - 1 {
-            let recv_l = super::schedule::ring::ag_recv_block(l, m_local, s);
-            let got = intra.sendrecv(right, current, left, s as u32)?;
-            place(&mut out, recv_l, &got);
-            current = got;
-        }
-    }
-    Ok(out)
+    let blocks = hier_all_gather_chunks(c, Chunk::from_slice(input), inter)?;
+    Ok(Chunk::concat(&blocks))
 }
 
 /// Two-level reduce-scatter (intra first, then inter).
@@ -146,7 +172,10 @@ pub fn hier_reduce_scatter<T: Elem>(
     // Hot path (§Perf): the pre-shuffle is *virtual* — instead of
     // materializing the (local_id, node)-ordered copy of the whole input,
     // the intra-node ring gathers each segment's strided blocks on demand
-    // and combines contributions straight out of `input`.
+    // and combines contributions straight out of `input`. A reduction
+    // writes new data at every hop by definition, so (unlike all-gather)
+    // the partials themselves must be materialized — but each received
+    // partial is uniquely owned, so the in-place combine never copies.
     //
     // Segment `l` = blocks {(node, l) : node ∈ 0..N} = the data destined
     // for local id `l`'s inter-node phase.
@@ -168,17 +197,17 @@ pub fn hier_reduce_scatter<T: Elem>(
         let mut intra = c.intra_node()?;
         let l = intra.rank();
         if m_local == 1 {
-            gather_segment(0)
+            Chunk::from_vec(gather_segment(0))
         } else {
             intra.begin_op();
             let right = (l + 1) % m_local;
             let left = (l + m_local - 1) % m_local;
             use super::schedule::ring as idx;
-            let mut current = gather_segment(idx::rs_send_block(l, m_local, 0));
+            let mut current = Chunk::from_vec(gather_segment(idx::rs_send_block(l, m_local, 0)));
             for s in 0..m_local - 1 {
                 let recv_seg = idx::rs_recv_block(l, m_local, s);
-                let mut got = intra.sendrecv(right, current, left, s as u32)?;
-                add_segment(&mut got, recv_seg);
+                let mut got = intra.sendrecv_chunk(right, current, left, s as u32)?;
+                add_segment(got.make_mut(), recv_seg);
                 current = got;
             }
             current
@@ -186,7 +215,7 @@ pub fn hier_reduce_scatter<T: Elem>(
     };
     debug_assert_eq!(partial.len(), n * b);
     // Inter-node reduce-scatter over blocks of b elements.
-    let out = inter_reduce_scatter(c, &partial, combine, inter)?;
+    let out = inter_reduce_scatter(c, partial.as_slice(), combine, inter)?;
     debug_assert_eq!(out.len(), b);
     Ok(out)
 }

@@ -12,6 +12,33 @@
 //!   receives the elementwise reduction of every rank's block `r`.
 //! * `all_reduce`: input `n` → output `n`, elementwise reduction across all
 //!   ranks (implemented as reduce-scatter ∘ all-gather when `p | n`).
+//!
+//! ## Chunk ownership model (zero-copy data plane)
+//!
+//! Messages are [`crate::comm::Chunk`]s: `Arc`-backed storage plus an
+//! `(offset, len)` view, with O(1) `clone`/`slice`/`split`. The rules the
+//! algorithms follow:
+//!
+//! * **Forward, don't copy, when data passes through untouched.** Ring and
+//!   recursive all-gather re-send the received chunk; the hierarchical
+//!   all-gather forwards the inter-phase views through the intra ring and
+//!   performs its unshuffle as a pointer permutation; broadcast fans one
+//!   chunk down the whole binomial tree. The `*_chunks` entry points
+//!   ([`ring_all_gather_chunks`], [`rec_all_gather_chunks`],
+//!   [`hier_all_gather_chunks`]) expose this: every returned block is
+//!   backed by the origin rank's input storage.
+//! * **Materialize only when mutating or when the caller needs contiguous
+//!   memory.** Reductions write new data at every hop by definition —
+//!   they combine through [`crate::comm::Chunk::make_mut`], which mutates
+//!   in place when the received partial is uniquely owned (the common
+//!   case: the sender moved its reference into the transport) and
+//!   copies-on-write only when the storage is still shared (e.g. the first
+//!   combine into a view of the local input). The slice-API wrappers pay
+//!   exactly two copies: wrapping the borrowed input into a chunk, and
+//!   [`crate::comm::Chunk::concat`]-ing the final output.
+//! * **Rooted data must be owned per destination.** Scatter materializes
+//!   one block per peer (the source lives in the root's borrowed input);
+//!   gather copies received blocks into the root's contiguous output.
 
 mod hierarchical;
 pub mod oracle;
@@ -24,13 +51,15 @@ pub mod schedule;
 mod shuffle;
 mod tree;
 
-pub use hierarchical::{hier_all_gather, hier_all_reduce, hier_reduce_scatter, InterAlgo};
+pub use hierarchical::{
+    hier_all_gather, hier_all_gather_chunks, hier_all_reduce, hier_reduce_scatter, InterAlgo,
+};
 pub use pccl::Pccl;
 pub use pipelined::pipelined_hier_all_gather;
 pub use pt2pt::{broadcast, gather, reduce, scatter};
-pub use recursive::{rec_all_gather, rec_all_reduce, rec_reduce_scatter};
-pub use ring::{ring_all_gather, ring_all_reduce, ring_reduce_scatter};
-pub use shuffle::{shuffle_gather, transpose_blocks, unshuffle};
+pub use recursive::{rec_all_gather, rec_all_gather_chunks, rec_all_reduce, rec_reduce_scatter};
+pub use ring::{ring_all_gather, ring_all_gather_chunks, ring_all_reduce, ring_reduce_scatter};
+pub use shuffle::{shuffle_gather, transpose_blocks, transpose_chunk_blocks, unshuffle};
 pub use tree::tree_all_reduce;
 
 use crate::error::{Error, Result};

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use crate::backends::{self, Backend, CollKind, CollectiveOptions};
-use crate::comm::Communicator;
+use crate::comm::{Chunk, Communicator};
 use crate::dispatch::SvmDispatcher;
 use crate::error::Result;
 use crate::reduction::Elem;
@@ -124,6 +124,16 @@ impl<T: Elem> Pccl<T> {
     /// All-gather through the routed backend.
     pub fn all_gather(&self, c: &mut Communicator<T>, input: &[T]) -> Result<Vec<T>> {
         backends::all_gather(c, input, &self.opts)
+    }
+
+    /// All-gather through the routed backend, returning zero-copy chunk
+    /// views of every rank's block (the allocation-free hot path).
+    pub fn all_gather_chunks(
+        &self,
+        c: &mut Communicator<T>,
+        input: Chunk<T>,
+    ) -> Result<Vec<Chunk<T>>> {
+        backends::all_gather_chunks(c, input, &self.opts)
     }
 
     /// Reduce-scatter through the routed backend.

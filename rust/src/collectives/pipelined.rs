@@ -9,12 +9,18 @@
 //! from separate streams. The performance model of the overlap lives in
 //! [`crate::netsim::libmodel`] (`pccl_pipelined` ablation); peak working
 //! memory also drops from `p·m` temporaries to `p·m/K`.
+//!
+//! Each pipeline stage feeds a zero-copy [`Chunk::slice`] of the input
+//! through [`hier_all_gather_chunks`], so the per-stage hierarchy forwards
+//! views the whole way; the single copy is the final placement into the
+//! caller's contiguous output (the seed path paid a second, per-stage
+//! gather copy on top of that).
 
-use crate::comm::Communicator;
+use crate::comm::{Chunk, Communicator};
 use crate::error::{Error, Result};
 use crate::reduction::Elem;
 
-use super::hierarchical::{hier_all_gather, InterAlgo};
+use super::hierarchical::{hier_all_gather, hier_all_gather_chunks, InterAlgo};
 
 /// Pipelined two-level all-gather with `chunks` pipeline stages.
 ///
@@ -39,15 +45,16 @@ pub fn pipelined_hier_all_gather<T: Elem>(
     let p = c.size();
     let m = input.len();
     let cb = m / chunks;
+    let whole = Chunk::from_slice(input);
     let mut out = vec![T::zero(); p * m];
     for k in 0..chunks {
-        let piece = &input[k * cb..(k + 1) * cb];
-        let gathered = hier_all_gather(c, piece, inter)?;
-        debug_assert_eq!(gathered.len(), p * cb);
+        let piece = whole.slice(k * cb, cb);
+        let gathered = hier_all_gather_chunks(c, piece, inter)?;
+        debug_assert_eq!(gathered.len(), p);
         // Chunk k of rank r lands at out[r·m + k·cb ..].
-        for r in 0..p {
-            out[r * m + k * cb..r * m + (k + 1) * cb]
-                .copy_from_slice(&gathered[r * cb..(r + 1) * cb]);
+        for (r, blk) in gathered.iter().enumerate() {
+            debug_assert_eq!(blk.len(), cb);
+            out[r * m + k * cb..r * m + (k + 1) * cb].copy_from_slice(blk.as_slice());
         }
     }
     Ok(out)

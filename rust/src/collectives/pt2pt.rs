@@ -5,13 +5,21 @@
 //! checkpointing gathers shards, schedulers scatter work. Broadcast and
 //! reduce use binomial trees (`O(log p)` rounds, any `p`); gather/scatter
 //! use direct point-to-point rounds rooted at `root`.
+//!
+//! Chunked-plane notes: broadcast forwards one shared chunk down the whole
+//! tree (zero-copy fan-out — the seed path cloned the buffer per child);
+//! reduce combines received chunks without materializing them; scatter
+//! materializes one block per destination (the source lives in the root's
+//! borrowed input, so each destination must own its block); gather copies
+//! received blocks into the root's contiguous output (the output
+//! materialization).
 
-use crate::comm::Comm;
+use crate::comm::{Chunk, Comm};
 use crate::error::{Error, Result};
 use crate::reduction::offload::CombineFn;
 use crate::reduction::Elem;
 
-fn check_root<T: Send + 'static, C: Comm<T>>(c: &C, root: usize) -> Result<()> {
+fn check_root<T: Send + Sync + 'static, C: Comm<T>>(c: &C, root: usize) -> Result<()> {
     if root >= c.size() {
         return Err(Error::PeerOutOfRange {
             peer: root,
@@ -33,7 +41,9 @@ fn unrel(r: usize, root: usize, p: usize) -> usize {
 }
 
 /// Binomial-tree broadcast from `root`. Non-root inputs are ignored;
-/// every rank returns the root's buffer.
+/// every rank returns the root's buffer. The buffer travels the whole
+/// tree as clones of one chunk — one materialization at the root, zero
+/// per-hop copies.
 pub fn broadcast<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Result<Vec<T>> {
     check_root(c, root)?;
     c.begin_op();
@@ -42,10 +52,10 @@ pub fn broadcast<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Re
     if p == 1 {
         return Ok(input.to_vec());
     }
-    let buf;
+    let buf: Chunk<T>;
     let mut recv_mask = p.next_power_of_two();
     if r == 0 {
-        buf = input.to_vec();
+        buf = Chunk::from_slice(input);
     } else {
         // Receive from the parent (clear the lowest set bit of r).
         let mut mask = 1usize;
@@ -54,13 +64,13 @@ pub fn broadcast<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Re
         }
         recv_mask = mask;
         let src = unrel(r & !mask, root, p);
-        buf = c.recv(src, mask.trailing_zeros())?;
+        buf = c.recv_chunk(src, mask.trailing_zeros())?;
     }
     let mut child_mask = recv_mask >> 1;
     while child_mask > 0 {
         let dst_rel = r | child_mask;
         if dst_rel != r && dst_rel < p {
-            c.send(
+            c.send_slice(
                 unrel(dst_rel, root, p),
                 child_mask.trailing_zeros(),
                 buf.clone(),
@@ -68,7 +78,7 @@ pub fn broadcast<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Re
         }
         child_mask >>= 1;
     }
-    Ok(buf)
+    Ok(buf.into_vec())
 }
 
 /// Binomial-tree reduce to `root`: root returns the elementwise combine of
@@ -94,7 +104,7 @@ pub fn reduce<T: Elem, C: Comm<T>>(
         }
         let src_rel = r | mask;
         if src_rel < p {
-            let got = c.recv(unrel(src_rel, root, p), step)?;
+            let got = c.recv_chunk(unrel(src_rel, root, p), step)?;
             if got.len() != acc.len() {
                 return Err(Error::BadBufferSize {
                     len: got.len(),
@@ -102,7 +112,7 @@ pub fn reduce<T: Elem, C: Comm<T>>(
                     why: "reduce inputs must have equal length on all ranks",
                 });
             }
-            combine(&mut acc, &got);
+            combine(&mut acc, got.as_slice());
         }
         mask <<= 1;
     }
@@ -117,7 +127,7 @@ pub fn gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Resul
     let p = c.size();
     let rank = c.rank();
     if rank != root {
-        c.send(root, 0, input.to_vec())?;
+        c.send_slice(root, 0, Chunk::from_slice(input))?;
         return Ok(Vec::new());
     }
     let m = input.len();
@@ -127,7 +137,7 @@ pub fn gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Resul
         if peer == root {
             continue;
         }
-        let got = c.recv(peer, 0)?;
+        let got = c.recv_chunk(peer, 0)?;
         if got.len() != m {
             return Err(Error::BadBufferSize {
                 len: got.len(),
@@ -135,7 +145,7 @@ pub fn gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Resul
                 why: "gather contributions must have equal length",
             });
         }
-        out[peer * m..(peer + 1) * m].copy_from_slice(&got);
+        out[peer * m..(peer + 1) * m].copy_from_slice(got.as_slice());
     }
     Ok(out)
 }
@@ -158,12 +168,14 @@ pub fn scatter<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Resu
         let b = input.len() / p;
         for peer in 0..p {
             if peer != root {
-                c.send(peer, 0, input[peer * b..(peer + 1) * b].to_vec())?;
+                // One owned block per destination: the receiver takes the
+                // storage over for free in `into_vec`.
+                c.send_slice(peer, 0, Chunk::from_slice(&input[peer * b..(peer + 1) * b]))?;
             }
         }
         Ok(input[root * b..(root + 1) * b].to_vec())
     } else {
-        c.recv(root, 0)
+        Ok(c.recv_chunk(root, 0)?.into_vec())
     }
 }
 

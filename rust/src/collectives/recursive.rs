@@ -5,8 +5,16 @@
 //! These require a power-of-two communicator. Callers (the backends and the
 //! hierarchical composition) fall back to the ring when `p` is not a power
 //! of two — the paper's target systems are all power-of-two node counts.
+//!
+//! Over the chunked plane each *block* is its own message (the step tag
+//! encodes `(step, block)`), so the doubling exchange forwards views of
+//! the blocks gathered so far instead of re-materializing a contiguous
+//! payload every step — the seed path's per-step `to_vec` staging is gone.
+//! Byte volume is unchanged; message count rises from `log2 p` to `p - 1`
+//! per rank, matching the ring (sends are non-blocking and free on this
+//! transport; a libfabric backend would post them as one iovec).
 
-use crate::comm::Comm;
+use crate::comm::{Chunk, Comm};
 use crate::error::{Error, Result};
 use crate::reduction::offload::CombineFn;
 use crate::reduction::Elem;
@@ -25,29 +33,54 @@ fn require_pow2(p: usize) -> Result<()> {
     Ok(())
 }
 
-/// Recursive-doubling all-gather: `log2 p` exchanges of doubling size.
-pub fn rec_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec<T>> {
-    check_all_gather(input)?;
+/// Recursive-doubling all-gather over chunks: `log2 p` exchanges of
+/// doubling size, every block forwarded as a zero-copy view.
+///
+/// Returns the `p` per-rank blocks in origin-rank order, each backed by
+/// the origin rank's input storage.
+pub fn rec_all_gather_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: Chunk<T>,
+) -> Result<Vec<Chunk<T>>> {
+    check_all_gather(input.as_slice())?;
     let p = c.size();
     require_pow2(p)?;
     c.begin_op();
     let r = c.rank();
-    let m = input.len();
-    let mut out = vec![T::zero(); p * m];
-    out[r * m..(r + 1) * m].copy_from_slice(input);
+    let mut blocks: Vec<Option<Chunk<T>>> = vec![None; p];
+    blocks[r] = Some(input);
     for s in 0..idx::steps(p) {
         let partner = idx::ag_partner(r, s);
         let (lo, hi) = idx::ag_owned_range(r, s);
         let (plo, phi) = idx::ag_owned_range(partner, s);
-        let payload = out[lo * m..hi * m].to_vec();
-        let got = c.sendrecv(partner, payload, partner, s as u32)?;
-        out[plo * m..phi * m].copy_from_slice(&got);
+        for i in lo..hi {
+            let ch = blocks[i].clone().expect("owned range is populated");
+            c.send_slice(partner, (s * p + i) as u32, ch)?;
+        }
+        for i in plo..phi {
+            blocks[i] = Some(c.recv_chunk(partner, (s * p + i) as u32)?);
+        }
     }
-    Ok(out)
+    Ok(blocks
+        .into_iter()
+        .map(|b| b.expect("doubling schedule covers every block"))
+        .collect())
+}
+
+/// Recursive-doubling all-gather, slice API.
+pub fn rec_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec<T>> {
+    let blocks = rec_all_gather_chunks(c, Chunk::from_slice(input))?;
+    Ok(Chunk::concat(&blocks))
 }
 
 /// Recursive-halving reduce-scatter: each step exchanges and combines half
 /// of the remaining segment.
+///
+/// The `p` blocks start as views of one shared staging buffer; the blocks
+/// we *send* go out as those views (no payload copies), and the blocks we
+/// *keep* are copied exactly once — by [`Chunk::make_mut`]'s copy-on-write
+/// at their first combine — instead of the seed path's full-input staging
+/// copy plus per-step payload copies.
 pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
@@ -61,7 +94,9 @@ pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
     if p == 1 {
         return Ok(input.to_vec());
     }
-    let mut acc = input.to_vec();
+    let all = Chunk::from_slice(input);
+    let mut blocks: Vec<Chunk<T>> = (0..p).map(|i| all.slice(i * b, b)).collect();
+    drop(all);
     // Current segment of *block indices* this rank is still responsible for.
     let mut lo = 0usize;
     let mut hi = p;
@@ -76,14 +111,18 @@ pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
         } else {
             (mid, hi, lo, mid)
         };
-        let payload = acc[send_lo * b..send_hi * b].to_vec();
-        let got = c.sendrecv(partner, payload, partner, s as u32)?;
-        combine(&mut acc[keep_lo * b..keep_hi * b], &got);
+        for i in send_lo..send_hi {
+            c.send_slice(partner, (s * p + i) as u32, blocks[i].clone())?;
+        }
+        for i in keep_lo..keep_hi {
+            let got = c.recv_chunk(partner, (s * p + i) as u32)?;
+            combine(blocks[i].make_mut(), got.as_slice());
+        }
         lo = keep_lo;
         hi = keep_hi;
     }
     debug_assert_eq!((lo, hi), (r, r + 1));
-    Ok(acc[r * b..(r + 1) * b].to_vec())
+    Ok(blocks[r].to_vec())
 }
 
 /// All-reduce = recursive halving reduce-scatter ∘ recursive doubling
@@ -137,6 +176,26 @@ mod tests {
             let expect = oracle::all_gather(&ins);
             for o in outs {
                 assert_eq!(o, expect, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_chunks_forward_views() {
+        // Every returned block must share storage with some rank's input —
+        // the doubling exchange never re-materializes a block.
+        let p = 8;
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(move |c| {
+            let input = Chunk::from_vec(vec![c.rank() as f32; 2]);
+            let own_id = input.storage_id();
+            let blocks = rec_all_gather_chunks(c, input).unwrap();
+            (own_id, blocks.iter().map(|b| b.storage_id()).collect::<Vec<_>>())
+        });
+        let ids: Vec<usize> = outs.iter().map(|(id, _)| *id).collect();
+        for (r, (_, block_ids)) in outs.iter().enumerate() {
+            for (q, bid) in block_ids.iter().enumerate() {
+                assert_eq!(bid, &ids[q], "rank {r} re-materialized block {q}");
             }
         }
     }

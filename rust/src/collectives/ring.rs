@@ -3,7 +3,7 @@
 //! reduce-scatter (Observation 2), and PCCL's `PCCL_ring` inter-node
 //! backend.
 
-use crate::comm::Comm;
+use crate::comm::{Chunk, Comm};
 use crate::error::Result;
 use crate::reduction::offload::CombineFn;
 use crate::reduction::Elem;
@@ -11,41 +11,57 @@ use crate::reduction::Elem;
 use super::schedule::ring as idx;
 use super::{check_all_gather, check_reduce_scatter};
 
-/// Ring all-gather: `p - 1` steps, each rank forwards the block it received
-/// in the previous step to its right neighbor.
+/// Ring all-gather over the chunked plane: `p - 1` steps, each rank
+/// forwards the *chunk* it received in the previous step to its right
+/// neighbor — zero copies at every hop.
 ///
-/// Hot-path note (§Perf): the block sent at step `s` is exactly the block
-/// received at step `s-1`, so the received buffer is *moved* onward instead
-/// of re-copied out of the output — one memcpy per step instead of two.
-pub fn ring_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec<T>> {
-    check_all_gather(input)?;
+/// Returns the `p` per-rank blocks in origin-rank order; block `i` is
+/// backed by rank `i`'s input storage (the zero-copy tests assert exactly
+/// this identity).
+pub fn ring_all_gather_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: Chunk<T>,
+) -> Result<Vec<Chunk<T>>> {
+    check_all_gather(input.as_slice())?;
     c.begin_op();
     let p = c.size();
     let r = c.rank();
-    let m = input.len();
-    let mut out = vec![T::zero(); p * m];
-    out[r * m..(r + 1) * m].copy_from_slice(input);
-    if p == 1 {
-        return Ok(out);
+    let mut out: Vec<Option<Chunk<T>>> = vec![None; p];
+    out[r] = Some(input.clone());
+    if p > 1 {
+        let right = (r + 1) % p;
+        let left = (r + p - 1) % p;
+        // Block (r - s) travels: at s = 0 it's our input; afterwards it's
+        // the chunk that just arrived from the left, forwarded untouched.
+        let mut current = input;
+        for s in 0..p - 1 {
+            debug_assert_eq!(idx::ag_send_block(r, p, s), (r + p - s) % p);
+            let recv_b = idx::ag_recv_block(r, p, s);
+            let got = c.sendrecv_chunk(right, current, left, s as u32)?;
+            out[recv_b] = Some(got.clone());
+            current = got;
+        }
     }
-    let right = (r + 1) % p;
-    let left = (r + p - 1) % p;
-    // Block (r - s) travels: at s = 0 it's our input; afterwards it's the
-    // buffer that just arrived from the left.
-    let mut current = input.to_vec();
-    for s in 0..p - 1 {
-        debug_assert_eq!(idx::ag_send_block(r, p, s), (r + p - s) % p);
-        let recv_b = idx::ag_recv_block(r, p, s);
-        let got = c.sendrecv(right, current, left, s as u32)?;
-        out[recv_b * m..(recv_b + 1) * m].copy_from_slice(&got);
-        current = got;
-    }
-    Ok(out)
+    Ok(out
+        .into_iter()
+        .map(|b| b.expect("ring schedule covers every block"))
+        .collect())
+}
+
+/// Ring all-gather, slice API: wraps `input` into a chunk and materializes
+/// the contiguous output (the only two copies on the path).
+pub fn ring_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec<T>> {
+    let blocks = ring_all_gather_chunks(c, Chunk::from_slice(input))?;
+    Ok(Chunk::concat(&blocks))
 }
 
 /// Ring reduce-scatter: `p - 1` steps; the partial for each block travels
 /// once around the ring, combined at every hop (on the "GPU" — the injected
 /// [`CombineFn`]).
+///
+/// Hot-path note (§Perf): a received partial is uniquely owned (the sender
+/// moved its reference into the transport), so [`Chunk::make_mut`] combines
+/// in place — the only copy is staging the first outgoing block.
 pub fn ring_reduce_scatter<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
@@ -60,21 +76,17 @@ pub fn ring_reduce_scatter<T: Elem, C: Comm<T>>(
     }
     let right = (r + 1) % p;
     let left = (r + p - 1) % p;
-    // Hot path (§Perf): the partial sent at step `s+1` is the partial
-    // received at step `s` combined with our local contribution, so the
-    // combine happens *into the received buffer* and that buffer is moved
-    // onward — no staging copies, no output buffer mutation.
     let first = idx::rs_send_block(r, p, 0);
-    let mut current = input[first * b..(first + 1) * b].to_vec();
+    let mut current = Chunk::from_slice(&input[first * b..(first + 1) * b]);
     for s in 0..p - 1 {
         let recv_b = idx::rs_recv_block(r, p, s);
-        let mut got = c.sendrecv(right, current, left, s as u32)?;
+        let mut got = c.sendrecv_chunk(right, current, left, s as u32)?;
         // Add our own contribution for the block that just arrived.
-        combine(&mut got, &input[recv_b * b..(recv_b + 1) * b]);
+        combine(got.make_mut(), &input[recv_b * b..(recv_b + 1) * b]);
         current = got;
     }
     debug_assert_eq!(idx::rs_recv_block(r, p, p - 2), r);
-    Ok(current)
+    Ok(current.into_vec())
 }
 
 /// Ring all-reduce = ring reduce-scatter ∘ ring all-gather (the
@@ -130,6 +142,22 @@ mod tests {
             let expect = oracle::all_gather(&inputs(p, m));
             for o in outs {
                 assert_eq!(o, expect, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_chunks_preserve_block_order() {
+        let p = 5;
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(move |c| {
+            let input = Chunk::from_vec(vec![c.rank() as f32; 3]);
+            ring_all_gather_chunks(c, input).unwrap()
+        });
+        for blocks in outs {
+            assert_eq!(blocks.len(), p);
+            for (q, b) in blocks.iter().enumerate() {
+                assert_eq!(b.as_slice(), &[q as f32; 3], "block {q}");
             }
         }
     }

@@ -37,6 +37,30 @@ pub fn shuffle_gather<T: Copy>(buf: &[T], n_nodes: usize, m_local: usize, block:
     transpose_blocks(buf, n_nodes, m_local, block)
 }
 
+/// Zero-copy twin of [`transpose_blocks`] for the chunked plane: permutes
+/// the block *list* (O(outer·inner) pointer clones) without touching a
+/// byte. This is why the fused hierarchical all-gather needs no transpose
+/// kernel at all — the unshuffle is free once blocks are views.
+pub fn transpose_chunk_blocks<T>(
+    blocks: &[crate::comm::Chunk<T>],
+    outer: usize,
+    inner: usize,
+) -> Vec<crate::comm::Chunk<T>> {
+    assert_eq!(
+        blocks.len(),
+        outer * inner,
+        "transpose_chunk_blocks: {} blocks != {outer}×{inner}",
+        blocks.len()
+    );
+    let mut out = Vec::with_capacity(blocks.len());
+    for j in 0..inner {
+        for i in 0..outer {
+            out.push(blocks[i * inner + j].clone());
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,6 +89,21 @@ mod tests {
         let once = unshuffle(&buf, n, m, block);
         let back = shuffle_gather(&once, n, m, block);
         assert_eq!(back, buf);
+    }
+
+    #[test]
+    fn chunk_transpose_matches_element_transpose() {
+        use crate::comm::Chunk;
+        let n = 3;
+        let m = 2;
+        let block = 2;
+        let buf: Vec<i32> = (0..(n * m * block) as i32).collect();
+        let whole = Chunk::from_vec(buf.clone());
+        let blocks: Vec<Chunk<i32>> = (0..n * m).map(|i| whole.slice(i * block, block)).collect();
+        let permuted = transpose_chunk_blocks(&blocks, n, m);
+        // Same permutation as the element-wise kernel, zero bytes moved.
+        assert_eq!(Chunk::concat(&permuted), transpose_blocks(&buf, n, m, block));
+        assert!(permuted.iter().all(|c| c.storage_id() == whole.storage_id()));
     }
 
     #[test]

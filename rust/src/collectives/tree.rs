@@ -6,8 +6,13 @@
 //! stand-in here is a binomial reduce-to-root followed by a binomial
 //! broadcast — the same `O(log p)` step structure; the netsim library
 //! models use the proper double-binary-tree cost.
+//!
+//! Over the chunked plane the broadcast phase fans the reduced buffer out
+//! as zero-copy chunk clones (the seed path cloned the full vector per
+//! child); the reduce phase combines received chunks straight into the
+//! local accumulator without materializing them.
 
-use crate::comm::Comm;
+use crate::comm::{Chunk, Comm};
 use crate::error::Result;
 use crate::reduction::offload::CombineFn;
 use crate::reduction::Elem;
@@ -41,30 +46,32 @@ pub fn tree_all_reduce<T: Elem, C: Comm<T>>(
         }
         let src = r | mask;
         if src < p {
-            let got = c.recv(src, step)?;
-            combine(&mut acc, &got);
+            let got = c.recv_chunk(src, step)?;
+            combine(&mut acc, got.as_slice());
         }
         mask <<= 1;
     }
 
     // Phase 2: binomial broadcast from rank 0 (mirror of phase 1).
-    if r != 0 {
+    let result = if r == 0 {
+        Chunk::from_vec(acc)
+    } else {
         // Receive the final value from the rank we reduced into.
         let src = r & !(recv_mask);
         let step = 0x100 + recv_mask.trailing_zeros();
-        acc = c.recv(src, step)?;
-    }
+        c.recv_chunk(src, step)?
+    };
     // Root keeps its initial recv_mask = next_power_of_two(p).
     let mut child_mask = recv_mask >> 1;
     while child_mask > 0 {
         let dst = r | child_mask;
         if dst != r && dst < p {
             let step = 0x100 + child_mask.trailing_zeros();
-            c.send(dst, step, acc.clone())?;
+            c.send_slice(dst, step, result.clone())?;
         }
         child_mask >>= 1;
     }
-    Ok(acc)
+    Ok(result.into_vec())
 }
 
 #[cfg(test)]

@@ -1,0 +1,268 @@
+//! `Chunk<T>` — the shared, sliceable message buffer of the zero-copy data
+//! plane.
+//!
+//! A chunk is an `Arc`-backed storage plus an `(offset, len)` view:
+//! `clone()`, [`Chunk::slice`], and [`Chunk::split`] are O(1) and never
+//! touch the elements, so a collective can forward a received block, or
+//! send a sub-view of its input, without materializing a fresh buffer.
+//! This is what lets multi-level hierarchical/pipelined schedules pass
+//! each block through every hop untouched (the copy-free multicast/reduce
+//! primitives PCCL and HiCCL compose collectives from).
+//!
+//! Mutation goes through [`Chunk::make_mut`]: in place when the storage is
+//! uniquely owned (the common case for a freshly received reduction
+//! partial, since the sender moved its reference into the transport),
+//! copy-on-write otherwise. [`Chunk::into_vec`] is likewise free for a
+//! unique full-range view and copies only when the storage is still
+//! shared.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Shared, sliceable message buffer: `Arc` storage + `(offset, len)` view.
+pub struct Chunk<T> {
+    storage: Arc<Vec<T>>,
+    off: usize,
+    len: usize,
+}
+
+impl<T> Chunk<T> {
+    /// Wrap an owned vector — O(1), no copy.
+    pub fn from_vec(v: Vec<T>) -> Self {
+        let len = v.len();
+        Self {
+            storage: Arc::new(v),
+            off: 0,
+            len,
+        }
+    }
+
+    /// The empty chunk (zero-length barrier/token messages).
+    pub fn empty() -> Self {
+        Self::from_vec(Vec::new())
+    }
+
+    /// Elements visible through this view.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Borrow the viewed elements.
+    pub fn as_slice(&self) -> &[T] {
+        &self.storage[self.off..self.off + self.len]
+    }
+
+    /// O(1) sub-view of `len` elements starting at `start` — shares storage.
+    pub fn slice(&self, start: usize, len: usize) -> Self {
+        let end = start.checked_add(len).expect("chunk slice range overflow");
+        assert!(
+            end <= self.len,
+            "chunk slice {start}..{end} out of bounds for view of {}",
+            self.len
+        );
+        Self {
+            storage: Arc::clone(&self.storage),
+            off: self.off + start,
+            len,
+        }
+    }
+
+    /// O(1) split into `[0, at)` and `[at, len)` views.
+    pub fn split(&self, at: usize) -> (Self, Self) {
+        (self.slice(0, at), self.slice(at, self.len - at))
+    }
+
+    /// Identity of the backing storage — two chunks with equal ids share
+    /// bytes. Used by the zero-copy (no re-materialization) tests.
+    pub fn storage_id(&self) -> usize {
+        Arc::as_ptr(&self.storage) as usize
+    }
+
+    /// Number of live references to the backing storage.
+    pub fn storage_refs(&self) -> usize {
+        Arc::strong_count(&self.storage)
+    }
+
+    /// Whether this view covers the whole backing storage.
+    pub fn is_full_view(&self) -> bool {
+        self.off == 0 && self.len == self.storage.len()
+    }
+}
+
+impl<T: Clone> Chunk<T> {
+    /// Copy a borrowed slice into fresh storage (the one materialization a
+    /// slice-based caller pays; everything downstream is views).
+    pub fn from_slice(data: &[T]) -> Self {
+        Self::from_vec(data.to_vec())
+    }
+
+    /// Copy the viewed elements out.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+
+    /// Take the elements: moves the storage when this is the unique
+    /// full-range view (no copy), otherwise copies the viewed range.
+    pub fn into_vec(self) -> Vec<T> {
+        let Chunk { storage, off, len } = self;
+        if off == 0 && len == storage.len() {
+            match Arc::try_unwrap(storage) {
+                Ok(v) => v,
+                Err(shared) => shared[..len].to_vec(),
+            }
+        } else {
+            storage[off..off + len].to_vec()
+        }
+    }
+
+    /// Mutable access to the viewed elements: in place when the storage is
+    /// uniquely owned, copy-on-write otherwise (so mutation can never be
+    /// observed through another view).
+    pub fn make_mut(&mut self) -> &mut [T] {
+        if Arc::get_mut(&mut self.storage).is_none() {
+            let owned = self.as_slice().to_vec();
+            self.off = 0;
+            self.len = owned.len();
+            self.storage = Arc::new(owned);
+        }
+        let (off, len) = (self.off, self.len);
+        let v = Arc::get_mut(&mut self.storage).expect("chunk storage unique after copy-on-write");
+        &mut v[off..off + len]
+    }
+
+    /// Materialize an ordered list of chunks into one contiguous vector
+    /// (the final output copy of the slice-based collective wrappers).
+    pub fn concat(chunks: &[Chunk<T>]) -> Vec<T> {
+        let total: usize = chunks.iter().map(Chunk::len).sum();
+        let mut out = Vec::with_capacity(total);
+        for c in chunks {
+            out.extend_from_slice(c.as_slice());
+        }
+        out
+    }
+}
+
+impl<T> Clone for Chunk<T> {
+    fn clone(&self) -> Self {
+        Self {
+            storage: Arc::clone(&self.storage),
+            off: self.off,
+            len: self.len,
+        }
+    }
+}
+
+impl<T> From<Vec<T>> for Chunk<T> {
+    fn from(v: Vec<T>) -> Self {
+        Self::from_vec(v)
+    }
+}
+
+impl<T> Deref for Chunk<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Chunk<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Chunk")
+            .field("off", &self.off)
+            .field("len", &self.len)
+            .field("data", &self.as_slice())
+            .finish()
+    }
+}
+
+impl<T: PartialEq> PartialEq for Chunk<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: PartialEq> PartialEq<Vec<T>> for Chunk<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_and_split_share_storage() {
+        let c = Chunk::from_vec(vec![0, 1, 2, 3, 4, 5, 6]);
+        let s = c.slice(2, 3);
+        assert_eq!(s.as_slice(), &[2, 3, 4]);
+        assert_eq!(s.storage_id(), c.storage_id());
+        // Uneven split.
+        let (a, b) = c.split(3);
+        assert_eq!(a.as_slice(), &[0, 1, 2]);
+        assert_eq!(b.as_slice(), &[3, 4, 5, 6]);
+        assert_eq!(a.storage_id(), b.storage_id());
+        assert_eq!(c.storage_refs(), 4); // c, s, a, b
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_out_of_bounds_panics() {
+        let c = Chunk::from_vec(vec![1, 2, 3]);
+        let _ = c.slice(1, 3);
+    }
+
+    #[test]
+    fn make_mut_in_place_when_unique() {
+        let mut c = Chunk::from_vec(vec![1.0f32, 2.0, 3.0]);
+        let id = c.storage_id();
+        c.make_mut()[0] = 9.0;
+        assert_eq!(c.storage_id(), id, "unique chunk must mutate in place");
+        assert_eq!(c.as_slice(), &[9.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn make_mut_copies_on_write_when_shared() {
+        let a = Chunk::from_vec(vec![1, 2, 3, 4]);
+        let mut b = a.slice(1, 2);
+        b.make_mut()[0] = 99;
+        assert_ne!(b.storage_id(), a.storage_id(), "shared view must COW");
+        assert_eq!(b.as_slice(), &[99, 3]);
+        assert_eq!(a.as_slice(), &[1, 2, 3, 4], "original untouched");
+    }
+
+    #[test]
+    fn into_vec_moves_when_unique_copies_when_shared() {
+        let v = vec![1u8, 2, 3];
+        let data_ptr = v.as_ptr();
+        let c = Chunk::from_vec(v);
+        let back = c.into_vec();
+        assert_eq!(back.as_ptr(), data_ptr, "unique full view must move");
+
+        let c = Chunk::from_vec(vec![1u8, 2, 3]);
+        let keep = c.clone();
+        let copied = c.into_vec();
+        assert_eq!(copied, vec![1, 2, 3]);
+        assert_eq!(keep.as_slice(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn concat_restores_order() {
+        let c = Chunk::from_vec(vec![10, 20, 30, 40]);
+        let parts = vec![c.slice(2, 2), c.slice(0, 2)];
+        assert_eq!(Chunk::concat(&parts), vec![30, 40, 10, 20]);
+    }
+
+    #[test]
+    fn empty_chunk_roundtrip() {
+        let c = Chunk::<f32>::empty();
+        assert!(c.is_empty());
+        assert!(c.is_full_view());
+        assert!(c.into_vec().is_empty());
+    }
+}

@@ -6,62 +6,106 @@
 //! design, Fig. 5). Both implement [`Comm`], the trait the algorithms in
 //! [`crate::collectives`] are written against.
 //!
+//! The primitive operations are chunk-based ([`Comm::send_slice`] /
+//! [`Comm::recv_chunk`]): payloads are [`Chunk`] views into shared
+//! storage, so forwarding and sub-view sends are zero-copy. The owned
+//! `Vec` [`Comm::send`] / [`Comm::recv`] shims remain for callers that
+//! want materialized buffers.
+//!
 //! Tag namespacing: every communicator has a 64-bit context id (an FNV hash
-//! of its member list and lineage), combined with a per-instance op sequence
-//! number and the algorithm step. FIFO per `(src, tag)` in the transport
-//! makes residual aliasing harmless (SPMD collectives send and receive in
-//! matched order).
+//! of its member list and lineage); the per-instance op sequence number and
+//! the algorithm step are folded through the same FNV mix (not XOR-shifted)
+//! so that high-frequency ops on long-lived subcomms cannot alias tags.
+//! FIFO per `(src, tag)` in the transport makes residual aliasing harmless
+//! (SPMD collectives send and receive in matched order).
 
 use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::topology::Topology;
 
-use super::transport::Endpoint;
+use super::chunk::Chunk;
+use super::transport::{Endpoint, Traffic};
 
 /// FNV-1a over a stream of u64 words — deterministic context ids.
 fn fnv64(words: impl IntoIterator<Item = u64>) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for w in words {
-        for b in w.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
+        h = fnv64_step(h, w);
     }
     h
 }
 
+/// Fold one u64 word into an FNV-1a state.
+fn fnv64_step(mut h: u64, w: u64) -> u64 {
+    for b in w.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Compose the wire tag for `(context, op, step)`. `op_seq` and `step` are
+/// folded through the FNV mix seeded by the (already well-mixed) context:
+/// unlike the earlier `ctx ^ (op_seq << 16) ^ step` scheme, distinct
+/// `(op_seq, step)` pairs cannot cancel linearly, so a subcomm that issues
+/// millions of ops never collides a fresh op with an old step.
 fn compose_tag(ctx: u64, op_seq: u64, step: u32) -> u64 {
-    // ctx is already well-mixed; fold in op_seq and step reversibly enough
-    // that distinct (op, step) pairs within a context never collide.
-    ctx ^ (op_seq << 16) ^ (step as u64)
+    fnv64_step(fnv64_step(ctx, op_seq), step as u64)
 }
 
 /// Operations collectives need from a communicator.
-pub trait Comm<T: Send + 'static> {
+pub trait Comm<T: Send + Sync + 'static> {
     /// This rank within the communicator (0-based).
     fn rank(&self) -> usize;
     /// Number of ranks in the communicator.
     fn size(&self) -> usize;
-    /// Post `data` to `peer` for algorithm step `step` (non-blocking).
-    fn send(&mut self, peer: usize, step: u32, data: Vec<T>) -> Result<()>;
-    /// Matched receive from `peer` for step `step` (blocking).
-    fn recv(&mut self, peer: usize, step: u32) -> Result<Vec<T>>;
+    /// Post a shared-buffer `chunk` to `peer` for algorithm step `step`
+    /// (non-blocking, zero-copy: a reference moves, not the bytes).
+    fn send_slice(&mut self, peer: usize, step: u32, chunk: Chunk<T>) -> Result<()>;
+    /// Matched chunk receive from `peer` for step `step` (blocking).
+    fn recv_chunk(&mut self, peer: usize, step: u32) -> Result<Chunk<T>>;
     /// Begin a new collective: bumps the op sequence for tag freshness.
     fn begin_op(&mut self);
 
-    /// Combined exchange: send to `to`, then receive from `from`, same step.
-    /// Safe against deadlock because sends never block.
-    fn sendrecv(&mut self, to: usize, data: Vec<T>, from: usize, step: u32) -> Result<Vec<T>> {
+    /// Compat shim: owned-vector send (wrapped into a chunk, still O(1)).
+    fn send(&mut self, peer: usize, step: u32, data: Vec<T>) -> Result<()> {
+        self.send_slice(peer, step, Chunk::from_vec(data))
+    }
+
+    /// Compat shim: materializing receive (copy only if the storage is
+    /// still shared — a moved-in message is taken over for free).
+    fn recv(&mut self, peer: usize, step: u32) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        Ok(self.recv_chunk(peer, step)?.into_vec())
+    }
+
+    /// Combined exchange: send `chunk` to `to`, then receive from `from`,
+    /// same step. Safe against deadlock because sends never block.
+    fn sendrecv_chunk(
+        &mut self,
+        to: usize,
+        chunk: Chunk<T>,
+        from: usize,
+        step: u32,
+    ) -> Result<Chunk<T>> {
+        self.send_slice(to, step, chunk)?;
+        self.recv_chunk(from, step)
+    }
+
+    /// Owned-vector combined exchange (compat shim).
+    fn sendrecv(&mut self, to: usize, data: Vec<T>, from: usize, step: u32) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
         self.send(to, step, data)?;
         self.recv(from, step)
     }
 
-    /// Dissemination barrier: O(log p) rounds.
-    fn barrier(&mut self) -> Result<()>
-    where
-        T: Default,
-    {
+    /// Dissemination barrier: O(log p) rounds of empty-chunk tokens.
+    fn barrier(&mut self) -> Result<()> {
         self.begin_op();
         let p = self.size();
         let rank = self.rank();
@@ -70,8 +114,8 @@ pub trait Comm<T: Send + 'static> {
         while dist < p {
             let to = (rank + dist) % p;
             let from = (rank + p - dist) % p;
-            self.send(to, 0x8000 + k, Vec::new())?;
-            self.recv(from, 0x8000 + k)?;
+            self.send_slice(to, 0x8000 + k, Chunk::empty())?;
+            self.recv_chunk(from, 0x8000 + k)?;
             dist <<= 1;
             k += 1;
         }
@@ -87,7 +131,7 @@ pub struct Communicator<T> {
     op_seq: u64,
 }
 
-impl<T: Send + 'static> Communicator<T> {
+impl<T: Send + Sync + 'static> Communicator<T> {
     /// This rank (inherent mirror of [`Comm::rank`] so callers don't need
     /// the trait in scope).
     pub fn rank(&self) -> usize {
@@ -121,8 +165,9 @@ impl<T: Send + 'static> Communicator<T> {
         self.topo
     }
 
-    /// (messages sent, elements sent, messages received) on this endpoint.
-    pub fn traffic(&self) -> (u64, u64, u64) {
+    /// Monotonic traffic counters (messages, elements, bytes) on this
+    /// endpoint — the launcher reads deltas around timed sections.
+    pub fn traffic(&self) -> Traffic {
         self.ep.traffic()
     }
 
@@ -174,7 +219,7 @@ impl<T: Send + 'static> Communicator<T> {
     }
 }
 
-impl<T: Send + 'static> Comm<T> for Communicator<T> {
+impl<T: Send + Sync + 'static> Comm<T> for Communicator<T> {
     fn rank(&self) -> usize {
         self.ep.rank()
     }
@@ -183,14 +228,14 @@ impl<T: Send + 'static> Comm<T> for Communicator<T> {
         self.ep.size()
     }
 
-    fn send(&mut self, peer: usize, step: u32, data: Vec<T>) -> Result<()> {
+    fn send_slice(&mut self, peer: usize, step: u32, chunk: Chunk<T>) -> Result<()> {
         let tag = compose_tag(self.ctx, self.op_seq, step);
-        self.ep.send(peer, tag, data)
+        self.ep.send_chunk(peer, tag, chunk)
     }
 
-    fn recv(&mut self, peer: usize, step: u32) -> Result<Vec<T>> {
+    fn recv_chunk(&mut self, peer: usize, step: u32) -> Result<Chunk<T>> {
         let tag = compose_tag(self.ctx, self.op_seq, step);
-        self.ep.recv(peer, tag)
+        self.ep.recv_chunk(peer, tag)
     }
 
     fn begin_op(&mut self) {
@@ -207,14 +252,14 @@ pub struct SubComm<'a, T> {
     op_seq: u64,
 }
 
-impl<'a, T: Send + 'static> SubComm<'a, T> {
+impl<'a, T: Send + Sync + 'static> SubComm<'a, T> {
     /// The global (world) ranks of this subgroup, in sub-rank order.
     pub fn group(&self) -> &[usize] {
         &self.group
     }
 }
 
-impl<'a, T: Send + 'static> Comm<T> for SubComm<'a, T> {
+impl<'a, T: Send + Sync + 'static> Comm<T> for SubComm<'a, T> {
     fn rank(&self) -> usize {
         self.rank
     }
@@ -223,22 +268,22 @@ impl<'a, T: Send + 'static> Comm<T> for SubComm<'a, T> {
         self.group.len()
     }
 
-    fn send(&mut self, peer: usize, step: u32, data: Vec<T>) -> Result<()> {
+    fn send_slice(&mut self, peer: usize, step: u32, chunk: Chunk<T>) -> Result<()> {
         let global = *self.group.get(peer).ok_or(Error::PeerOutOfRange {
             peer,
             size: self.group.len(),
         })?;
         let tag = compose_tag(self.ctx, self.op_seq, step);
-        self.ep.send(global, tag, data)
+        self.ep.send_chunk(global, tag, chunk)
     }
 
-    fn recv(&mut self, peer: usize, step: u32) -> Result<Vec<T>> {
+    fn recv_chunk(&mut self, peer: usize, step: u32) -> Result<Chunk<T>> {
         let global = *self.group.get(peer).ok_or(Error::PeerOutOfRange {
             peer,
             size: self.group.len(),
         })?;
         let tag = compose_tag(self.ctx, self.op_seq, step);
-        self.ep.recv(global, tag)
+        self.ep.recv_chunk(global, tag)
     }
 
     fn begin_op(&mut self) {
@@ -267,6 +312,17 @@ mod tests {
         let (mut c0, mut c1) = pair();
         c0.send(1, 0, vec![42.0]).unwrap();
         assert_eq!(c1.recv(0, 0).unwrap(), vec![42.0]);
+    }
+
+    #[test]
+    fn chunk_send_recv_shares_storage() {
+        let (mut c0, mut c1) = pair();
+        let data = Chunk::from_vec(vec![1.0f32, 2.0, 3.0, 4.0]);
+        let id = data.storage_id();
+        c0.send_slice(1, 0, data.slice(1, 2)).unwrap();
+        let got = c1.recv_chunk(0, 0).unwrap();
+        assert_eq!(got.as_slice(), &[2.0, 3.0]);
+        assert_eq!(got.storage_id(), id);
     }
 
     #[test]
@@ -346,5 +402,35 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn compose_tag_never_aliases_dense_op_step_grids() {
+        // Regression for the XOR-shift scheme: high-frequency ops on a
+        // long-lived subcomm must never reuse a tag across (op, step).
+        let ctx = fnv64([0xC0, 8]);
+        let mut seen = std::collections::HashSet::new();
+        // Dense band of fresh ops × steps, plus a band deep into a
+        // long-lived communicator's op sequence.
+        for base in [0u64, 1 << 20, 1 << 40] {
+            for op in 0..1024u64 {
+                for step in 0..48u32 {
+                    assert!(
+                        seen.insert(compose_tag(ctx, base + op, step)),
+                        "tag alias at op={} step={step}",
+                        base + op
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compose_tag_is_not_linear() {
+        // Under the old scheme, (op_seq=1, step=0) and (op_seq=0,
+        // step=1<<16) produced the same tag: (1<<16) ^ 0 == 0 ^ (1<<16).
+        let ctx = fnv64([0xC0, 4]);
+        assert_ne!(compose_tag(ctx, 1, 0), compose_tag(ctx, 0, 1 << 16));
+        assert_ne!(compose_tag(ctx, 3, 5), compose_tag(ctx, 5, 3));
     }
 }

@@ -1,15 +1,20 @@
 //! The data plane: a real multi-rank communicator.
 //!
 //! Ranks are OS threads ("simulated GPUs") exchanging typed buffers through
-//! an in-process transport with MPI-style tag matching. The collective
-//! algorithms in [`crate::collectives`] run unmodified over this layer; on a
-//! real deployment the [`transport`] would be swapped for RDMA/ libfabric
-//! endpoints — nothing above it would change.
+//! an in-process transport with MPI-style tag matching. Messages are
+//! [`Chunk`]s — shared, sliceable buffer views — so the collective hot
+//! path forwards and sub-slices without copying. The collective algorithms
+//! in [`crate::collectives`] run unmodified over this layer; on a real
+//! deployment the [`transport`] would be swapped for RDMA / libfabric
+//! endpoints backed by registered memory regions — nothing above it would
+//! change (a `Chunk` maps onto an MR offset/length pair).
 
+mod chunk;
 mod communicator;
 mod transport;
 mod world;
 
+pub use chunk::Chunk;
 pub use communicator::{Comm, Communicator, SubComm};
-pub use transport::{Endpoint, TransportHub, DEFAULT_RECV_TIMEOUT};
+pub use transport::{Endpoint, Traffic, TransportHub, DEFAULT_RECV_TIMEOUT};
 pub use world::CommWorld;

@@ -5,12 +5,20 @@
 //! `(src, tag)`; out-of-order arrivals are stashed in a pending map. FIFO
 //! is preserved per `(src, tag)` pair because the underlying channel is
 //! FIFO per sender and stashing appends in arrival order.
+//!
+//! The message payload is a [`Chunk`] — an Arc-backed shared buffer view —
+//! so posting a message moves a reference, never the bytes. A rank that
+//! forwards a received chunk (ring/hierarchical all-gather) or sends a
+//! sub-view of its input (recursive doubling, scatter) performs zero
+//! copies end to end.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+
+use super::chunk::Chunk;
 
 /// Default receive timeout — generous for tests on loaded machines while
 /// still converting deadlocks into typed errors instead of hangs.
@@ -19,7 +27,26 @@ pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(60);
 struct Msg<T> {
     src: usize,
     tag: u64,
-    data: Vec<T>,
+    data: Chunk<T>,
+}
+
+/// Monotonic per-endpoint traffic counters (messages, elements, bytes).
+///
+/// Bytes are exact: `elements × size_of::<T>()`, which for the data-plane
+/// element types equals [`crate::reduction::Elem::SIZE`]. The bench harness
+/// and the launcher's schedule-equivalence guard consume these.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Traffic {
+    /// Messages posted by this endpoint.
+    pub sent_msgs: u64,
+    /// Elements posted by this endpoint.
+    pub sent_elems: u64,
+    /// Bytes posted by this endpoint.
+    pub sent_bytes: u64,
+    /// Messages received (matched) by this endpoint.
+    pub recvd_msgs: u64,
+    /// Bytes received (matched) by this endpoint.
+    pub recvd_bytes: u64,
 }
 
 /// Cloneable handle with senders to every rank's mailbox.
@@ -35,7 +62,7 @@ impl<T> Clone for TransportHub<T> {
     }
 }
 
-impl<T: Send + 'static> TransportHub<T> {
+impl<T: Send + Sync + 'static> TransportHub<T> {
     /// Build a hub + one endpoint per rank.
     pub fn new(size: usize) -> (Self, Vec<Endpoint<T>>) {
         let mut senders = Vec::with_capacity(size);
@@ -55,9 +82,7 @@ impl<T: Send + 'static> TransportHub<T> {
                 rx,
                 pending: HashMap::new(),
                 timeout: DEFAULT_RECV_TIMEOUT,
-                sent_msgs: 0,
-                sent_elems: 0,
-                recvd_msgs: 0,
+                traffic: Traffic::default(),
             })
             .collect();
         (hub, endpoints)
@@ -74,15 +99,12 @@ pub struct Endpoint<T> {
     rank: usize,
     hub: TransportHub<T>,
     rx: Receiver<Msg<T>>,
-    pending: HashMap<(usize, u64), VecDeque<Vec<T>>>,
+    pending: HashMap<(usize, u64), VecDeque<Chunk<T>>>,
     timeout: Duration,
-    // Traffic counters (used by tests and the bench harness).
-    sent_msgs: u64,
-    sent_elems: u64,
-    recvd_msgs: u64,
+    traffic: Traffic,
 }
 
-impl<T: Send + 'static> Endpoint<T> {
+impl<T: Send + Sync + 'static> Endpoint<T> {
     pub fn rank(&self) -> usize {
         self.rank
     }
@@ -96,38 +118,44 @@ impl<T: Send + 'static> Endpoint<T> {
         self.timeout = timeout;
     }
 
-    /// Messages and elements sent so far (monotonic).
-    pub fn traffic(&self) -> (u64, u64, u64) {
-        (self.sent_msgs, self.sent_elems, self.recvd_msgs)
+    /// Traffic counters so far (monotonic).
+    pub fn traffic(&self) -> Traffic {
+        self.traffic
     }
 
-    /// Post `data` to `to`'s mailbox. Non-blocking (unbounded channel —
-    /// the collectives are self-throttling, at most one outstanding message
-    /// per peer per step).
-    pub fn send(&mut self, to: usize, tag: u64, data: Vec<T>) -> Result<()> {
+    /// Post `chunk` to `to`'s mailbox — a reference move, never a byte
+    /// copy. Non-blocking (unbounded channel — the collectives are
+    /// self-throttling, at most one outstanding message per peer per step).
+    pub fn send_chunk(&mut self, to: usize, tag: u64, chunk: Chunk<T>) -> Result<()> {
         if to >= self.hub.size() {
             return Err(Error::PeerOutOfRange {
                 peer: to,
                 size: self.hub.size(),
             });
         }
-        self.sent_msgs += 1;
-        self.sent_elems += data.len() as u64;
+        self.traffic.sent_msgs += 1;
+        self.traffic.sent_elems += chunk.len() as u64;
+        self.traffic.sent_bytes += (chunk.len() * std::mem::size_of::<T>()) as u64;
         self.hub.senders[to]
             .send(Msg {
                 src: self.rank,
                 tag,
-                data,
+                data: chunk,
             })
             .map_err(|_| Error::TransportClosed { rank: self.rank })
     }
 
-    /// Blocking matched receive from `(from, tag)`.
-    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<T>> {
+    /// Owned-vector send: wraps into a [`Chunk`] (O(1)) and posts it.
+    pub fn send(&mut self, to: usize, tag: u64, data: Vec<T>) -> Result<()> {
+        self.send_chunk(to, tag, Chunk::from_vec(data))
+    }
+
+    /// Blocking matched receive of a chunk from `(from, tag)`.
+    pub fn recv_chunk(&mut self, from: usize, tag: u64) -> Result<Chunk<T>> {
         let key = (from, tag);
         if let Some(q) = self.pending.get_mut(&key) {
             if let Some(data) = q.pop_front() {
-                self.recvd_msgs += 1;
+                self.count_recv(&data);
                 return Ok(data);
             }
         }
@@ -137,7 +165,7 @@ impl<T: Send + 'static> Endpoint<T> {
             match self.rx.recv_timeout(remaining) {
                 Ok(msg) => {
                     if msg.src == from && msg.tag == tag {
-                        self.recvd_msgs += 1;
+                        self.count_recv(&msg.data);
                         return Ok(msg.data);
                     }
                     self.pending
@@ -157,6 +185,19 @@ impl<T: Send + 'static> Endpoint<T> {
                 }
             }
         }
+    }
+
+    /// Materializing receive (compat shim over [`Endpoint::recv_chunk`]).
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        Ok(self.recv_chunk(from, tag)?.into_vec())
+    }
+
+    fn count_recv(&mut self, chunk: &Chunk<T>) {
+        self.traffic.recvd_msgs += 1;
+        self.traffic.recvd_bytes += (chunk.len() * std::mem::size_of::<T>()) as u64;
     }
 }
 
@@ -232,5 +273,39 @@ mod tests {
         e0.send(1, 3, vec![1.5, 2.5]).unwrap();
         assert_eq!(e0.recv(1, 4).unwrap(), vec![3.0, 5.0]);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn chunk_messages_are_zero_copy_across_threads() {
+        // A sub-view sent to a peer thread arrives backed by the *same*
+        // storage: no bytes moved through the transport.
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let big = Chunk::from_vec((0..64).map(|i| i as f32).collect());
+        let id = big.storage_id();
+        let view = big.slice(16, 8);
+        let t = std::thread::spawn(move || {
+            let got = e1.recv_chunk(0, 1).unwrap();
+            (got.storage_id(), got.to_vec())
+        });
+        e0.send_chunk(1, 1, view).unwrap();
+        let (got_id, data) = t.join().unwrap();
+        assert_eq!(got_id, id, "received chunk must share the sender's storage");
+        assert_eq!(data, (16..24).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn traffic_counts_bytes_and_messages() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(1, 0, vec![1.0, 2.0, 3.0]).unwrap();
+        let t = e0.traffic();
+        assert_eq!((t.sent_msgs, t.sent_elems, t.sent_bytes), (1, 3, 12));
+        assert_eq!((t.recvd_msgs, t.recvd_bytes), (0, 0));
+        let _ = e1.recv(0, 0).unwrap();
+        let t = e1.traffic();
+        assert_eq!((t.recvd_msgs, t.recvd_bytes), (1, 12));
     }
 }

@@ -19,7 +19,7 @@ pub struct CommWorld<T> {
     _t: PhantomData<T>,
 }
 
-impl<T: Send + 'static> CommWorld<T> {
+impl<T: Send + Sync + 'static> CommWorld<T> {
     /// Flat world (one "node" containing all ranks).
     pub fn new(size: usize) -> Self {
         Self {

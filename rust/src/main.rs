@@ -238,16 +238,69 @@ fn run_bench(
 }
 
 /// Quick measured bench of the real data plane (few sizes, few reps):
-/// every backend × collective over two small topologies, written as JSON
-/// so CI can archive the perf trajectory run over run.
+/// every backend × collective over two small topologies, run in *both*
+/// launcher modes. The persistent-world pass is what lands in the JSON
+/// artifact (lower noise); the spawn pass doubles as the
+/// schedule-equivalence guard — the zero-copy chunked plane must move
+/// exactly the same bytes in either mode, and the flat-ring cells must
+/// match the closed-form schedule volume.
 fn run_smoke(out: &Path) -> Result<()> {
-    use pccl::runtime::{Launcher, LauncherConfig};
+    use pccl::runtime::{flat_ring_expected_bytes, Launcher, LauncherConfig};
     use pccl::util::json::Value;
 
-    let launcher = Launcher::new(LauncherConfig::smoke());
     let t = Timer::start();
-    let sweep = launcher.sweep()?;
+    let spawn_sweep = Launcher::new(LauncherConfig::smoke()).sweep()?;
+    let guard_wall = t.secs();
+    let t = Timer::start();
+    let sweep = Launcher::new(LauncherConfig::smoke().with_persistent(true)).sweep()?;
+    // wall_s covers only the persistent pass the artifact describes; the
+    // spawn-mode guard pass is reported separately as guard_wall_s.
     let wall = t.secs();
+
+    // Schedule-equivalence guard: bytes are schedule-determined, so the
+    // persistent world must report exactly what the per-trial worlds did.
+    if spawn_sweep.cells.len() != sweep.cells.len() {
+        return Err(pccl::error::Error::Dispatch(format!(
+            "smoke sweeps diverged: {} spawn cells vs {} persistent",
+            spawn_sweep.cells.len(),
+            sweep.cells.len()
+        )));
+    }
+    for (a, b) in spawn_sweep.cells.iter().zip(&sweep.cells) {
+        if a.bytes_per_op != b.bytes_per_op {
+            return Err(pccl::error::Error::Dispatch(format!(
+                "schedule equivalence violated: {}/{} {} B × {} ranks moved {} B \
+                 per op in spawn mode but {} B in persistent mode",
+                a.kind.label(),
+                a.backend.label(),
+                a.msg_bytes,
+                a.ranks,
+                a.bytes_per_op,
+                b.bytes_per_op
+            )));
+        }
+    }
+    // Flat-ring cells must also match the closed-form schedule volume.
+    for c in sweep
+        .cells
+        .iter()
+        .filter(|c| matches!(c.backend, Backend::Vendor | Backend::CrayMpich))
+    {
+        // Invert the §III-A shape convention: msg_bytes / 4 reproduces the
+        // element count `cell_shape` saw for both ring collectives.
+        let elems = c.msg_bytes / 4;
+        if let Some(expect) = flat_ring_expected_bytes(c.kind, elems, c.ranks) {
+            if c.bytes_per_op != expect {
+                return Err(pccl::error::Error::Dispatch(format!(
+                    "ring schedule volume mismatch: {}/{} expected {expect} B, measured {} B",
+                    c.kind.label(),
+                    c.backend.label(),
+                    c.bytes_per_op
+                )));
+            }
+        }
+    }
+
     let cells: Vec<Value> = sweep
         .cells
         .iter()
@@ -260,13 +313,17 @@ fn run_smoke(out: &Path) -> Result<()> {
                 ("mean_s", Value::Num(c.stats.mean())),
                 ("stddev_s", Value::Num(c.stats.stddev())),
                 ("trials", Value::Num(c.stats.count() as f64)),
+                ("bytes_per_op", Value::Num(c.bytes_per_op as f64)),
             ])
         })
         .collect();
     let doc = Value::obj(vec![
-        ("schema", Value::Num(1.0)),
+        ("schema", Value::Num(2.0)),
         ("suite", Value::Str("pccl-smoke".to_string())),
+        ("mode", Value::Str("persistent".to_string())),
+        ("schedule_equivalent", Value::Bool(true)),
         ("wall_s", Value::Num(wall)),
+        ("guard_wall_s", Value::Num(guard_wall)),
         ("cells", Value::Arr(cells)),
     ]);
     if let Some(parent) = out.parent() {
@@ -277,15 +334,21 @@ fn run_smoke(out: &Path) -> Result<()> {
     std::fs::write(out, doc.to_string())?;
     for c in &sweep.cells {
         println!(
-            "{:<16} {:<12} {:>10} B {:>4} ranks  {}",
+            "{:<16} {:<12} {:>10} B {:>4} ranks  {:>12}  {:>8.2} GiB/s moved",
             c.kind.label(),
             c.backend.label(),
             c.msg_bytes,
             c.ranks,
-            fmt_secs(c.stats.mean())
+            fmt_secs(c.stats.mean()),
+            pccl::metrics::gib_per_s(c.bytes_per_op, c.stats.mean())
         );
     }
-    println!("{} cells in {:.1}s → {}", sweep.cells.len(), wall, out.display());
+    println!(
+        "{} cells in {:.1}s (persistent world, schedule-equivalence guard OK) → {}",
+        sweep.cells.len(),
+        wall,
+        out.display()
+    );
     Ok(())
 }
 

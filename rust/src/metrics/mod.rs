@@ -96,6 +96,28 @@ impl Default for Timer {
     }
 }
 
+/// Human-readable byte count (powers of two, like the paper's MB axes).
+/// Canonical home of byte formatting; `bench::fmt_bytes` delegates here.
+pub fn fmt_bytes(b: u64) -> String {
+    const MB: u64 = 1024 * 1024;
+    if b >= MB && b % MB == 0 {
+        format!("{} MB", b / MB)
+    } else if b >= 1024 && b % 1024 == 0 {
+        format!("{} KB", b / 1024)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Throughput in GiB/s for `bytes` moved in `secs` (0 when unmeasurable).
+pub fn gib_per_s(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        0.0
+    } else {
+        bytes as f64 / (1u64 << 30) as f64 / secs
+    }
+}
+
 /// Pretty-print seconds with an adaptive unit (the tables use ms mostly).
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -126,5 +148,14 @@ mod tests {
         assert_eq!(fmt_secs(2.5), "2.500 s");
         assert_eq!(fmt_secs(0.0025), "2.500 ms");
         assert_eq!(fmt_secs(2.5e-6), "2.5 µs");
+    }
+
+    #[test]
+    fn bytes_and_throughput() {
+        assert_eq!(fmt_bytes(64 << 20), "64 MB");
+        assert_eq!(fmt_bytes(2048), "2 KB");
+        assert_eq!(fmt_bytes(100), "100 B");
+        assert!((gib_per_s(1 << 30, 2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(gib_per_s(1024, 0.0), 0.0);
     }
 }

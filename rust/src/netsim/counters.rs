@@ -70,6 +70,17 @@ impl NicCounters {
         self.non_posted_pkts.iter().sum()
     }
 
+    /// Total bytes written across NICs (posted packets × packet size) —
+    /// the modeled counterpart of the data plane's `Traffic::sent_bytes`.
+    pub fn posted_bytes(&self) -> f64 {
+        self.total_posted() * PACKET_BYTES
+    }
+
+    /// Total bytes read across NICs.
+    pub fn non_posted_bytes(&self) -> f64 {
+        self.total_non_posted() * PACKET_BYTES
+    }
+
     /// Max/min posted ratio — ∞-like for single-NIC routing, ≈1 for even.
     pub fn posted_imbalance(&self) -> f64 {
         let max = self.posted_pkts.iter().cloned().fold(0.0, f64::max);
@@ -98,6 +109,9 @@ mod tests {
         assert!(c.posted_imbalance().is_infinite());
         assert_eq!(c.posted_pkts[1], 0.0);
         assert!(c.total_posted() > 0.0);
+        // Byte views reconstruct the recorded volumes on both sides.
+        assert!((c.posted_bytes() - 1_000_000.0).abs() < PACKET_BYTES);
+        assert!((c.non_posted_bytes() - 1_000_000.0).abs() < PACKET_BYTES);
     }
 
     #[test]
@@ -106,5 +120,6 @@ mod tests {
         c.write_even(8192.0);
         assert!((c.posted_imbalance() - 1.0).abs() < 1e-9);
         assert!((c.total_posted() - 4.0).abs() < 1e-9);
+        assert!((c.posted_bytes() - 8192.0).abs() < 1e-9);
     }
 }

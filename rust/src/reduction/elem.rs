@@ -29,6 +29,10 @@ impl DType {
 pub trait Elem: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
     /// dtype tag for this element type.
     const DTYPE: DType;
+    /// Wire size of one element in bytes (equals `DTYPE.size_of()` and the
+    /// `size_of::<T>()` the transport's byte counters use); bench/netsim
+    /// volume accounting converts element counts to bytes through this.
+    const SIZE: usize = std::mem::size_of::<Self>();
     /// Additive identity.
     fn zero() -> Self;
     /// Elementwise sum — the reduction used by grad averaging.
@@ -114,5 +118,17 @@ impl Elem for Bf16 {
     }
     fn from_f64(v: f64) -> Self {
         Bf16::from_f32(v as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elem_size_matches_dtype() {
+        assert_eq!(f32::SIZE, DType::F32.size_of());
+        assert_eq!(f64::SIZE, DType::F64.size_of());
+        assert_eq!(Bf16::SIZE, DType::Bf16.size_of());
     }
 }

@@ -9,6 +9,19 @@
 //! on the machine at hand. Both feed the same
 //! [`crate::dispatch::Dataset`] → [`crate::dispatch::SvmDispatcher`]
 //! pipeline, so "train on your own measurements" is a first-class flow.
+//!
+//! Two execution modes:
+//! * **spawn** (default): a fresh world per trial — fully isolated, but
+//!   thread spawn/join dominates small-message cells.
+//! * **persistent** ([`LauncherConfig::persistent`]): one
+//!   [`PersistentWorld`] per topology serves the whole sweep from pinned
+//!   rank threads, with warmup iterations before the timed section —
+//!   lower noise, much larger sweeps feasible.
+//!
+//! Every cell also records `bytes_per_op` — the bytes the schedule moved,
+//! summed over ranks, taken from the endpoints' traffic counters. Byte
+//! volume is schedule-determined, so it is identical across modes; the
+//! `pccl smoke` job asserts exactly that (the schedule-equivalence guard).
 
 use std::time::Instant;
 
@@ -21,6 +34,8 @@ use crate::error::{Error, Result};
 use crate::metrics::Stats;
 use crate::topology::{Machine, Topology};
 
+use super::persistent::{PersistentWorld, TrialReport};
+
 /// One measured sweep cell: trial statistics for a backend at a
 /// (collective, message size, rank count) configuration.
 #[derive(Debug, Clone)]
@@ -32,6 +47,9 @@ pub struct MeasuredCell {
     pub msg_bytes: usize,
     pub ranks: usize,
     pub stats: Stats,
+    /// Bytes actually sent per collective op, summed over all ranks —
+    /// schedule-determined and identical across launcher modes.
+    pub bytes_per_op: u64,
 }
 
 /// Sweep configuration for the launcher.
@@ -41,11 +59,17 @@ pub struct LauncherConfig {
     pub topologies: Vec<Topology>,
     /// Message element counts (f32) per configuration, §III-A convention.
     pub elem_counts: Vec<usize>,
-    /// Timed repetitions (world launches) per cell.
+    /// Timed repetitions per cell.
     pub trials: usize,
-    /// Back-to-back collectives inside one timed launch — amortizes thread
-    /// spawn/join so the sample reflects the per-collective hot path.
+    /// Back-to-back collectives inside one timed trial — amortizes
+    /// fixed costs so the sample reflects the per-collective hot path.
     pub inner_iters: usize,
+    /// Untimed collectives before the timed section of each trial
+    /// (warms allocators, channels, and branch predictors).
+    pub warmup_iters: usize,
+    /// Serve the sweep from one persistent world per topology instead of
+    /// spawning a fresh world per trial.
+    pub persistent: bool,
 }
 
 impl Default for LauncherConfig {
@@ -55,6 +79,8 @@ impl Default for LauncherConfig {
             elem_counts: vec![1 << 10, 1 << 14, 1 << 17],
             trials: 3,
             inner_iters: 8,
+            warmup_iters: 1,
+            persistent: false,
         }
     }
 }
@@ -67,7 +93,15 @@ impl LauncherConfig {
             elem_counts: vec![1 << 10, 1 << 14],
             trials: 2,
             inner_iters: 4,
+            warmup_iters: 1,
+            persistent: false,
         }
+    }
+
+    /// Builder-style toggle for persistent-world mode.
+    pub fn with_persistent(mut self, on: bool) -> Self {
+        self.persistent = on;
+        self
     }
 }
 
@@ -114,6 +148,11 @@ impl MeasuredSweep {
     pub fn train_dispatcher(&self, machine: Machine, seed: u64) -> Result<SvmDispatcher> {
         SvmDispatcher::from_datasets(machine, self.datasets()?, seed)
     }
+
+    /// Total bytes moved per sweep pass (sum of every cell's per-op bytes).
+    pub fn total_bytes_per_op(&self) -> u64 {
+        self.cells.iter().map(|c| c.bytes_per_op).sum()
+    }
 }
 
 /// Spawns rank threads over the in-memory transport and times collectives.
@@ -143,6 +182,75 @@ fn cell_shape(kind: CollKind, elems: usize, p: usize) -> (usize, usize) {
     }
 }
 
+/// Analytic bytes-per-op (summed over ranks) for the flat ring algorithms
+/// — the closed-form side of the schedule-equivalence guard. `None` for
+/// collectives whose flat path is not a plain ring.
+///
+/// `elems` is a count of **f32** elements (the launcher's sweep dtype —
+/// `cell_shape` bakes in the same 4-byte size); other dtypes need their
+/// own scaling.
+pub fn flat_ring_expected_bytes(kind: CollKind, elems: usize, p: usize) -> Option<u64> {
+    let (input_len, _) = cell_shape(kind, elems, p);
+    match kind {
+        // Each rank forwards p-1 blocks of its input size.
+        CollKind::AllGather => Some((p * p.saturating_sub(1) * input_len * 4) as u64),
+        // Each rank sends p-1 partials of input_len / p elements.
+        CollKind::ReduceScatter => Some((p.saturating_sub(1) * input_len * 4) as u64),
+        // Vendor all-reduce is a binomial tree, not a ring.
+        CollKind::AllReduce => None,
+    }
+}
+
+fn run_collective(
+    kind: CollKind,
+    comm: &mut Communicator<f32>,
+    input: &[f32],
+    opts: &CollectiveOptions<f32>,
+) -> Result<()> {
+    match kind {
+        CollKind::AllGather => {
+            all_gather(comm, input, opts)?;
+        }
+        CollKind::ReduceScatter => {
+            reduce_scatter(comm, input, opts)?;
+        }
+        CollKind::AllReduce => {
+            all_reduce(comm, input, opts)?;
+        }
+    }
+    Ok(())
+}
+
+/// The per-rank trial body shared by both launcher modes: warmup, then a
+/// timed run of `inner` back-to-back collectives with traffic deltas.
+fn cell_trial(
+    kind: CollKind,
+    backend: Backend,
+    input_len: usize,
+    inner: usize,
+    warmup: usize,
+) -> impl Fn(&mut Communicator<f32>) -> Result<TrialReport> + Send + Sync + Clone + 'static {
+    move |comm: &mut Communicator<f32>| {
+        let opts = CollectiveOptions::<f32>::default().backend(backend);
+        let input = vec![comm.rank() as f32; input_len];
+        for _ in 0..warmup {
+            run_collective(kind, comm, &input, &opts)?;
+        }
+        let before = comm.traffic();
+        let start = Instant::now();
+        for _ in 0..inner {
+            run_collective(kind, comm, &input, &opts)?;
+        }
+        let secs = start.elapsed().as_secs_f64() / inner as f64;
+        let after = comm.traffic();
+        Ok(TrialReport {
+            secs,
+            sent_msgs: (after.sent_msgs - before.sent_msgs) / inner as u64,
+            sent_bytes: (after.sent_bytes - before.sent_bytes) / inner as u64,
+        })
+    }
+}
+
 impl Launcher {
     pub fn new(cfg: LauncherConfig) -> Self {
         Self { cfg }
@@ -160,7 +268,7 @@ impl Launcher {
     /// configuration.
     pub fn launch<T, R, F>(&self, topo: Topology, f: F) -> Result<Vec<R>>
     where
-        T: Send + 'static,
+        T: Send + Sync + 'static,
         R: Send,
         F: Fn(&mut Communicator<T>) -> Result<R> + Sync,
     {
@@ -194,10 +302,10 @@ impl Launcher {
         results.into_iter().collect()
     }
 
-    /// Time one (topology, collective, backend, size) cell: rank 0's wall
-    /// time over `inner_iters` back-to-back collectives per trial (the
-    /// collectives are globally synchronizing, so every rank finishes
-    /// together).
+    /// Time one (topology, collective, backend, size) cell in spawn mode:
+    /// rank 0's wall time over `inner_iters` back-to-back collectives per
+    /// trial (the collectives are globally synchronizing, so every rank
+    /// finishes together).
     pub fn time_cell(
         &self,
         topo: Topology,
@@ -207,42 +315,79 @@ impl Launcher {
     ) -> Result<MeasuredCell> {
         let p = topo.world_size();
         let (input_len, msg_bytes) = cell_shape(kind, elems, p);
-        let inner = self.cfg.inner_iters.max(1);
+        let trial = cell_trial(
+            kind,
+            backend,
+            input_len,
+            self.cfg.inner_iters.max(1),
+            self.cfg.warmup_iters,
+        );
         let mut stats = Stats::new();
+        let mut bytes_per_op = 0u64;
         for _ in 0..self.cfg.trials.max(1) {
-            let secs = self.launch::<f32, _, _>(topo, move |comm| {
-                let opts = CollectiveOptions::<f32>::default().backend(backend);
-                let input = vec![comm.rank() as f32; input_len];
-                let start = Instant::now();
-                for _ in 0..inner {
-                    match kind {
-                        CollKind::AllGather => {
-                            all_gather(comm, &input, &opts)?;
-                        }
-                        CollKind::ReduceScatter => {
-                            reduce_scatter(comm, &input, &opts)?;
-                        }
-                        CollKind::AllReduce => {
-                            all_reduce(comm, &input, &opts)?;
-                        }
-                    }
-                }
-                Ok(start.elapsed().as_secs_f64() / inner as f64)
-            })?;
-            stats.push(secs[0]);
+            let reports = self.launch::<f32, _, _>(topo, &trial)?;
+            stats.push(reports[0].secs);
+            bytes_per_op = reports.iter().map(|t| t.sent_bytes).sum();
         }
-        Ok(MeasuredCell { kind, backend, msg_bytes, ranks: p, stats })
+        Ok(MeasuredCell { kind, backend, msg_bytes, ranks: p, stats, bytes_per_op })
+    }
+
+    /// Time one cell on a pinned [`PersistentWorld`].
+    pub fn time_cell_in(
+        &self,
+        world: &mut PersistentWorld<f32>,
+        kind: CollKind,
+        backend: Backend,
+        elems: usize,
+    ) -> Result<MeasuredCell> {
+        let p = world.size();
+        let (input_len, msg_bytes) = cell_shape(kind, elems, p);
+        let trial = cell_trial(
+            kind,
+            backend,
+            input_len,
+            self.cfg.inner_iters.max(1),
+            self.cfg.warmup_iters,
+        );
+        let mut stats = Stats::new();
+        let mut bytes_per_op = 0u64;
+        for _ in 0..self.cfg.trials.max(1) {
+            let reports = world.run_trial(trial.clone())?;
+            stats.push(reports[0].secs);
+            bytes_per_op = reports.iter().map(|t| t.sent_bytes).sum();
+        }
+        Ok(MeasuredCell { kind, backend, msg_bytes, ranks: p, stats, bytes_per_op })
     }
 
     /// The full sweep: every registered backend × every collective × every
-    /// (size, topology) cell of the configuration.
+    /// (size, topology) cell of the configuration, in the configured mode.
     pub fn sweep(&self) -> Result<MeasuredSweep> {
+        if self.cfg.persistent {
+            return self.sweep_persistent();
+        }
         let mut cells = Vec::new();
         for &topo in &self.cfg.topologies {
             for &elems in &self.cfg.elem_counts {
                 for kind in CollKind::ALL {
                     for backend in Backend::CONCRETE {
                         cells.push(self.time_cell(topo, kind, backend, elems)?);
+                    }
+                }
+            }
+        }
+        Ok(MeasuredSweep { cells })
+    }
+
+    /// The sweep served from one persistent world per topology: world
+    /// setup is amortized over all of that topology's cells and trials.
+    pub fn sweep_persistent(&self) -> Result<MeasuredSweep> {
+        let mut cells = Vec::new();
+        for &topo in &self.cfg.topologies {
+            let mut world = PersistentWorld::<f32>::new(topo);
+            for &elems in &self.cfg.elem_counts {
+                for kind in CollKind::ALL {
+                    for backend in Backend::CONCRETE {
+                        cells.push(self.time_cell_in(&mut world, kind, backend, elems)?);
                     }
                 }
             }
@@ -302,12 +447,15 @@ mod tests {
             elem_counts: vec![256, 4096],
             trials: 2,
             inner_iters: 2,
+            warmup_iters: 1,
+            persistent: false,
         });
         let sweep = launcher.sweep().unwrap();
         // 2 topologies × 2 sizes × 3 collectives × 4 backends.
         assert_eq!(sweep.cells.len(), 2 * 2 * 3 * 4);
         assert!(sweep.cells.iter().all(|c| c.stats.count() == 2));
         assert!(sweep.cells.iter().all(|c| c.stats.mean() > 0.0));
+        assert!(sweep.cells.iter().all(|c| c.bytes_per_op > 0));
         for kind in CollKind::ALL {
             let d = sweep.dataset(kind).unwrap();
             assert_eq!(d.len(), 4, "one labeled sample per configuration");
@@ -318,6 +466,25 @@ mod tests {
         for kind in CollKind::ALL {
             let b = dispatcher.choose(kind, 4096 * 4, 4);
             assert!(Backend::CONCRETE.contains(&b));
+        }
+    }
+
+    #[test]
+    fn ring_byte_counters_match_the_analytic_schedule() {
+        let launcher = Launcher::new(LauncherConfig {
+            topologies: vec![Topology::flat(4)],
+            elem_counts: vec![512],
+            trials: 1,
+            inner_iters: 2,
+            warmup_iters: 1,
+            persistent: false,
+        });
+        for kind in [CollKind::AllGather, CollKind::ReduceScatter] {
+            let cell = launcher
+                .time_cell(Topology::flat(4), kind, Backend::Vendor, 512)
+                .unwrap();
+            let expect = flat_ring_expected_bytes(kind, 512, 4).unwrap();
+            assert_eq!(cell.bytes_per_op, expect, "{kind:?}");
         }
     }
 }

@@ -13,7 +13,10 @@
 //!   until the real bindings are linked (one import swap).
 //! * [`Launcher`] — spawns rank threads over the in-memory transport and
 //!   times every backend across a message-size × rank-count sweep; the
-//!   timings feed the adaptive dispatcher's training pipeline.
+//!   timings feed the adaptive dispatcher's training pipeline. In
+//!   persistent mode a [`PersistentWorld`] pins the rank threads for the
+//!   whole sweep (lower noise, larger sweeps) and every cell carries
+//!   per-op byte counters.
 //!
 //! Interchange format is HLO **text**, not serialized `HloModuleProto`:
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
@@ -22,10 +25,12 @@
 mod artifacts;
 mod executable;
 mod launcher;
+mod persistent;
 mod service;
 pub(crate) mod xla_stub;
 
 pub use artifacts::{ArtifactEntry, Artifacts, Manifest, ModelMeta, TensorSpecJson};
 pub use executable::{Executable, HostTensor, Runtime, TensorSpec};
-pub use launcher::{Launcher, LauncherConfig, MeasuredCell, MeasuredSweep};
+pub use launcher::{flat_ring_expected_bytes, Launcher, LauncherConfig, MeasuredCell, MeasuredSweep};
+pub use persistent::{PersistentWorld, TrialReport};
 pub use service::{DeviceHandle, DeviceService};

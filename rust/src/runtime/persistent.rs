@@ -1,0 +1,219 @@
+//! Persistent-world execution: one [`TransportHub`] plus pinned rank
+//! threads serving a work queue of trials.
+//!
+//! The measured sweep's original mode spawns (and tears down) a fresh
+//! world per trial, which dominates small-message timings with thread
+//! spawn/join noise. A [`PersistentWorld`] amortizes world setup across
+//! the whole sweep: each rank thread owns its [`Communicator`] for the
+//! world's lifetime, pops trial closures off its queue, and reports a
+//! [`TrialReport`] (wall seconds + byte counters) back to the driver. The
+//! byte counters come from the endpoint's [`crate::comm::Traffic`] deltas,
+//! so every trial records exactly what the schedule moved — the
+//! schedule-equivalence guard in `pccl smoke` compares them against the
+//! fresh-world path.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::comm::{Communicator, TransportHub, DEFAULT_RECV_TIMEOUT};
+use crate::error::{Error, Result};
+use crate::reduction::Elem;
+use crate::topology::Topology;
+
+/// What one rank reports for one trial.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrialReport {
+    /// Wall seconds of the timed section (per collective op if the trial
+    /// divides by its inner iteration count).
+    pub secs: f64,
+    /// Messages this rank sent inside the timed section.
+    pub sent_msgs: u64,
+    /// Bytes this rank sent inside the timed section.
+    pub sent_bytes: u64,
+}
+
+type Job<T> = Box<dyn FnOnce(&mut Communicator<T>) -> Result<TrialReport> + Send>;
+
+/// A long-lived world: pinned rank threads over one shared transport,
+/// each serving trial closures from its own queue.
+///
+/// A trial that fails (or times out) poisons the world: the surviving
+/// ranks' op sequences are no longer aligned, so further trials would
+/// exchange garbage — subsequent [`PersistentWorld::run_trial`] calls
+/// return an error instead.
+pub struct PersistentWorld<T: Elem> {
+    topo: Topology,
+    job_txs: Vec<Sender<Job<T>>>,
+    done_rx: Receiver<(usize, Result<TrialReport>)>,
+    handles: Vec<JoinHandle<()>>,
+    poisoned: bool,
+}
+
+impl<T: Elem> PersistentWorld<T> {
+    /// Stand up the transport and pin one worker thread per rank.
+    pub fn new(topo: Topology) -> Self {
+        let size = topo.world_size();
+        let (_hub, eps) = TransportHub::<T>::new(size);
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut job_txs = Vec::with_capacity(size);
+        let mut handles = Vec::with_capacity(size);
+        for ep in eps {
+            let rank = ep.rank();
+            let (jtx, jrx) = mpsc::channel::<Job<T>>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pccl-world-{rank}"))
+                .spawn(move || {
+                    let mut comm = match Communicator::new(ep, topo) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            let _ = done.send((rank, Err(e)));
+                            return;
+                        }
+                    };
+                    while let Ok(job) = jrx.recv() {
+                        let out = job(&mut comm);
+                        if done.send((rank, out)).is_err() {
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn persistent rank thread");
+            job_txs.push(jtx);
+            handles.push(handle);
+        }
+        Self {
+            topo,
+            job_txs,
+            done_rx,
+            handles,
+            poisoned: false,
+        }
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    pub fn size(&self) -> usize {
+        self.topo.world_size()
+    }
+
+    /// Whether a failed trial has invalidated this world.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Run one SPMD trial on every pinned rank thread; returns per-rank
+    /// reports in rank order. The first rank error wins (the others
+    /// surface as timeouts/closed-transport and are discarded).
+    pub fn run_trial<F>(&mut self, f: F) -> Result<Vec<TrialReport>>
+    where
+        F: Fn(&mut Communicator<T>) -> Result<TrialReport> + Send + Sync + Clone + 'static,
+    {
+        if self.poisoned {
+            return Err(Error::Dispatch(
+                "persistent world poisoned by an earlier failed trial".into(),
+            ));
+        }
+        for tx in &self.job_txs {
+            let g = f.clone();
+            tx.send(Box::new(move |c: &mut Communicator<T>| g(c)))
+                .map_err(|_| Error::TransportClosed { rank: 0 })?;
+        }
+        let p = self.size();
+        let mut out = vec![TrialReport::default(); p];
+        let mut first_err: Option<Error> = None;
+        // Generous enough for stragglers to hit their own recv timeout and
+        // report it, rather than us abandoning them mid-collective.
+        let deadline = DEFAULT_RECV_TIMEOUT + Duration::from_secs(30);
+        for _ in 0..p {
+            match self.done_rx.recv_timeout(deadline) {
+                Ok((rank, Ok(report))) => out[rank] = report,
+                Ok((_, Err(e))) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    // A rank died without reporting (panic) — unrecoverable.
+                    self.poisoned = true;
+                    return Err(Error::RecvTimeout {
+                        src: 0,
+                        tag: 0,
+                        ms: deadline.as_millis() as u64,
+                    });
+                }
+            }
+        }
+        match first_err {
+            None => Ok(out),
+            Some(e) => {
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
+}
+
+impl<T: Elem> Drop for PersistentWorld<T> {
+    fn drop(&mut self) {
+        // Closing the job queues ends each worker's loop.
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Comm;
+
+    #[test]
+    fn trials_reuse_the_same_world() {
+        let mut world = PersistentWorld::<f32>::new(Topology::flat(4));
+        for round in 0..3u32 {
+            let reports = world
+                .run_trial(move |c| {
+                    c.begin_op();
+                    let p = c.size();
+                    let r = c.rank();
+                    let before = c.traffic();
+                    c.send((r + 1) % p, 0, vec![round as f32; 2])?;
+                    let got = c.recv((r + p - 1) % p, 0)?;
+                    if got != vec![round as f32; 2] {
+                        return Err(Error::Dispatch(format!("bad payload {got:?}")));
+                    }
+                    let after = c.traffic();
+                    Ok(TrialReport {
+                        secs: 0.0,
+                        sent_msgs: after.sent_msgs - before.sent_msgs,
+                        sent_bytes: after.sent_bytes - before.sent_bytes,
+                    })
+                })
+                .unwrap();
+            assert_eq!(reports.len(), 4);
+            assert!(reports.iter().all(|t| t.sent_msgs == 1 && t.sent_bytes == 8));
+        }
+    }
+
+    #[test]
+    fn failed_trial_poisons_the_world() {
+        let mut world = PersistentWorld::<f32>::new(Topology::flat(2));
+        let err = world
+            .run_trial(|c| {
+                if c.rank() == 0 {
+                    Err(Error::Dispatch("boom".into()))
+                } else {
+                    Ok(TrialReport::default())
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        assert!(world.is_poisoned());
+        assert!(world.run_trial(|_| Ok(TrialReport::default())).is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! The zero-copy chunked data plane, end to end:
+//!
+//! * **No intermediate materialization** — ring and hierarchical
+//!   all-gather must deliver every block still backed by the *origin
+//!   rank's input storage* (all ranks share one address space, so storage
+//!   identity across threads is a direct proof that no hop copied).
+//! * **Oracle equivalence on awkward shapes** — every collective over
+//!   non-power-of-two rank counts (3, 6, 12) and uneven chunk splits.
+//! * **Persistent world** — a ≥ 8-rank measured sweep over pinned rank
+//!   threads reports byte-for-byte the same schedule volume as the
+//!   spawn-per-trial mode, and the flat-ring cells match the closed-form
+//!   schedule.
+
+use pccl::backends::{
+    all_gather, all_reduce, broadcast, gather, reduce_scatter, scatter, Backend, CollKind,
+    CollectiveOptions,
+};
+use pccl::collectives::{
+    hier_all_gather_chunks, oracle, pipelined_hier_all_gather, rec_all_gather,
+    ring_all_gather_chunks, InterAlgo, Pccl,
+};
+use pccl::comm::{Chunk, CommWorld};
+use pccl::runtime::{flat_ring_expected_bytes, Launcher, LauncherConfig};
+use pccl::topology::Topology;
+
+fn rank_input(r: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| (r * 1000 + i) as f32).collect()
+}
+
+#[test]
+fn ring_all_gather_never_materializes_a_block() {
+    let p = 6;
+    let m = 8;
+    let world = CommWorld::<f32>::new(p);
+    let outs = world.run(move |c| {
+        let input = Chunk::from_vec(rank_input(c.rank(), m));
+        let own_id = input.storage_id();
+        let blocks = ring_all_gather_chunks(c, input).unwrap();
+        let ids: Vec<usize> = blocks.iter().map(Chunk::storage_id).collect();
+        let data: Vec<Vec<f32>> = blocks.iter().map(|b| b.to_vec()).collect();
+        (own_id, ids, data)
+    });
+    let origin_ids: Vec<usize> = outs.iter().map(|(id, _, _)| *id).collect();
+    for (r, (_, ids, data)) in outs.iter().enumerate() {
+        for q in 0..p {
+            assert_eq!(
+                ids[q], origin_ids[q],
+                "rank {r} re-materialized block {q} (it must be a view of \
+                 rank {q}'s input storage)"
+            );
+            assert_eq!(data[q], rank_input(q, m), "rank {r} block {q} content");
+        }
+    }
+}
+
+#[test]
+fn hier_all_gather_never_materializes_a_block() {
+    // 2 nodes × 4 GPUs = 8 ranks: blocks traverse an inter-node phase,
+    // an intra-node forwarding ring, and the (pointer-only) unshuffle.
+    let topo = Topology::new(2, 4, 1).unwrap();
+    let p = topo.world_size();
+    let m = 5;
+    for algo in [InterAlgo::Ring, InterAlgo::Rec] {
+        let world = CommWorld::<f32>::with_topology(topo);
+        let outs = world.run(move |c| {
+            let input = Chunk::from_vec(rank_input(c.rank(), m));
+            let own_id = input.storage_id();
+            let blocks = hier_all_gather_chunks(c, input, algo).unwrap();
+            let ids: Vec<usize> = blocks.iter().map(Chunk::storage_id).collect();
+            let data = Chunk::concat(&blocks);
+            (own_id, ids, data)
+        });
+        let origin_ids: Vec<usize> = outs.iter().map(|(id, _, _)| *id).collect();
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, m)).collect();
+        let expect = oracle::all_gather(&ins);
+        for (r, (_, ids, data)) in outs.iter().enumerate() {
+            assert_eq!(data, &expect, "algo={algo:?} rank {r} output");
+            for q in 0..p {
+                assert_eq!(
+                    ids[q], origin_ids[q],
+                    "algo={algo:?}: rank {r} re-materialized block {q}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn facade_chunked_all_gather_routes_and_forwards() {
+    let topo = Topology::new(2, 3, 1).unwrap();
+    let p = topo.world_size();
+    let world = CommWorld::<f32>::with_topology(topo);
+    let outs = world.run(move |c| {
+        let facade = Pccl::<f32>::with_backend(Backend::PcclRing);
+        let input = Chunk::from_vec(rank_input(c.rank(), 4));
+        let own_id = input.storage_id();
+        let blocks = facade.all_gather_chunks(c, input).unwrap();
+        (own_id, blocks.iter().map(Chunk::storage_id).collect::<Vec<_>>(), Chunk::concat(&blocks))
+    });
+    let origin_ids: Vec<usize> = outs.iter().map(|(id, _, _)| *id).collect();
+    let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, 4)).collect();
+    let expect = oracle::all_gather(&ins);
+    for (r, (_, ids, data)) in outs.iter().enumerate() {
+        assert_eq!(data, &expect, "rank {r}");
+        for q in 0..p {
+            assert_eq!(ids[q], origin_ids[q], "facade rank {r} block {q}");
+        }
+    }
+}
+
+/// Every backend × every collective ≡ oracle on the non-power-of-two rank
+/// counts the chunked refactor must not regress: 3, 6, 12.
+#[test]
+fn all_collectives_match_oracle_on_non_pow2_ranks() {
+    let topos = [
+        Topology::flat(3),
+        Topology::new(3, 2, 1).unwrap(), // 6 ranks, non-pow2 nodes
+        Topology::new(3, 4, 1).unwrap(), // 12 ranks
+    ];
+    for topo in topos {
+        let p = topo.world_size();
+        let m = 7; // prime block length → uneven against every split
+        for backend in Backend::CONCRETE {
+            let world = CommWorld::<f32>::with_topology(topo);
+            let outs = world.run(move |c| {
+                let opts = CollectiveOptions::default().backend(backend);
+                let r = c.rank();
+                let ag = all_gather(c, &rank_input(r, m), &opts).unwrap();
+                let rs = reduce_scatter(c, &rank_input(r, p * 3), &opts).unwrap();
+                let ar = all_reduce(c, &rank_input(r, m), &opts).unwrap();
+                (ag, rs, ar)
+            });
+            let ag_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, m)).collect();
+            let rs_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * 3)).collect();
+            for (r, (ag, rs, ar)) in outs.iter().enumerate() {
+                assert_eq!(ag, &oracle::all_gather(&ag_ins), "{backend:?} ag p={p} r={r}");
+                assert_eq!(
+                    rs,
+                    &oracle::reduce_scatter(&rs_ins, r),
+                    "{backend:?} rs p={p} r={r}"
+                );
+                assert_eq!(ar, &oracle::all_reduce(&ag_ins), "{backend:?} ar p={p} r={r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_all_gather_uneven_chunk_splits() {
+    // Chunk sizes deliberately misaligned with the rank count (cb = 5 on
+    // p = 6) and with each other (split counts 2 and 5 over m = 10).
+    let topo = Topology::new(3, 2, 1).unwrap();
+    let p = topo.world_size();
+    let m = 10;
+    for chunks in [2usize, 5] {
+        let world = CommWorld::<f32>::with_topology(topo);
+        let outs = world.run(move |c| {
+            pipelined_hier_all_gather(c, &rank_input(c.rank(), m), InterAlgo::Rec, chunks)
+                .unwrap()
+        });
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, m)).collect();
+        let expect = oracle::all_gather(&ins);
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o, &expect, "chunks={chunks} r={r}");
+        }
+    }
+}
+
+#[test]
+fn recursive_still_requires_pow2_and_hier_falls_back() {
+    // Recursive on 3/6/12 must reject; the hierarchical Rec route must
+    // silently take the ring fallback instead (covered above) — assert
+    // the rejection is still a typed error, not a wrong answer.
+    for p in [3usize, 6, 12] {
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(|c| rec_all_gather(c, &[1.0, 2.0]).is_err());
+        assert!(outs.iter().all(|&e| e), "p={p}");
+    }
+}
+
+#[test]
+fn rooted_collectives_on_non_pow2_ranks() {
+    for p in [3usize, 6, 12] {
+        let root = p - 1;
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(move |c| {
+            let params = broadcast(c, &rank_input(root, 5), root).unwrap();
+            let gathered = gather(c, &params[..2], root).unwrap();
+            let shard = if c.rank() == root {
+                scatter(c, &gathered, root).unwrap()
+            } else {
+                scatter(c, &[], root).unwrap()
+            };
+            (params, shard)
+        });
+        let expect_b = rank_input(root, 5);
+        for (r, (params, shard)) in outs.iter().enumerate() {
+            assert_eq!(params, &expect_b, "p={p} r={r} broadcast");
+            assert_eq!(shard.as_slice(), &expect_b[..2], "p={p} r={r} scatter round-trip");
+        }
+    }
+}
+
+#[test]
+fn persistent_world_sweep_matches_spawn_mode_bytes() {
+    // ≥ 8 ranks, hierarchical topology, both launcher modes: identical
+    // schedule volume per cell proves the chunked plane changed *copies*,
+    // never *communication*.
+    let base = LauncherConfig {
+        topologies: vec![Topology::new(2, 4, 1).unwrap()],
+        elem_counts: vec![256, 1024],
+        trials: 2,
+        inner_iters: 2,
+        warmup_iters: 1,
+        persistent: false,
+    };
+    let spawn = Launcher::new(base.clone()).sweep().unwrap();
+    let persist = Launcher::new(base.with_persistent(true)).sweep().unwrap();
+    assert_eq!(spawn.cells.len(), persist.cells.len());
+    assert_eq!(spawn.cells.len(), 2 * 3 * 4); // sizes × collectives × backends
+    for (a, b) in spawn.cells.iter().zip(&persist.cells) {
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.backend, b.backend);
+        assert_eq!(a.ranks, 8);
+        assert!(b.stats.mean() > 0.0, "{:?}/{:?}", b.kind, b.backend);
+        assert_eq!(
+            a.bytes_per_op, b.bytes_per_op,
+            "schedule volume diverged for {:?}/{:?} at {} B",
+            a.kind, a.backend, a.msg_bytes
+        );
+        assert!(a.bytes_per_op > 0);
+    }
+    // Flat-ring backends must also match the closed-form schedule volume.
+    for c in &persist.cells {
+        if !matches!(c.backend, Backend::Vendor | Backend::CrayMpich) {
+            continue;
+        }
+        if let Some(expect) = flat_ring_expected_bytes(c.kind, c.msg_bytes / 4, c.ranks) {
+            assert_eq!(
+                c.bytes_per_op, expect,
+                "analytic ring volume for {:?} at {} B",
+                c.kind, c.msg_bytes
+            );
+        }
+    }
+    // And the measured sweep still trains a dispatcher end to end.
+    let d = persist
+        .train_dispatcher(pccl::topology::Machine::Generic, 7)
+        .unwrap();
+    assert!(Backend::CONCRETE.contains(&d.choose(CollKind::AllGather, 4096, 8)));
+}
