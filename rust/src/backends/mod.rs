@@ -15,8 +15,9 @@
 use std::sync::Arc;
 
 use crate::collectives::{
-    hier_all_gather, hier_all_gather_chunks, hier_all_reduce, hier_reduce_scatter, ring_all_gather,
-    ring_all_gather_chunks, ring_all_reduce, ring_reduce_scatter, tree_all_reduce, InterAlgo,
+    hier_all_gather, hier_all_gather_chunks, hier_all_reduce_chunks, hier_reduce_scatter_chunks,
+    ring_all_gather, ring_all_gather_chunks, ring_all_reduce_chunks, ring_reduce_scatter_chunks,
+    tree_all_reduce, InterAlgo,
 };
 use crate::comm::{Chunk, Communicator};
 use crate::error::Result;
@@ -206,53 +207,86 @@ pub fn all_gather_chunks<T: Elem>(
     }
 }
 
-/// Reduce-scatter through the selected backend.
+/// Host-loop combine for the backends that reduce on the CPU no matter
+/// what the caller injected (Cray-MPICH, Observation 1).
+fn host_combine<T: Elem>(op: ReduceOp) -> CombineFn<T> {
+    std::sync::Arc::new(move |acc: &mut [T], src: &[T]| reduce_into_op(acc, src, op))
+}
+
+/// Reduce-scatter through the selected backend, returning rank `r`'s
+/// reduced block as a chunk. On every `p > 1` path the result is the
+/// unique full-range view of transport-delivered storage (`into_vec` on
+/// it is a move) — the zero-copy hot path ZeRO-3 shard updates hold
+/// directly; see the ownership model in [`crate::collectives`].
+pub fn reduce_scatter_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    opts: &CollectiveOptions<T>,
+) -> Result<Chunk<T>> {
+    let bytes = input.len() * std::mem::size_of::<T>();
+    match opts.resolve(CollKind::ReduceScatter, bytes, c.size()) {
+        // Cray-MPICH reduces on the host no matter what combine the caller
+        // injected (Observation 1) — model that faithfully.
+        Backend::CrayMpich => ring_reduce_scatter_chunks(c, input, &host_combine(opts.op)),
+        Backend::Vendor => ring_reduce_scatter_chunks(c, input, &opts.effective_combine()),
+        Backend::PcclRing => {
+            hier_reduce_scatter_chunks(c, input, &opts.effective_combine(), InterAlgo::Ring)
+        }
+        Backend::PcclRec | Backend::Auto => {
+            hier_reduce_scatter_chunks(c, input, &opts.effective_combine(), InterAlgo::Rec)
+        }
+    }
+}
+
+/// Reduce-scatter through the selected backend (slice API — wraps the
+/// input once; the output materialization is a move, see
+/// [`reduce_scatter_chunks`]).
 pub fn reduce_scatter<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
     opts: &CollectiveOptions<T>,
 ) -> Result<Vec<T>> {
-    let bytes = std::mem::size_of_val(input);
-    match opts.resolve(CollKind::ReduceScatter, bytes, c.size()) {
-        // Cray-MPICH reduces on the host no matter what combine the caller
-        // injected (Observation 1) — model that faithfully.
-        Backend::CrayMpich => {
-            let op = opts.op;
-            let cpu: CombineFn<T> =
-                std::sync::Arc::new(move |acc: &mut [T], src: &[T]| reduce_into_op(acc, src, op));
-            ring_reduce_scatter(c, input, &cpu)
+    Ok(reduce_scatter_chunks(c, Chunk::from_slice(input), opts)?.into_vec())
+}
+
+/// All-reduce through the selected backend, returning the result as
+/// rank-ordered chunk blocks that concatenate to `input.len()` elements.
+/// The PCCL and ring paths compose chunk reduce-scatter ∘ chunk all-gather
+/// with no intermediate `Vec`; the vendor path's binomial tree
+/// materializes one reduced buffer by construction and surfaces it as a
+/// single chunk.
+pub fn all_reduce_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    opts: &CollectiveOptions<T>,
+) -> Result<Vec<Chunk<T>>> {
+    let bytes = input.len() * std::mem::size_of::<T>();
+    match opts.resolve(CollKind::AllReduce, bytes, c.size()) {
+        Backend::CrayMpich => ring_all_reduce_chunks(c, input, &host_combine(opts.op)),
+        // Vendor libraries use double binary trees for all-reduce [15].
+        Backend::Vendor => {
+            let out = tree_all_reduce(c, input.as_slice(), &opts.effective_combine())?;
+            Ok(vec![Chunk::from_vec(out)])
         }
-        Backend::Vendor => ring_reduce_scatter(c, input, &opts.effective_combine()),
         Backend::PcclRing => {
-            hier_reduce_scatter(c, input, &opts.effective_combine(), InterAlgo::Ring)
+            hier_all_reduce_chunks(c, input, &opts.effective_combine(), InterAlgo::Ring)
         }
         Backend::PcclRec | Backend::Auto => {
-            hier_reduce_scatter(c, input, &opts.effective_combine(), InterAlgo::Rec)
+            hier_all_reduce_chunks(c, input, &opts.effective_combine(), InterAlgo::Rec)
         }
     }
 }
 
-/// All-reduce through the selected backend.
+/// All-reduce through the selected backend (slice API). A single-block
+/// result (the vendor tree path) moves out of its chunk with no copy;
+/// multi-block results pay the one output concat.
 pub fn all_reduce<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
     opts: &CollectiveOptions<T>,
 ) -> Result<Vec<T>> {
-    let bytes = std::mem::size_of_val(input);
-    match opts.resolve(CollKind::AllReduce, bytes, c.size()) {
-        Backend::CrayMpich => {
-            let op = opts.op;
-            let cpu: CombineFn<T> =
-                std::sync::Arc::new(move |acc: &mut [T], src: &[T]| reduce_into_op(acc, src, op));
-            ring_all_reduce(c, input, &cpu)
-        }
-        // Vendor libraries use double binary trees for all-reduce [15].
-        Backend::Vendor => tree_all_reduce(c, input, &opts.effective_combine()),
-        Backend::PcclRing => hier_all_reduce(c, input, &opts.effective_combine(), InterAlgo::Ring),
-        Backend::PcclRec | Backend::Auto => {
-            hier_all_reduce(c, input, &opts.effective_combine(), InterAlgo::Rec)
-        }
-    }
+    let blocks = all_reduce_chunks(c, Chunk::from_slice(input), opts)?;
+    Ok(crate::collectives::blocks_into_vec(blocks))
 }
 
 /// Broadcast from `root` (binomial tree — backend-independent).

@@ -25,9 +25,9 @@ use crate::error::Result;
 use crate::reduction::offload::CombineFn;
 use crate::reduction::Elem;
 
-use super::recursive::{rec_all_gather_chunks, rec_reduce_scatter};
-use super::ring::{ring_all_gather_chunks, ring_reduce_scatter};
-use super::{check_all_gather, check_reduce_scatter};
+use super::recursive::{rec_all_gather_chunks, rec_reduce_scatter_chunks};
+use super::ring::{ring_all_gather_chunks, ring_reduce_scatter_chunks};
+use super::{blocks_into_vec, check_all_gather, check_reduce_scatter, pad_chunk, trim_blocks};
 
 /// Inter-node algorithm choice for the hierarchical collectives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -61,17 +61,17 @@ fn inter_all_gather_chunks<T: Elem>(
     }
 }
 
-fn inter_reduce_scatter<T: Elem>(
+fn inter_reduce_scatter_chunks<T: Elem>(
     c: &mut Communicator<T>,
-    input: &[T],
+    input: Chunk<T>,
     combine: &CombineFn<T>,
     algo: InterAlgo,
-) -> Result<Vec<T>> {
+) -> Result<Chunk<T>> {
     let n = c.topology().nodes();
     let mut inter = c.inter_node()?;
     match algo.effective(n) {
-        InterAlgo::Ring => ring_reduce_scatter(&mut inter, input, combine),
-        InterAlgo::Rec => rec_reduce_scatter(&mut inter, input, combine),
+        InterAlgo::Ring => ring_reduce_scatter_chunks(&mut inter, input, combine),
+        InterAlgo::Rec => rec_reduce_scatter_chunks(&mut inter, input, combine),
     }
 }
 
@@ -151,20 +151,26 @@ pub fn hier_all_gather<T: Elem>(
     Ok(Chunk::concat(&blocks))
 }
 
-/// Two-level reduce-scatter (intra first, then inter).
-pub fn hier_reduce_scatter<T: Elem>(
+/// Two-level reduce-scatter over chunks (intra first, then inter).
+///
+/// Returns rank `r`'s reduced block. For `p > 1` the result is the
+/// chunk the inter-node phase's traveling partial landed in — the unique
+/// full-range view of transport-delivered storage, so `into_vec` on it is
+/// a move (see [`ring_reduce_scatter_chunks`]); a ZeRO-3 shard update can
+/// hold it directly with zero copies.
+pub fn hier_reduce_scatter_chunks<T: Elem>(
     c: &mut Communicator<T>,
-    input: &[T],
+    input: Chunk<T>,
     combine: &CombineFn<T>,
     inter: InterAlgo,
-) -> Result<Vec<T>> {
+) -> Result<Chunk<T>> {
     let p = c.size();
-    let b = check_reduce_scatter(input, p)?;
+    let b = check_reduce_scatter(input.as_slice(), p)?;
     let topo = c.topology();
     if !topo.supports_hierarchical() {
         return match inter.effective(p) {
-            InterAlgo::Ring => ring_reduce_scatter(c, input, combine),
-            InterAlgo::Rec => rec_reduce_scatter(c, input, combine),
+            InterAlgo::Ring => ring_reduce_scatter_chunks(c, input, combine),
+            InterAlgo::Rec => rec_reduce_scatter_chunks(c, input, combine),
         };
     }
     let n = topo.nodes();
@@ -175,7 +181,8 @@ pub fn hier_reduce_scatter<T: Elem>(
     // and combines contributions straight out of `input`. A reduction
     // writes new data at every hop by definition, so (unlike all-gather)
     // the partials themselves must be materialized — but each received
-    // partial is uniquely owned, so the in-place combine never copies.
+    // partial is uniquely owned exact storage, so the in-place combine
+    // never copies.
     //
     // Segment `l` = blocks {(node, l) : node ∈ 0..N} = the data destined
     // for local id `l`'s inter-node phase.
@@ -183,14 +190,14 @@ pub fn hier_reduce_scatter<T: Elem>(
         let mut v = Vec::with_capacity(n * b);
         for node in 0..n {
             let src = (node * m_local + seg) * b;
-            v.extend_from_slice(&input[src..src + b]);
+            v.extend_from_slice(&input.as_slice()[src..src + b]);
         }
         v
     };
     let add_segment = |acc: &mut [T], seg: usize| {
         for node in 0..n {
             let src = (node * m_local + seg) * b;
-            combine(&mut acc[node * b..(node + 1) * b], &input[src..src + b]);
+            combine(&mut acc[node * b..(node + 1) * b], &input.as_slice()[src..src + b]);
         }
     };
     let partial = {
@@ -207,45 +214,68 @@ pub fn hier_reduce_scatter<T: Elem>(
             for s in 0..m_local - 1 {
                 let recv_seg = idx::rs_recv_block(l, m_local, s);
                 let mut got = intra.sendrecv_chunk(right, current, left, s as u32)?;
-                add_segment(got.make_mut(), recv_seg);
+                add_segment(got.make_mut_exact(), recv_seg);
                 current = got;
             }
             current
         }
     };
     debug_assert_eq!(partial.len(), n * b);
-    // Inter-node reduce-scatter over blocks of b elements.
-    let out = inter_reduce_scatter(c, partial.as_slice(), combine, inter)?;
+    // Inter-node reduce-scatter over blocks of b elements — the partial
+    // chunk feeds it directly, no slice round-trip.
+    let out = inter_reduce_scatter_chunks(c, partial, combine, inter)?;
     debug_assert_eq!(out.len(), b);
     Ok(out)
 }
 
-/// Two-level all-reduce = hierarchical RS ∘ hierarchical AG. Pads to a
-/// multiple of `p`.
+/// Two-level reduce-scatter, slice API.
+pub fn hier_reduce_scatter<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    combine: &CombineFn<T>,
+    inter: InterAlgo,
+) -> Result<Vec<T>> {
+    Ok(hier_reduce_scatter_chunks(c, Chunk::from_slice(input), combine, inter)?.into_vec())
+}
+
+/// Two-level all-reduce over chunks = hierarchical RS ∘ hierarchical AG
+/// with no intermediate `Vec`: the reduced shard chunk feeds the gather
+/// directly. Pads once when `p ∤ n` and trims the padding off the
+/// returned block list as a view adjustment; the blocks concatenate to
+/// exactly `input.len()` elements. Runs the composition at every `p`
+/// (including degenerate single-rank topologies), keeping op-sequence
+/// numbering size-independent.
+pub fn hier_all_reduce_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    combine: &CombineFn<T>,
+    inter: InterAlgo,
+) -> Result<Vec<Chunk<T>>> {
+    check_all_gather(input.as_slice())?;
+    let p = c.size();
+    let n = input.len();
+    let padded = n.div_ceil(p) * p;
+    // §Perf: pad at most once, straight into the reduce-scatter input.
+    let padded_input = if padded == n {
+        input
+    } else {
+        pad_chunk(&input, padded)
+    };
+    let mine = hier_reduce_scatter_chunks(c, padded_input, combine, inter)?;
+    let mut blocks = hier_all_gather_chunks(c, mine, inter)?;
+    trim_blocks(&mut blocks, n);
+    Ok(blocks)
+}
+
+/// Two-level all-reduce, slice API.
 pub fn hier_all_reduce<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
     combine: &CombineFn<T>,
     inter: InterAlgo,
 ) -> Result<Vec<T>> {
-    check_all_gather(input)?;
-    let p = c.size();
-    if p == 1 {
-        return Ok(input.to_vec());
-    }
-    let n = input.len();
-    let padded = n.div_ceil(p) * p;
-    // §Perf: avoid the pad-copy on the (common) aligned path.
-    let mine = if padded == n {
-        hier_reduce_scatter(c, input, combine, inter)?
-    } else {
-        let mut buf = input.to_vec();
-        buf.resize(padded, T::zero());
-        hier_reduce_scatter(c, &buf, combine, inter)?
-    };
-    let mut out = hier_all_gather(c, &mine, inter)?;
-    out.truncate(n);
-    Ok(out)
+    let blocks = hier_all_reduce_chunks(c, Chunk::from_slice(input), combine, inter)?;
+    Ok(blocks_into_vec(blocks))
 }
 
 #[cfg(test)]

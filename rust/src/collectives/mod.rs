@@ -29,13 +29,28 @@
 //!   backed by the origin rank's input storage.
 //! * **Materialize only when mutating or when the caller needs contiguous
 //!   memory.** Reductions write new data at every hop by definition —
-//!   they combine through [`crate::comm::Chunk::make_mut`], which mutates
-//!   in place when the received partial is uniquely owned (the common
-//!   case: the sender moved its reference into the transport) and
-//!   copies-on-write only when the storage is still shared (e.g. the first
-//!   combine into a view of the local input). The slice-API wrappers pay
-//!   exactly two copies: wrapping the borrowed input into a chunk, and
-//!   [`crate::comm::Chunk::concat`]-ing the final output.
+//!   they combine through [`crate::comm::Chunk::make_mut_exact`]: in place
+//!   when the received partial is uniquely owned exact-size storage (the
+//!   steady state — the sender moved its reference into the transport),
+//!   one exact-range copy at a partial's *first* combine (where the
+//!   received chunk is still a sub-view of the sender's input). The
+//!   `*_reduce_scatter_chunks` entry points ([`ring_reduce_scatter_chunks`],
+//!   [`rec_reduce_scatter_chunks`], [`hier_reduce_scatter_chunks`]) return
+//!   that traveling partial directly: for `p > 1` the result is always the
+//!   unique full-range view of transport-delivered storage, so
+//!   [`crate::comm::Chunk::into_vec`] on it is a move, never a copy (at
+//!   `p == 1` the input chunk itself comes back). The slice-API wrappers
+//!   pay exactly two copies: wrapping the borrowed input into a chunk and
+//!   materializing the output.
+//! * **All-reduce composes chunk-native.** `*_all_reduce_chunks` is chunk
+//!   reduce-scatter ∘ chunk all-gather with no intermediate `Vec`: the
+//!   reduced shard chunk feeds the gather directly, unaligned inputs are
+//!   padded **once** into the chunk the reduce-scatter consumes
+//!   ([`pad_chunk`]), and the trailing padding is trimmed off the returned
+//!   block list as an O(1) view adjustment ([`trim_blocks`] — no
+//!   truncation copy). The composition also runs at `p == 1`, so the
+//!   op-sequence numbering (and therefore every wire tag) advances
+//!   identically for every communicator size.
 //! * **Rooted data must be owned per destination.** Scatter materializes
 //!   one block per peer (the source lives in the root's borrowed input);
 //!   gather copies received blocks into the root's contiguous output.
@@ -52,17 +67,29 @@ mod shuffle;
 mod tree;
 
 pub use hierarchical::{
-    hier_all_gather, hier_all_gather_chunks, hier_all_reduce, hier_reduce_scatter, InterAlgo,
+    hier_all_gather, hier_all_gather_chunks, hier_all_reduce, hier_all_reduce_chunks,
+    hier_reduce_scatter, hier_reduce_scatter_chunks, InterAlgo,
 };
 pub use pccl::Pccl;
-pub use pipelined::pipelined_hier_all_gather;
+pub use pipelined::{
+    pipelined_hier_all_gather, pipelined_hier_all_reduce, pipelined_hier_all_reduce_chunks,
+    pipelined_hier_reduce_scatter, pipelined_hier_reduce_scatter_chunks,
+};
 pub use pt2pt::{broadcast, gather, reduce, scatter};
-pub use recursive::{rec_all_gather, rec_all_gather_chunks, rec_all_reduce, rec_reduce_scatter};
-pub use ring::{ring_all_gather, ring_all_gather_chunks, ring_all_reduce, ring_reduce_scatter};
+pub use recursive::{
+    rec_all_gather, rec_all_gather_chunks, rec_all_reduce, rec_all_reduce_chunks,
+    rec_reduce_scatter, rec_reduce_scatter_chunks,
+};
+pub use ring::{
+    ring_all_gather, ring_all_gather_chunks, ring_all_reduce, ring_all_reduce_chunks,
+    ring_reduce_scatter, ring_reduce_scatter_chunks,
+};
 pub use shuffle::{shuffle_gather, transpose_blocks, transpose_chunk_blocks, unshuffle};
 pub use tree::tree_all_reduce;
 
+use crate::comm::Chunk;
 use crate::error::{Error, Result};
+use crate::reduction::Elem;
 
 /// Validate an all-gather input (any non-empty block is fine).
 pub(crate) fn check_all_gather<T>(input: &[T]) -> Result<()> {
@@ -86,4 +113,47 @@ pub(crate) fn check_reduce_scatter<T>(input: &[T], p: usize) -> Result<usize> {
         });
     }
     Ok(input.len() / p)
+}
+
+/// Zero-pad `input` to `padded` elements in a single pass: one allocation
+/// at the final size, one copy of the payload (the old padded all-reduce
+/// path paid `to_vec` + `resize` — two full copies on every
+/// non-multiple-of-`p` input).
+pub fn pad_chunk<T: Elem>(input: &Chunk<T>, padded: usize) -> Chunk<T> {
+    debug_assert!(padded >= input.len());
+    let mut buf = Vec::with_capacity(padded);
+    buf.extend_from_slice(input.as_slice());
+    buf.resize(padded, T::zero());
+    Chunk::from_vec(buf)
+}
+
+/// Materialize an all-reduce block list into one contiguous vector: a
+/// single block (`p == 1`, or the vendor tree path, where it is the
+/// unique full-range view of its storage) moves out with no copy;
+/// otherwise one output concat — the only copy the slice wrappers pay.
+pub(crate) fn blocks_into_vec<T: Clone>(mut blocks: Vec<Chunk<T>>) -> Vec<T> {
+    if blocks.len() == 1 {
+        blocks.pop().expect("one block").into_vec()
+    } else {
+        Chunk::concat(&blocks)
+    }
+}
+
+/// Trim a rank-ordered block list down to `n` total elements by shrinking
+/// views from the tail — O(1) per block, no element is touched. This is
+/// how the chunk-native all-reduce drops internal padding.
+pub fn trim_blocks<T>(blocks: &mut Vec<Chunk<T>>, n: usize) {
+    let mut total: usize = blocks.iter().map(Chunk::len).sum();
+    while total > n {
+        let over = total - n;
+        let last = blocks.last_mut().expect("blocks cover at least n elements");
+        if last.len() <= over {
+            total -= last.len();
+            blocks.pop();
+        } else {
+            let keep = last.len() - over;
+            *last = last.slice(0, keep);
+            total = n;
+        }
+    }
 }

@@ -141,9 +141,31 @@ impl<T: Elem> Pccl<T> {
         backends::reduce_scatter(c, input, &self.opts)
     }
 
+    /// Reduce-scatter through the routed backend, returning this rank's
+    /// reduced block as a chunk — on every `p > 1` path the unique
+    /// full-range view of transport-delivered storage, so holding it (the
+    /// ZeRO-3 shard update) or `into_vec`-ing it costs zero copies.
+    pub fn reduce_scatter_chunks(
+        &self,
+        c: &mut Communicator<T>,
+        input: Chunk<T>,
+    ) -> Result<Chunk<T>> {
+        backends::reduce_scatter_chunks(c, input, &self.opts)
+    }
+
     /// All-reduce through the routed backend.
     pub fn all_reduce(&self, c: &mut Communicator<T>, input: &[T]) -> Result<Vec<T>> {
         backends::all_reduce(c, input, &self.opts)
+    }
+
+    /// All-reduce through the routed backend as rank-ordered chunk blocks
+    /// (chunk reduce-scatter ∘ chunk all-gather, no intermediate `Vec`).
+    pub fn all_reduce_chunks(
+        &self,
+        c: &mut Communicator<T>,
+        input: Chunk<T>,
+    ) -> Result<Vec<Chunk<T>>> {
+        backends::all_reduce_chunks(c, input, &self.opts)
     }
 }
 

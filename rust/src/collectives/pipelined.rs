@@ -15,12 +15,25 @@
 //! views the whole way; the single copy is the final placement into the
 //! caller's contiguous output (the seed path paid a second, per-stage
 //! gather copy on top of that).
+//!
+//! The reduce path is pipelined the same way. All-reduce is elementwise,
+//! so contiguous input slices compose directly ([`Chunk::slice`] per
+//! stage, zero staging copies). Reduce-scatter splits along the *block*
+//! dimension — stage `k` reduces sub-block `k` of every rank block — so
+//! each stage pays one strided gather of `p·b/K` elements to stage its
+//! input (the sub-blocks are not contiguous), and the per-stage outputs
+//! are transport-delivered chunks reassembled once at the end.
 
 use crate::comm::{Chunk, Communicator};
 use crate::error::{Error, Result};
+use crate::reduction::offload::CombineFn;
 use crate::reduction::Elem;
 
-use super::hierarchical::{hier_all_gather, hier_all_gather_chunks, InterAlgo};
+use super::blocks_into_vec;
+use super::hierarchical::{
+    hier_all_gather, hier_all_gather_chunks, hier_all_reduce_chunks, hier_reduce_scatter_chunks,
+    InterAlgo,
+};
 
 /// Pipelined two-level all-gather with `chunks` pipeline stages.
 ///
@@ -60,11 +73,117 @@ pub fn pipelined_hier_all_gather<T: Elem>(
     Ok(out)
 }
 
+/// Pipelined two-level reduce-scatter with `chunks` stages: stage `k`
+/// reduces sub-block `k` of every rank block through
+/// [`hier_reduce_scatter_chunks`], so the inter-node phase of stage `k+1`
+/// overlaps the intra-node phase of stage `k`.
+///
+/// `chunks` must divide the per-rank block size (`input.len() / p`);
+/// `chunks = 1` degenerates to the unpipelined chunk path and returns its
+/// transport-delivered block unmodified. For `chunks > 1` the `K` stage
+/// outputs are reassembled into one contiguous chunk (the single output
+/// copy of the pipelined path).
+pub fn pipelined_hier_reduce_scatter_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    combine: &CombineFn<T>,
+    inter: InterAlgo,
+    chunks: usize,
+) -> Result<Chunk<T>> {
+    let p = c.size();
+    let b = super::check_reduce_scatter(input.as_slice(), p)?;
+    if chunks == 0 || b % chunks != 0 {
+        return Err(Error::BadBufferSize {
+            len: input.len(),
+            size: chunks,
+            why: "pipelined reduce-scatter needs chunks > 0 dividing the per-rank block size",
+        });
+    }
+    if chunks == 1 {
+        return hier_reduce_scatter_chunks(c, input, combine, inter);
+    }
+    let cb = b / chunks;
+    let mut parts = Vec::with_capacity(chunks);
+    for k in 0..chunks {
+        // Stage input: sub-block k of every rank block (strided, so this
+        // gather is the one copy each stage pays).
+        let mut staged = Vec::with_capacity(p * cb);
+        for blk in 0..p {
+            let src = blk * b + k * cb;
+            staged.extend_from_slice(&input.as_slice()[src..src + cb]);
+        }
+        let piece = hier_reduce_scatter_chunks(c, Chunk::from_vec(staged), combine, inter)?;
+        debug_assert_eq!(piece.len(), cb);
+        parts.push(piece);
+    }
+    Ok(Chunk::from_vec(Chunk::concat(&parts)))
+}
+
+/// Pipelined two-level reduce-scatter, slice API.
+pub fn pipelined_hier_reduce_scatter<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    combine: &CombineFn<T>,
+    inter: InterAlgo,
+    chunks: usize,
+) -> Result<Vec<T>> {
+    let input = Chunk::from_slice(input);
+    Ok(pipelined_hier_reduce_scatter_chunks(c, input, combine, inter, chunks)?.into_vec())
+}
+
+/// Pipelined two-level all-reduce with `chunks` stages. All-reduce is
+/// elementwise, so each stage runs [`hier_all_reduce_chunks`] over a
+/// zero-copy contiguous [`Chunk::slice`] of the input and the stage block
+/// lists concatenate to the full result — no staging copies at all.
+///
+/// `chunks` must divide `input.len()`; `chunks = 1` degenerates to the
+/// unpipelined chunk path.
+pub fn pipelined_hier_all_reduce_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    combine: &CombineFn<T>,
+    inter: InterAlgo,
+    chunks: usize,
+) -> Result<Vec<Chunk<T>>> {
+    if chunks == 0 || input.len() % chunks != 0 {
+        return Err(Error::BadBufferSize {
+            len: input.len(),
+            size: chunks,
+            why: "pipelined all-reduce needs chunks > 0 dividing the input length",
+        });
+    }
+    if chunks == 1 {
+        return hier_all_reduce_chunks(c, input, combine, inter);
+    }
+    let cb = input.len() / chunks;
+    let mut out = Vec::new();
+    for k in 0..chunks {
+        let piece = input.slice(k * cb, cb);
+        let mut blocks = hier_all_reduce_chunks(c, piece, combine, inter)?;
+        out.append(&mut blocks);
+    }
+    Ok(out)
+}
+
+/// Pipelined two-level all-reduce, slice API.
+pub fn pipelined_hier_all_reduce<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &[T],
+    combine: &CombineFn<T>,
+    inter: InterAlgo,
+    chunks: usize,
+) -> Result<Vec<T>> {
+    let input = Chunk::from_slice(input);
+    let blocks = pipelined_hier_all_reduce_chunks(c, input, combine, inter, chunks)?;
+    Ok(blocks_into_vec(blocks))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::collectives::oracle;
     use crate::comm::CommWorld;
+    use crate::reduction::offload::native_combine;
     use crate::topology::Topology;
 
     #[test]
@@ -97,6 +216,78 @@ mod tests {
         let outs = world.run(|c| {
             pipelined_hier_all_gather(c, &[1.0; 10], InterAlgo::Rec, 3).is_err()
                 && pipelined_hier_all_gather(c, &[1.0; 10], InterAlgo::Rec, 0).is_err()
+        });
+        assert!(outs.iter().all(|&e| e));
+    }
+
+    #[test]
+    fn pipelined_reduce_scatter_matches_oracle() {
+        let topo = Topology::new(2, 3, 1).unwrap();
+        let p = topo.world_size();
+        let b = 6; // per-rank block; stages split it 1/2/3/6 ways
+        for chunks in [1usize, 2, 3, 6] {
+            for algo in [InterAlgo::Ring, InterAlgo::Rec] {
+                let world = CommWorld::<f32>::with_topology(topo);
+                let outs = world.run(move |c| {
+                    let m = p * b;
+                    let input: Vec<f32> = (0..m).map(|i| (c.rank() * 100 + i) as f32).collect();
+                    pipelined_hier_reduce_scatter(c, &input, &native_combine(), algo, chunks)
+                        .unwrap()
+                });
+                let ins: Vec<Vec<f32>> = (0..p)
+                    .map(|r| (0..p * b).map(|i| (r * 100 + i) as f32).collect())
+                    .collect();
+                for (r, o) in outs.iter().enumerate() {
+                    assert_eq!(
+                        o,
+                        &oracle::reduce_scatter(&ins, r),
+                        "chunks={chunks} algo={algo:?} r={r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_all_reduce_matches_oracle_including_padding() {
+        let topo = Topology::new(2, 3, 1).unwrap();
+        let p = topo.world_size();
+        let m = 14; // stages of 7 elements pad internally (7 % 6 != 0)
+        for chunks in [1usize, 2, 7] {
+            for algo in [InterAlgo::Ring, InterAlgo::Rec] {
+                let world = CommWorld::<f32>::with_topology(topo);
+                let outs = world.run(move |c| {
+                    let input: Vec<f32> = (0..m).map(|i| (c.rank() * 10 + i) as f32).collect();
+                    pipelined_hier_all_reduce(c, &input, &native_combine(), algo, chunks).unwrap()
+                });
+                let ins: Vec<Vec<f32>> = (0..p)
+                    .map(|r| (0..m).map(|i| (r * 10 + i) as f32).collect())
+                    .collect();
+                let expect = oracle::all_reduce(&ins);
+                for (r, o) in outs.iter().enumerate() {
+                    assert_eq!(o, &expect, "chunks={chunks} algo={algo:?} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bad_reduce_chunking_rejected() {
+        let world = CommWorld::<f32>::with_topology(Topology::new(2, 2, 1).unwrap());
+        let outs = world.run(|c| {
+            // p = 4, input 8 → block size 2: 3 does not divide it; 0 invalid.
+            pipelined_hier_reduce_scatter(c, &[1.0; 8], &native_combine(), InterAlgo::Rec, 3)
+                .is_err()
+                && pipelined_hier_reduce_scatter(
+                    c,
+                    &[1.0; 8],
+                    &native_combine(),
+                    InterAlgo::Rec,
+                    0,
+                )
+                .is_err()
+                && pipelined_hier_all_reduce(c, &[1.0; 10], &native_combine(), InterAlgo::Rec, 4)
+                    .is_err()
         });
         assert!(outs.iter().all(|&e| e));
     }

@@ -20,7 +20,7 @@ use crate::reduction::offload::CombineFn;
 use crate::reduction::Elem;
 
 use super::schedule::recursive as idx;
-use super::{check_all_gather, check_reduce_scatter};
+use super::{blocks_into_vec, check_all_gather, check_reduce_scatter, pad_chunk, trim_blocks};
 
 fn require_pow2(p: usize) -> Result<()> {
     if !p.is_power_of_two() {
@@ -73,30 +73,30 @@ pub fn rec_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec
     Ok(Chunk::concat(&blocks))
 }
 
-/// Recursive-halving reduce-scatter: each step exchanges and combines half
-/// of the remaining segment.
+/// Recursive-halving reduce-scatter over chunks: each step exchanges and
+/// combines half of the remaining segment.
 ///
-/// The `p` blocks start as views of one shared staging buffer; the blocks
-/// we *send* go out as those views (no payload copies), and the blocks we
-/// *keep* are copied exactly once — by [`Chunk::make_mut`]'s copy-on-write
-/// at their first combine — instead of the seed path's full-input staging
-/// copy plus per-step payload copies.
-pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
+/// The `p` blocks start as zero-copy views of the caller's input chunk;
+/// the blocks we *send* go out as those views (no payload copies), and the
+/// blocks we *keep* are copied exactly once — by
+/// [`Chunk::make_mut_exact`]'s exact-range copy at their first combine —
+/// so the seed path's full-input staging copy is gone entirely. For
+/// `p > 1` the returned chunk is the unique full-range view of its
+/// storage (`into_vec` is a move); at `p == 1` the input comes back.
+pub fn rec_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
-    input: &[T],
+    input: Chunk<T>,
     combine: &CombineFn<T>,
-) -> Result<Vec<T>> {
+) -> Result<Chunk<T>> {
     let p = c.size();
-    let b = check_reduce_scatter(input, p)?;
+    let b = check_reduce_scatter(input.as_slice(), p)?;
     require_pow2(p)?;
     c.begin_op();
     let r = c.rank();
     if p == 1 {
-        return Ok(input.to_vec());
+        return Ok(input);
     }
-    let all = Chunk::from_slice(input);
-    let mut blocks: Vec<Chunk<T>> = (0..p).map(|i| all.slice(i * b, b)).collect();
-    drop(all);
+    let mut blocks: Vec<Chunk<T>> = (0..p).map(|i| input.slice(i * b, b)).collect();
     // Current segment of *block indices* this rank is still responsible for.
     let mut lo = 0usize;
     let mut hi = p;
@@ -116,42 +116,61 @@ pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
         }
         for i in keep_lo..keep_hi {
             let got = c.recv_chunk(partner, (s * p + i) as u32)?;
-            combine(blocks[i].make_mut(), got.as_slice());
+            combine(blocks[i].make_mut_exact(), got.as_slice());
         }
         lo = keep_lo;
         hi = keep_hi;
     }
     debug_assert_eq!((lo, hi), (r, r + 1));
-    Ok(blocks[r].to_vec())
+    Ok(blocks.swap_remove(r))
 }
 
-/// All-reduce = recursive halving reduce-scatter ∘ recursive doubling
-/// all-gather (§IV-B: "our all-reduce in PCCL_rec uses recursive halving
-/// followed by recursive doubling"). Pads to a multiple of `p`.
+/// Recursive-halving reduce-scatter, slice API.
+pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: &[T],
+    combine: &CombineFn<T>,
+) -> Result<Vec<T>> {
+    Ok(rec_reduce_scatter_chunks(c, Chunk::from_slice(input), combine)?.into_vec())
+}
+
+/// All-reduce over chunks = recursive halving reduce-scatter ∘ recursive
+/// doubling all-gather (§IV-B: "our all-reduce in PCCL_rec uses recursive
+/// halving followed by recursive doubling") with no intermediate `Vec`.
+/// Pads once into the reduce-scatter input when `p ∤ n` and trims the
+/// padding off the returned block list as a view adjustment. Runs the
+/// composition at every `p` (including 1), keeping op-sequence numbering
+/// size-independent.
+pub fn rec_all_reduce_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: Chunk<T>,
+    combine: &CombineFn<T>,
+) -> Result<Vec<Chunk<T>>> {
+    check_all_gather(input.as_slice())?;
+    let p = c.size();
+    require_pow2(p)?;
+    let n = input.len();
+    let padded = n.div_ceil(p) * p;
+    // §Perf: pad at most once, straight into the reduce-scatter input.
+    let padded_input = if padded == n {
+        input
+    } else {
+        pad_chunk(&input, padded)
+    };
+    let mine = rec_reduce_scatter_chunks(c, padded_input, combine)?;
+    let mut blocks = rec_all_gather_chunks(c, mine)?;
+    trim_blocks(&mut blocks, n);
+    Ok(blocks)
+}
+
+/// Recursive all-reduce, slice API.
 pub fn rec_all_reduce<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
     combine: &CombineFn<T>,
 ) -> Result<Vec<T>> {
-    check_all_gather(input)?;
-    let p = c.size();
-    require_pow2(p)?;
-    if p == 1 {
-        return Ok(input.to_vec());
-    }
-    let n = input.len();
-    let padded = n.div_ceil(p) * p;
-    // §Perf: avoid the pad-copy on the (common) aligned path.
-    let mine = if padded == n {
-        rec_reduce_scatter(c, input, combine)?
-    } else {
-        let mut buf = input.to_vec();
-        buf.resize(padded, T::zero());
-        rec_reduce_scatter(c, &buf, combine)?
-    };
-    let mut out = rec_all_gather(c, &mine)?;
-    out.truncate(n);
-    Ok(out)
+    let blocks = rec_all_reduce_chunks(c, Chunk::from_slice(input), combine)?;
+    Ok(blocks_into_vec(blocks))
 }
 
 #[cfg(test)]

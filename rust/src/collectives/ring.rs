@@ -9,7 +9,7 @@ use crate::reduction::offload::CombineFn;
 use crate::reduction::Elem;
 
 use super::schedule::ring as idx;
-use super::{check_all_gather, check_reduce_scatter};
+use super::{blocks_into_vec, check_all_gather, check_reduce_scatter, pad_chunk, trim_blocks};
 
 /// Ring all-gather over the chunked plane: `p - 1` steps, each rank
 /// forwards the *chunk* it received in the previous step to its right
@@ -55,66 +55,95 @@ pub fn ring_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Ve
     Ok(Chunk::concat(&blocks))
 }
 
-/// Ring reduce-scatter: `p - 1` steps; the partial for each block travels
-/// once around the ring, combined at every hop (on the "GPU" — the injected
-/// [`CombineFn`]).
+/// Ring reduce-scatter over the chunked plane: `p - 1` steps; the partial
+/// for each block travels once around the ring, combined at every hop (on
+/// the "GPU" — the injected [`CombineFn`]).
 ///
-/// Hot-path note (§Perf): a received partial is uniquely owned (the sender
-/// moved its reference into the transport), so [`Chunk::make_mut`] combines
-/// in place — the only copy is staging the first outgoing block.
+/// Hot-path note (§Perf): the outgoing first block is a zero-copy view of
+/// `input`; each received partial is combined through
+/// [`Chunk::make_mut_exact`] — one exact-range copy at its first combine
+/// (where it is still a view of the sender's input), in place on every
+/// later hop. For `p > 1` the returned chunk is therefore the unique
+/// full-range view of transport-delivered storage: `into_vec` on it is a
+/// move, never a copy. At `p == 1` the input chunk comes straight back.
+pub fn ring_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: Chunk<T>,
+    combine: &CombineFn<T>,
+) -> Result<Chunk<T>> {
+    let p = c.size();
+    let b = check_reduce_scatter(input.as_slice(), p)?;
+    c.begin_op();
+    let r = c.rank();
+    if p == 1 {
+        return Ok(input);
+    }
+    let right = (r + 1) % p;
+    let left = (r + p - 1) % p;
+    let first = idx::rs_send_block(r, p, 0);
+    let mut current = input.slice(first * b, b);
+    for s in 0..p - 1 {
+        let recv_b = idx::rs_recv_block(r, p, s);
+        let mut got = c.sendrecv_chunk(right, current, left, s as u32)?;
+        // Add our own contribution for the block that just arrived.
+        combine(got.make_mut_exact(), &input.as_slice()[recv_b * b..(recv_b + 1) * b]);
+        current = got;
+    }
+    debug_assert_eq!(idx::rs_recv_block(r, p, p - 2), r);
+    Ok(current)
+}
+
+/// Ring reduce-scatter, slice API: wraps the input once; the output
+/// materialization is a move of the traveling partial (see
+/// [`ring_reduce_scatter_chunks`]).
 pub fn ring_reduce_scatter<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
     combine: &CombineFn<T>,
 ) -> Result<Vec<T>> {
-    let p = c.size();
-    let b = check_reduce_scatter(input, p)?;
-    c.begin_op();
-    let r = c.rank();
-    if p == 1 {
-        return Ok(input.to_vec());
-    }
-    let right = (r + 1) % p;
-    let left = (r + p - 1) % p;
-    let first = idx::rs_send_block(r, p, 0);
-    let mut current = Chunk::from_slice(&input[first * b..(first + 1) * b]);
-    for s in 0..p - 1 {
-        let recv_b = idx::rs_recv_block(r, p, s);
-        let mut got = c.sendrecv_chunk(right, current, left, s as u32)?;
-        // Add our own contribution for the block that just arrived.
-        combine(got.make_mut(), &input[recv_b * b..(recv_b + 1) * b]);
-        current = got;
-    }
-    debug_assert_eq!(idx::rs_recv_block(r, p, p - 2), r);
-    Ok(current.into_vec())
+    Ok(ring_reduce_scatter_chunks(c, Chunk::from_slice(input), combine)?.into_vec())
 }
 
-/// Ring all-reduce = ring reduce-scatter ∘ ring all-gather (the
-/// bandwidth-optimal Patarasuk–Yuan composition). Pads to a multiple of `p`
-/// when needed.
+/// Ring all-reduce over chunks = chunk reduce-scatter ∘ chunk all-gather
+/// (the bandwidth-optimal Patarasuk–Yuan composition) with no intermediate
+/// `Vec`: the reduced shard chunk feeds the gather directly. Unaligned
+/// inputs are padded once into the chunk the reduce-scatter consumes, and
+/// the padding is trimmed off the returned block list as a view
+/// adjustment — the blocks concatenate to exactly `input.len()` elements.
+///
+/// The composition also runs at `p == 1` (both phases degenerate to
+/// zero-message ops), so op-sequence numbering advances identically for
+/// every communicator size.
+pub fn ring_all_reduce_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: Chunk<T>,
+    combine: &CombineFn<T>,
+) -> Result<Vec<Chunk<T>>> {
+    check_all_gather(input.as_slice())?;
+    let p = c.size();
+    let n = input.len();
+    let padded = n.div_ceil(p) * p;
+    // §Perf: pad at most once, straight into the reduce-scatter input.
+    let padded_input = if padded == n {
+        input
+    } else {
+        pad_chunk(&input, padded)
+    };
+    let mine = ring_reduce_scatter_chunks(c, padded_input, combine)?;
+    let mut blocks = ring_all_gather_chunks(c, mine)?;
+    trim_blocks(&mut blocks, n);
+    Ok(blocks)
+}
+
+/// Ring all-reduce, slice API: wraps the input and materializes the
+/// contiguous output (the only two copies on the aligned path).
 pub fn ring_all_reduce<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
     combine: &CombineFn<T>,
 ) -> Result<Vec<T>> {
-    check_all_gather(input)?;
-    let p = c.size();
-    if p == 1 {
-        return Ok(input.to_vec());
-    }
-    let n = input.len();
-    let padded = n.div_ceil(p) * p;
-    // §Perf: avoid the pad-copy on the (common) aligned path.
-    let mine = if padded == n {
-        ring_reduce_scatter(c, input, combine)?
-    } else {
-        let mut buf = input.to_vec();
-        buf.resize(padded, T::zero());
-        ring_reduce_scatter(c, &buf, combine)?
-    };
-    let mut out = ring_all_gather(c, &mine)?;
-    out.truncate(n);
-    Ok(out)
+    let blocks = ring_all_reduce_chunks(c, Chunk::from_slice(input), combine)?;
+    Ok(blocks_into_vec(blocks))
 }
 
 #[cfg(test)]

@@ -135,6 +135,33 @@ impl<T: Clone> Chunk<T> {
         &mut v[off..off + len]
     }
 
+    /// Like [`Chunk::make_mut`], but additionally re-materializes a
+    /// sub-view into exact-size storage: afterwards this chunk is always
+    /// the unique full-range view of its storage, so a later
+    /// [`Chunk::into_vec`] is a free move.
+    ///
+    /// This is what the reduce-scatter hot loops combine through. A
+    /// traveling reduction partial is unique full-range storage from its
+    /// first combine on (in place, like `make_mut`); the difference shows
+    /// on the *first* combine, where the received chunk is a sub-view of
+    /// the sender's input. `make_mut` would copy it only when the sender
+    /// still holds a reference — a race — and in the no-copy outcome the
+    /// b-element result would pin the sender's whole p·b storage alive.
+    /// Copying the exact range unconditionally makes the output shape
+    /// deterministic and bounds resident memory, at the cost the COW path
+    /// was already paying.
+    pub fn make_mut_exact(&mut self) -> &mut [T] {
+        if !self.is_full_view() || Arc::get_mut(&mut self.storage).is_none() {
+            let owned = self.as_slice().to_vec();
+            self.off = 0;
+            self.len = owned.len();
+            self.storage = Arc::new(owned);
+        }
+        let (off, len) = (self.off, self.len);
+        let v = Arc::get_mut(&mut self.storage).expect("chunk storage unique after exact copy");
+        &mut v[off..off + len]
+    }
+
     /// Materialize an ordered list of chunks into one contiguous vector
     /// (the final output copy of the slice-based collective wrappers).
     pub fn concat(chunks: &[Chunk<T>]) -> Vec<T> {
@@ -234,6 +261,27 @@ mod tests {
         assert_ne!(b.storage_id(), a.storage_id(), "shared view must COW");
         assert_eq!(b.as_slice(), &[99, 3]);
         assert_eq!(a.as_slice(), &[1, 2, 3, 4], "original untouched");
+    }
+
+    #[test]
+    fn make_mut_exact_normalizes_sub_views() {
+        // Unique full view: in place, storage identity preserved.
+        let mut c = Chunk::from_vec(vec![1.0f32, 2.0]);
+        let id = c.storage_id();
+        c.make_mut_exact()[1] = 9.0;
+        assert_eq!(c.storage_id(), id, "unique full view must stay in place");
+        // Unique sub-view: re-materialized to exact-size full-view storage
+        // (so into_vec is a move and the parent storage is released).
+        let parent = Chunk::from_vec(vec![0, 1, 2, 3, 4, 5]);
+        let mut v = parent.slice(2, 2);
+        drop(parent);
+        assert_eq!(v.storage_refs(), 1, "sub-view is unique after parent drop");
+        v.make_mut_exact()[0] = 99;
+        assert!(v.is_full_view());
+        assert_eq!(v.storage_refs(), 1);
+        assert_eq!(v.as_slice(), &[99, 3]);
+        let ptr = v.as_slice().as_ptr();
+        assert_eq!(v.into_vec().as_ptr(), ptr, "exact chunk must move out");
     }
 
     #[test]

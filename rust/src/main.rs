@@ -242,10 +242,12 @@ fn run_bench(
 /// launcher modes. The persistent-world pass is what lands in the JSON
 /// artifact (lower noise); the spawn pass doubles as the
 /// schedule-equivalence guard — the zero-copy chunked plane must move
-/// exactly the same bytes in either mode, and the flat-ring cells must
-/// match the closed-form schedule volume.
+/// exactly the same bytes in either mode for **every** collective
+/// (all-gather, reduce-scatter, and all-reduce cells are each required to
+/// be present, so the reduce path cannot silently drop out of the guard),
+/// and the flat-library cells must match the closed-form schedule volume.
 fn run_smoke(out: &Path) -> Result<()> {
-    use pccl::runtime::{flat_ring_expected_bytes, Launcher, LauncherConfig};
+    use pccl::runtime::{expected_schedule_bytes, Launcher, LauncherConfig};
     use pccl::util::json::Value;
 
     let t = Timer::start();
@@ -266,7 +268,33 @@ fn run_smoke(out: &Path) -> Result<()> {
             sweep.cells.len()
         )));
     }
+    // Coverage check first: every collective kind must be in the guarded
+    // set with real traffic — a sweep that stopped emitting reduce-scatter
+    // or all-reduce cells would otherwise pass the guard vacuously.
+    for kind in CollKind::ALL {
+        let guarded = sweep
+            .cells
+            .iter()
+            .filter(|c| c.kind == kind && c.bytes_per_op > 0)
+            .count();
+        if guarded == 0 {
+            return Err(pccl::error::Error::Dispatch(format!(
+                "smoke sweep has no {} cells with traffic — the byte guard no \
+                 longer covers that collective",
+                kind.label()
+            )));
+        }
+    }
     for (a, b) in spawn_sweep.cells.iter().zip(&sweep.cells) {
+        if a.kind != b.kind || a.backend != b.backend || a.msg_bytes != b.msg_bytes {
+            return Err(pccl::error::Error::Dispatch(format!(
+                "smoke sweeps diverged: spawn cell {}/{} vs persistent {}/{}",
+                a.kind.label(),
+                a.backend.label(),
+                b.kind.label(),
+                b.backend.label()
+            )));
+        }
         if a.bytes_per_op != b.bytes_per_op {
             return Err(pccl::error::Error::Dispatch(format!(
                 "schedule equivalence violated: {}/{} {} B × {} ranks moved {} B \
@@ -280,16 +308,14 @@ fn run_smoke(out: &Path) -> Result<()> {
             )));
         }
     }
-    // Flat-ring cells must also match the closed-form schedule volume.
-    for c in sweep
-        .cells
-        .iter()
-        .filter(|c| matches!(c.backend, Backend::Vendor | Backend::CrayMpich))
-    {
+    // Flat-library cells must also match the closed-form schedule volume
+    // (ring all-gather / reduce-scatter, and the ring all-reduce
+    // composition on the Cray-MPICH backend).
+    for c in &sweep.cells {
         // Invert the §III-A shape convention: msg_bytes / 4 reproduces the
-        // element count `cell_shape` saw for both ring collectives.
+        // element count `cell_shape` saw for every collective.
         let elems = c.msg_bytes / 4;
-        if let Some(expect) = flat_ring_expected_bytes(c.kind, elems, c.ranks) {
+        if let Some(expect) = expected_schedule_bytes(c.kind, c.backend, elems, c.ranks) {
             if c.bytes_per_op != expect {
                 return Err(pccl::error::Error::Dispatch(format!(
                     "ring schedule volume mismatch: {}/{} expected {expect} B, measured {} B",
@@ -318,10 +344,21 @@ fn run_smoke(out: &Path) -> Result<()> {
         })
         .collect();
     let doc = Value::obj(vec![
-        ("schema", Value::Num(2.0)),
+        ("schema", Value::Num(3.0)),
         ("suite", Value::Str("pccl-smoke".to_string())),
         ("mode", Value::Str("persistent".to_string())),
         ("schedule_equivalent", Value::Bool(true)),
+        // Which collectives the spawn-vs-persistent byte guard covered —
+        // CI fails above if any of the three is missing.
+        (
+            "guarded_collectives",
+            Value::Arr(
+                CollKind::ALL
+                    .iter()
+                    .map(|k| Value::Str(k.label().to_string()))
+                    .collect(),
+            ),
+        ),
         ("wall_s", Value::Num(wall)),
         ("guard_wall_s", Value::Num(guard_wall)),
         ("cells", Value::Arr(cells)),

@@ -5,13 +5,24 @@ use std::time::{Duration, Instant};
 
 /// Mean / standard deviation over a set of trial timings — the paper
 /// reports mean ± stddev over ten independent trials (§III-A).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Stats {
     n: usize,
     sum: f64,
     sumsq: f64,
     min: f64,
     max: f64,
+}
+
+/// `Default` must match [`Stats::new`]: a derived default would start
+/// `min`/`max` at `0.0`, so any stats built via `Default` would report a
+/// spurious `0.0` minimum no matter what was pushed (a real
+/// measurement-corruption bug — benches feed these numbers to the
+/// dispatcher).
+impl Default for Stats {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Stats {
@@ -141,6 +152,22 @@ mod tests {
         assert!((s.stddev() - 1.2909944487358056).abs() < 1e-9);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn default_stats_track_extrema_like_new() {
+        // Regression: the derived Default initialized min/max to 0.0, so a
+        // default-built Stats reported min == 0.0 for any positive sample.
+        let mut s = Stats::default();
+        s.push(5.0);
+        assert_eq!(s.min(), 5.0);
+        assert_eq!(s.max(), 5.0);
+        let mut s = Stats::default();
+        s.push(-3.0);
+        assert_eq!(s.max(), -3.0, "negative-only samples must not report max 0.0");
+        // Empty stats expose the identity extrema, same as Stats::new().
+        assert_eq!(Stats::default().min(), f64::INFINITY);
+        assert_eq!(Stats::default().max(), f64::NEG_INFINITY);
     }
 
     #[test]

@@ -26,9 +26,10 @@
 use std::time::Instant;
 
 use crate::backends::{
-    all_gather, all_reduce, reduce_scatter, Backend, CollKind, CollectiveOptions,
+    all_gather_chunks, all_reduce_chunks, reduce_scatter_chunks, Backend, CollKind,
+    CollectiveOptions,
 };
-use crate::comm::{Communicator, TransportHub};
+use crate::comm::{Chunk, Communicator, TransportHub};
 use crate::dispatch::{Dataset, SvmDispatcher};
 use crate::error::{Error, Result};
 use crate::metrics::Stats;
@@ -201,21 +202,53 @@ pub fn flat_ring_expected_bytes(kind: CollKind, elems: usize, p: usize) -> Optio
     }
 }
 
+/// Analytic bytes-per-op for every flat-library cell the smoke guard can
+/// check in closed form — [`flat_ring_expected_bytes`] extended with the
+/// ring all-reduce composition, keyed by backend because Vendor and
+/// Cray-MPICH diverge on all-reduce (tree vs. ring RS ∘ AG). `None` for
+/// hierarchical backends and for the tree all-reduce (whose volume depends
+/// on the non-power-of-two straggler pattern, not a single formula the
+/// guard should duplicate).
+pub fn expected_schedule_bytes(
+    kind: CollKind,
+    backend: Backend,
+    elems: usize,
+    p: usize,
+) -> Option<u64> {
+    match (backend, kind) {
+        (Backend::Vendor | Backend::CrayMpich, CollKind::AllGather | CollKind::ReduceScatter) => {
+            flat_ring_expected_bytes(kind, elems, p)
+        }
+        // Ring all-reduce = reduce-scatter + all-gather over the padded
+        // length: each phase moves (p-1)·padded elements summed over ranks.
+        (Backend::CrayMpich, CollKind::AllReduce) => {
+            let (input_len, _) = cell_shape(kind, elems, p);
+            let padded = input_len.div_ceil(p) * p;
+            Some((2 * p.saturating_sub(1) * padded * 4) as u64)
+        }
+        _ => None,
+    }
+}
+
+/// One collective op over the chunk-native entry points. The input chunk
+/// clone is O(1), so the timed section measures the data plane's actual
+/// hot path — not a per-op `Vec → Chunk` staging copy that the real
+/// chunk-holding callers (ZeRO-3) never pay.
 fn run_collective(
     kind: CollKind,
     comm: &mut Communicator<f32>,
-    input: &[f32],
+    input: &Chunk<f32>,
     opts: &CollectiveOptions<f32>,
 ) -> Result<()> {
     match kind {
         CollKind::AllGather => {
-            all_gather(comm, input, opts)?;
+            all_gather_chunks(comm, input.clone(), opts)?;
         }
         CollKind::ReduceScatter => {
-            reduce_scatter(comm, input, opts)?;
+            reduce_scatter_chunks(comm, input.clone(), opts)?;
         }
         CollKind::AllReduce => {
-            all_reduce(comm, input, opts)?;
+            all_reduce_chunks(comm, input.clone(), opts)?;
         }
     }
     Ok(())
@@ -232,7 +265,7 @@ fn cell_trial(
 ) -> impl Fn(&mut Communicator<f32>) -> Result<TrialReport> + Send + Sync + Clone + 'static {
     move |comm: &mut Communicator<f32>| {
         let opts = CollectiveOptions::<f32>::default().backend(backend);
-        let input = vec![comm.rank() as f32; input_len];
+        let input = Chunk::from_vec(vec![comm.rank() as f32; input_len]);
         for _ in 0..warmup {
             run_collective(kind, comm, &input, &opts)?;
         }
@@ -486,5 +519,20 @@ mod tests {
             let expect = flat_ring_expected_bytes(kind, 512, 4).unwrap();
             assert_eq!(cell.bytes_per_op, expect, "{kind:?}");
         }
+        // The ring all-reduce composition (Cray-MPICH) has a closed form
+        // too — including the padded case (513 on 4 ranks pads to 516).
+        for elems in [512usize, 513] {
+            let cell = launcher
+                .time_cell(Topology::flat(4), CollKind::AllReduce, Backend::CrayMpich, elems)
+                .unwrap();
+            let expect =
+                expected_schedule_bytes(CollKind::AllReduce, Backend::CrayMpich, elems, 4)
+                    .unwrap();
+            assert_eq!(cell.bytes_per_op, expect, "all-reduce elems={elems}");
+        }
+        // Vendor all-reduce (tree) and hierarchical backends have no
+        // closed form here.
+        assert!(expected_schedule_bytes(CollKind::AllReduce, Backend::Vendor, 512, 4).is_none());
+        assert!(expected_schedule_bytes(CollKind::AllGather, Backend::PcclRec, 512, 4).is_none());
     }
 }

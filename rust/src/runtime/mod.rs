@@ -31,6 +31,9 @@ pub(crate) mod xla_stub;
 
 pub use artifacts::{ArtifactEntry, Artifacts, Manifest, ModelMeta, TensorSpecJson};
 pub use executable::{Executable, HostTensor, Runtime, TensorSpec};
-pub use launcher::{flat_ring_expected_bytes, Launcher, LauncherConfig, MeasuredCell, MeasuredSweep};
+pub use launcher::{
+    expected_schedule_bytes, flat_ring_expected_bytes, Launcher, LauncherConfig, MeasuredCell,
+    MeasuredSweep,
+};
 pub use persistent::{PersistentWorld, TrialReport};
 pub use service::{DeviceHandle, DeviceService};

@@ -4,12 +4,20 @@
 //! scatters gradients (PCCL reduce-scatter), and updates only the local
 //! shard. The communication pattern is exactly DeepSpeed ZeRO-3's (§II-A)
 //! with full-model granularity.
+//!
+//! The optimizer state is chunk-native: the parameter shard is a
+//! [`Chunk`], the all-gather sends zero-copy views of it, and the gradient
+//! reduce-scatter's transport-delivered result chunk is consumed in place
+//! (scaled through `make_mut`, unique → no copy) — the reduce path moves
+//! no bytes beyond the schedule. The shard update itself goes through
+//! `make_mut` too: if a peer still holds an all-gather view of our shard
+//! storage, the optimizer write copy-on-writes instead of racing it.
 
 use std::sync::{Arc, Mutex};
 
 use crate::backends::Backend;
 use crate::collectives::Pccl;
-use crate::comm::CommWorld;
+use crate::comm::{Chunk, CommWorld};
 use crate::error::{Error, Result};
 use crate::metrics::Timer;
 use crate::runtime::{Artifacts, DeviceService, HostTensor};
@@ -101,15 +109,17 @@ pub fn run_zero3(cfg: &Zero3Config) -> Result<Zero3Report> {
         let rank = comm.rank();
         let p = comm.size();
         // Materialize full params once (same seed everywhere), keep only
-        // this rank's shard of the padded flat vector.
+        // this rank's shard of the padded flat vector — as a chunk, so
+        // every later collective sends views of it and the reduce-scatter
+        // result replaces it without a materialization round-trip.
         let mut params = ParamSet::init(&handle, &meta_c, cfg.seed as i32)?;
         let n = params.num_elements();
         let padded = n.div_ceil(p) * p;
         let shard_len = padded / p;
-        let mut shard = {
+        let mut shard: Chunk<f32> = {
             let mut flat = params.flatten()?;
             flat.resize(padded, 0.0);
-            flat[rank * shard_len..(rank + 1) * shard_len].to_vec()
+            Chunk::from_vec(flat[rank * shard_len..(rank + 1) * shard_len].to_vec())
         };
         if rank == 0 {
             *shard_c.lock().unwrap() = shard_len;
@@ -117,8 +127,12 @@ pub fn run_zero3(cfg: &Zero3Config) -> Result<Zero3Report> {
         let mut opt = Sgd::new(cfg.lr, cfg.momentum);
         for step in 0..cfg.steps {
             let timer = Timer::start();
-            // 1. All-gather the full parameter vector from shards.
-            let mut full = pccl.all_gather(comm, &shard)?;
+            // 1. All-gather the full parameter vector from shard views;
+            //    the one materialization is the contiguous copy the AOT
+            //    executable needs.
+            let blocks = pccl.all_gather_chunks(comm, shard.clone())?;
+            let mut full = Chunk::concat(&blocks);
+            drop(blocks);
             full.truncate(n);
             params.load_flat(&full)?;
             // 2. Local forward/backward via the AOT step.
@@ -138,15 +152,26 @@ pub fn run_zero3(cfg: &Zero3Config) -> Result<Zero3Report> {
             let mut out = handle.execute("train_step", inputs)?;
             let loss = out.remove(0).into_f32()?[0];
             // 3. Reduce-scatter gradients: every rank gets the summed grad
-            //    for its own shard.
-            let mut grad_flat = params.flatten_grads(&out)?;
-            grad_flat.resize(padded, 0.0);
-            let mut grad_shard = pccl.reduce_scatter(comm, &grad_flat)?;
-            for g in &mut grad_shard {
-                *g /= p as f32;
+            //    for its own shard, delivered as a chunk that is consumed
+            //    in place (pad at most once, straight into the chunk the
+            //    collective sends).
+            let grad_flat = params.flatten_grads(&out)?;
+            let grad_in = if padded == grad_flat.len() {
+                Chunk::from_vec(grad_flat)
+            } else {
+                let mut buf = Vec::with_capacity(padded);
+                buf.extend_from_slice(&grad_flat);
+                buf.resize(padded, 0.0);
+                Chunk::from_vec(buf)
+            };
+            let mut grad_shard = pccl.reduce_scatter_chunks(comm, grad_in)?;
+            let inv = 1.0 / p as f32;
+            for g in grad_shard.make_mut() {
+                *g *= inv;
             }
-            // 4. Update only the local shard.
-            opt.step(&mut shard, &grad_shard);
+            // 4. Update only the local shard (copy-on-write shields any
+            //    peer still reading an all-gather view of it).
+            opt.step(shard.make_mut(), grad_shard.as_slice());
             loss_c.lock().unwrap()[rank].push(loss);
             if rank == 0 {
                 times_c.lock().unwrap().push(timer.secs());

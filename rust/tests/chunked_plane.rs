@@ -4,23 +4,34 @@
 //!   all-gather must deliver every block still backed by the *origin
 //!   rank's input storage* (all ranks share one address space, so storage
 //!   identity across threads is a direct proof that no hop copied).
-//! * **Oracle equivalence on awkward shapes** — every collective over
-//!   non-power-of-two rank counts (3, 6, 12) and uneven chunk splits.
+//! * **Reduce path zero-copy** — `*_reduce_scatter_chunks` must hand back
+//!   the transport-delivered traveling partial as a unique full-range
+//!   chunk (`into_vec` pointer-identical move, no copy), proving the
+//!   ZeRO-3 shard update lands in transport storage with zero copies.
+//! * **Oracle equivalence on awkward shapes** — every collective (and the
+//!   chunk-native reduce entry points) over non-power-of-two rank counts
+//!   (3, 6, 12), uneven chunk splits, and padded all-reduce sizes.
+//! * **Op-sequence discipline** — `p == 1` reduce paths advance the op
+//!   sequence exactly like `p > 1`, so wire tags never alias.
 //! * **Persistent world** — a ≥ 8-rank measured sweep over pinned rank
 //!   threads reports byte-for-byte the same schedule volume as the
-//!   spawn-per-trial mode, and the flat-ring cells match the closed-form
-//!   schedule.
+//!   spawn-per-trial mode, and the flat-library cells match the
+//!   closed-form schedule.
+
+use std::collections::{HashMap, VecDeque};
 
 use pccl::backends::{
-    all_gather, all_reduce, broadcast, gather, reduce_scatter, scatter, Backend, CollKind,
-    CollectiveOptions,
+    all_gather, all_reduce, all_reduce_chunks, broadcast, gather, reduce_scatter,
+    reduce_scatter_chunks, scatter, Backend, CollKind, CollectiveOptions,
 };
 use pccl::collectives::{
-    hier_all_gather_chunks, oracle, pipelined_hier_all_gather, rec_all_gather,
-    ring_all_gather_chunks, InterAlgo, Pccl,
+    hier_all_gather_chunks, hier_all_reduce, oracle, pipelined_hier_all_gather, rec_all_gather,
+    rec_all_reduce, ring_all_gather_chunks, ring_all_reduce, ring_reduce_scatter,
+    ring_reduce_scatter_chunks, InterAlgo, Pccl,
 };
-use pccl::comm::{Chunk, CommWorld};
-use pccl::runtime::{flat_ring_expected_bytes, Launcher, LauncherConfig};
+use pccl::comm::{Chunk, Comm, CommWorld, Communicator};
+use pccl::reduction::offload::native_combine;
+use pccl::runtime::{expected_schedule_bytes, Launcher, LauncherConfig};
 use pccl::topology::Topology;
 
 fn rank_input(r: usize, len: usize) -> Vec<f32> {
@@ -230,22 +241,289 @@ fn persistent_world_sweep_matches_spawn_mode_bytes() {
         );
         assert!(a.bytes_per_op > 0);
     }
-    // Flat-ring backends must also match the closed-form schedule volume.
+    // Flat-library cells must also match the closed-form schedule volume —
+    // including the ring all-reduce composition on Cray-MPICH, so the
+    // reduce path is guarded end to end, not just the gather path.
+    let mut checked_all_reduce = false;
     for c in &persist.cells {
-        if !matches!(c.backend, Backend::Vendor | Backend::CrayMpich) {
-            continue;
-        }
-        if let Some(expect) = flat_ring_expected_bytes(c.kind, c.msg_bytes / 4, c.ranks) {
+        if let Some(expect) = expected_schedule_bytes(c.kind, c.backend, c.msg_bytes / 4, c.ranks)
+        {
             assert_eq!(
                 c.bytes_per_op, expect,
-                "analytic ring volume for {:?} at {} B",
-                c.kind, c.msg_bytes
+                "analytic schedule volume for {:?}/{:?} at {} B",
+                c.kind, c.backend, c.msg_bytes
             );
+            checked_all_reduce |= c.kind == CollKind::AllReduce;
         }
     }
+    assert!(checked_all_reduce, "all-reduce must be in the closed-form guard");
     // And the measured sweep still trains a dispatcher end to end.
     let d = persist
         .train_dispatcher(pccl::topology::Machine::Generic, 7)
         .unwrap();
     assert!(Backend::CONCRETE.contains(&d.choose(CollKind::AllGather, 4096, 8)));
+}
+
+/// Flat-ring reduce-scatter must deliver the traveling partial itself:
+/// fresh exact storage (never a view of this rank's input), uniquely
+/// owned and full-range, so `into_vec` is a pointer-identical move.
+#[test]
+fn ring_reduce_scatter_chunk_is_move_free_transport_storage() {
+    let p = 6;
+    let b = 4;
+    let world = CommWorld::<f32>::new(p);
+    let outs = world.run(move |c| {
+        let input = Chunk::from_vec(rank_input(c.rank(), p * b));
+        let input_id = input.storage_id();
+        let shard = ring_reduce_scatter_chunks(c, input, &native_combine()).unwrap();
+        // The input storage is alive for the whole collective on this
+        // thread, so a distinct id proves the result is fresh storage.
+        assert_ne!(shard.storage_id(), input_id, "result must not alias the input");
+        assert_eq!(shard.storage_refs(), 1, "result must be uniquely owned");
+        assert!(shard.is_full_view(), "result must be exact-size storage");
+        let ptr = shard.as_slice().as_ptr() as usize;
+        let v = shard.into_vec();
+        assert_eq!(v.as_ptr() as usize, ptr, "into_vec must move, not copy");
+        v
+    });
+    let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+    for (r, o) in outs.iter().enumerate() {
+        assert_eq!(o, &oracle::reduce_scatter(&ins, r), "r={r}");
+    }
+}
+
+/// The ZeRO-3 step shape through the facade, at 8 ranks over a 2×4
+/// hierarchy, for every backend: shard chunk → all-gather views →
+/// gradient chunk → `reduce_scatter_chunks` → in-place scale → update.
+/// The delivered gradient shard must be consumed with zero copies on the
+/// aligned path (the PR's acceptance proof).
+#[test]
+fn zero3_style_shard_reduce_scatter_is_zero_copy() {
+    let topo = Topology::new(2, 4, 1).unwrap();
+    let p = topo.world_size();
+    let shard_len = 6;
+    for backend in Backend::CONCRETE {
+        let world = CommWorld::<f32>::with_topology(topo);
+        let outs = world.run(move |c| {
+            let facade = Pccl::<f32>::with_backend(backend);
+            let shard = Chunk::from_vec(rank_input(c.rank(), shard_len));
+            let blocks = facade.all_gather_chunks(c, shard.clone()).unwrap();
+            assert_eq!(Chunk::concat(&blocks).len(), p * shard_len);
+            let grad = Chunk::from_vec(rank_input(c.rank(), p * shard_len));
+            let mut gshard = facade.reduce_scatter_chunks(c, grad).unwrap();
+            let delivered = gshard.storage_id();
+            assert_eq!(gshard.storage_refs(), 1, "{backend:?}: shared grad shard");
+            assert!(gshard.is_full_view(), "{backend:?}: padded/view grad shard");
+            // Gradient averaging mutates the delivered storage in place.
+            for g in gshard.make_mut() {
+                *g *= 0.5;
+            }
+            assert_eq!(
+                gshard.storage_id(),
+                delivered,
+                "{backend:?}: in-place scale must not re-materialize"
+            );
+            // And handing it to the optimizer costs no copy either.
+            let ptr = gshard.as_slice().as_ptr() as usize;
+            let v = gshard.into_vec();
+            assert_eq!(
+                v.as_ptr() as usize,
+                ptr,
+                "{backend:?}: into_vec on the aligned path must be a move"
+            );
+            v.iter().map(|x| x * 2.0).collect::<Vec<f32>>()
+        });
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * shard_len)).collect();
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(
+                o,
+                &oracle::reduce_scatter(&ins, r),
+                "{backend:?} r={r} content"
+            );
+        }
+    }
+}
+
+/// Chunk-native reduce entry points ≡ oracle on non-power-of-two rank
+/// counts (3, 6, 12) with a padded (p ∤ n) all-reduce length on every
+/// backend, and the trimmed block list must concatenate to exactly `n`.
+#[test]
+fn chunk_reduce_paths_match_oracle_on_non_pow2_and_padded_sizes() {
+    let topos = [
+        Topology::flat(3),
+        Topology::new(3, 2, 1).unwrap(), // 6 ranks, non-pow2 nodes
+        Topology::new(3, 4, 1).unwrap(), // 12 ranks
+    ];
+    for topo in topos {
+        let p = topo.world_size();
+        let n_ar = 2 * p + 1; // never a multiple of p → padded path
+        for backend in Backend::CONCRETE {
+            let world = CommWorld::<f32>::with_topology(topo);
+            let outs = world.run(move |c| {
+                let opts = CollectiveOptions::default().backend(backend);
+                let r = c.rank();
+                let rs = reduce_scatter_chunks(c, Chunk::from_vec(rank_input(r, p * 3)), &opts)
+                    .unwrap();
+                let ar_blocks =
+                    all_reduce_chunks(c, Chunk::from_vec(rank_input(r, n_ar)), &opts).unwrap();
+                let ar = Chunk::concat(&ar_blocks);
+                assert_eq!(ar.len(), n_ar, "{backend:?}: trim must drop the padding");
+                (rs.to_vec(), ar)
+            });
+            let rs_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * 3)).collect();
+            let ar_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, n_ar)).collect();
+            let ar_expect = oracle::all_reduce(&ar_ins);
+            for (r, (rs, ar)) in outs.iter().enumerate() {
+                assert_eq!(
+                    rs,
+                    &oracle::reduce_scatter(&rs_ins, r),
+                    "{backend:?} rs p={p} r={r}"
+                );
+                assert_eq!(ar, &ar_expect, "{backend:?} ar p={p} r={r}");
+            }
+        }
+    }
+}
+
+/// Single-rank loopback communicator that counts op-sequence bumps (the
+/// collectives under test move no bytes at `p == 1`, but any send/recv
+/// they do issue round-trips through the step-keyed queues).
+struct LoopbackComm {
+    queues: HashMap<u32, VecDeque<Chunk<f32>>>,
+    ops: u64,
+}
+
+impl Comm<f32> for LoopbackComm {
+    fn rank(&self) -> usize {
+        0
+    }
+    fn size(&self) -> usize {
+        1
+    }
+    fn send_slice(&mut self, _peer: usize, step: u32, chunk: Chunk<f32>) -> pccl::Result<()> {
+        self.queues.entry(step).or_default().push_back(chunk);
+        Ok(())
+    }
+    fn recv_chunk(&mut self, _peer: usize, step: u32) -> pccl::Result<Chunk<f32>> {
+        Ok(self
+            .queues
+            .get_mut(&step)
+            .and_then(VecDeque::pop_front)
+            .expect("loopback recv with no matching send"))
+    }
+    fn begin_op(&mut self) {
+        self.ops += 1;
+    }
+}
+
+fn op_bumps(f: impl FnOnce(&mut LoopbackComm)) -> u64 {
+    let mut c = LoopbackComm { queues: HashMap::new(), ops: 0 };
+    f(&mut c);
+    c.ops
+}
+
+/// Regression (tag-sequence consistency): every collective must advance
+/// the op sequence the same number of times at `p == 1` as at `p > 1` —
+/// one bump per component collective, two for the RS ∘ AG all-reduce
+/// composition. The old early returns bumped zero times.
+#[test]
+fn p1_reduce_paths_bump_op_sequence_like_p_gt_1() {
+    let two = [1.0f32, 2.0];
+    assert_eq!(
+        op_bumps(|c| {
+            ring_all_reduce(c, &two, &native_combine()).unwrap();
+        }),
+        2,
+        "ring all-reduce = RS + AG"
+    );
+    assert_eq!(
+        op_bumps(|c| {
+            rec_all_reduce(c, &two, &native_combine()).unwrap();
+        }),
+        2,
+        "recursive all-reduce = RS + AG"
+    );
+    assert_eq!(
+        op_bumps(|c| {
+            ring_reduce_scatter(c, &two, &native_combine()).unwrap();
+        }),
+        1,
+        "reduce-scatter is one collective"
+    );
+    assert_eq!(
+        op_bumps(|c| {
+            rec_all_gather(c, &two).unwrap();
+        }),
+        1,
+        "all-gather is one collective"
+    );
+}
+
+/// Regression (wire-tag freshness): at `p == 1` a collective that fails to
+/// bump the op sequence leaves the communicator composing the *same* tags
+/// as before the call — an unreceived earlier message would then be
+/// matched by a later receive (FIFO per tag). Probe exactly that on the
+/// real transport.
+#[test]
+fn p1_all_reduce_advances_wire_tags() {
+    fn probe<F: FnOnce(&mut Communicator<f32>)>(c: &mut Communicator<f32>, f: F) -> Vec<f32> {
+        c.begin_op();
+        // Stale message, deliberately never received.
+        c.send_slice(0, 7, Chunk::from_vec(vec![111.0])).unwrap();
+        f(c);
+        // If `f` advanced the op sequence, this send/recv pair uses fresh
+        // tags and the recv sees 222; if not, it matches the stale 111.
+        c.send_slice(0, 7, Chunk::from_vec(vec![222.0])).unwrap();
+        c.recv_chunk(0, 7).unwrap().to_vec()
+    }
+    let world = CommWorld::<f32>::new(1);
+    let outs = world.run(|c| {
+        let a = probe(c, |c| {
+            ring_all_reduce(c, &[5.0], &native_combine()).unwrap();
+        });
+        let b = probe(c, |c| {
+            rec_all_reduce(c, &[5.0], &native_combine()).unwrap();
+        });
+        let d = probe(c, |c| {
+            hier_all_reduce(c, &[5.0], &native_combine(), InterAlgo::Rec).unwrap();
+        });
+        (a, b, d)
+    });
+    for (a, b, d) in outs {
+        assert_eq!(a, vec![222.0], "ring all-reduce must advance wire tags");
+        assert_eq!(b, vec![222.0], "rec all-reduce must advance wire tags");
+        assert_eq!(d, vec![222.0], "hier all-reduce must advance wire tags");
+    }
+}
+
+/// Padding discipline: an unaligned all-reduce must move exactly the bytes
+/// of the equivalent aligned (pre-padded) input — the pad-once path adds
+/// local copies never, and moved bytes only per the padded schedule.
+#[test]
+fn padded_all_reduce_moves_no_extra_bytes() {
+    let p = 4;
+    let bytes_for = |n: usize| -> u64 {
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(move |c| {
+            let before = c.traffic().sent_bytes;
+            ring_all_reduce(c, &vec![1.5f32; n], &native_combine()).unwrap();
+            c.traffic().sent_bytes - before
+        });
+        outs.iter().sum()
+    };
+    // n = 10 pads internally to 12; n = 12 is the aligned reference.
+    assert_eq!(bytes_for(10), bytes_for(12));
+    // Same through the hierarchical route on an 8-rank 2×4 hierarchy.
+    let topo = Topology::new(2, 4, 1).unwrap();
+    let hier_bytes_for = move |n: usize| -> u64 {
+        let world = CommWorld::<f32>::with_topology(topo);
+        let outs = world.run(move |c| {
+            let before = c.traffic().sent_bytes;
+            hier_all_reduce(c, &vec![0.25f32; n], &native_combine(), InterAlgo::Rec).unwrap();
+            c.traffic().sent_bytes - before
+        });
+        outs.iter().sum()
+    };
+    // n = 13 pads to 16 on 8 ranks; n = 16 is the aligned reference.
+    assert_eq!(hier_bytes_for(13), hier_bytes_for(16));
 }
