@@ -17,12 +17,12 @@ use std::sync::Arc;
 use crate::collectives::{
     hier_all_gather, hier_all_gather_chunks, hier_all_reduce_chunks, hier_reduce_scatter_chunks,
     ring_all_gather, ring_all_gather_chunks, ring_all_reduce_chunks, ring_reduce_scatter_chunks,
-    tree_all_reduce, InterAlgo,
+    slice_all_reduce, slice_reduce, tree_all_reduce_chunks, InterAlgo,
 };
 use crate::comm::{Chunk, Communicator};
 use crate::error::Result;
-use crate::reduction::offload::{native_combine, CombineFn};
-use crate::reduction::{reduce_into_op, Elem, ReduceOp};
+use crate::reduction::offload::{native_combine, Combiner};
+use crate::reduction::{Elem, ReduceOp};
 
 /// Which collective implementation handles a call.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -101,10 +101,11 @@ pub type Chooser = Arc<dyn Fn(CollKind, usize, usize) -> Backend + Send + Sync>;
 pub struct CollectiveOptions<T: Elem> {
     /// Requested backend ([`Backend::Auto`] consults `chooser`).
     pub backend: Backend,
-    /// Local combine implementation (native host loop by default; the
-    /// XLA-offloaded Pallas kernel via
-    /// [`crate::reduction::offload::XlaReducer::combine_fn`]).
-    pub combine: CombineFn<T>,
+    /// Local combine implementation (native host pair by default; wrap the
+    /// XLA-offloaded Pallas kernel's
+    /// [`crate::reduction::offload::XlaReducer::combine_fn`] via
+    /// [`Combiner::from_fold`]).
+    pub combine: Combiner<T>,
     /// Adaptive dispatcher for [`Backend::Auto`].
     pub chooser: Option<Chooser>,
     /// Reduction operator (sum by default — gradient averaging).
@@ -128,7 +129,7 @@ impl<T: Elem> CollectiveOptions<T> {
         self
     }
 
-    pub fn combine(mut self, c: CombineFn<T>) -> Self {
+    pub fn combine(mut self, c: Combiner<T>) -> Self {
         self.combine = c;
         self
     }
@@ -143,14 +144,12 @@ impl<T: Elem> CollectiveOptions<T> {
         self
     }
 
-    /// The combine actually used: the injected one for Sum (it may be the
-    /// XLA-offloaded kernel), a native op loop for Max/Min.
-    pub fn effective_combine(&self) -> CombineFn<T> {
+    /// The combiner actually used: the injected one for Sum (it may wrap
+    /// the XLA-offloaded kernel), the native op pair for Max/Min.
+    pub fn effective_combiner(&self) -> Combiner<T> {
         match self.op {
             ReduceOp::Sum => self.combine.clone(),
-            op => std::sync::Arc::new(move |acc: &mut [T], src: &[T]| {
-                reduce_into_op(acc, src, op)
-            }),
+            op => Combiner::for_op(op),
         }
     }
 
@@ -207,10 +206,10 @@ pub fn all_gather_chunks<T: Elem>(
     }
 }
 
-/// Host-loop combine for the backends that reduce on the CPU no matter
+/// Host-loop combiner for the backends that reduce on the CPU no matter
 /// what the caller injected (Cray-MPICH, Observation 1).
-fn host_combine<T: Elem>(op: ReduceOp) -> CombineFn<T> {
-    std::sync::Arc::new(move |acc: &mut [T], src: &[T]| reduce_into_op(acc, src, op))
+fn host_combine<T: Elem>(op: ReduceOp) -> Combiner<T> {
+    Combiner::for_op(op)
 }
 
 /// Reduce-scatter through the selected backend, returning rank `r`'s
@@ -228,33 +227,33 @@ pub fn reduce_scatter_chunks<T: Elem>(
         // Cray-MPICH reduces on the host no matter what combine the caller
         // injected (Observation 1) — model that faithfully.
         Backend::CrayMpich => ring_reduce_scatter_chunks(c, input, &host_combine(opts.op)),
-        Backend::Vendor => ring_reduce_scatter_chunks(c, input, &opts.effective_combine()),
+        Backend::Vendor => ring_reduce_scatter_chunks(c, input, &opts.effective_combiner()),
         Backend::PcclRing => {
-            hier_reduce_scatter_chunks(c, input, &opts.effective_combine(), InterAlgo::Ring)
+            hier_reduce_scatter_chunks(c, input, &opts.effective_combiner(), InterAlgo::Ring)
         }
         Backend::PcclRec | Backend::Auto => {
-            hier_reduce_scatter_chunks(c, input, &opts.effective_combine(), InterAlgo::Rec)
+            hier_reduce_scatter_chunks(c, input, &opts.effective_combiner(), InterAlgo::Rec)
         }
     }
 }
 
-/// Reduce-scatter through the selected backend (slice API — wraps the
-/// input once; the output materialization is a move, see
-/// [`reduce_scatter_chunks`]).
+/// Reduce-scatter through the selected backend (slice API — adapter over
+/// [`reduce_scatter_chunks`] via [`slice_reduce`]; the output
+/// materialization is a move).
 pub fn reduce_scatter<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
     opts: &CollectiveOptions<T>,
 ) -> Result<Vec<T>> {
-    Ok(reduce_scatter_chunks(c, Chunk::from_slice(input), opts)?.into_vec())
+    slice_reduce(input, |ch| reduce_scatter_chunks(c, ch, opts))
 }
 
 /// All-reduce through the selected backend, returning the result as
 /// rank-ordered chunk blocks that concatenate to `input.len()` elements.
 /// The PCCL and ring paths compose chunk reduce-scatter ∘ chunk all-gather
-/// with no intermediate `Vec`; the vendor path's binomial tree
-/// materializes one reduced buffer by construction and surfaces it as a
-/// single chunk.
+/// with no intermediate `Vec`; the vendor path's binomial tree reduces
+/// through posted receives into the input-chunk accumulator and surfaces
+/// the reduced buffer as a single chunk.
 pub fn all_reduce_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
@@ -265,28 +264,27 @@ pub fn all_reduce_chunks<T: Elem>(
         Backend::CrayMpich => ring_all_reduce_chunks(c, input, &host_combine(opts.op)),
         // Vendor libraries use double binary trees for all-reduce [15].
         Backend::Vendor => {
-            let out = tree_all_reduce(c, input.as_slice(), &opts.effective_combine())?;
-            Ok(vec![Chunk::from_vec(out)])
+            Ok(vec![tree_all_reduce_chunks(c, input, &opts.effective_combiner())?])
         }
         Backend::PcclRing => {
-            hier_all_reduce_chunks(c, input, &opts.effective_combine(), InterAlgo::Ring)
+            hier_all_reduce_chunks(c, input, &opts.effective_combiner(), InterAlgo::Ring)
         }
         Backend::PcclRec | Backend::Auto => {
-            hier_all_reduce_chunks(c, input, &opts.effective_combine(), InterAlgo::Rec)
+            hier_all_reduce_chunks(c, input, &opts.effective_combiner(), InterAlgo::Rec)
         }
     }
 }
 
-/// All-reduce through the selected backend (slice API). A single-block
-/// result (the vendor tree path) moves out of its chunk with no copy;
-/// multi-block results pay the one output concat.
+/// All-reduce through the selected backend (slice API — adapter over
+/// [`all_reduce_chunks`] via [`slice_all_reduce`]). A single-block result
+/// (the vendor tree path) moves out of its chunk with no copy; multi-block
+/// results pay the one output concat.
 pub fn all_reduce<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
     opts: &CollectiveOptions<T>,
 ) -> Result<Vec<T>> {
-    let blocks = all_reduce_chunks(c, Chunk::from_slice(input), opts)?;
-    Ok(crate::collectives::blocks_into_vec(blocks))
+    slice_all_reduce(input, |ch| all_reduce_chunks(c, ch, opts))
 }
 
 /// Broadcast from `root` (binomial tree — backend-independent).
@@ -298,14 +296,14 @@ pub fn broadcast<T: Elem>(
     crate::collectives::broadcast(c, input, root)
 }
 
-/// Reduce to `root` with the options' operator and combine.
+/// Reduce to `root` with the options' operator and combiner.
 pub fn reduce<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
     root: usize,
     opts: &CollectiveOptions<T>,
 ) -> Result<Vec<T>> {
-    crate::collectives::reduce(c, input, root, &opts.effective_combine())
+    crate::collectives::reduce(c, input, root, &opts.effective_combiner())
 }
 
 /// Gather equal-length contributions to `root`.

@@ -23,6 +23,12 @@ pub struct Cell {
     /// Bytes actually moved per op (NIC/transport counters), when known —
     /// the BENCH artifacts record traffic volume next to the timings.
     pub moved_bytes: Option<f64>,
+    /// Received bytes delivered by *copying* per op
+    /// ([`crate::comm::Traffic::copied_bytes`]), when measured on the real
+    /// data plane. Zero on the reduce path — the column makes the
+    /// posted-receive guarantee visible in the artifacts. `None` for
+    /// simulated cells (the netsim has no copy notion).
+    pub copied_bytes: Option<f64>,
 }
 
 /// A complete table keyed by (series, bytes, ranks).
@@ -47,6 +53,7 @@ impl Table {
             ranks,
             stats,
             moved_bytes: None,
+            copied_bytes: None,
         });
     }
 
@@ -65,6 +72,28 @@ impl Table {
             ranks,
             stats,
             moved_bytes: Some(moved_bytes),
+            copied_bytes: None,
+        });
+    }
+
+    /// Push a cell measured on the real data plane: moved *and* copied
+    /// traffic counters next to the timings.
+    pub fn push_with_traffic(
+        &mut self,
+        series: impl Into<String>,
+        bytes: usize,
+        ranks: usize,
+        stats: Stats,
+        moved_bytes: f64,
+        copied_bytes: f64,
+    ) {
+        self.cells.push(Cell {
+            series: series.into(),
+            bytes,
+            ranks,
+            stats,
+            moved_bytes: Some(moved_bytes),
+            copied_bytes: Some(copied_bytes),
         });
     }
 
@@ -97,19 +126,27 @@ impl Table {
         out
     }
 
-    /// Write CSV: `series,bytes,ranks,mean_s,stddev_s,min_s,max_s,moved_bytes`
-    /// (`moved_bytes` empty when the cell carries no traffic counters).
+    /// Write CSV:
+    /// `series,bytes,ranks,mean_s,stddev_s,min_s,max_s,moved_bytes,copied_bytes`
+    /// (traffic columns empty when the cell carries no counters).
     pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "series,bytes,ranks,mean_s,stddev_s,min_s,max_s,moved_bytes")?;
+        writeln!(
+            f,
+            "series,bytes,ranks,mean_s,stddev_s,min_s,max_s,moved_bytes,copied_bytes"
+        )?;
         for c in &self.cells {
             let moved = c
                 .moved_bytes
                 .map(|b| format!("{b:.0}"))
                 .unwrap_or_default();
+            let copied = c
+                .copied_bytes
+                .map(|b| format!("{b:.0}"))
+                .unwrap_or_default();
             writeln!(
                 f,
-                "{},{},{},{:.9},{:.9},{:.9},{:.9},{}",
+                "{},{},{},{:.9},{:.9},{:.9},{:.9},{},{}",
                 c.series,
                 c.bytes,
                 c.ranks,
@@ -117,7 +154,8 @@ impl Table {
                 c.stats.stddev(),
                 c.stats.min(),
                 c.stats.max(),
-                moved
+                moved,
+                copied
             )?;
         }
         Ok(())
@@ -138,6 +176,7 @@ mod tests {
         let mut t = Table::new("fig-x");
         t.push("rccl", 64 << 20, 128, Stats::from_iter([1.0, 2.0]));
         t.push_with_bytes("pccl", 64 << 20, 128, Stats::from_iter([0.5]), 4096.0);
+        t.push_with_traffic("pccl-rs", 64 << 20, 128, Stats::from_iter([0.4]), 4096.0, 0.0);
         assert_eq!(t.mean("rccl", 64 << 20, 128), Some(1.5));
         let r = t.render();
         assert!(r.contains("64 MB"));
@@ -145,10 +184,13 @@ mod tests {
         let p = dir.path().join("t.csv");
         t.write_csv(&p).unwrap();
         let text = std::fs::read_to_string(p).unwrap();
-        assert!(text.lines().count() == 3);
+        assert!(text.lines().count() == 4);
         assert!(text.contains("rccl,67108864,128"));
-        assert!(text.contains("moved_bytes"));
-        assert!(text.lines().nth(2).unwrap().ends_with(",4096"));
+        assert!(text.contains("moved_bytes,copied_bytes"));
+        // Simulated cell: moved only, copied column empty.
+        assert!(text.lines().nth(2).unwrap().ends_with(",4096,"));
+        // Measured cell: both counters — and the reduce path copies nothing.
+        assert!(text.lines().nth(3).unwrap().ends_with(",4096,0"));
     }
 
     #[test]

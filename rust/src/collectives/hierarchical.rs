@@ -22,12 +22,15 @@
 
 use crate::comm::{Chunk, Comm, Communicator};
 use crate::error::Result;
-use crate::reduction::offload::CombineFn;
+use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
 use super::recursive::{rec_all_gather_chunks, rec_reduce_scatter_chunks};
 use super::ring::{ring_all_gather_chunks, ring_reduce_scatter_chunks};
-use super::{blocks_into_vec, check_all_gather, check_reduce_scatter, pad_chunk, trim_blocks};
+use super::{
+    check_all_gather, check_reduce_scatter, pad_chunk, slice_all_reduce, slice_gather,
+    slice_reduce, trim_blocks,
+};
 
 /// Inter-node algorithm choice for the hierarchical collectives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -64,14 +67,14 @@ fn inter_all_gather_chunks<T: Elem>(
 fn inter_reduce_scatter_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
     algo: InterAlgo,
 ) -> Result<Chunk<T>> {
     let n = c.topology().nodes();
     let mut inter = c.inter_node()?;
     match algo.effective(n) {
-        InterAlgo::Ring => ring_reduce_scatter_chunks(&mut inter, input, combine),
-        InterAlgo::Rec => rec_reduce_scatter_chunks(&mut inter, input, combine),
+        InterAlgo::Ring => ring_reduce_scatter_chunks(&mut inter, input, combiner),
+        InterAlgo::Rec => rec_reduce_scatter_chunks(&mut inter, input, combiner),
     }
 }
 
@@ -140,15 +143,14 @@ pub fn hier_all_gather_chunks<T: Elem>(
         .collect())
 }
 
-/// Two-level all-gather, slice API: wraps the input once and materializes
-/// the contiguous output once; everything in between is chunk forwarding.
+/// Two-level all-gather, slice API — adapter over
+/// [`hier_all_gather_chunks`].
 pub fn hier_all_gather<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
     inter: InterAlgo,
 ) -> Result<Vec<T>> {
-    let blocks = hier_all_gather_chunks(c, Chunk::from_slice(input), inter)?;
-    Ok(Chunk::concat(&blocks))
+    slice_gather(input, |ch| hier_all_gather_chunks(c, ch, inter))
 }
 
 /// Two-level reduce-scatter over chunks (intra first, then inter).
@@ -161,7 +163,7 @@ pub fn hier_all_gather<T: Elem>(
 pub fn hier_reduce_scatter_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
     inter: InterAlgo,
 ) -> Result<Chunk<T>> {
     let p = c.size();
@@ -169,8 +171,8 @@ pub fn hier_reduce_scatter_chunks<T: Elem>(
     let topo = c.topology();
     if !topo.supports_hierarchical() {
         return match inter.effective(p) {
-            InterAlgo::Ring => ring_reduce_scatter_chunks(c, input, combine),
-            InterAlgo::Rec => rec_reduce_scatter_chunks(c, input, combine),
+            InterAlgo::Ring => ring_reduce_scatter_chunks(c, input, combiner),
+            InterAlgo::Rec => rec_reduce_scatter_chunks(c, input, combiner),
         };
     }
     let n = topo.nodes();
@@ -183,6 +185,15 @@ pub fn hier_reduce_scatter_chunks<T: Elem>(
     // the partials themselves must be materialized — but each received
     // partial is uniquely owned exact storage, so the in-place combine
     // never copies.
+    //
+    // This intra loop deliberately does NOT post a receive buffer
+    // (`sendrecv_combine_into`): this rank's contribution to a segment is
+    // *strided* across `input` (blocks {(node, seg)}), so there is no
+    // contiguous view to post — materializing one would reintroduce
+    // exactly the staging copy the posted-receive plane removed. Instead
+    // the traveling partial arrives exclusive (the sender moved its only
+    // reference into the transport), `make_mut_exact` resolves in place,
+    // and the strided contribution is folded in with no allocation at all.
     //
     // Segment `l` = blocks {(node, l) : node ∈ 0..N} = the data destined
     // for local id `l`'s inter-node phase.
@@ -197,7 +208,7 @@ pub fn hier_reduce_scatter_chunks<T: Elem>(
     let add_segment = |acc: &mut [T], seg: usize| {
         for node in 0..n {
             let src = (node * m_local + seg) * b;
-            combine(&mut acc[node * b..(node + 1) * b], &input.as_slice()[src..src + b]);
+            combiner.fold(&mut acc[node * b..(node + 1) * b], &input.as_slice()[src..src + b]);
         }
     };
     let partial = {
@@ -223,19 +234,20 @@ pub fn hier_reduce_scatter_chunks<T: Elem>(
     debug_assert_eq!(partial.len(), n * b);
     // Inter-node reduce-scatter over blocks of b elements — the partial
     // chunk feeds it directly, no slice round-trip.
-    let out = inter_reduce_scatter_chunks(c, partial, combine, inter)?;
+    let out = inter_reduce_scatter_chunks(c, partial, combiner, inter)?;
     debug_assert_eq!(out.len(), b);
     Ok(out)
 }
 
-/// Two-level reduce-scatter, slice API.
+/// Two-level reduce-scatter, slice API — adapter over
+/// [`hier_reduce_scatter_chunks`].
 pub fn hier_reduce_scatter<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
     inter: InterAlgo,
 ) -> Result<Vec<T>> {
-    Ok(hier_reduce_scatter_chunks(c, Chunk::from_slice(input), combine, inter)?.into_vec())
+    slice_reduce(input, |ch| hier_reduce_scatter_chunks(c, ch, combiner, inter))
 }
 
 /// Two-level all-reduce over chunks = hierarchical RS ∘ hierarchical AG
@@ -248,7 +260,7 @@ pub fn hier_reduce_scatter<T: Elem>(
 pub fn hier_all_reduce_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
     inter: InterAlgo,
 ) -> Result<Vec<Chunk<T>>> {
     check_all_gather(input.as_slice())?;
@@ -261,21 +273,21 @@ pub fn hier_all_reduce_chunks<T: Elem>(
     } else {
         pad_chunk(&input, padded)
     };
-    let mine = hier_reduce_scatter_chunks(c, padded_input, combine, inter)?;
+    let mine = hier_reduce_scatter_chunks(c, padded_input, combiner, inter)?;
     let mut blocks = hier_all_gather_chunks(c, mine, inter)?;
     trim_blocks(&mut blocks, n);
     Ok(blocks)
 }
 
-/// Two-level all-reduce, slice API.
+/// Two-level all-reduce, slice API — adapter over
+/// [`hier_all_reduce_chunks`].
 pub fn hier_all_reduce<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
     inter: InterAlgo,
 ) -> Result<Vec<T>> {
-    let blocks = hier_all_reduce_chunks(c, Chunk::from_slice(input), combine, inter)?;
-    Ok(blocks_into_vec(blocks))
+    slice_all_reduce(input, |ch| hier_all_reduce_chunks(c, ch, combiner, inter))
 }
 
 #[cfg(test)]

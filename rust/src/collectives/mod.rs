@@ -5,6 +5,14 @@
 //! helpers in [`schedule`]) drives the network simulator's message
 //! schedules.
 //!
+//! The `*_chunks` functions are the **canonical signatures**: chunk in,
+//! chunk(s) out, zero-copy end to end. The borrowed-slice entry points are
+//! thin adapters over them, generated through exactly three shared
+//! wrappers — [`slice_gather`], [`slice_reduce`], and [`slice_all_reduce`]
+//! — so the "wrap input, run, materialize output" boilerplate lives in one
+//! place (the backends dispatch layer routes its slice API through the
+//! same three).
+//!
 //! Semantics (MPI-style, out-of-place):
 //! * `all_gather`: input `m` elements/rank → output `p·m`, block `i` is
 //!   rank `i`'s input.
@@ -27,13 +35,18 @@
 //!   ([`ring_all_gather_chunks`], [`rec_all_gather_chunks`],
 //!   [`hier_all_gather_chunks`]) expose this: every returned block is
 //!   backed by the origin rank's input storage.
-//! * **Materialize only when mutating or when the caller needs contiguous
-//!   memory.** Reductions write new data at every hop by definition —
-//!   they combine through [`crate::comm::Chunk::make_mut_exact`]: in place
-//!   when the received partial is uniquely owned exact-size storage (the
-//!   steady state — the sender moved its reference into the transport),
-//!   one exact-range copy at a partial's *first* combine (where the
-//!   received chunk is still a sub-view of the sender's input). The
+//! * **Reduce through posted receives — never stage.** Reductions write
+//!   new data at every hop by definition, so the reduce loops post the
+//!   accumulator's storage as the receive target and fold the incoming
+//!   partial into it ([`crate::comm::Comm::recv_combine_into`] /
+//!   [`crate::comm::Comm::sendrecv_combine_into`]). Delivery picks the
+//!   cheapest legal case by storage exclusivity (see
+//!   [`crate::comm::Chunk::accept_combine`]): in place into an exclusive
+//!   accumulator, take-over of an exclusive incoming partial, or — at a
+//!   partial's *first* combine, where both operands are still shared COW
+//!   views — a one-pass three-address fuse into fresh exact-size storage
+//!   (one allocation, zero verbatim copies; this replaced the
+//!   copy-then-fold that `make_mut_exact` used to pay). The
 //!   `*_reduce_scatter_chunks` entry points ([`ring_reduce_scatter_chunks`],
 //!   [`rec_reduce_scatter_chunks`], [`hier_reduce_scatter_chunks`]) return
 //!   that traveling partial directly: for `p > 1` the result is always the
@@ -42,6 +55,31 @@
 //!   `p == 1` the input chunk itself comes back). The slice-API wrappers
 //!   pay exactly two copies: wrapping the borrowed input into a chunk and
 //!   materializing the output.
+//!
+//! ### Posted-receive rules
+//!
+//! * **Only the posting rank writes into a posted buffer.** A `&mut
+//!   Chunk<T>` handed to `recv_into`/`recv_combine_into` is written by the
+//!   receiving endpoint alone, and only between post and completion (the
+//!   calls are blocking, so completion is the return). Senders never gain
+//!   write access to remote storage — delivery either *moves the incoming
+//!   reference into the posted slot* or writes through the post's own
+//!   (COW-resolved) storage.
+//! * **COW protects in-flight peer reads.** If the posted chunk's storage
+//!   is shared — e.g. it is a view of the rank's live input, or a peer
+//!   still holds a reference to a chunk this rank forwarded — the delivery
+//!   path never writes that storage in place: `accept` copies into fresh
+//!   COW storage and `accept_combine` fuses into a fresh allocation, so a
+//!   peer concurrently reading the old storage always observes the
+//!   original bytes. In-place writes happen only when the accumulator is
+//!   provably exclusive ([`crate::comm::Chunk::is_exclusive`]).
+//! * **Shape is checked before delivery.** A posted buffer whose length
+//!   differs from the incoming chunk yields a typed
+//!   [`Error::RecvShapeMismatch`](crate::error::Error::RecvShapeMismatch)
+//!   and the message stays queued — nothing is partially written.
+//! * **Combines must be commutative.** The take-over case folds in the
+//!   opposite operand order; sum/max/min (including two-operand IEEE-754
+//!   addition) all qualify.
 //! * **All-reduce composes chunk-native.** `*_all_reduce_chunks` is chunk
 //!   reduce-scatter ∘ chunk all-gather with no intermediate `Vec`: the
 //!   reduced shard chunk feeds the gather directly, unaligned inputs are
@@ -85,7 +123,7 @@ pub use ring::{
     ring_reduce_scatter, ring_reduce_scatter_chunks,
 };
 pub use shuffle::{shuffle_gather, transpose_blocks, transpose_chunk_blocks, unshuffle};
-pub use tree::tree_all_reduce;
+pub use tree::{tree_all_reduce, tree_all_reduce_chunks};
 
 use crate::comm::Chunk;
 use crate::error::{Error, Result};
@@ -113,6 +151,41 @@ pub(crate) fn check_reduce_scatter<T>(input: &[T], p: usize) -> Result<usize> {
         });
     }
     Ok(input.len() / p)
+}
+
+/// Slice adapter for gather-style chunk collectives (all-gather): wrap the
+/// borrowed input once, run the chunk-native algorithm, concatenate the
+/// returned blocks. The wrap and the concat are the only copies on the
+/// path — every slice-API collective pays exactly these two.
+pub fn slice_gather<T, F>(input: &[T], run: F) -> Result<Vec<T>>
+where
+    T: Clone,
+    F: FnOnce(Chunk<T>) -> Result<Vec<Chunk<T>>>,
+{
+    Ok(Chunk::concat(&run(Chunk::from_slice(input))?))
+}
+
+/// Slice adapter for reduce-style chunk collectives (reduce-scatter): wrap
+/// the borrowed input once, run, move the reduced shard out. The output
+/// materialization is a move for `p > 1` (the shard is the unique
+/// full-range view of transport-delivered storage).
+pub fn slice_reduce<T, F>(input: &[T], run: F) -> Result<Vec<T>>
+where
+    T: Clone,
+    F: FnOnce(Chunk<T>) -> Result<Chunk<T>>,
+{
+    Ok(run(Chunk::from_slice(input))?.into_vec())
+}
+
+/// Slice adapter for all-reduce-style chunk collectives (block-list out):
+/// wrap once, run, materialize the rank-ordered block list (a move when
+/// the algorithm returns a single block).
+pub fn slice_all_reduce<T, F>(input: &[T], run: F) -> Result<Vec<T>>
+where
+    T: Clone,
+    F: FnOnce(Chunk<T>) -> Result<Vec<Chunk<T>>>,
+{
+    Ok(blocks_into_vec(run(Chunk::from_slice(input))?))
 }
 
 /// Zero-pad `input` to `padded` elements in a single pass: one allocation

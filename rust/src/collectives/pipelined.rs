@@ -22,18 +22,24 @@
 //! dimension — stage `k` reduces sub-block `k` of every rank block — so
 //! each stage pays one strided gather of `p·b/K` elements to stage its
 //! input (the sub-blocks are not contiguous), and the per-stage outputs
-//! are transport-delivered chunks reassembled once at the end.
+//! are transport-delivered chunks reassembled once at the end. That
+//! staging gather is *schedule-required*, not a data-plane shortcoming:
+//! the stage's contribution has no contiguous view to post as a receive
+//! buffer, so it sits outside the posted-receive `copied_bytes == 0`
+//! guarantee by construction (the copy happens rank-locally, before the
+//! transport ever sees the stage input; the per-stage reduce underneath
+//! is still fully posted-receive).
 
 use crate::comm::{Chunk, Communicator};
 use crate::error::{Error, Result};
-use crate::reduction::offload::CombineFn;
+use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
-use super::blocks_into_vec;
 use super::hierarchical::{
     hier_all_gather, hier_all_gather_chunks, hier_all_reduce_chunks, hier_reduce_scatter_chunks,
     InterAlgo,
 };
+use super::{slice_all_reduce, slice_reduce};
 
 /// Pipelined two-level all-gather with `chunks` pipeline stages.
 ///
@@ -86,7 +92,7 @@ pub fn pipelined_hier_all_gather<T: Elem>(
 pub fn pipelined_hier_reduce_scatter_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
     inter: InterAlgo,
     chunks: usize,
 ) -> Result<Chunk<T>> {
@@ -100,7 +106,7 @@ pub fn pipelined_hier_reduce_scatter_chunks<T: Elem>(
         });
     }
     if chunks == 1 {
-        return hier_reduce_scatter_chunks(c, input, combine, inter);
+        return hier_reduce_scatter_chunks(c, input, combiner, inter);
     }
     let cb = b / chunks;
     let mut parts = Vec::with_capacity(chunks);
@@ -112,23 +118,25 @@ pub fn pipelined_hier_reduce_scatter_chunks<T: Elem>(
             let src = blk * b + k * cb;
             staged.extend_from_slice(&input.as_slice()[src..src + cb]);
         }
-        let piece = hier_reduce_scatter_chunks(c, Chunk::from_vec(staged), combine, inter)?;
+        let piece = hier_reduce_scatter_chunks(c, Chunk::from_vec(staged), combiner, inter)?;
         debug_assert_eq!(piece.len(), cb);
         parts.push(piece);
     }
     Ok(Chunk::from_vec(Chunk::concat(&parts)))
 }
 
-/// Pipelined two-level reduce-scatter, slice API.
+/// Pipelined two-level reduce-scatter, slice API — adapter over
+/// [`pipelined_hier_reduce_scatter_chunks`].
 pub fn pipelined_hier_reduce_scatter<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
     inter: InterAlgo,
     chunks: usize,
 ) -> Result<Vec<T>> {
-    let input = Chunk::from_slice(input);
-    Ok(pipelined_hier_reduce_scatter_chunks(c, input, combine, inter, chunks)?.into_vec())
+    slice_reduce(input, |ch| {
+        pipelined_hier_reduce_scatter_chunks(c, ch, combiner, inter, chunks)
+    })
 }
 
 /// Pipelined two-level all-reduce with `chunks` stages. All-reduce is
@@ -141,7 +149,7 @@ pub fn pipelined_hier_reduce_scatter<T: Elem>(
 pub fn pipelined_hier_all_reduce_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
     inter: InterAlgo,
     chunks: usize,
 ) -> Result<Vec<Chunk<T>>> {
@@ -153,29 +161,30 @@ pub fn pipelined_hier_all_reduce_chunks<T: Elem>(
         });
     }
     if chunks == 1 {
-        return hier_all_reduce_chunks(c, input, combine, inter);
+        return hier_all_reduce_chunks(c, input, combiner, inter);
     }
     let cb = input.len() / chunks;
     let mut out = Vec::new();
     for k in 0..chunks {
         let piece = input.slice(k * cb, cb);
-        let mut blocks = hier_all_reduce_chunks(c, piece, combine, inter)?;
+        let mut blocks = hier_all_reduce_chunks(c, piece, combiner, inter)?;
         out.append(&mut blocks);
     }
     Ok(out)
 }
 
-/// Pipelined two-level all-reduce, slice API.
+/// Pipelined two-level all-reduce, slice API — adapter over
+/// [`pipelined_hier_all_reduce_chunks`].
 pub fn pipelined_hier_all_reduce<T: Elem>(
     c: &mut Communicator<T>,
     input: &[T],
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
     inter: InterAlgo,
     chunks: usize,
 ) -> Result<Vec<T>> {
-    let input = Chunk::from_slice(input);
-    let blocks = pipelined_hier_all_reduce_chunks(c, input, combine, inter, chunks)?;
-    Ok(blocks_into_vec(blocks))
+    slice_all_reduce(input, |ch| {
+        pipelined_hier_all_reduce_chunks(c, ch, combiner, inter, chunks)
+    })
 }
 
 #[cfg(test)]

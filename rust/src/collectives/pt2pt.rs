@@ -8,7 +8,9 @@
 //!
 //! Chunked-plane notes: broadcast forwards one shared chunk down the whole
 //! tree (zero-copy fan-out — the seed path cloned the buffer per child);
-//! reduce combines received chunks without materializing them; scatter
+//! reduce posts its accumulator as the receive target for every child's
+//! partial ([`Comm::recv_combine_into`] — in-place folds, no staging) and
+//! leaves send their contribution as a zero-copy post; scatter
 //! materializes one block per destination (the source lives in the root's
 //! borrowed input, so each destination must own its block); gather copies
 //! received blocks into the root's contiguous output (the output
@@ -16,7 +18,7 @@
 
 use crate::comm::{Chunk, Comm};
 use crate::error::{Error, Result};
-use crate::reduction::offload::CombineFn;
+use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
 fn check_root<T: Send + Sync + 'static, C: Comm<T>>(c: &C, root: usize) -> Result<()> {
@@ -83,40 +85,40 @@ pub fn broadcast<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Re
 
 /// Binomial-tree reduce to `root`: root returns the elementwise combine of
 /// every rank's input; other ranks return an empty vec.
+///
+/// The accumulator starts as a wrap of the borrowed input (the one input
+/// copy this slice API pays) and is *posted* as the receive target for
+/// every child's partial, so each delivery folds in place — a rank whose
+/// child sent a different length gets a typed
+/// [`Error::RecvShapeMismatch`] with the message left queued. Leaves send
+/// the accumulator itself (zero-copy post), and the root's final
+/// materialization is a move.
 pub fn reduce<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
     root: usize,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
 ) -> Result<Vec<T>> {
     check_root(c, root)?;
     c.begin_op();
     let p = c.size();
     let r = rel(c.rank(), root, p);
-    let mut acc = input.to_vec();
+    let mut acc = Chunk::from_slice(input);
     let mut mask = 1usize;
     while mask < p {
         let step = mask.trailing_zeros();
         if r & mask != 0 {
             let dst = unrel(r & !mask, root, p);
-            c.send(dst, step, acc)?;
+            c.send_slice(dst, step, acc)?;
             return Ok(Vec::new());
         }
         let src_rel = r | mask;
         if src_rel < p {
-            let got = c.recv_chunk(unrel(src_rel, root, p), step)?;
-            if got.len() != acc.len() {
-                return Err(Error::BadBufferSize {
-                    len: got.len(),
-                    size: acc.len(),
-                    why: "reduce inputs must have equal length on all ranks",
-                });
-            }
-            combine(&mut acc, got.as_slice());
+            c.recv_combine_into(unrel(src_rel, root, p), step, &mut acc, combiner)?;
         }
         mask <<= 1;
     }
-    Ok(acc)
+    Ok(acc.into_vec())
 }
 
 /// Gather to `root`: root returns the rank-ordered concatenation; others

@@ -16,11 +16,14 @@
 
 use crate::comm::{Chunk, Comm};
 use crate::error::{Error, Result};
-use crate::reduction::offload::CombineFn;
+use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
 use super::schedule::recursive as idx;
-use super::{blocks_into_vec, check_all_gather, check_reduce_scatter, pad_chunk, trim_blocks};
+use super::{
+    check_all_gather, check_reduce_scatter, pad_chunk, slice_all_reduce, slice_gather,
+    slice_reduce, trim_blocks,
+};
 
 fn require_pow2(p: usize) -> Result<()> {
     if !p.is_power_of_two() {
@@ -67,26 +70,29 @@ pub fn rec_all_gather_chunks<T: Elem, C: Comm<T>>(
         .collect())
 }
 
-/// Recursive-doubling all-gather, slice API.
+/// Recursive-doubling all-gather, slice API — adapter over
+/// [`rec_all_gather_chunks`].
 pub fn rec_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec<T>> {
-    let blocks = rec_all_gather_chunks(c, Chunk::from_slice(input))?;
-    Ok(Chunk::concat(&blocks))
+    slice_gather(input, |ch| rec_all_gather_chunks(c, ch))
 }
 
 /// Recursive-halving reduce-scatter over chunks: each step exchanges and
 /// combines half of the remaining segment.
 ///
 /// The `p` blocks start as zero-copy views of the caller's input chunk;
-/// the blocks we *send* go out as those views (no payload copies), and the
-/// blocks we *keep* are copied exactly once — by
-/// [`Chunk::make_mut_exact`]'s exact-range copy at their first combine —
-/// so the seed path's full-input staging copy is gone entirely. For
-/// `p > 1` the returned chunk is the unique full-range view of its
+/// the blocks we *send* go out as those views (no payload copies), and
+/// each kept block is *posted* as the receive target of its partner's
+/// partial ([`Comm::recv_combine_into`]). At a block's first combine the
+/// delivery is a one-pass fuse into fresh exact-size storage (both
+/// operands are still input views — one allocation, zero copies); on every
+/// later step the now-exclusive accumulator is folded in place, so its
+/// storage pointer is stable from the first combine to the final shard.
+/// For `p > 1` the returned chunk is the unique full-range view of its
 /// storage (`into_vec` is a move); at `p == 1` the input comes back.
 pub fn rec_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
 ) -> Result<Chunk<T>> {
     let p = c.size();
     let b = check_reduce_scatter(input.as_slice(), p)?;
@@ -115,8 +121,7 @@ pub fn rec_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
             c.send_slice(partner, (s * p + i) as u32, blocks[i].clone())?;
         }
         for i in keep_lo..keep_hi {
-            let got = c.recv_chunk(partner, (s * p + i) as u32)?;
-            combine(blocks[i].make_mut_exact(), got.as_slice());
+            c.recv_combine_into(partner, (s * p + i) as u32, &mut blocks[i], combiner)?;
         }
         lo = keep_lo;
         hi = keep_hi;
@@ -125,13 +130,14 @@ pub fn rec_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
     Ok(blocks.swap_remove(r))
 }
 
-/// Recursive-halving reduce-scatter, slice API.
+/// Recursive-halving reduce-scatter, slice API — adapter over
+/// [`rec_reduce_scatter_chunks`].
 pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
 ) -> Result<Vec<T>> {
-    Ok(rec_reduce_scatter_chunks(c, Chunk::from_slice(input), combine)?.into_vec())
+    slice_reduce(input, |ch| rec_reduce_scatter_chunks(c, ch, combiner))
 }
 
 /// All-reduce over chunks = recursive halving reduce-scatter ∘ recursive
@@ -144,7 +150,7 @@ pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
 pub fn rec_all_reduce_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
 ) -> Result<Vec<Chunk<T>>> {
     check_all_gather(input.as_slice())?;
     let p = c.size();
@@ -157,20 +163,19 @@ pub fn rec_all_reduce_chunks<T: Elem, C: Comm<T>>(
     } else {
         pad_chunk(&input, padded)
     };
-    let mine = rec_reduce_scatter_chunks(c, padded_input, combine)?;
+    let mine = rec_reduce_scatter_chunks(c, padded_input, combiner)?;
     let mut blocks = rec_all_gather_chunks(c, mine)?;
     trim_blocks(&mut blocks, n);
     Ok(blocks)
 }
 
-/// Recursive all-reduce, slice API.
+/// Recursive all-reduce, slice API — adapter over [`rec_all_reduce_chunks`].
 pub fn rec_all_reduce<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
 ) -> Result<Vec<T>> {
-    let blocks = rec_all_reduce_chunks(c, Chunk::from_slice(input), combine)?;
-    Ok(blocks_into_vec(blocks))
+    slice_all_reduce(input, |ch| rec_all_reduce_chunks(c, ch, combiner))
 }
 
 #[cfg(test)]

@@ -5,11 +5,14 @@
 
 use crate::comm::{Chunk, Comm};
 use crate::error::Result;
-use crate::reduction::offload::CombineFn;
+use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
 use super::schedule::ring as idx;
-use super::{blocks_into_vec, check_all_gather, check_reduce_scatter, pad_chunk, trim_blocks};
+use super::{
+    check_all_gather, check_reduce_scatter, pad_chunk, slice_all_reduce, slice_gather,
+    slice_reduce, trim_blocks,
+};
 
 /// Ring all-gather over the chunked plane: `p - 1` steps, each rank
 /// forwards the *chunk* it received in the previous step to its right
@@ -48,28 +51,30 @@ pub fn ring_all_gather_chunks<T: Elem, C: Comm<T>>(
         .collect())
 }
 
-/// Ring all-gather, slice API: wraps `input` into a chunk and materializes
-/// the contiguous output (the only two copies on the path).
+/// Ring all-gather, slice API — adapter over [`ring_all_gather_chunks`].
 pub fn ring_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec<T>> {
-    let blocks = ring_all_gather_chunks(c, Chunk::from_slice(input))?;
-    Ok(Chunk::concat(&blocks))
+    slice_gather(input, |ch| ring_all_gather_chunks(c, ch))
 }
 
 /// Ring reduce-scatter over the chunked plane: `p - 1` steps; the partial
 /// for each block travels once around the ring, combined at every hop (on
-/// the "GPU" — the injected [`CombineFn`]).
+/// the "GPU" — the injected [`Combiner`]).
 ///
-/// Hot-path note (§Perf): the outgoing first block is a zero-copy view of
-/// `input`; each received partial is combined through
-/// [`Chunk::make_mut_exact`] — one exact-range copy at its first combine
-/// (where it is still a view of the sender's input), in place on every
-/// later hop. For `p > 1` the returned chunk is therefore the unique
-/// full-range view of transport-delivered storage: `into_vec` on it is a
-/// move, never a copy. At `p == 1` the input chunk comes straight back.
+/// Hot-path note (§Perf): every step posts a view of this rank's own
+/// contribution as the receive target and folds the incoming partial into
+/// it via [`Comm::sendrecv_combine_into`]. At a partial's *first* combine
+/// (incoming is still a shared view of the sender's input) the delivery is
+/// a one-pass three-address fuse into fresh exact-size storage — one
+/// allocation, zero verbatim copies; on every later hop the exclusive
+/// traveling partial is taken over and folded in place, so the storage
+/// created at the first combine survives every remaining hop. For `p > 1`
+/// the returned chunk is the unique full-range view of that storage:
+/// `into_vec` on it is a move, never a copy. At `p == 1` the input chunk
+/// comes straight back.
 pub fn ring_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
 ) -> Result<Chunk<T>> {
     let p = c.size();
     let b = check_reduce_scatter(input.as_slice(), p)?;
@@ -84,24 +89,25 @@ pub fn ring_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
     let mut current = input.slice(first * b, b);
     for s in 0..p - 1 {
         let recv_b = idx::rs_recv_block(r, p, s);
-        let mut got = c.sendrecv_chunk(right, current, left, s as u32)?;
-        // Add our own contribution for the block that just arrived.
-        combine(got.make_mut_exact(), &input.as_slice()[recv_b * b..(recv_b + 1) * b]);
-        current = got;
+        // Post our own contribution for the arriving block as the receive
+        // target; the incoming partial is folded straight into the
+        // accumulator, never staged.
+        let mut acc = input.slice(recv_b * b, b);
+        c.sendrecv_combine_into(right, current, left, s as u32, &mut acc, combiner)?;
+        current = acc;
     }
     debug_assert_eq!(idx::rs_recv_block(r, p, p - 2), r);
     Ok(current)
 }
 
-/// Ring reduce-scatter, slice API: wraps the input once; the output
-/// materialization is a move of the traveling partial (see
-/// [`ring_reduce_scatter_chunks`]).
+/// Ring reduce-scatter, slice API — adapter over
+/// [`ring_reduce_scatter_chunks`].
 pub fn ring_reduce_scatter<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
 ) -> Result<Vec<T>> {
-    Ok(ring_reduce_scatter_chunks(c, Chunk::from_slice(input), combine)?.into_vec())
+    slice_reduce(input, |ch| ring_reduce_scatter_chunks(c, ch, combiner))
 }
 
 /// Ring all-reduce over chunks = chunk reduce-scatter ∘ chunk all-gather
@@ -117,7 +123,7 @@ pub fn ring_reduce_scatter<T: Elem, C: Comm<T>>(
 pub fn ring_all_reduce_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
 ) -> Result<Vec<Chunk<T>>> {
     check_all_gather(input.as_slice())?;
     let p = c.size();
@@ -129,21 +135,19 @@ pub fn ring_all_reduce_chunks<T: Elem, C: Comm<T>>(
     } else {
         pad_chunk(&input, padded)
     };
-    let mine = ring_reduce_scatter_chunks(c, padded_input, combine)?;
+    let mine = ring_reduce_scatter_chunks(c, padded_input, combiner)?;
     let mut blocks = ring_all_gather_chunks(c, mine)?;
     trim_blocks(&mut blocks, n);
     Ok(blocks)
 }
 
-/// Ring all-reduce, slice API: wraps the input and materializes the
-/// contiguous output (the only two copies on the aligned path).
+/// Ring all-reduce, slice API — adapter over [`ring_all_reduce_chunks`].
 pub fn ring_all_reduce<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: &[T],
-    combine: &CombineFn<T>,
+    combiner: &Combiner<T>,
 ) -> Result<Vec<T>> {
-    let blocks = ring_all_reduce_chunks(c, Chunk::from_slice(input), combine)?;
-    Ok(blocks_into_vec(blocks))
+    slice_all_reduce(input, |ch| ring_all_reduce_chunks(c, ch, combiner))
 }
 
 #[cfg(test)]

@@ -7,30 +7,46 @@
 //! broadcast — the same `O(log p)` step structure; the netsim library
 //! models use the proper double-binary-tree cost.
 //!
-//! Over the chunked plane the broadcast phase fans the reduced buffer out
-//! as zero-copy chunk clones (the seed path cloned the full vector per
-//! child); the reduce phase combines received chunks straight into the
-//! local accumulator without materializing them.
+//! Over the chunked plane the reduce phase *posts* the local accumulator
+//! as the receive target for every child's partial
+//! ([`Comm::recv_combine_into`]): the first delivery into a still-shared
+//! accumulator is a one-pass fuse into fresh storage, every later child is
+//! folded in place, and a leaf's contribution leaves as a zero-copy view —
+//! no rank ever materializes a staging vector (the seed path paid a
+//! `to_vec` of the input on every rank plus an owned-Vec send per leaf).
+//! The broadcast phase fans the reduced chunk out as zero-copy clones.
 
 use crate::comm::{Chunk, Comm};
 use crate::error::Result;
-use crate::reduction::offload::CombineFn;
+use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
-/// Binomial-tree all-reduce, any communicator size.
-pub fn tree_all_reduce<T: Elem, C: Comm<T>>(
+use super::slice_reduce;
+
+/// Binomial-tree all-reduce over chunks, any communicator size.
+///
+/// Consumes the input chunk as the reduction accumulator: on ranks that
+/// receive (rank 0 and interior nodes) children's partials are delivered
+/// straight into it via [`Comm::recv_combine_into`]; on leaf ranks it is
+/// sent up the tree as-is. Every rank returns the same reduced chunk; for
+/// `p > 1` on rank 0 that is the accumulator itself, elsewhere the
+/// broadcast-delivered view (shared with this rank's children until their
+/// references drop).
+pub fn tree_all_reduce_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
-    input: &[T],
-    combine: &CombineFn<T>,
-) -> Result<Vec<T>> {
-    super::check_all_gather(input)?;
+    input: Chunk<T>,
+    combiner: &Combiner<T>,
+) -> Result<Chunk<T>> {
+    super::check_all_gather(input.as_slice())?;
     c.begin_op();
     let p = c.size();
     let r = c.rank();
-    let mut acc = input.to_vec();
     if p == 1 {
-        return Ok(acc);
+        return Ok(input);
     }
+    // `Some` until the accumulator is sent up the tree — i.e. exactly on
+    // rank 0 once phase 1 completes.
+    let mut acc = Some(input);
 
     // Phase 1: binomial reduce toward rank 0.
     let mut mask = 1usize;
@@ -39,27 +55,29 @@ pub fn tree_all_reduce<T: Elem, C: Comm<T>>(
         let step = mask.trailing_zeros();
         if r & mask != 0 {
             let dst = r & !mask;
-            // Move the accumulator (we receive the final value in phase 2).
-            c.send(dst, step, std::mem::take(&mut acc))?;
+            // Move the accumulator up (we receive the final value in
+            // phase 2) — a zero-copy post of whatever storage it holds.
+            c.send_slice(dst, step, acc.take().expect("accumulator live until sent"))?;
             recv_mask = mask;
             break;
         }
         let src = r | mask;
         if src < p {
-            let got = c.recv_chunk(src, step)?;
-            combine(&mut acc, got.as_slice());
+            let dest = acc.as_mut().expect("receiving rank still holds accumulator");
+            c.recv_combine_into(src, step, dest, combiner)?;
         }
         mask <<= 1;
     }
 
     // Phase 2: binomial broadcast from rank 0 (mirror of phase 1).
-    let result = if r == 0 {
-        Chunk::from_vec(acc)
-    } else {
-        // Receive the final value from the rank we reduced into.
-        let src = r & !(recv_mask);
-        let step = 0x100 + recv_mask.trailing_zeros();
-        c.recv_chunk(src, step)?
+    let result = match acc {
+        Some(chunk) => chunk, // rank 0
+        None => {
+            // Receive the final value from the rank we reduced into.
+            let src = r & !(recv_mask);
+            let step = 0x100 + recv_mask.trailing_zeros();
+            c.recv_chunk(src, step)?
+        }
     };
     // Root keeps its initial recv_mask = next_power_of_two(p).
     let mut child_mask = recv_mask >> 1;
@@ -71,7 +89,17 @@ pub fn tree_all_reduce<T: Elem, C: Comm<T>>(
         }
         child_mask >>= 1;
     }
-    Ok(result.into_vec())
+    Ok(result)
+}
+
+/// Binomial-tree all-reduce, slice API — adapter over
+/// [`tree_all_reduce_chunks`].
+pub fn tree_all_reduce<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: &[T],
+    combiner: &Combiner<T>,
+) -> Result<Vec<T>> {
+    slice_reduce(input, |ch| tree_all_reduce_chunks(c, ch, combiner))
 }
 
 #[cfg(test)]
@@ -96,6 +124,26 @@ mod tests {
             let expect = oracle::all_reduce(&ins);
             for (r, o) in outs.iter().enumerate() {
                 assert_eq!(o, &expect, "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_chunks_root_keeps_accumulator_storage() {
+        // Rank 0's result must be the very storage its accumulator used —
+        // the reduce phase folds children in place, never re-materializes.
+        let p = 4;
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(move |c| {
+            let input = Chunk::from_vec(vec![c.rank() as f32; 3]);
+            let own_id = input.storage_id();
+            let out = tree_all_reduce_chunks(c, input, &native_combine()).unwrap();
+            (c.rank(), own_id, out.storage_id(), out.as_slice().to_vec())
+        });
+        for (r, own_id, out_id, vals) in outs {
+            assert_eq!(vals, vec![6.0; 3], "r={r}");
+            if r == 0 {
+                assert_eq!(own_id, out_id, "root re-materialized its accumulator");
             }
         }
     }

@@ -20,6 +20,8 @@ use std::fmt;
 use std::ops::Deref;
 use std::sync::Arc;
 
+use crate::reduction::offload::Combiner;
+
 /// Shared, sliceable message buffer: `Arc` storage + `(offset, len)` view.
 pub struct Chunk<T> {
     storage: Arc<Vec<T>>,
@@ -92,6 +94,13 @@ impl<T> Chunk<T> {
     pub fn is_full_view(&self) -> bool {
         self.off == 0 && self.len == self.storage.len()
     }
+
+    /// Whether this chunk may be written in place: it is the unique
+    /// full-range view of its storage, so no other view can observe the
+    /// write and no foreign bytes share the allocation.
+    pub fn is_exclusive(&self) -> bool {
+        self.is_full_view() && self.storage_refs() == 1
+    }
 }
 
 impl<T: Clone> Chunk<T> {
@@ -160,6 +169,58 @@ impl<T: Clone> Chunk<T> {
         let (off, len) = (self.off, self.len);
         let v = Arc::get_mut(&mut self.storage).expect("chunk storage unique after exact copy");
         &mut v[off..off + len]
+    }
+
+    /// Posted-receive delivery: replace this chunk's contents with
+    /// `incoming`'s, preferring a reference move over a copy.
+    ///
+    /// If `incoming` is [exclusive](Chunk::is_exclusive) the delivery is a
+    /// pointer move (`*self = incoming`) and `0` is returned; otherwise the
+    /// viewed range is copied into this chunk's (COW-resolved) storage and
+    /// the number of elements copied is returned. Lengths must match —
+    /// callers enforce that with a typed error before delivery.
+    pub fn accept(&mut self, incoming: Chunk<T>) -> usize {
+        debug_assert_eq!(self.len, incoming.len(), "accept length mismatch");
+        if incoming.is_exclusive() {
+            *self = incoming;
+            0
+        } else {
+            let n = incoming.len();
+            self.make_mut().clone_from_slice(incoming.as_slice());
+            n
+        }
+    }
+
+    /// Posted-receive delivery fused with a reduction: after the call this
+    /// chunk holds `self ⊕ incoming`, without ever copying a buffer verbatim.
+    ///
+    /// Three cases, in order:
+    /// 1. this chunk is [exclusive](Chunk::is_exclusive) → in-place fold into
+    ///    its storage (the accumulator pointer is stable across steps);
+    /// 2. `incoming` is exclusive → fold this chunk's elements into
+    ///    `incoming`'s storage and take it over (the traveling partial the
+    ///    sender moved into the transport becomes the accumulator);
+    /// 3. both are shared COW views → one-pass three-address fuse into fresh
+    ///    exact-size storage (one allocation, zero verbatim copies — this
+    ///    replaces the copy-then-fold that `make_mut_exact` paid on the
+    ///    first combine).
+    ///
+    /// Because case 2 swaps the operand order, the combine must be
+    /// commutative (sum/max/min are).
+    pub fn accept_combine(&mut self, incoming: Chunk<T>, combiner: &Combiner<T>)
+    where
+        T: 'static,
+    {
+        debug_assert_eq!(self.len, incoming.len(), "accept_combine length mismatch");
+        if self.is_exclusive() {
+            combiner.fold(self.make_mut(), incoming.as_slice());
+        } else if incoming.is_exclusive() {
+            let mut incoming = incoming;
+            combiner.fold(incoming.make_mut(), self.as_slice());
+            *self = incoming;
+        } else {
+            *self = Chunk::from_vec(combiner.fuse(incoming.as_slice(), self.as_slice()));
+        }
     }
 
     /// Materialize an ordered list of chunks into one contiguous vector
@@ -304,6 +365,56 @@ mod tests {
         let c = Chunk::from_vec(vec![10, 20, 30, 40]);
         let parts = vec![c.slice(2, 2), c.slice(0, 2)];
         assert_eq!(Chunk::concat(&parts), vec![30, 40, 10, 20]);
+    }
+
+    #[test]
+    fn accept_moves_exclusive_and_copies_shared() {
+        // Exclusive incoming: pointer move, zero copied elements.
+        let mut dest = Chunk::from_vec(vec![0.0f32; 3]);
+        let incoming = Chunk::from_vec(vec![1.0f32, 2.0, 3.0]);
+        let id = incoming.storage_id();
+        assert_eq!(dest.accept(incoming), 0);
+        assert_eq!(dest.storage_id(), id, "exclusive delivery must be a move");
+        assert_eq!(dest.as_slice(), &[1.0, 2.0, 3.0]);
+
+        // Shared incoming (a live sub-view): copied into dest's storage.
+        let parent = Chunk::from_vec(vec![7.0f32, 8.0, 9.0, 10.0]);
+        let mut dest = Chunk::from_vec(vec![0.0f32; 2]);
+        let dest_id = dest.storage_id();
+        assert_eq!(dest.accept(parent.slice(1, 2)), 2);
+        assert_eq!(dest.storage_id(), dest_id, "copy lands in the posted storage");
+        assert_eq!(dest.as_slice(), &[8.0, 9.0]);
+    }
+
+    #[test]
+    fn accept_combine_three_cases() {
+        let sum = crate::reduction::offload::native_combine::<f32>();
+
+        // Case 1: exclusive dest — in-place fold, pointer stable.
+        let mut acc = Chunk::from_vec(vec![1.0f32, 2.0]);
+        let id = acc.storage_id();
+        let parent = Chunk::from_vec(vec![10.0f32, 20.0]);
+        acc.accept_combine(parent.clone(), &sum);
+        assert_eq!(acc.storage_id(), id, "exclusive accumulator folds in place");
+        assert_eq!(acc.as_slice(), &[11.0, 22.0]);
+
+        // Case 2: shared dest, exclusive incoming — take over the partial.
+        let base = Chunk::from_vec(vec![1.0f32, 1.0]);
+        let mut acc = base.slice(0, 2);
+        let incoming = Chunk::from_vec(vec![5.0f32, 6.0]);
+        let incoming_id = incoming.storage_id();
+        acc.accept_combine(incoming, &sum);
+        assert_eq!(acc.storage_id(), incoming_id, "partial's storage is taken over");
+        assert_eq!(acc.as_slice(), &[6.0, 7.0]);
+        assert_eq!(base.as_slice(), &[1.0, 1.0], "posted view's parent untouched");
+
+        // Case 3: both shared — fused create into fresh exact storage.
+        let a = Chunk::from_vec(vec![1.0f32, 2.0, 3.0, 4.0]);
+        let mut dest = a.slice(0, 2);
+        dest.accept_combine(a.slice(2, 2), &sum);
+        assert_ne!(dest.storage_id(), a.storage_id());
+        assert_eq!(dest.as_slice(), &[4.0, 6.0]);
+        assert!(dest.is_exclusive(), "fused create yields exact exclusive storage");
     }
 
     #[test]

@@ -8,9 +8,13 @@
 //!
 //! The primitive operations are chunk-based ([`Comm::send_slice`] /
 //! [`Comm::recv_chunk`]): payloads are [`Chunk`] views into shared
-//! storage, so forwarding and sub-view sends are zero-copy. The owned
-//! `Vec` [`Comm::send`] / [`Comm::recv`] shims remain for callers that
-//! want materialized buffers.
+//! storage, so forwarding and sub-view sends are zero-copy. Posted
+//! receives ([`Comm::recv_into`] / [`Comm::recv_combine_into`]) go one
+//! step further and deliver — or fold — the incoming chunk directly into
+//! receiver-designated storage, which is what keeps the reduce path free
+//! of staging copies. The owned `Vec` [`Comm::send`] / [`Comm::recv`] /
+//! [`Comm::sendrecv`] shims are deprecated and remain only for external
+//! callers mid-migration.
 //!
 //! Tag namespacing: every communicator has a 64-bit context id (an FNV hash
 //! of its member list and lineage); the per-instance op sequence number and
@@ -22,6 +26,7 @@
 use std::time::Duration;
 
 use crate::error::{Error, Result};
+use crate::reduction::offload::Combiner;
 use crate::topology::Topology;
 
 use super::chunk::Chunk;
@@ -69,17 +74,77 @@ pub trait Comm<T: Send + Sync + 'static> {
     fn begin_op(&mut self);
 
     /// Compat shim: owned-vector send (wrapped into a chunk, still O(1)).
+    #[deprecated(note = "owned-Vec compat shim — use `send_slice` with a `Chunk` (O(1) wrap)")]
     fn send(&mut self, peer: usize, step: u32, data: Vec<T>) -> Result<()> {
         self.send_slice(peer, step, Chunk::from_vec(data))
     }
 
     /// Compat shim: materializing receive (copy only if the storage is
     /// still shared — a moved-in message is taken over for free).
+    #[deprecated(
+        note = "owned-Vec compat shim — use `recv_chunk` (zero-copy) or `recv_into` \
+                (posted receive)"
+    )]
     fn recv(&mut self, peer: usize, step: u32) -> Result<Vec<T>>
     where
         T: Clone,
     {
         Ok(self.recv_chunk(peer, step)?.into_vec())
+    }
+
+    /// Posted receive: deliver the matched chunk from `peer` directly into
+    /// `dest`'s storage — a reference move when the incoming chunk is
+    /// exclusive, a copy into the posted buffer otherwise. Returns
+    /// [`Error::RecvShapeMismatch`] (leaving the message receivable) when
+    /// `dest.len()` differs from the incoming length.
+    ///
+    /// The default builds on [`Comm::recv_chunk`]; endpoint-backed
+    /// implementations override it so the transport requeues mismatched
+    /// messages and accounts moved vs copied bytes exactly.
+    fn recv_into(&mut self, peer: usize, step: u32, dest: &mut Chunk<T>) -> Result<()>
+    where
+        T: Clone,
+    {
+        let got = self.recv_chunk(peer, step)?;
+        if got.len() != dest.len() {
+            return Err(Error::RecvShapeMismatch {
+                src: peer,
+                tag: step as u64,
+                expected: dest.len(),
+                got: got.len(),
+            });
+        }
+        dest.accept(got);
+        Ok(())
+    }
+
+    /// Posted receive fused with a reduction: after the call `dest` holds
+    /// `dest ⊕ incoming` with zero verbatim copies — in place when `dest`
+    /// is exclusive, taking over an exclusive incoming partial otherwise,
+    /// and a one-pass three-address fuse into fresh storage when both are
+    /// shared COW views (see [`Chunk::accept_combine`]). The combine must
+    /// be commutative. Shape mismatches behave as in [`Comm::recv_into`].
+    fn recv_combine_into(
+        &mut self,
+        peer: usize,
+        step: u32,
+        dest: &mut Chunk<T>,
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        let got = self.recv_chunk(peer, step)?;
+        if got.len() != dest.len() {
+            return Err(Error::RecvShapeMismatch {
+                src: peer,
+                tag: step as u64,
+                expected: dest.len(),
+                got: got.len(),
+            });
+        }
+        dest.accept_combine(got, combiner);
+        Ok(())
     }
 
     /// Combined exchange: send `chunk` to `to`, then receive from `from`,
@@ -95,13 +160,52 @@ pub trait Comm<T: Send + Sync + 'static> {
         self.recv_chunk(from, step)
     }
 
+    /// Fused exchange with a posted receive: send `chunk` to `to`, then
+    /// deliver the matched message from `from` into `dest`.
+    fn sendrecv_into(
+        &mut self,
+        to: usize,
+        chunk: Chunk<T>,
+        from: usize,
+        step: u32,
+        dest: &mut Chunk<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        self.send_slice(to, step, chunk)?;
+        self.recv_into(from, step, dest)
+    }
+
+    /// Fused exchange with a posted combining receive: send `chunk` to
+    /// `to`, then fold the matched message from `from` into `dest` — the
+    /// reduce-scatter hot-loop primitive.
+    fn sendrecv_combine_into(
+        &mut self,
+        to: usize,
+        chunk: Chunk<T>,
+        from: usize,
+        step: u32,
+        dest: &mut Chunk<T>,
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        self.send_slice(to, step, chunk)?;
+        self.recv_combine_into(from, step, dest, combiner)
+    }
+
     /// Owned-vector combined exchange (compat shim).
+    #[deprecated(
+        note = "owned-Vec compat shim — use `sendrecv_chunk` or `sendrecv_combine_into`"
+    )]
     fn sendrecv(&mut self, to: usize, data: Vec<T>, from: usize, step: u32) -> Result<Vec<T>>
     where
         T: Clone,
     {
-        self.send(to, step, data)?;
-        self.recv(from, step)
+        self.send_slice(to, step, Chunk::from_vec(data))?;
+        Ok(self.recv_chunk(from, step)?.into_vec())
     }
 
     /// Dissemination barrier: O(log p) rounds of empty-chunk tokens.
@@ -238,6 +342,28 @@ impl<T: Send + Sync + 'static> Comm<T> for Communicator<T> {
         self.ep.recv_chunk(peer, tag)
     }
 
+    fn recv_into(&mut self, peer: usize, step: u32, dest: &mut Chunk<T>) -> Result<()>
+    where
+        T: Clone,
+    {
+        let tag = compose_tag(self.ctx, self.op_seq, step);
+        self.ep.recv_chunk_into(peer, tag, dest)
+    }
+
+    fn recv_combine_into(
+        &mut self,
+        peer: usize,
+        step: u32,
+        dest: &mut Chunk<T>,
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        let tag = compose_tag(self.ctx, self.op_seq, step);
+        self.ep.recv_chunk_combine_into(peer, tag, dest, combiner)
+    }
+
     fn begin_op(&mut self) {
         self.op_seq = self.op_seq.wrapping_add(1);
     }
@@ -286,6 +412,36 @@ impl<'a, T: Send + Sync + 'static> Comm<T> for SubComm<'a, T> {
         self.ep.recv_chunk(global, tag)
     }
 
+    fn recv_into(&mut self, peer: usize, step: u32, dest: &mut Chunk<T>) -> Result<()>
+    where
+        T: Clone,
+    {
+        let global = *self.group.get(peer).ok_or(Error::PeerOutOfRange {
+            peer,
+            size: self.group.len(),
+        })?;
+        let tag = compose_tag(self.ctx, self.op_seq, step);
+        self.ep.recv_chunk_into(global, tag, dest)
+    }
+
+    fn recv_combine_into(
+        &mut self,
+        peer: usize,
+        step: u32,
+        dest: &mut Chunk<T>,
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        let global = *self.group.get(peer).ok_or(Error::PeerOutOfRange {
+            peer,
+            size: self.group.len(),
+        })?;
+        let tag = compose_tag(self.ctx, self.op_seq, step);
+        self.ep.recv_chunk_combine_into(global, tag, dest, combiner)
+    }
+
     fn begin_op(&mut self) {
         self.op_seq = self.op_seq.wrapping_add(1);
     }
@@ -310,8 +466,58 @@ mod tests {
     #[test]
     fn world_send_recv() {
         let (mut c0, mut c1) = pair();
+        c0.send_slice(1, 0, Chunk::from_vec(vec![42.0])).unwrap();
+        assert_eq!(c1.recv_chunk(0, 0).unwrap(), vec![42.0]);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn owned_vec_shims_still_work() {
+        // The deprecated Vec shims must keep matching the chunk API until
+        // they are removed.
+        let (mut c0, mut c1) = pair();
         c0.send(1, 0, vec![42.0]).unwrap();
         assert_eq!(c1.recv(0, 0).unwrap(), vec![42.0]);
+        c1.send(0, 1, vec![7.0]).unwrap();
+        assert_eq!(c0.sendrecv(1, vec![3.0], 1, 1).unwrap(), vec![7.0]);
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn posted_receive_through_communicator_counts_moved_bytes() {
+        let (mut c0, mut c1) = pair();
+        // Exclusive message: posted delivery is a move, counters prove it.
+        c0.send_slice(1, 0, Chunk::from_vec(vec![1.0, 2.0])).unwrap();
+        let mut dest = Chunk::from_vec(vec![0.0; 2]);
+        c1.recv_into(0, 0, &mut dest).unwrap();
+        assert_eq!(dest.as_slice(), &[1.0, 2.0]);
+        let t = c1.traffic();
+        assert_eq!((t.recvd_bytes, t.moved_bytes, t.copied_bytes), (8, 8, 0));
+
+        // Posted combining receive: exclusive accumulator folds in place.
+        let sum = crate::reduction::offload::native_combine::<f32>();
+        c0.send_slice(1, 1, Chunk::from_vec(vec![10.0, 20.0])).unwrap();
+        let id = dest.storage_id();
+        c1.recv_combine_into(0, 1, &mut dest, &sum).unwrap();
+        assert_eq!(dest.storage_id(), id, "accumulator storage is stable");
+        assert_eq!(dest.as_slice(), &[11.0, 22.0]);
+        let t = c1.traffic();
+        assert_eq!((t.moved_bytes, t.copied_bytes), (16, 0));
+    }
+
+    #[test]
+    fn posted_receive_shape_mismatch_is_typed_at_comm_level() {
+        let (mut c0, mut c1) = pair();
+        c0.send_slice(1, 0, Chunk::from_vec(vec![1.0, 2.0, 3.0])).unwrap();
+        let mut small = Chunk::from_vec(vec![0.0; 2]);
+        match c1.recv_into(0, 0, &mut small) {
+            Err(Error::RecvShapeMismatch { src: 0, expected: 2, got: 3, .. }) => {}
+            other => panic!("expected RecvShapeMismatch, got {other:?}"),
+        }
+        // Recoverable: a correctly sized post still matches the message.
+        let mut right = Chunk::from_vec(vec![0.0; 3]);
+        c1.recv_into(0, 0, &mut right).unwrap();
+        assert_eq!(right.as_slice(), &[1.0, 2.0, 3.0]);
     }
 
     #[test]
@@ -344,12 +550,12 @@ mod tests {
             assert_eq!(s1.group(), &[1, 3]);
             assert_eq!(s1.rank(), 0);
             assert_eq!(s1.size(), 2);
-            s1.send(1, 0, vec![7]).unwrap();
+            s1.send_slice(1, 0, Chunk::from_vec(vec![7])).unwrap();
         }
         {
             let mut s3 = c3.inter_node().unwrap();
             assert_eq!(s3.rank(), 1);
-            assert_eq!(s3.recv(0, 0).unwrap(), vec![7]);
+            assert_eq!(s3.recv_chunk(0, 0).unwrap(), vec![7]);
         }
     }
 
@@ -372,16 +578,16 @@ mod tests {
         // step must be distinguishable by tag.
         let mut c1 = comms.remove(1);
         let mut c0 = comms.remove(0);
-        c0.send(1, 0, vec![100]).unwrap();
+        c0.send_slice(1, 0, Chunk::from_vec(vec![100])).unwrap();
         {
             let mut s0 = c0.subcomm(vec![0, 1]).unwrap();
-            s0.send(1, 0, vec![200]).unwrap();
+            s0.send_slice(1, 0, Chunk::from_vec(vec![200])).unwrap();
         }
         {
             let mut s1 = c1.subcomm(vec![0, 1]).unwrap();
-            assert_eq!(s1.recv(0, 0).unwrap(), vec![200]);
+            assert_eq!(s1.recv_chunk(0, 0).unwrap(), vec![200]);
         }
-        assert_eq!(c1.recv(0, 0).unwrap(), vec![100]);
+        assert_eq!(c1.recv_chunk(0, 0).unwrap(), vec![100]);
     }
 
     #[test]

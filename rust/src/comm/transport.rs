@@ -17,6 +17,7 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::reduction::offload::Combiner;
 
 use super::chunk::Chunk;
 
@@ -47,6 +48,14 @@ pub struct Traffic {
     pub recvd_msgs: u64,
     /// Bytes received (matched) by this endpoint.
     pub recvd_bytes: u64,
+    /// Received bytes delivered by reference move or in-place combine —
+    /// no verbatim buffer copy on the receive path.
+    pub moved_bytes: u64,
+    /// Received bytes that had to be copied into caller storage (a shared
+    /// incoming view delivered into a posted buffer). The reduce-path
+    /// smoke guard asserts this stays zero. Invariant:
+    /// `moved_bytes + copied_bytes == recvd_bytes`.
+    pub copied_bytes: u64,
 }
 
 /// Cloneable handle with senders to every rank's mailbox.
@@ -146,16 +155,76 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
     }
 
     /// Owned-vector send: wraps into a [`Chunk`] (O(1)) and posts it.
+    #[deprecated(note = "owned-Vec compat shim — use `send_chunk` (O(1) wrap, zero-copy post)")]
     pub fn send(&mut self, to: usize, tag: u64, data: Vec<T>) -> Result<()> {
         self.send_chunk(to, tag, Chunk::from_vec(data))
     }
 
-    /// Blocking matched receive of a chunk from `(from, tag)`.
+    /// Blocking matched receive of a chunk from `(from, tag)` — the caller
+    /// takes the delivered reference, so the whole message counts as moved.
     pub fn recv_chunk(&mut self, from: usize, tag: u64) -> Result<Chunk<T>> {
+        let data = self.pull(from, tag)?;
+        self.count_recv(data.len(), 0);
+        Ok(data)
+    }
+
+    /// Posted receive: deliver the matched chunk into `dest`, preferring a
+    /// reference move over a copy (see [`Chunk::accept`]).
+    ///
+    /// If the incoming chunk's length differs from `dest.len()` the message
+    /// is pushed back onto the front of the pending queue (so a later,
+    /// correctly-sized receive can still match it) and a typed
+    /// [`Error::RecvShapeMismatch`] is returned.
+    pub fn recv_chunk_into(&mut self, from: usize, tag: u64, dest: &mut Chunk<T>) -> Result<()>
+    where
+        T: Clone,
+    {
+        let data = self.checked_pull(from, tag, dest.len())?;
+        let len = data.len();
+        let copied = dest.accept(data);
+        self.count_recv(len, copied);
+        Ok(())
+    }
+
+    /// Posted receive fused with a reduction: after the call `dest` holds
+    /// `dest ⊕ incoming` with zero verbatim copies (see
+    /// [`Chunk::accept_combine`] for the three delivery cases). Shape
+    /// mismatches behave as in [`Endpoint::recv_chunk_into`].
+    pub fn recv_chunk_combine_into(
+        &mut self,
+        from: usize,
+        tag: u64,
+        dest: &mut Chunk<T>,
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        let data = self.checked_pull(from, tag, dest.len())?;
+        let len = data.len();
+        dest.accept_combine(data, combiner);
+        self.count_recv(len, 0);
+        Ok(())
+    }
+
+    /// Materializing receive (compat shim over [`Endpoint::recv_chunk`]).
+    #[deprecated(
+        note = "owned-Vec compat shim — use `recv_chunk` (zero-copy) or `recv_chunk_into` \
+                (posted receive)"
+    )]
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        Ok(self.recv_chunk(from, tag)?.into_vec())
+    }
+
+    /// Matched pull without traffic accounting (counting happens once the
+    /// delivery is classified as moved or copied).
+    fn pull(&mut self, from: usize, tag: u64) -> Result<Chunk<T>> {
         let key = (from, tag);
         if let Some(q) = self.pending.get_mut(&key) {
             if let Some(data) = q.pop_front() {
-                self.count_recv(&data);
                 return Ok(data);
             }
         }
@@ -165,7 +234,6 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
             match self.rx.recv_timeout(remaining) {
                 Ok(msg) => {
                     if msg.src == from && msg.tag == tag {
-                        self.count_recv(&msg.data);
                         return Ok(msg.data);
                     }
                     self.pending
@@ -187,17 +255,30 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
         }
     }
 
-    /// Materializing receive (compat shim over [`Endpoint::recv_chunk`]).
-    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<T>>
-    where
-        T: Clone,
-    {
-        Ok(self.recv_chunk(from, tag)?.into_vec())
+    /// [`Endpoint::pull`] plus the posted-buffer shape check; on mismatch
+    /// the message is requeued at the front (FIFO order preserved — it was
+    /// taken from the front) and the error is recoverable.
+    fn checked_pull(&mut self, from: usize, tag: u64, expected: usize) -> Result<Chunk<T>> {
+        let data = self.pull(from, tag)?;
+        if data.len() != expected {
+            let got = data.len();
+            self.pending.entry((from, tag)).or_default().push_front(data);
+            return Err(Error::RecvShapeMismatch {
+                src: from,
+                tag,
+                expected,
+                got,
+            });
+        }
+        Ok(data)
     }
 
-    fn count_recv(&mut self, chunk: &Chunk<T>) {
+    fn count_recv(&mut self, elems: usize, copied_elems: usize) {
+        let bytes = |e: usize| (e * std::mem::size_of::<T>()) as u64;
         self.traffic.recvd_msgs += 1;
-        self.traffic.recvd_bytes += (chunk.len() * std::mem::size_of::<T>()) as u64;
+        self.traffic.recvd_bytes += bytes(elems);
+        self.traffic.copied_bytes += bytes(copied_elems);
+        self.traffic.moved_bytes += bytes(elems - copied_elems);
     }
 }
 
@@ -210,8 +291,8 @@ mod tests {
         let (_hub, mut eps) = TransportHub::<f32>::new(2);
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
-        e0.send(1, 7, vec![1.0, 2.0]).unwrap();
-        assert_eq!(e1.recv(0, 7).unwrap(), vec![1.0, 2.0]);
+        e0.send_chunk(1, 7, Chunk::from_vec(vec![1.0, 2.0])).unwrap();
+        assert_eq!(e1.recv_chunk(0, 7).unwrap(), vec![1.0, 2.0]);
     }
 
     #[test]
@@ -219,11 +300,11 @@ mod tests {
         let (_hub, mut eps) = TransportHub::<i64>::new(2);
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
-        e0.send(1, 1, vec![10]).unwrap();
-        e0.send(1, 2, vec![20]).unwrap();
+        e0.send_chunk(1, 1, Chunk::from_vec(vec![10])).unwrap();
+        e0.send_chunk(1, 2, Chunk::from_vec(vec![20])).unwrap();
         // Receive in reverse tag order.
-        assert_eq!(e1.recv(0, 2).unwrap(), vec![20]);
-        assert_eq!(e1.recv(0, 1).unwrap(), vec![10]);
+        assert_eq!(e1.recv_chunk(0, 2).unwrap(), vec![20]);
+        assert_eq!(e1.recv_chunk(0, 1).unwrap(), vec![10]);
     }
 
     #[test]
@@ -232,11 +313,23 @@ mod tests {
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
         for v in 0..4u8 {
-            e0.send(1, 9, vec![v]).unwrap();
+            e0.send_chunk(1, 9, Chunk::from_vec(vec![v])).unwrap();
         }
         for v in 0..4u8 {
-            assert_eq!(e1.recv(0, 9).unwrap(), vec![v]);
+            assert_eq!(e1.recv_chunk(0, 9).unwrap(), vec![v]);
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn owned_vec_shims_still_work() {
+        // The deprecated compat shims must stay behaviorally identical to
+        // the chunk API until they are removed.
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(1, 7, vec![1.0, 2.0]).unwrap();
+        assert_eq!(e1.recv(0, 7).unwrap(), vec![1.0, 2.0]);
     }
 
     #[test]
@@ -244,7 +337,7 @@ mod tests {
         let (_hub, mut eps) = TransportHub::<f32>::new(2);
         let mut e1 = eps.remove(1);
         e1.set_timeout(Duration::from_millis(20));
-        match e1.recv(0, 5) {
+        match e1.recv_chunk(0, 5) {
             Err(Error::RecvTimeout { src: 0, tag: 5, .. }) => {}
             other => panic!("expected RecvTimeout, got {other:?}"),
         }
@@ -255,7 +348,7 @@ mod tests {
         let (_hub, mut eps) = TransportHub::<f32>::new(2);
         let mut e0 = eps.remove(0);
         assert!(matches!(
-            e0.send(5, 0, vec![]),
+            e0.send_chunk(5, 0, Chunk::from_vec(vec![])),
             Err(Error::PeerOutOfRange { peer: 5, size: 2 })
         ));
     }
@@ -266,13 +359,85 @@ mod tests {
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
         let t = std::thread::spawn(move || {
-            let got = e1.recv(0, 3).unwrap();
-            e1.send(0, 4, got.iter().map(|x| x * 2.0).collect())
-                .unwrap();
+            let got = e1.recv_chunk(0, 3).unwrap();
+            let doubled: Vec<f64> = got.iter().map(|x| x * 2.0).collect();
+            e1.send_chunk(0, 4, Chunk::from_vec(doubled)).unwrap();
         });
-        e0.send(1, 3, vec![1.5, 2.5]).unwrap();
-        assert_eq!(e0.recv(1, 4).unwrap(), vec![3.0, 5.0]);
+        e0.send_chunk(1, 3, Chunk::from_vec(vec![1.5, 2.5])).unwrap();
+        assert_eq!(e0.recv_chunk(1, 4).unwrap(), vec![3.0, 5.0]);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn posted_receive_moves_exclusive_and_counts_copies() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+
+        // Exclusive message (sender moved its only reference): delivery is
+        // a pointer move into the posted buffer.
+        let msg = Chunk::from_vec(vec![1.0, 2.0]);
+        let msg_id = msg.storage_id();
+        e0.send_chunk(1, 1, msg).unwrap();
+        let mut dest = Chunk::from_vec(vec![0.0; 2]);
+        e1.recv_chunk_into(0, 1, &mut dest).unwrap();
+        assert_eq!(dest.storage_id(), msg_id, "exclusive delivery must move");
+        let t = e1.traffic();
+        assert_eq!((t.moved_bytes, t.copied_bytes), (8, 0));
+
+        // Shared message (sender keeps a live view): delivery copies into
+        // the posted buffer and the copy is accounted.
+        let big = Chunk::from_vec(vec![3.0, 4.0, 5.0, 6.0]);
+        e0.send_chunk(1, 2, big.slice(1, 2)).unwrap();
+        let mut dest = Chunk::from_vec(vec![0.0; 2]);
+        let dest_id = dest.storage_id();
+        e1.recv_chunk_into(0, 2, &mut dest).unwrap();
+        assert_eq!(dest.storage_id(), dest_id, "shared delivery copies in place");
+        assert_eq!(dest.as_slice(), &[4.0, 5.0]);
+        let t = e1.traffic();
+        assert_eq!((t.recvd_bytes, t.moved_bytes, t.copied_bytes), (16, 8, 8));
+    }
+
+    #[test]
+    fn posted_combine_receive_is_copy_free() {
+        let sum = crate::reduction::offload::native_combine::<f32>();
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+
+        // Exclusive accumulator: combine folds in place, pointer stable.
+        let input = Chunk::from_vec(vec![10.0, 20.0]);
+        e0.send_chunk(1, 1, input.slice(0, 2)).unwrap();
+        let mut acc = Chunk::from_vec(vec![1.0, 2.0]);
+        let acc_id = acc.storage_id();
+        e1.recv_chunk_combine_into(0, 1, &mut acc, &sum).unwrap();
+        assert_eq!(acc.storage_id(), acc_id, "accumulator must fold in place");
+        assert_eq!(acc.as_slice(), &[11.0, 22.0]);
+        let t = e1.traffic();
+        assert_eq!((t.moved_bytes, t.copied_bytes), (8, 0), "combine never copies");
+    }
+
+    #[test]
+    fn shape_mismatch_is_typed_and_recoverable() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send_chunk(1, 3, Chunk::from_vec(vec![1.0, 2.0, 3.0])).unwrap();
+
+        // Wrong-size posted buffer: typed error, nothing delivered...
+        let mut small = Chunk::from_vec(vec![0.0; 2]);
+        match e1.recv_chunk_into(0, 3, &mut small) {
+            Err(Error::RecvShapeMismatch { src: 0, tag: 3, expected: 2, got: 3 }) => {}
+            other => panic!("expected RecvShapeMismatch, got {other:?}"),
+        }
+        assert_eq!(small.as_slice(), &[0.0, 0.0], "posted buffer untouched");
+        let t = e1.traffic();
+        assert_eq!((t.recvd_msgs, t.recvd_bytes), (0, 0), "mismatch is not a receive");
+
+        // ...and the message is still matchable by a correctly sized post.
+        let mut right = Chunk::from_vec(vec![0.0; 3]);
+        e1.recv_chunk_into(0, 3, &mut right).unwrap();
+        assert_eq!(right.as_slice(), &[1.0, 2.0, 3.0]);
     }
 
     #[test]
@@ -300,12 +465,15 @@ mod tests {
         let (_hub, mut eps) = TransportHub::<f32>::new(2);
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
-        e0.send(1, 0, vec![1.0, 2.0, 3.0]).unwrap();
+        e0.send_chunk(1, 0, Chunk::from_vec(vec![1.0, 2.0, 3.0])).unwrap();
         let t = e0.traffic();
         assert_eq!((t.sent_msgs, t.sent_elems, t.sent_bytes), (1, 3, 12));
         assert_eq!((t.recvd_msgs, t.recvd_bytes), (0, 0));
-        let _ = e1.recv(0, 0).unwrap();
+        let _ = e1.recv_chunk(0, 0).unwrap();
         let t = e1.traffic();
         assert_eq!((t.recvd_msgs, t.recvd_bytes), (1, 12));
+        // Reference handover to the caller is a move, never a copy.
+        assert_eq!((t.moved_bytes, t.copied_bytes), (12, 0));
+        assert_eq!(t.moved_bytes + t.copied_bytes, t.recvd_bytes);
     }
 }

@@ -100,8 +100,10 @@ mod tests {
             c.begin_op();
             let p = c.size();
             let r = c.rank();
-            c.send((r + 1) % p, 0, vec![r as f32]).unwrap();
-            c.recv((r + p - 1) % p, 0).unwrap()[0]
+            use crate::comm::Chunk;
+            c.send_slice((r + 1) % p, 0, Chunk::from_vec(vec![r as f32]))
+                .unwrap();
+            c.recv_chunk((r + p - 1) % p, 0).unwrap()[0]
         });
         let total: f32 = got.iter().sum();
         assert_eq!(total, 15.0);

@@ -23,6 +23,16 @@ pub enum Error {
     /// A receive timed out — the peer rank likely died or deadlocked.
     RecvTimeout { src: usize, tag: u64, ms: u64 },
 
+    /// A posted receive buffer (`recv_into` / `recv_combine_into`) does not
+    /// match the shape of the incoming chunk. The message is left queued so
+    /// the caller can re-post a correctly sized buffer.
+    RecvShapeMismatch {
+        src: usize,
+        tag: u64,
+        expected: usize,
+        got: usize,
+    },
+
     /// The transport was shut down while an operation was in flight.
     TransportClosed { rank: usize },
 
@@ -60,6 +70,13 @@ impl fmt::Display for Error {
             }
             Error::RecvTimeout { src, tag, ms } => {
                 write!(f, "recv from rank {src} (tag {tag:#x}) timed out after {ms} ms")
+            }
+            Error::RecvShapeMismatch { src, tag, expected, got } => {
+                write!(
+                    f,
+                    "posted receive buffer of {expected} elements cannot accept \
+                     {got}-element chunk from rank {src} (tag {tag:#x})"
+                )
             }
             Error::TransportClosed { rank } => {
                 write!(f, "transport closed while rank {rank} was communicating")
@@ -107,6 +124,12 @@ mod tests {
         );
         let e = Error::RecvTimeout { src: 2, tag: 0x10, ms: 50 };
         assert!(e.to_string().contains("tag 0x10"));
+        let e = Error::RecvShapeMismatch { src: 1, tag: 0x20, expected: 4, got: 8 };
+        assert_eq!(
+            e.to_string(),
+            "posted receive buffer of 4 elements cannot accept 8-element chunk \
+             from rank 1 (tag 0x20)"
+        );
         let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(e.to_string().contains("gone"));
         assert!(std::error::Error::source(&e).is_some());

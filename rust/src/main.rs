@@ -308,6 +308,25 @@ fn run_smoke(out: &Path) -> Result<()> {
             )));
         }
     }
+    // Posted-receive guard: the whole reduce path (reduce-scatter and
+    // all-reduce, every backend) must deliver by reference handover or
+    // combine-write only — a single copied byte means a staging copy crept
+    // back into the data plane. Checked in both launcher modes.
+    for c in spawn_sweep.cells.iter().chain(&sweep.cells) {
+        if matches!(c.kind, CollKind::ReduceScatter | CollKind::AllReduce)
+            && c.copied_bytes_per_op != 0
+        {
+            return Err(pccl::error::Error::Dispatch(format!(
+                "reduce path is no longer copy-free: {}/{} {} B × {} ranks \
+                 copied {} B per op on delivery",
+                c.kind.label(),
+                c.backend.label(),
+                c.msg_bytes,
+                c.ranks,
+                c.copied_bytes_per_op
+            )));
+        }
+    }
     // Flat-library cells must also match the closed-form schedule volume
     // (ring all-gather / reduce-scatter, and the ring all-reduce
     // composition on the Cray-MPICH backend).
@@ -340,14 +359,18 @@ fn run_smoke(out: &Path) -> Result<()> {
                 ("stddev_s", Value::Num(c.stats.stddev())),
                 ("trials", Value::Num(c.stats.count() as f64)),
                 ("bytes_per_op", Value::Num(c.bytes_per_op as f64)),
+                ("copied_bytes", Value::Num(c.copied_bytes_per_op as f64)),
             ])
         })
         .collect();
     let doc = Value::obj(vec![
-        ("schema", Value::Num(3.0)),
+        ("schema", Value::Num(4.0)),
         ("suite", Value::Str("pccl-smoke".to_string())),
         ("mode", Value::Str("persistent".to_string())),
         ("schedule_equivalent", Value::Bool(true)),
+        // The posted-receive guard above: every reduce-scatter and
+        // all-reduce cell delivered with copied_bytes == 0.
+        ("reduce_copy_free", Value::Bool(true)),
         // Which collectives the spawn-vs-persistent byte guard covered —
         // CI fails above if any of the three is missing.
         (

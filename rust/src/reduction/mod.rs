@@ -13,7 +13,7 @@ mod native;
 pub mod offload;
 
 pub use elem::{DType, Elem};
-pub use native::{reduce_into, reduce_into_op, ReduceOp};
+pub use native::{reduce_fused, reduce_fused_op, reduce_into, reduce_into_op, ReduceOp};
 
 #[cfg(test)]
 mod tests {
@@ -31,6 +31,15 @@ mod tests {
         let mut acc = vec![1.0f64; 17];
         reduce_into(&mut acc, &vec![2.0f64; 17]);
         assert!(acc.iter().all(|&x| x == 3.0));
+    }
+
+    #[test]
+    fn fused_matches_copy_then_fold() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let b = vec![10.0f32, 20.0, 30.0, 40.0];
+        assert_eq!(reduce_fused(&a, &b), vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(reduce_fused_op(&a, &b, ReduceOp::Max), b);
+        assert_eq!(reduce_fused_op(&b, &a, ReduceOp::Min), a);
     }
 
     #[test]

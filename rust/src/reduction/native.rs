@@ -42,6 +42,30 @@ pub fn reduce_into<T: Elem>(acc: &mut [T], src: &[T]) {
     }
 }
 
+/// Three-address fused combine: returns a fresh `out` with `out[i] = a[i] + b[i]`.
+///
+/// One pass over both inputs, writing each output element exactly once — the
+/// copy-free way to materialize the *first* combine of a reduction when
+/// neither operand's storage may be written (both are COW views of live
+/// buffers). Compare with copy-then-[`reduce_into`], which pays a full write
+/// pass for the copy before the read-modify-write pass.
+#[inline]
+pub fn reduce_fused<T: Elem>(a: &[T], b: &[T]) -> Vec<T> {
+    assert_eq!(a.len(), b.len(), "reduce_fused length mismatch");
+    a.iter().zip(b).map(|(&x, &y)| x.add(y)).collect()
+}
+
+/// Three-address fused `op` combine: `out[i] = op(a[i], b[i])`.
+#[inline]
+pub fn reduce_fused_op<T: Elem>(a: &[T], b: &[T], op: ReduceOp) -> Vec<T> {
+    assert_eq!(a.len(), b.len(), "reduce_fused_op length mismatch");
+    match op {
+        ReduceOp::Sum => reduce_fused(a, b),
+        ReduceOp::Max => a.iter().zip(b).map(|(&x, &y)| x.max_(y)).collect(),
+        ReduceOp::Min => a.iter().zip(b).map(|(&x, &y)| x.min_(y)).collect(),
+    }
+}
+
 /// `acc[i] = op(acc[i], src[i])` for all i.
 #[inline]
 pub fn reduce_into_op<T: Elem>(acc: &mut [T], src: &[T], op: ReduceOp) {

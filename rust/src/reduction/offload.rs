@@ -13,16 +13,88 @@ use crate::runtime::{Artifacts, DeviceHandle};
 
 use super::native;
 
-/// A combine function used by collectives: `acc += src`.
+/// A two-address combine function used by collectives: `acc += src`.
 ///
 /// Collectives are generic over element type; the combine is injected so the
 /// same algorithm code can run with the native host reducer (default) or the
 /// XLA-offloaded kernel (f32 only).
 pub type CombineFn<T> = Arc<dyn Fn(&mut [T], &[T]) + Send + Sync>;
 
-/// The native (host) combine — works for every [`crate::reduction::Elem`].
-pub fn native_combine<T: crate::reduction::Elem>() -> CombineFn<T> {
-    Arc::new(|acc, src| native::reduce_into(acc, src))
+/// A three-address fused combine: `out[i] = a[i] ⊕ b[i]` into fresh storage,
+/// one pass, each output element written exactly once.
+///
+/// Used by the posted-receive data plane when *neither* operand's storage may
+/// be mutated (both are COW views of live buffers): the fused form replaces
+/// copy-then-fold, which pays a full extra write pass for the copy.
+pub type FuseFn<T> = Arc<dyn Fn(&[T], &[T]) -> Vec<T> + Send + Sync>;
+
+/// The combine pair injected into reduce-capable collectives: a two-address
+/// fold for in-place accumulation plus a three-address fuse for the
+/// first combine of a traveling partial.
+///
+/// The posted-receive delivery path ([`crate::comm::Chunk::accept_combine`])
+/// picks between them by storage exclusivity, so the combine must be
+/// **commutative** (`a ⊕ b == b ⊕ a`) — true for sum/max/min, including
+/// IEEE-754 two-operand addition.
+#[derive(Clone)]
+pub struct Combiner<T> {
+    fold: CombineFn<T>,
+    fuse: FuseFn<T>,
+}
+
+impl<T: 'static> Combiner<T> {
+    /// Bundle an explicit fold/fuse pair.
+    pub fn new(fold: CombineFn<T>, fuse: FuseFn<T>) -> Self {
+        Self { fold, fuse }
+    }
+
+    /// Derive the fuse from a fold as copy-then-fold. Correct for any fold,
+    /// but the fuse pays one hidden materialization copy — use only when a
+    /// genuine three-address kernel is unavailable (e.g. wrapping
+    /// [`XlaReducer::combine_fn`]).
+    pub fn from_fold(fold: CombineFn<T>) -> Self
+    where
+        T: Clone,
+    {
+        let f = fold.clone();
+        let fuse: FuseFn<T> = Arc::new(move |a, b| {
+            let mut out = a.to_vec();
+            f(&mut out, b);
+            out
+        });
+        Self { fold, fuse }
+    }
+
+    /// The native host combiner for `op`, both halves truly one-pass.
+    pub fn for_op(op: native::ReduceOp) -> Self
+    where
+        T: crate::reduction::Elem,
+    {
+        Self {
+            fold: Arc::new(move |acc, src| native::reduce_into_op(acc, src, op)),
+            fuse: Arc::new(move |a, b| native::reduce_fused_op(a, b, op)),
+        }
+    }
+
+    /// Two-address fold: `acc[i] ⊕= src[i]`.
+    #[inline]
+    pub fn fold(&self, acc: &mut [T], src: &[T]) {
+        (self.fold)(acc, src)
+    }
+
+    /// Three-address fuse: fresh `out` with `out[i] = a[i] ⊕ b[i]`.
+    #[inline]
+    pub fn fuse(&self, a: &[T], b: &[T]) -> Vec<T> {
+        (self.fuse)(a, b)
+    }
+}
+
+/// The native (host) sum combiner — works for every [`crate::reduction::Elem`].
+pub fn native_combine<T: crate::reduction::Elem>() -> Combiner<T> {
+    Combiner {
+        fold: Arc::new(|acc, src| native::reduce_into(acc, src)),
+        fuse: Arc::new(|a, b| native::reduce_fused(a, b)),
+    }
 }
 
 /// XLA-offloaded f32 sum over fixed-size chunks.

@@ -51,6 +51,10 @@ pub struct MeasuredCell {
     /// Bytes actually sent per collective op, summed over all ranks —
     /// schedule-determined and identical across launcher modes.
     pub bytes_per_op: u64,
+    /// Received bytes delivered by *copying* per collective op, summed over
+    /// all ranks ([`crate::comm::Traffic::copied_bytes`] deltas). The
+    /// reduce path must report 0 — `pccl smoke` enforces it.
+    pub copied_bytes_per_op: u64,
 }
 
 /// Sweep configuration for the launcher.
@@ -280,6 +284,7 @@ fn cell_trial(
             secs,
             sent_msgs: (after.sent_msgs - before.sent_msgs) / inner as u64,
             sent_bytes: (after.sent_bytes - before.sent_bytes) / inner as u64,
+            copied_bytes: (after.copied_bytes - before.copied_bytes) / inner as u64,
         })
     }
 }
@@ -357,12 +362,22 @@ impl Launcher {
         );
         let mut stats = Stats::new();
         let mut bytes_per_op = 0u64;
+        let mut copied_bytes_per_op = 0u64;
         for _ in 0..self.cfg.trials.max(1) {
             let reports = self.launch::<f32, _, _>(topo, &trial)?;
             stats.push(reports[0].secs);
             bytes_per_op = reports.iter().map(|t| t.sent_bytes).sum();
+            copied_bytes_per_op = reports.iter().map(|t| t.copied_bytes).sum();
         }
-        Ok(MeasuredCell { kind, backend, msg_bytes, ranks: p, stats, bytes_per_op })
+        Ok(MeasuredCell {
+            kind,
+            backend,
+            msg_bytes,
+            ranks: p,
+            stats,
+            bytes_per_op,
+            copied_bytes_per_op,
+        })
     }
 
     /// Time one cell on a pinned [`PersistentWorld`].
@@ -384,12 +399,22 @@ impl Launcher {
         );
         let mut stats = Stats::new();
         let mut bytes_per_op = 0u64;
+        let mut copied_bytes_per_op = 0u64;
         for _ in 0..self.cfg.trials.max(1) {
             let reports = world.run_trial(trial.clone())?;
             stats.push(reports[0].secs);
             bytes_per_op = reports.iter().map(|t| t.sent_bytes).sum();
+            copied_bytes_per_op = reports.iter().map(|t| t.copied_bytes).sum();
         }
-        Ok(MeasuredCell { kind, backend, msg_bytes, ranks: p, stats, bytes_per_op })
+        Ok(MeasuredCell {
+            kind,
+            backend,
+            msg_bytes,
+            ranks: p,
+            stats,
+            bytes_per_op,
+            copied_bytes_per_op,
+        })
     }
 
     /// The full sweep: every registered backend × every collective × every
@@ -442,8 +467,8 @@ mod tests {
                 c.begin_op();
                 let p = c.size();
                 let r = c.rank();
-                c.send((r + 1) % p, 0, vec![r as f32])?;
-                Ok(c.recv((r + p - 1) % p, 0)?[0])
+                c.send_slice((r + 1) % p, 0, crate::comm::Chunk::from_vec(vec![r as f32]))?;
+                Ok(c.recv_chunk((r + p - 1) % p, 0)?[0])
             })
             .unwrap();
         assert_eq!(outs, vec![4.0, 0.0, 1.0, 2.0, 3.0]);

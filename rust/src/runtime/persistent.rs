@@ -31,6 +31,11 @@ pub struct TrialReport {
     pub sent_msgs: u64,
     /// Bytes this rank sent inside the timed section.
     pub sent_bytes: u64,
+    /// Received bytes that were delivered by *copying* into this rank's
+    /// posted or COW-resolved storage inside the timed section (the
+    /// [`crate::comm::Traffic::copied_bytes`] delta). Zero on the whole
+    /// reduce path — `pccl smoke` fails the run otherwise.
+    pub copied_bytes: u64,
 }
 
 type Job<T> = Box<dyn FnOnce(&mut Communicator<T>) -> Result<TrialReport> + Send>;
@@ -182,9 +187,10 @@ mod tests {
                     let p = c.size();
                     let r = c.rank();
                     let before = c.traffic();
-                    c.send((r + 1) % p, 0, vec![round as f32; 2])?;
-                    let got = c.recv((r + p - 1) % p, 0)?;
-                    if got != vec![round as f32; 2] {
+                    use crate::comm::Chunk;
+                    c.send_slice((r + 1) % p, 0, Chunk::from_vec(vec![round as f32; 2]))?;
+                    let got = c.recv_chunk((r + p - 1) % p, 0)?;
+                    if got.as_slice() != [round as f32; 2] {
                         return Err(Error::Dispatch(format!("bad payload {got:?}")));
                     }
                     let after = c.traffic();
@@ -192,11 +198,14 @@ mod tests {
                         secs: 0.0,
                         sent_msgs: after.sent_msgs - before.sent_msgs,
                         sent_bytes: after.sent_bytes - before.sent_bytes,
+                        copied_bytes: after.copied_bytes - before.copied_bytes,
                     })
                 })
                 .unwrap();
             assert_eq!(reports.len(), 4);
-            assert!(reports.iter().all(|t| t.sent_msgs == 1 && t.sent_bytes == 8));
+            assert!(reports
+                .iter()
+                .all(|t| t.sent_msgs == 1 && t.sent_bytes == 8 && t.copied_bytes == 0));
         }
     }
 

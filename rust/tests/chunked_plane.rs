@@ -25,8 +25,10 @@ use pccl::backends::{
     reduce_scatter_chunks, scatter, Backend, CollKind, CollectiveOptions,
 };
 use pccl::collectives::{
-    hier_all_gather_chunks, hier_all_reduce, oracle, pipelined_hier_all_gather, rec_all_gather,
-    rec_all_reduce, ring_all_gather_chunks, ring_all_reduce, ring_reduce_scatter,
+    hier_all_gather_chunks, hier_all_reduce, hier_reduce_scatter_chunks, oracle,
+    pipelined_hier_all_gather, pipelined_hier_all_reduce_chunks,
+    pipelined_hier_reduce_scatter_chunks, rec_all_gather, rec_all_reduce,
+    rec_reduce_scatter_chunks, ring_all_gather_chunks, ring_all_reduce, ring_reduce_scatter,
     ring_reduce_scatter_chunks, InterAlgo, Pccl,
 };
 use pccl::comm::{Chunk, Comm, CommWorld, Communicator};
@@ -494,6 +496,264 @@ fn p1_all_reduce_advances_wire_tags() {
         assert_eq!(b, vec![222.0], "rec all-reduce must advance wire tags");
         assert_eq!(d, vec![222.0], "hier all-reduce must advance wire tags");
     }
+}
+
+/// Storage-identity proof for every reduce backend, at 6 ranks (3×2 —
+/// ring, hierarchical, pipelined) and 8 ranks (2×4 — all four, recursive
+/// halving included): the delivered shard must be uniquely owned,
+/// exact-size storage consumable by a pointer-identical `into_vec` move,
+/// and the transport must deliver the whole collective with
+/// `copied_bytes == 0` (the posted-receive acceptance bar).
+#[test]
+fn reduce_backends_deliver_exclusive_shard_storage() {
+    for (topo, pow2) in [
+        (Topology::new(3, 2, 1).unwrap(), false),
+        (Topology::new(2, 4, 1).unwrap(), true),
+    ] {
+        let p = topo.world_size();
+        let b = 6;
+        let world = CommWorld::<f32>::with_topology(topo);
+        let outs = world.run(move |c| {
+            let comb = native_combine();
+            let r = c.rank();
+            let before = c.traffic().copied_bytes;
+            let mut shards = vec![
+                (
+                    "ring",
+                    ring_reduce_scatter_chunks(c, Chunk::from_vec(rank_input(r, p * b)), &comb)
+                        .unwrap(),
+                ),
+                (
+                    "hier",
+                    hier_reduce_scatter_chunks(
+                        c,
+                        Chunk::from_vec(rank_input(r, p * b)),
+                        &comb,
+                        InterAlgo::Ring,
+                    )
+                    .unwrap(),
+                ),
+                (
+                    "pipelined",
+                    pipelined_hier_reduce_scatter_chunks(
+                        c,
+                        Chunk::from_vec(rank_input(r, p * b)),
+                        &comb,
+                        InterAlgo::Ring,
+                        2,
+                    )
+                    .unwrap(),
+                ),
+            ];
+            if pow2 {
+                shards.push((
+                    "rec",
+                    rec_reduce_scatter_chunks(c, Chunk::from_vec(rank_input(r, p * b)), &comb)
+                        .unwrap(),
+                ));
+            }
+            let copied = c.traffic().copied_bytes - before;
+            let out: Vec<(&str, Vec<f32>)> = shards
+                .into_iter()
+                .map(|(name, shard)| {
+                    assert_eq!(
+                        shard.storage_refs(),
+                        1,
+                        "{name} p={p}: shard must be uniquely owned"
+                    );
+                    assert!(shard.is_full_view(), "{name} p={p}: shard must be exact-size");
+                    let ptr = shard.as_slice().as_ptr() as usize;
+                    let v = shard.into_vec();
+                    assert_eq!(v.as_ptr() as usize, ptr, "{name} p={p}: into_vec must move");
+                    (name, v)
+                })
+                .collect();
+            (copied, out)
+        });
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+        for (r, (copied, per_backend)) in outs.iter().enumerate() {
+            assert_eq!(*copied, 0, "p={p} r={r}: reduce delivery must be copy-free");
+            for (name, v) in per_backend {
+                assert_eq!(v, &oracle::reduce_scatter(&ins, r), "{name} p={p} r={r}");
+            }
+        }
+    }
+}
+
+/// Pipelined reduce path on chunk splits misaligned with the rank count
+/// (cb = 5 and 2 on p = 6): the reassembled shard is still fresh unique
+/// exact-size storage, the transport still copies nothing (the stage
+/// staging gather is rank-local, pre-transport), and content matches the
+/// oracle — including the padded pipelined all-reduce.
+#[test]
+fn pipelined_reduce_uneven_chunk_splits_deliver_fresh_storage() {
+    let topo = Topology::new(3, 2, 1).unwrap();
+    let p = topo.world_size();
+    let b = 10;
+    for chunks in [2usize, 5] {
+        let world = CommWorld::<f32>::with_topology(topo);
+        let outs = world.run(move |c| {
+            let before = c.traffic().copied_bytes;
+            let shard = pipelined_hier_reduce_scatter_chunks(
+                c,
+                Chunk::from_vec(rank_input(c.rank(), p * b)),
+                &native_combine(),
+                InterAlgo::Ring,
+                chunks,
+            )
+            .unwrap();
+            assert_eq!(
+                c.traffic().copied_bytes - before,
+                0,
+                "chunks={chunks}: transport must not copy"
+            );
+            assert_eq!(shard.storage_refs(), 1, "chunks={chunks}: shared shard");
+            assert!(shard.is_full_view(), "chunks={chunks}: padded/view shard");
+            let ptr = shard.as_slice().as_ptr() as usize;
+            let v = shard.into_vec();
+            assert_eq!(v.as_ptr() as usize, ptr, "chunks={chunks}: into_vec must move");
+            v
+        });
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o, &oracle::reduce_scatter(&ins, r), "chunks={chunks} r={r}");
+        }
+    }
+    // Padded pipelined all-reduce: stage length 2 on 6 ranks pads inside
+    // every stage; the block list must still trim back to exactly n.
+    let n = 10;
+    let world = CommWorld::<f32>::with_topology(topo);
+    let outs = world.run(move |c| {
+        let blocks = pipelined_hier_all_reduce_chunks(
+            c,
+            Chunk::from_vec(rank_input(c.rank(), n)),
+            &native_combine(),
+            InterAlgo::Ring,
+            5,
+        )
+        .unwrap();
+        let out = Chunk::concat(&blocks);
+        assert_eq!(out.len(), n, "trim must drop the padding");
+        out
+    });
+    let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, n)).collect();
+    let expect = oracle::all_reduce(&ins);
+    for (r, o) in outs.iter().enumerate() {
+        assert_eq!(o, &expect, "padded pipelined all-reduce r={r}");
+    }
+}
+
+/// Hand-rolled all-reduce over `sendrecv_combine_into` at 3/6/12 ranks
+/// with per-step storage-id capture: the accumulator starts exclusive, so
+/// *every* delivery folds in place and its backing storage survives every
+/// combine step of the collective — the posted-receive contract, observed
+/// directly rather than through a backend.
+#[test]
+fn posted_combine_accumulator_storage_survives_every_step() {
+    for p in [3usize, 6, 12] {
+        let m = 4;
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(move |c| {
+            let comb = native_combine();
+            let r = c.rank();
+            let own = rank_input(r, m);
+            let mut acc = Chunk::from_vec(own.clone());
+            let acc_id = acc.storage_id();
+            c.begin_op();
+            let before = c.traffic().copied_bytes;
+            for s in 0..p - 1 {
+                // Step s: hand own input to rank r+s+1, fold rank
+                // r-s-1's incoming copy straight into the accumulator.
+                let to = (r + s + 1) % p;
+                let from = (r + p - s - 1) % p;
+                c.sendrecv_combine_into(
+                    to,
+                    Chunk::from_slice(&own),
+                    from,
+                    s as u32,
+                    &mut acc,
+                    &comb,
+                )
+                .unwrap();
+                assert_eq!(
+                    acc.storage_id(),
+                    acc_id,
+                    "p={p} r={r} step {s}: combine re-materialized the accumulator"
+                );
+            }
+            assert_eq!(
+                c.traffic().copied_bytes - before,
+                0,
+                "p={p} r={r}: combine deliveries must not copy"
+            );
+            acc.into_vec()
+        });
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, m)).collect();
+        let expect = oracle::all_reduce(&ins);
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o, &expect, "p={p} r={r}");
+        }
+    }
+}
+
+/// Hand-rolled ring rotation over `sendrecv_into` at 3/6/12 ranks: every
+/// hop delivers into a posted receive buffer, the exclusive in-flight
+/// chunk takes over the posted storage (so `copied_bytes` stays zero),
+/// and after p−1 hops each rank holds its successor's input verbatim.
+#[test]
+fn posted_receive_ring_rotation_matches_oracle() {
+    for p in [3usize, 6, 12] {
+        let m = 5;
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(move |c| {
+            let r = c.rank();
+            let mut cur = Chunk::from_vec(rank_input(r, m));
+            c.begin_op();
+            let before = c.traffic().copied_bytes;
+            for s in 0..p - 1 {
+                let mut dest = Chunk::from_vec(vec![0.0f32; m]);
+                c.sendrecv_into((r + 1) % p, cur, (r + p - 1) % p, s as u32, &mut dest).unwrap();
+                cur = dest;
+            }
+            assert_eq!(
+                c.traffic().copied_bytes - before,
+                0,
+                "p={p} r={r}: posted rotation must not copy"
+            );
+            cur.to_vec()
+        });
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o, &rank_input((r + 1) % p, m), "p={p} r={r}");
+        }
+    }
+}
+
+/// A mis-shaped posted receive fails with the typed
+/// [`pccl::error::Error::RecvShapeMismatch`] *without consuming the
+/// message*: a correctly-shaped re-post then receives it intact.
+#[test]
+fn recv_into_shape_mismatch_is_typed_and_repostable() {
+    let world = CommWorld::<f32>::new(2);
+    let outs = world.run(|c| {
+        c.begin_op();
+        if c.rank() == 0 {
+            c.send_slice(1, 0, Chunk::from_vec(vec![1.0, 2.0, 3.0])).unwrap();
+            Vec::new()
+        } else {
+            let mut small = Chunk::from_vec(vec![0.0f32; 2]);
+            let err = c.recv_into(0, 0, &mut small).unwrap_err();
+            match err {
+                pccl::error::Error::RecvShapeMismatch { expected, got, .. } => {
+                    assert_eq!((expected, got), (2, 3));
+                }
+                other => panic!("expected RecvShapeMismatch, got {other:?}"),
+            }
+            let mut dest = Chunk::from_vec(vec![0.0f32; 3]);
+            c.recv_into(0, 0, &mut dest).unwrap();
+            dest.to_vec()
+        }
+    });
+    assert_eq!(outs[1], vec![1.0, 2.0, 3.0]);
 }
 
 /// Padding discipline: an unaligned all-reduce must move exactly the bytes

@@ -4,7 +4,7 @@
 use std::time::Duration;
 
 use pccl::backends::{all_gather, reduce_scatter, Backend, CollectiveOptions};
-use pccl::comm::{Comm, CommWorld};
+use pccl::comm::{Chunk, Comm, CommWorld};
 use pccl::error::Error;
 use pccl::runtime::{Artifacts, DeviceService};
 use pccl::topology::Topology;
@@ -134,7 +134,7 @@ fn peer_out_of_range_detected() {
     let world = CommWorld::<f32>::new(2);
     let outs = world.run(|c| {
         c.begin_op();
-        c.send(5, 0, vec![1.0])
+        c.send_slice(5, 0, Chunk::from_vec(vec![1.0]))
     });
     for o in outs {
         assert!(matches!(o, Err(Error::PeerOutOfRange { peer: 5, size: 2 })));
