@@ -15,7 +15,8 @@
 use std::sync::Arc;
 
 use crate::collectives::{
-    hier_all_gather, hier_all_gather_chunks, hier_all_reduce_chunks, hier_reduce_scatter_chunks,
+    hier_all_gather, hier_all_gather_chunks, hier_all_gather_lanes_chunks, hier_all_reduce_chunks,
+    hier_all_reduce_lanes_chunks, hier_reduce_scatter_chunks, hier_reduce_scatter_lanes_chunks,
     ring_all_gather, ring_all_gather_chunks, ring_all_reduce_chunks, ring_reduce_scatter_chunks,
     slice_all_reduce, slice_reduce, tree_all_reduce_chunks, InterAlgo,
 };
@@ -92,9 +93,20 @@ impl CollKind {
     }
 }
 
-/// A runtime backend chooser: `(collective, message bytes, ranks) → backend`.
-/// Implemented by [`crate::dispatch::SvmDispatcher`]; any closure works.
-pub type Chooser = Arc<dyn Fn(CollKind, usize, usize) -> Backend + Send + Sync>;
+/// A runtime backend chooser:
+/// `(collective, message bytes, ranks, lanes) → backend`. Implemented by
+/// [`crate::dispatch::SvmDispatcher`]; any closure works. The lane count is
+/// a first-class dispatch feature: the striped PCCL paths shift the
+/// bandwidth/latency crossover, so the trained model sees it.
+pub type Chooser = Arc<dyn Fn(CollKind, usize, usize, usize) -> Backend + Send + Sync>;
+
+/// Minimum per-stripe payload (elements) worth putting on its own lane.
+/// Below this the message is latency-bound and extra rails only add
+/// per-lane setup cost, so the lane-aware entry points demote to a single
+/// stripe. Applied only by the dispatch layer — the `*_lanes_chunks`
+/// algorithms themselves stripe whatever they are told to (correctness
+/// tests exercise tiny striped inputs deliberately).
+pub const MIN_STRIPE_ELEMS: usize = 1024;
 
 /// Per-call configuration for the collective entry points.
 #[derive(Clone)]
@@ -110,6 +122,11 @@ pub struct CollectiveOptions<T: Elem> {
     pub chooser: Option<Chooser>,
     /// Reduction operator (sum by default — gradient averaging).
     pub op: ReduceOp,
+    /// Requested stripe/lane count for the lane-aware entry points
+    /// (`0` = one stripe per transport lane). Clamped to the
+    /// communicator's lane count and subject to [`MIN_STRIPE_ELEMS`];
+    /// the plain entry points ignore it.
+    pub lanes: usize,
 }
 
 impl<T: Elem> Default for CollectiveOptions<T> {
@@ -119,6 +136,7 @@ impl<T: Elem> Default for CollectiveOptions<T> {
             combine: native_combine(),
             chooser: None,
             op: ReduceOp::Sum,
+            lanes: 0,
         }
     }
 }
@@ -144,6 +162,11 @@ impl<T: Elem> CollectiveOptions<T> {
         self
     }
 
+    pub fn lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes;
+        self
+    }
+
     /// The combiner actually used: the injected one for Sum (it may wrap
     /// the XLA-offloaded kernel), the native op pair for Max/Min.
     pub fn effective_combiner(&self) -> Combiner<T> {
@@ -153,11 +176,13 @@ impl<T: Elem> CollectiveOptions<T> {
         }
     }
 
-    /// Resolve [`Backend::Auto`] for a concrete call site.
-    pub fn resolve(&self, kind: CollKind, bytes: usize, p: usize) -> Backend {
+    /// Resolve [`Backend::Auto`] for a concrete call site. `lanes` is the
+    /// effective stripe count of the call (`1` on the unstriped entry
+    /// points) — a trained chooser conditions on it.
+    pub fn resolve(&self, kind: CollKind, bytes: usize, p: usize, lanes: usize) -> Backend {
         match self.backend {
             Backend::Auto => match &self.chooser {
-                Some(ch) => ch(kind, bytes, p),
+                Some(ch) => ch(kind, bytes, p, lanes),
                 // Untrained fallback: the paper's coarse empirical rule —
                 // vendor ring wins in the bandwidth-bound regime (large
                 // messages, few ranks), hierarchical recursive wins in the
@@ -183,7 +208,7 @@ pub fn all_gather<T: Elem>(
     opts: &CollectiveOptions<T>,
 ) -> Result<Vec<T>> {
     let bytes = std::mem::size_of_val(input) * c.size(); // output buffer size
-    match opts.resolve(CollKind::AllGather, bytes, c.size()) {
+    match opts.resolve(CollKind::AllGather, bytes, c.size(), 1) {
         Backend::Vendor | Backend::CrayMpich => ring_all_gather(c, input),
         Backend::PcclRing => hier_all_gather(c, input, InterAlgo::Ring),
         Backend::PcclRec | Backend::Auto => hier_all_gather(c, input, InterAlgo::Rec),
@@ -199,10 +224,103 @@ pub fn all_gather_chunks<T: Elem>(
     opts: &CollectiveOptions<T>,
 ) -> Result<Vec<Chunk<T>>> {
     let bytes = input.len() * std::mem::size_of::<T>() * c.size(); // output buffer size
-    match opts.resolve(CollKind::AllGather, bytes, c.size()) {
+    match opts.resolve(CollKind::AllGather, bytes, c.size(), 1) {
         Backend::Vendor | Backend::CrayMpich => ring_all_gather_chunks(c, input),
         Backend::PcclRing => hier_all_gather_chunks(c, input, InterAlgo::Ring),
         Backend::PcclRec | Backend::Auto => hier_all_gather_chunks(c, input, InterAlgo::Rec),
+    }
+}
+
+/// Stripe count a lane-aware entry point actually uses: the requested
+/// count (`opts.lanes`, `0` = every transport lane) clamped to the
+/// communicator's lanes, then demoted to `1` when the per-stripe payload
+/// would fall under [`MIN_STRIPE_ELEMS`].
+pub fn effective_lane_count<T: Elem>(
+    c: &Communicator<T>,
+    opts: &CollectiveOptions<T>,
+    elems: usize,
+) -> usize {
+    let req = if opts.lanes == 0 { c.lanes() } else { opts.lanes };
+    let k = req.min(c.lanes()).max(1);
+    if k > 1 && elems / k < MIN_STRIPE_ELEMS {
+        1
+    } else {
+        k
+    }
+}
+
+/// Lane-aware all-gather: the PCCL hierarchical backends stripe the
+/// NIC-bound inter-node phase over the transport lanes; the vendor and
+/// Cray-MPICH models stay single-lane (single-NIC routing is exactly the
+/// libraries' documented behavior — Observation 1). Returns the gathered
+/// buffer as an ordered chunk list (`p·k` stripes on the striped paths,
+/// `p` blocks otherwise).
+pub fn all_gather_lanes_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    opts: &CollectiveOptions<T>,
+) -> Result<Vec<Chunk<T>>> {
+    let k = effective_lane_count(c, opts, input.len());
+    let bytes = input.len() * std::mem::size_of::<T>() * c.size();
+    match opts.resolve(CollKind::AllGather, bytes, c.size(), k) {
+        Backend::Vendor | Backend::CrayMpich => ring_all_gather_chunks(c, input),
+        Backend::PcclRing => hier_all_gather_lanes_chunks(c, input, InterAlgo::Ring, k),
+        Backend::PcclRec | Backend::Auto => {
+            hier_all_gather_lanes_chunks(c, input, InterAlgo::Rec, k)
+        }
+    }
+}
+
+/// Lane-aware reduce-scatter: returns this rank's reduced block as a
+/// stripe list (the stripes concatenate to the block; a single chunk on
+/// every unstriped path). The striped stripes live in distinct
+/// transport-delivered storages by construction, so the list form is the
+/// zero-copy one — concatenating is the caller's (single-copy) choice.
+pub fn reduce_scatter_stripes<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    opts: &CollectiveOptions<T>,
+) -> Result<Vec<Chunk<T>>> {
+    let p = c.size();
+    let k = effective_lane_count(c, opts, input.len() / p.max(1));
+    let bytes = input.len() * std::mem::size_of::<T>();
+    match opts.resolve(CollKind::ReduceScatter, bytes, p, k) {
+        Backend::CrayMpich => {
+            Ok(vec![ring_reduce_scatter_chunks(c, input, &host_combine(opts.op))?])
+        }
+        Backend::Vendor => {
+            Ok(vec![ring_reduce_scatter_chunks(c, input, &opts.effective_combiner())?])
+        }
+        Backend::PcclRing => {
+            hier_reduce_scatter_lanes_chunks(c, input, &opts.effective_combiner(), InterAlgo::Ring, k)
+        }
+        Backend::PcclRec | Backend::Auto => {
+            hier_reduce_scatter_lanes_chunks(c, input, &opts.effective_combiner(), InterAlgo::Rec, k)
+        }
+    }
+}
+
+/// Lane-aware all-reduce: striped hierarchical RS ∘ AG on the PCCL
+/// backends, single-lane vendor tree / Cray ring otherwise. Returns chunks
+/// that concatenate to `input.len()` elements.
+pub fn all_reduce_lanes_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    opts: &CollectiveOptions<T>,
+) -> Result<Vec<Chunk<T>>> {
+    let k = effective_lane_count(c, opts, input.len() / c.size().max(1));
+    let bytes = input.len() * std::mem::size_of::<T>();
+    match opts.resolve(CollKind::AllReduce, bytes, c.size(), k) {
+        Backend::CrayMpich => ring_all_reduce_chunks(c, input, &host_combine(opts.op)),
+        Backend::Vendor => {
+            Ok(vec![tree_all_reduce_chunks(c, input, &opts.effective_combiner())?])
+        }
+        Backend::PcclRing => {
+            hier_all_reduce_lanes_chunks(c, input, &opts.effective_combiner(), InterAlgo::Ring, k)
+        }
+        Backend::PcclRec | Backend::Auto => {
+            hier_all_reduce_lanes_chunks(c, input, &opts.effective_combiner(), InterAlgo::Rec, k)
+        }
     }
 }
 
@@ -223,7 +341,7 @@ pub fn reduce_scatter_chunks<T: Elem>(
     opts: &CollectiveOptions<T>,
 ) -> Result<Chunk<T>> {
     let bytes = input.len() * std::mem::size_of::<T>();
-    match opts.resolve(CollKind::ReduceScatter, bytes, c.size()) {
+    match opts.resolve(CollKind::ReduceScatter, bytes, c.size(), 1) {
         // Cray-MPICH reduces on the host no matter what combine the caller
         // injected (Observation 1) — model that faithfully.
         Backend::CrayMpich => ring_reduce_scatter_chunks(c, input, &host_combine(opts.op)),
@@ -260,7 +378,7 @@ pub fn all_reduce_chunks<T: Elem>(
     opts: &CollectiveOptions<T>,
 ) -> Result<Vec<Chunk<T>>> {
     let bytes = input.len() * std::mem::size_of::<T>();
-    match opts.resolve(CollKind::AllReduce, bytes, c.size()) {
+    match opts.resolve(CollKind::AllReduce, bytes, c.size(), 1) {
         Backend::CrayMpich => ring_all_reduce_chunks(c, input, &host_combine(opts.op)),
         // Vendor libraries use double binary trees for all-reduce [15].
         Backend::Vendor => {
@@ -367,12 +485,12 @@ mod tests {
         let opts = CollectiveOptions::<f32>::default().backend(Backend::Auto);
         // Large message, small p → vendor.
         assert_eq!(
-            opts.resolve(CollKind::AllGather, 512 << 20, 16),
+            opts.resolve(CollKind::AllGather, 512 << 20, 16, 1),
             Backend::Vendor
         );
         // Small message, large p → hierarchical recursive.
         assert_eq!(
-            opts.resolve(CollKind::AllGather, 16 << 20, 2048),
+            opts.resolve(CollKind::AllGather, 16 << 20, 2048, 1),
             Backend::PcclRec
         );
     }
@@ -381,10 +499,52 @@ mod tests {
     fn custom_chooser_is_consulted() {
         let opts = CollectiveOptions::<f32>::default()
             .backend(Backend::Auto)
-            .chooser(Arc::new(|_, _, _| Backend::PcclRing));
-        assert_eq!(
-            opts.resolve(CollKind::AllReduce, 1024, 4),
-            Backend::PcclRing
-        );
+            .chooser(Arc::new(|_, _, _, lanes| {
+                if lanes > 1 {
+                    Backend::PcclRing
+                } else {
+                    Backend::Vendor
+                }
+            }));
+        assert_eq!(opts.resolve(CollKind::AllReduce, 1024, 4, 4), Backend::PcclRing);
+        assert_eq!(opts.resolve(CollKind::AllReduce, 1024, 4, 1), Backend::Vendor);
+    }
+
+    #[test]
+    fn lane_aware_entry_points_match_oracle_and_threshold() {
+        use crate::comm::Chunk;
+        let topo = Topology::new(2, 2, 2).unwrap();
+        let p = topo.world_size();
+        let b = 2048; // above MIN_STRIPE_ELEMS per stripe at k = 2
+        let world = CommWorld::<f32>::with_topology(topo).with_lanes(2);
+        let outs = world.run(move |c| {
+            let opts = CollectiveOptions::default().backend(Backend::PcclRing);
+            assert_eq!(effective_lane_count(c, &opts, 4 * MIN_STRIPE_ELEMS), 2);
+            // Tiny payload demotes to a single stripe.
+            assert_eq!(effective_lane_count(c, &opts, 8), 1);
+            let rs_in: Vec<f32> = (0..p * b).map(|i| (c.rank() + i) as f32).collect();
+            let stripes =
+                reduce_scatter_stripes(c, Chunk::from_vec(rs_in), &opts).unwrap();
+            assert!(stripes.len() > 1, "large payload must stripe");
+            let ar_in: Vec<f32> = (0..b).map(|i| (c.rank() * 2 + i) as f32).collect();
+            let ar = all_reduce_lanes_chunks(c, Chunk::from_vec(ar_in), &opts).unwrap();
+            let ag_in: Vec<f32> = (0..b).map(|i| (c.rank() * 10 + i) as f32).collect();
+            let ag = all_gather_lanes_chunks(c, Chunk::from_vec(ag_in), &opts).unwrap();
+            (Chunk::concat(&stripes), Chunk::concat(&ar), Chunk::concat(&ag))
+        });
+        let rs_ins: Vec<Vec<f32>> = (0..p)
+            .map(|r| (0..p * b).map(|i| (r + i) as f32).collect())
+            .collect();
+        let ar_ins: Vec<Vec<f32>> = (0..p)
+            .map(|r| (0..b).map(|i| (r * 2 + i) as f32).collect())
+            .collect();
+        let ag_ins: Vec<Vec<f32>> = (0..p)
+            .map(|r| (0..b).map(|i| (r * 10 + i) as f32).collect())
+            .collect();
+        for (r, (rs, ar, ag)) in outs.iter().enumerate() {
+            assert_eq!(rs, &oracle::reduce_scatter(&rs_ins, r), "rs r={r}");
+            assert_eq!(ar, &oracle::all_reduce(&ar_ins), "ar r={r}");
+            assert_eq!(ag, &oracle::all_gather(&ag_ins), "ag r={r}");
+        }
     }
 }

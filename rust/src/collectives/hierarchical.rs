@@ -26,7 +26,12 @@ use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
 use super::recursive::{rec_all_gather_chunks, rec_reduce_scatter_chunks};
-use super::ring::{ring_all_gather_chunks, ring_reduce_scatter_chunks};
+use super::ring::{
+    effective_lanes, ring_all_gather_chunks, ring_all_gather_lanes_chunks, ring_all_gather_striped,
+    ring_all_reduce_lanes_chunks, ring_reduce_scatter_blocks_chunks,
+    ring_reduce_scatter_blocks_lanes_chunks, ring_reduce_scatter_chunks,
+    ring_reduce_scatter_lanes_chunks,
+};
 use super::{
     check_all_gather, check_reduce_scatter, pad_chunk, slice_all_reduce, slice_gather,
     slice_reduce, trim_blocks,
@@ -61,20 +66,6 @@ fn inter_all_gather_chunks<T: Elem>(
     match algo.effective(n) {
         InterAlgo::Ring => ring_all_gather_chunks(&mut inter, input),
         InterAlgo::Rec => rec_all_gather_chunks(&mut inter, input),
-    }
-}
-
-fn inter_reduce_scatter_chunks<T: Elem>(
-    c: &mut Communicator<T>,
-    input: Chunk<T>,
-    combiner: &Combiner<T>,
-    algo: InterAlgo,
-) -> Result<Chunk<T>> {
-    let n = c.topology().nodes();
-    let mut inter = c.inter_node()?;
-    match algo.effective(n) {
-        InterAlgo::Ring => ring_reduce_scatter_chunks(&mut inter, input, combiner),
-        InterAlgo::Rec => rec_reduce_scatter_chunks(&mut inter, input, combiner),
     }
 }
 
@@ -176,67 +167,120 @@ pub fn hier_reduce_scatter_chunks<T: Elem>(
         };
     }
     let n = topo.nodes();
-    let m_local = topo.gpus_per_node();
-    // Hot path (§Perf): the pre-shuffle is *virtual* — instead of
-    // materializing the (local_id, node)-ordered copy of the whole input,
-    // the intra-node ring gathers each segment's strided blocks on demand
-    // and combines contributions straight out of `input`. A reduction
-    // writes new data at every hop by definition, so (unlike all-gather)
-    // the partials themselves must be materialized — but each received
-    // partial is uniquely owned exact storage, so the in-place combine
-    // never copies.
-    //
-    // This intra loop deliberately does NOT post a receive buffer
-    // (`sendrecv_combine_into`): this rank's contribution to a segment is
-    // *strided* across `input` (blocks {(node, seg)}), so there is no
-    // contiguous view to post — materializing one would reintroduce
-    // exactly the staging copy the posted-receive plane removed. Instead
-    // the traveling partial arrives exclusive (the sender moved its only
-    // reference into the transport), `make_mut_exact` resolves in place,
-    // and the strided contribution is folded in with no allocation at all.
-    //
-    // Segment `l` = blocks {(node, l) : node ∈ 0..N} = the data destined
-    // for local id `l`'s inter-node phase.
-    let gather_segment = |seg: usize| -> Vec<T> {
-        let mut v = Vec::with_capacity(n * b);
-        for node in 0..n {
-            let src = (node * m_local + seg) * b;
-            v.extend_from_slice(&input.as_slice()[src..src + b]);
+    let out = match inter.effective(n) {
+        InterAlgo::Ring => {
+            // Posted intra phase + block-list inter ring: zero staging
+            // copies end to end (see `intra_reduce_blocks`).
+            let blocks = intra_reduce_blocks(c, &input, combiner, b)?;
+            let mut inter_c = c.inter_node()?;
+            ring_reduce_scatter_blocks_chunks(&mut inter_c, blocks, combiner)?
         }
-        v
-    };
-    let add_segment = |acc: &mut [T], seg: usize| {
-        for node in 0..n {
-            let src = (node * m_local + seg) * b;
-            combiner.fold(&mut acc[node * b..(node + 1) * b], &input.as_slice()[src..src + b]);
+        InterAlgo::Rec => {
+            // Documented fallback for true strides: recursive halving's
+            // exchange ranges span multiple per-node blocks, so the inter
+            // phase needs one contiguous n·b partial. The intra loop
+            // therefore does NOT post a receive buffer — this rank's
+            // contribution to a segment is *strided* across `input`
+            // (blocks {(node, seg)}), and materializing a contiguous view
+            // to post would reintroduce exactly the staging copy the
+            // posted-receive plane removed. Instead the traveling partial
+            // arrives exclusive (the sender moved its only reference into
+            // the transport), `make_mut_exact` resolves in place, and the
+            // strided contribution is folded in with no allocation at all.
+            let m_local = topo.gpus_per_node();
+            let gather_segment = |seg: usize| -> Vec<T> {
+                let mut v = Vec::with_capacity(n * b);
+                for node in 0..n {
+                    let src = (node * m_local + seg) * b;
+                    v.extend_from_slice(&input.as_slice()[src..src + b]);
+                }
+                v
+            };
+            let add_segment = |acc: &mut [T], seg: usize| {
+                for node in 0..n {
+                    let src = (node * m_local + seg) * b;
+                    combiner
+                        .fold(&mut acc[node * b..(node + 1) * b], &input.as_slice()[src..src + b]);
+                }
+            };
+            let partial = {
+                let mut intra = c.intra_node()?;
+                let l = intra.rank();
+                if m_local == 1 {
+                    Chunk::from_vec(gather_segment(0))
+                } else {
+                    intra.begin_op();
+                    let right = (l + 1) % m_local;
+                    let left = (l + m_local - 1) % m_local;
+                    use super::schedule::ring as idx;
+                    let mut current =
+                        Chunk::from_vec(gather_segment(idx::rs_send_block(l, m_local, 0)));
+                    for s in 0..m_local - 1 {
+                        let recv_seg = idx::rs_recv_block(l, m_local, s);
+                        let mut got = intra.sendrecv_chunk(right, current, left, s as u32)?;
+                        add_segment(got.make_mut_exact(), recv_seg);
+                        current = got;
+                    }
+                    current
+                }
+            };
+            debug_assert_eq!(partial.len(), n * b);
+            let mut inter_c = c.inter_node()?;
+            rec_reduce_scatter_chunks(&mut inter_c, partial, combiner)?
         }
     };
-    let partial = {
-        let mut intra = c.intra_node()?;
-        let l = intra.rank();
-        if m_local == 1 {
-            Chunk::from_vec(gather_segment(0))
-        } else {
-            intra.begin_op();
-            let right = (l + 1) % m_local;
-            let left = (l + m_local - 1) % m_local;
-            use super::schedule::ring as idx;
-            let mut current = Chunk::from_vec(gather_segment(idx::rs_send_block(l, m_local, 0)));
-            for s in 0..m_local - 1 {
-                let recv_seg = idx::rs_recv_block(l, m_local, s);
-                let mut got = intra.sendrecv_chunk(right, current, left, s as u32)?;
-                add_segment(got.make_mut_exact(), recv_seg);
-                current = got;
-            }
-            current
-        }
-    };
-    debug_assert_eq!(partial.len(), n * b);
-    // Inter-node reduce-scatter over blocks of b elements — the partial
-    // chunk feeds it directly, no slice round-trip.
-    let out = inter_reduce_scatter_chunks(c, partial, combiner, inter)?;
     debug_assert_eq!(out.len(), b);
     Ok(out)
+}
+
+/// Intra-node reduce phase with **posted contiguous-block receives**: the
+/// virtual pre-shuffle's segment `seg` is the block set
+/// `{(node, seg) : node ∈ 0..N}`, and while the *segment* is strided
+/// across `input`, each per-node block at offset `(node·M + seg)·b` is
+/// contiguous on its own. The intra ring therefore exchanges `n` block
+/// messages per step and posts this rank's own block views straight out of
+/// `input` as combine targets ([`Comm::recv_combine_into`]) — no
+/// gather-segment staging copy, no `make_mut_exact` resolution; the first
+/// fold of each block fuses into fresh exact storage and every later hop
+/// folds in place. Returns the `n` reduced per-node blocks of this rank's
+/// segment, ready for a block-list inter-node reduce-scatter.
+fn intra_reduce_blocks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: &Chunk<T>,
+    combiner: &Combiner<T>,
+    b: usize,
+) -> Result<Vec<Chunk<T>>> {
+    let topo = c.topology();
+    let n = topo.nodes();
+    let m_local = topo.gpus_per_node();
+    let seg_blocks = |seg: usize| -> Vec<Chunk<T>> {
+        (0..n)
+            .map(|node| input.slice((node * m_local + seg) * b, b))
+            .collect()
+    };
+    let mut intra = c.intra_node()?;
+    let l = intra.rank();
+    if m_local == 1 {
+        return Ok(seg_blocks(0));
+    }
+    intra.begin_op();
+    let right = (l + 1) % m_local;
+    let left = (l + m_local - 1) % m_local;
+    use super::schedule::ring as idx;
+    let mut current = seg_blocks(idx::rs_send_block(l, m_local, 0));
+    for s in 0..m_local - 1 {
+        let recv_seg = idx::rs_recv_block(l, m_local, s);
+        let mut accs = seg_blocks(recv_seg);
+        for (j, ch) in current.into_iter().enumerate() {
+            intra.send_slice(right, (s * n + j) as u32, ch)?;
+        }
+        for (j, acc) in accs.iter_mut().enumerate() {
+            intra.recv_combine_into(left, (s * n + j) as u32, acc, combiner)?;
+        }
+        current = accs;
+    }
+    debug_assert_eq!(idx::rs_recv_block(l, m_local, m_local - 2), l);
+    Ok(current)
 }
 
 /// Two-level reduce-scatter, slice API — adapter over
@@ -288,6 +332,171 @@ pub fn hier_all_reduce<T: Elem>(
     inter: InterAlgo,
 ) -> Result<Vec<T>> {
     slice_all_reduce(input, |ch| hier_all_reduce_chunks(c, ch, combiner, inter))
+}
+
+/// Lane-parallel two-level reduce-scatter: the intra-node phase runs
+/// unstriped (it models NVLink, which one lane already saturates), the
+/// NIC-bound inter-node phase stripes every block over `lanes` transport
+/// lanes ([`ring_reduce_scatter_blocks_lanes_chunks`]). Returns this
+/// rank's reduced block as a stripe list (concatenates to the block).
+///
+/// Falls back gracefully: an effective lane count of 1 delegates to
+/// [`hier_reduce_scatter_chunks`]; a degenerate (non-hierarchical)
+/// topology routes to the flat striped ring; a `Rec`-effective inter
+/// phase runs unstriped (recursive halving's exchange ranges span
+/// multiple blocks — striping it is future work).
+pub fn hier_reduce_scatter_lanes_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    combiner: &Combiner<T>,
+    inter: InterAlgo,
+    lanes: usize,
+) -> Result<Vec<Chunk<T>>> {
+    let k = effective_lanes(c, lanes);
+    if k == 1 {
+        return Ok(vec![hier_reduce_scatter_chunks(c, input, combiner, inter)?]);
+    }
+    let p = c.size();
+    let b = check_reduce_scatter(input.as_slice(), p)?;
+    let topo = c.topology();
+    if !topo.supports_hierarchical() {
+        return match inter.effective(p) {
+            InterAlgo::Ring => ring_reduce_scatter_lanes_chunks(c, input, combiner, k),
+            InterAlgo::Rec => Ok(vec![rec_reduce_scatter_chunks(c, input, combiner)?]),
+        };
+    }
+    if inter.effective(topo.nodes()) == InterAlgo::Rec {
+        return Ok(vec![hier_reduce_scatter_chunks(c, input, combiner, inter)?]);
+    }
+    let blocks = intra_reduce_blocks(c, &input, combiner, b)?;
+    let mut inter_c = c.inter_node()?;
+    ring_reduce_scatter_blocks_lanes_chunks(&mut inter_c, blocks, combiner, k)
+}
+
+/// Striped two-level all-gather core over an already-striped block: the
+/// inter phase gathers the stripe lists lane-parallel, the intra ring then
+/// forwards the `n·k` stripe views (zero-copy, as in the unstriped path).
+/// Returns `p·k` chunks in global-rank-major, stripe-minor order.
+fn hier_all_gather_striped_core<T: Elem>(
+    c: &mut Communicator<T>,
+    stripes: Vec<Chunk<T>>,
+) -> Result<Vec<Chunk<T>>> {
+    let topo = c.topology();
+    let n = topo.nodes();
+    let m_local = topo.gpus_per_node();
+    let k = stripes.len();
+    let node_stripes: Vec<Chunk<T>> = {
+        let mut inter_c = c.inter_node()?;
+        ring_all_gather_striped(&mut inter_c, stripes)?
+            .into_iter()
+            .flatten()
+            .collect()
+    };
+    debug_assert_eq!(node_stripes.len(), n * k);
+    let p = n * m_local;
+    let mut out: Vec<Option<Chunk<T>>> = vec![None; p * k];
+    let place = |out: &mut Vec<Option<Chunk<T>>>, who_l: usize, list: &[Chunk<T>]| {
+        for (j, ch) in list.iter().enumerate() {
+            let (node, stripe) = (j / k, j % k);
+            out[(node * m_local + who_l) * k + stripe] = Some(ch.clone());
+        }
+    };
+    let mut intra = c.intra_node()?;
+    let l = intra.rank();
+    place(&mut out, l, &node_stripes);
+    if m_local > 1 {
+        intra.begin_op();
+        let right = (l + 1) % m_local;
+        let left = (l + m_local - 1) % m_local;
+        let nk = n * k;
+        let mut current = node_stripes;
+        for s in 0..m_local - 1 {
+            let recv_l = super::schedule::ring::ag_recv_block(l, m_local, s);
+            for (j, ch) in current.iter().enumerate() {
+                intra.send_slice(right, (s * nk + j) as u32, ch.clone())?;
+            }
+            let mut got = Vec::with_capacity(nk);
+            for j in 0..nk {
+                got.push(intra.recv_chunk(left, (s * nk + j) as u32)?);
+            }
+            place(&mut out, recv_l, &got);
+            current = got;
+        }
+    }
+    Ok(out
+        .into_iter()
+        .map(|b| b.expect("striped hierarchical schedule covers every stripe"))
+        .collect())
+}
+
+/// Lane-parallel two-level all-gather: each rank's block is split into
+/// `lanes` stripes; the inter phase gathers stripe-parallel, the intra
+/// phase forwards the stripe views. Returns chunks that concatenate to the
+/// gathered buffer (`p·k` stripes on the striped path, `p` blocks on the
+/// fallbacks — callers must treat the output as an ordered chunk list, not
+/// assume its arity).
+pub fn hier_all_gather_lanes_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    inter: InterAlgo,
+    lanes: usize,
+) -> Result<Vec<Chunk<T>>> {
+    let k = effective_lanes(c, lanes);
+    if k == 1 {
+        return hier_all_gather_chunks(c, input, inter);
+    }
+    check_all_gather(input.as_slice())?;
+    let topo = c.topology();
+    if !topo.supports_hierarchical() {
+        return match inter.effective(c.size()) {
+            InterAlgo::Ring => ring_all_gather_lanes_chunks(c, input, k),
+            InterAlgo::Rec => rec_all_gather_chunks(c, input),
+        };
+    }
+    if inter.effective(topo.nodes()) == InterAlgo::Rec {
+        return hier_all_gather_chunks(c, input, inter);
+    }
+    hier_all_gather_striped_core(c, input.stripes(k))
+}
+
+/// Lane-parallel two-level all-reduce: striped hierarchical RS ∘ striped
+/// hierarchical AG, the reduced stripes feeding the gather directly on
+/// their lanes. Returns chunks that concatenate to exactly `input.len()`
+/// elements (stripe-granular on the striped path).
+pub fn hier_all_reduce_lanes_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    combiner: &Combiner<T>,
+    inter: InterAlgo,
+    lanes: usize,
+) -> Result<Vec<Chunk<T>>> {
+    let k = effective_lanes(c, lanes);
+    if k == 1 {
+        return hier_all_reduce_chunks(c, input, combiner, inter);
+    }
+    check_all_gather(input.as_slice())?;
+    let topo = c.topology();
+    if !topo.supports_hierarchical() {
+        return match inter.effective(c.size()) {
+            InterAlgo::Ring => ring_all_reduce_lanes_chunks(c, input, combiner, k),
+            InterAlgo::Rec => hier_all_reduce_chunks(c, input, combiner, inter),
+        };
+    }
+    if inter.effective(topo.nodes()) == InterAlgo::Rec {
+        return hier_all_reduce_chunks(c, input, combiner, inter);
+    }
+    let p = c.size();
+    let n = input.len();
+    let padded = n.div_ceil(p) * p;
+    let padded_input = if padded == n {
+        input
+    } else {
+        pad_chunk(&input, padded)
+    };
+    let stripes = hier_reduce_scatter_lanes_chunks(c, padded_input, combiner, inter, k)?;
+    let mut blocks = hier_all_gather_striped_core(c, stripes)?;
+    trim_blocks(&mut blocks, n);
+    Ok(blocks)
 }
 
 #[cfg(test)]
@@ -373,6 +582,130 @@ mod tests {
         });
         let ins: Vec<Vec<f32>> = (0..4).map(|r| rank_input(r, 2)).collect();
         assert_eq!(outs[0], oracle::all_gather(&ins));
+    }
+
+    fn lane_world(nodes: usize, gpn: usize, lanes: usize) -> CommWorld<f32> {
+        CommWorld::with_topology(Topology::new(nodes, gpn, 1).unwrap()).with_lanes(lanes)
+    }
+
+    #[test]
+    fn hier_lanes_reduce_scatter_matches_oracle() {
+        // b = 3 with 4 lanes → uneven stripes [1, 1, 1, 0] on the inter
+        // phase; also a config where stripes are even (b = 8, 4 lanes).
+        for (nodes, gpn, b) in [(2, 2, 3), (3, 2, 8), (2, 4, 5)] {
+            let p = nodes * gpn;
+            let outs = lane_world(nodes, gpn, 4).run(move |c| {
+                let input = rank_input(c.rank(), p * b);
+                let stripes = hier_reduce_scatter_lanes_chunks(
+                    c,
+                    Chunk::from_vec(input),
+                    &native_combine(),
+                    InterAlgo::Ring,
+                    4,
+                )
+                .unwrap();
+                Chunk::concat(&stripes)
+            });
+            let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(
+                    o,
+                    &oracle::reduce_scatter(&ins, r),
+                    "nodes={nodes} gpn={gpn} b={b} r={r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hier_lanes_all_gather_matches_oracle() {
+        let (nodes, gpn) = (3, 2);
+        let p = nodes * gpn;
+        let m = 7;
+        let outs = lane_world(nodes, gpn, 2).run(move |c| {
+            let input = rank_input(c.rank(), m);
+            let blocks =
+                hier_all_gather_lanes_chunks(c, Chunk::from_vec(input), InterAlgo::Ring, 2)
+                    .unwrap();
+            Chunk::concat(&blocks)
+        });
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, m)).collect();
+        let expect = oracle::all_gather(&ins);
+        for o in outs {
+            assert_eq!(o, expect);
+        }
+    }
+
+    #[test]
+    fn hier_lanes_all_reduce_matches_oracle_unaligned() {
+        let (nodes, gpn) = (2, 2);
+        let p = nodes * gpn;
+        let n = 21; // unaligned → padding + uneven stripes
+        let outs = lane_world(nodes, gpn, 4).run(move |c| {
+            let input = rank_input(c.rank(), n);
+            let blocks = hier_all_reduce_lanes_chunks(
+                c,
+                Chunk::from_vec(input),
+                &native_combine(),
+                InterAlgo::Ring,
+                4,
+            )
+            .unwrap();
+            Chunk::concat(&blocks)
+        });
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, n)).collect();
+        let expect = oracle::all_reduce(&ins);
+        for o in outs {
+            assert_eq!(o, expect);
+        }
+    }
+
+    #[test]
+    fn hier_lanes_rec_inter_falls_back_unstriped() {
+        // Rec-effective inter phase runs unstriped but must stay correct.
+        let (nodes, gpn) = (4, 2);
+        let p = nodes * gpn;
+        let b = 3;
+        let outs = lane_world(nodes, gpn, 4).run(move |c| {
+            let input = rank_input(c.rank(), p * b);
+            let stripes = hier_reduce_scatter_lanes_chunks(
+                c,
+                Chunk::from_vec(input),
+                &native_combine(),
+                InterAlgo::Rec,
+                4,
+            )
+            .unwrap();
+            assert_eq!(stripes.len(), 1, "rec inter must not stripe");
+            Chunk::concat(&stripes)
+        });
+        let ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o, &oracle::reduce_scatter(&ins, r));
+        }
+    }
+
+    #[test]
+    fn hier_reduce_path_is_copy_free() {
+        // The posted intra phase (contiguous per-node block receives) must
+        // keep the whole hierarchical reduce path at zero copied bytes.
+        let (nodes, gpn) = (3, 2);
+        let p = nodes * gpn;
+        let b = 4;
+        let oks = lane_world(nodes, gpn, 2).run(move |c| {
+            let input = rank_input(c.rank(), p * b);
+            let before = c.traffic().copied_bytes;
+            let _ = hier_reduce_scatter_lanes_chunks(
+                c,
+                Chunk::from_vec(input),
+                &native_combine(),
+                InterAlgo::Ring,
+                2,
+            )
+            .unwrap();
+            c.traffic().copied_bytes == before
+        });
+        assert!(oks.into_iter().all(|ok| ok), "reduce path copied bytes");
     }
 
     #[test]

@@ -92,6 +92,39 @@
 //! * **Rooted data must be owned per destination.** Scatter materializes
 //!   one block per peer (the source lives in the root's borrowed input);
 //!   gather copies received blocks into the root's contiguous output.
+//!
+//! ## Lane/stripe ownership model (multi-lane transport)
+//!
+//! The `*_lanes_chunks` entry points run `k` **lane-parallel rings over
+//! disjoint stripes** of the payload, NCCL-channel style, one ring per
+//! transport lane:
+//!
+//! * **Stripes are views, never copies.** [`crate::comm::Chunk::stripes`]
+//!   splits a chunk into `k` contiguous sub-views of the same storage
+//!   (uneven lengths allowed: the first `len % k` stripes carry one extra
+//!   element, and stripes may be zero-length so every lane keeps the same
+//!   schedule). Striping on the send side is O(1); no element moves.
+//! * **Each stripe is owned by exactly one lane.** Stripe `l` of every
+//!   message travels on lane `l` for the whole collective: it has its own
+//!   per-(pair, lane) transport queue, its own wire tag
+//!   ([`crate::comm::Communicator::lane_comm`] folds the lane id into the
+//!   FNV tag chain), and — for reductions — its own posted
+//!   `accept_combine` executed on that lane's worker thread. Lane 0 is
+//!   served inline by the posting rank thread, so a 1-lane world is
+//!   byte-for-byte the single-queue transport.
+//! * **Lane schedules are independent and equivalent.** Each lane runs the
+//!   *same* ring schedule over its stripe; correctness of the striped
+//!   collective reduces to correctness of the unstriped one per stripe.
+//!   The striped reduce-scatter therefore returns `k` stripe chunks (one
+//!   per lane — they live in distinct transport-delivered storages by
+//!   construction; concatenating them would be the only copy, so the
+//!   caller decides). Striped all-gather/all-reduce return `p·k` blocks,
+//!   rank-major stripe-minor.
+//! * **Striping is a dispatch decision.** The backends auto path stripes
+//!   only above a minimum stripe size (tiny messages gain nothing from
+//!   extra rails); `lanes = 1` (or `k == 1` after clamping to the
+//!   transport's lane count) delegates straight to the unstriped
+//!   algorithm, tags and all.
 
 mod hierarchical;
 pub mod oracle;
@@ -105,13 +138,15 @@ mod shuffle;
 mod tree;
 
 pub use hierarchical::{
-    hier_all_gather, hier_all_gather_chunks, hier_all_reduce, hier_all_reduce_chunks,
-    hier_reduce_scatter, hier_reduce_scatter_chunks, InterAlgo,
+    hier_all_gather, hier_all_gather_chunks, hier_all_gather_lanes_chunks, hier_all_reduce,
+    hier_all_reduce_chunks, hier_all_reduce_lanes_chunks, hier_reduce_scatter,
+    hier_reduce_scatter_chunks, hier_reduce_scatter_lanes_chunks, InterAlgo,
 };
 pub use pccl::Pccl;
 pub use pipelined::{
     pipelined_hier_all_gather, pipelined_hier_all_reduce, pipelined_hier_all_reduce_chunks,
-    pipelined_hier_reduce_scatter, pipelined_hier_reduce_scatter_chunks,
+    pipelined_hier_all_reduce_lanes_chunks, pipelined_hier_reduce_scatter,
+    pipelined_hier_reduce_scatter_chunks,
 };
 pub use pt2pt::{broadcast, gather, reduce, scatter};
 pub use recursive::{
@@ -119,8 +154,10 @@ pub use recursive::{
     rec_reduce_scatter, rec_reduce_scatter_chunks,
 };
 pub use ring::{
-    ring_all_gather, ring_all_gather_chunks, ring_all_reduce, ring_all_reduce_chunks,
-    ring_reduce_scatter, ring_reduce_scatter_chunks,
+    ring_all_gather, ring_all_gather_chunks, ring_all_gather_lanes_chunks, ring_all_reduce,
+    ring_all_reduce_chunks, ring_all_reduce_lanes_chunks, ring_reduce_scatter,
+    ring_reduce_scatter_blocks_chunks, ring_reduce_scatter_blocks_lanes_chunks,
+    ring_reduce_scatter_chunks, ring_reduce_scatter_lanes_chunks,
 };
 pub use shuffle::{shuffle_gather, transpose_blocks, transpose_chunk_blocks, unshuffle};
 pub use tree::{tree_all_reduce, tree_all_reduce_chunks};

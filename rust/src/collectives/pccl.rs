@@ -116,9 +116,21 @@ impl<T: Elem> Pccl<T> {
         &self.opts
     }
 
-    /// Which backend a call of this shape would take (introspection).
+    /// Which backend a call of this shape would take (introspection,
+    /// single-lane). See [`Pccl::route_lanes`] for the striped variant.
     pub fn route(&self, kind: CollKind, msg_bytes: usize, ranks: usize) -> Backend {
-        self.opts.resolve(kind, msg_bytes, ranks)
+        self.opts.resolve(kind, msg_bytes, ranks, 1)
+    }
+
+    /// Which backend a lane-striped call of this shape would take.
+    pub fn route_lanes(
+        &self,
+        kind: CollKind,
+        msg_bytes: usize,
+        ranks: usize,
+        lanes: usize,
+    ) -> Backend {
+        self.opts.resolve(kind, msg_bytes, ranks, lanes)
     }
 
     /// All-gather through the routed backend.
@@ -166,6 +178,35 @@ impl<T: Elem> Pccl<T> {
         input: Chunk<T>,
     ) -> Result<Vec<Chunk<T>>> {
         backends::all_reduce_chunks(c, input, &self.opts)
+    }
+
+    /// Lane-striped reduce-scatter: this rank's reduced block as a stripe
+    /// list (one stripe per transport lane on the striped PCCL paths; see
+    /// [`backends::reduce_scatter_stripes`]).
+    pub fn reduce_scatter_stripes(
+        &self,
+        c: &mut Communicator<T>,
+        input: Chunk<T>,
+    ) -> Result<Vec<Chunk<T>>> {
+        backends::reduce_scatter_stripes(c, input, &self.opts)
+    }
+
+    /// Lane-striped all-reduce as an ordered chunk list.
+    pub fn all_reduce_lanes_chunks(
+        &self,
+        c: &mut Communicator<T>,
+        input: Chunk<T>,
+    ) -> Result<Vec<Chunk<T>>> {
+        backends::all_reduce_lanes_chunks(c, input, &self.opts)
+    }
+
+    /// Lane-striped all-gather as an ordered chunk list.
+    pub fn all_gather_lanes_chunks(
+        &self,
+        c: &mut Communicator<T>,
+        input: Chunk<T>,
+    ) -> Result<Vec<Chunk<T>>> {
+        backends::all_gather_lanes_chunks(c, input, &self.opts)
     }
 }
 
@@ -231,6 +272,22 @@ mod tests {
     #[test]
     fn for_training_auto_without_artifacts_falls_back_to_heuristic() {
         let pccl = Pccl::<f32>::for_training(Backend::Auto, Some("/definitely/not/here"));
+        assert!(!pccl.is_trained());
+        assert_eq!(pccl.route(CollKind::AllGather, 16 << 20, 2048), Backend::PcclRec);
+    }
+
+    #[test]
+    fn for_training_auto_falls_back_loudly_on_pre_lane_artifact() {
+        // A stale (schema 1) dispatcher artifact must not be silently
+        // consumed: the facade warns and demotes to the heuristic.
+        let dir = crate::util::tmp::TempDir::new().unwrap();
+        let arts = Artifacts::open_or_init(dir.path()).unwrap();
+        std::fs::write(
+            arts.dispatcher_path(Machine::Frontier),
+            r#"{"machine": "frontier", "models": {}}"#,
+        )
+        .unwrap();
+        let pccl = Pccl::<f32>::for_training(Backend::Auto, dir.path().to_str());
         assert!(!pccl.is_trained());
         assert_eq!(pccl.route(CollKind::AllGather, 16 << 20, 2048), Backend::PcclRec);
     }

@@ -36,8 +36,8 @@ use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
 use super::hierarchical::{
-    hier_all_gather, hier_all_gather_chunks, hier_all_reduce_chunks, hier_reduce_scatter_chunks,
-    InterAlgo,
+    hier_all_gather, hier_all_gather_chunks, hier_all_reduce_chunks, hier_all_reduce_lanes_chunks,
+    hier_reduce_scatter_chunks, InterAlgo,
 };
 use super::{slice_all_reduce, slice_reduce};
 
@@ -173,6 +173,40 @@ pub fn pipelined_hier_all_reduce_chunks<T: Elem>(
     Ok(out)
 }
 
+/// Lane-parallel pipelined two-level all-reduce: each pipeline stage runs
+/// [`hier_all_reduce_lanes_chunks`] over a zero-copy contiguous slice of
+/// the input, so within every stage the inter-node phase stripes over the
+/// transport lanes while successive stages still overlap. `lanes = 1` (or
+/// a single-lane transport) degenerates to
+/// [`pipelined_hier_all_reduce_chunks`].
+pub fn pipelined_hier_all_reduce_lanes_chunks<T: Elem>(
+    c: &mut Communicator<T>,
+    input: Chunk<T>,
+    combiner: &Combiner<T>,
+    inter: InterAlgo,
+    chunks: usize,
+    lanes: usize,
+) -> Result<Vec<Chunk<T>>> {
+    if chunks == 0 || input.len() % chunks != 0 {
+        return Err(Error::BadBufferSize {
+            len: input.len(),
+            size: chunks,
+            why: "pipelined all-reduce needs chunks > 0 dividing the input length",
+        });
+    }
+    if chunks == 1 {
+        return hier_all_reduce_lanes_chunks(c, input, combiner, inter, lanes);
+    }
+    let cb = input.len() / chunks;
+    let mut out = Vec::new();
+    for k in 0..chunks {
+        let piece = input.slice(k * cb, cb);
+        let mut blocks = hier_all_reduce_lanes_chunks(c, piece, combiner, inter, lanes)?;
+        out.append(&mut blocks);
+    }
+    Ok(out)
+}
+
 /// Pipelined two-level all-reduce, slice API — adapter over
 /// [`pipelined_hier_all_reduce_chunks`].
 pub fn pipelined_hier_all_reduce<T: Elem>(
@@ -276,6 +310,37 @@ mod tests {
                 for (r, o) in outs.iter().enumerate() {
                     assert_eq!(o, &expect, "chunks={chunks} algo={algo:?} r={r}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_lanes_all_reduce_matches_oracle() {
+        use crate::comm::Chunk;
+        let topo = Topology::new(2, 3, 1).unwrap();
+        let p = topo.world_size();
+        let m = 14;
+        for chunks in [1usize, 2] {
+            let world = CommWorld::<f32>::with_topology(topo).with_lanes(2);
+            let outs = world.run(move |c| {
+                let input: Vec<f32> = (0..m).map(|i| (c.rank() * 10 + i) as f32).collect();
+                let blocks = pipelined_hier_all_reduce_lanes_chunks(
+                    c,
+                    Chunk::from_vec(input),
+                    &native_combine(),
+                    InterAlgo::Ring,
+                    chunks,
+                    2,
+                )
+                .unwrap();
+                Chunk::concat(&blocks)
+            });
+            let ins: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..m).map(|i| (r * 10 + i) as f32).collect())
+                .collect();
+            let expect = oracle::all_reduce(&ins);
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &expect, "chunks={chunks} r={r}");
             }
         }
     }

@@ -4,7 +4,7 @@
 //! backend.
 
 use crate::comm::{Chunk, Comm};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
@@ -78,21 +78,64 @@ pub fn ring_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
 ) -> Result<Chunk<T>> {
     let p = c.size();
     let b = check_reduce_scatter(input.as_slice(), p)?;
+    if p == 1 {
+        c.begin_op();
+        return Ok(input);
+    }
+    let blocks = (0..p).map(|i| input.slice(i * b, b)).collect();
+    ring_reduce_scatter_blocks_chunks(c, blocks, combiner)
+}
+
+/// Validate a block-list collective input: one block per rank, all equal
+/// length. Returns the block length.
+fn check_blocks<T>(blocks: &[Chunk<T>], p: usize) -> Result<usize> {
+    if blocks.len() != p {
+        return Err(Error::BadBufferSize {
+            len: blocks.len(),
+            size: p,
+            why: "block-list reduce-scatter needs exactly one block per rank",
+        });
+    }
+    let b = blocks.first().map_or(0, |c| c.len());
+    if blocks.iter().any(|c| c.len() != b) {
+        return Err(Error::BadBufferSize {
+            len: b,
+            size: p,
+            why: "block-list reduce-scatter blocks must all be the same length",
+        });
+    }
+    Ok(b)
+}
+
+/// Ring reduce-scatter over an explicit per-destination block list:
+/// `blocks[i]` is this rank's contribution to rank `i`'s result. Same
+/// schedule and posted-combine hot path as [`ring_reduce_scatter_chunks`]
+/// (which delegates here), but the contributions need not be slices of one
+/// contiguous buffer — this is what lets the hierarchical intra phase hand
+/// its per-node *views* straight to the inter phase with no staging copy.
+/// Blocks are consumed (taken by value as the schedule reaches them).
+pub fn ring_reduce_scatter_blocks_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    mut blocks: Vec<Chunk<T>>,
+    combiner: &Combiner<T>,
+) -> Result<Chunk<T>> {
+    let p = c.size();
+    check_blocks(&blocks, p)?;
     c.begin_op();
     let r = c.rank();
     if p == 1 {
-        return Ok(input);
+        return Ok(blocks.pop().expect("p == 1 has exactly one block"));
     }
     let right = (r + 1) % p;
     let left = (r + p - 1) % p;
     let first = idx::rs_send_block(r, p, 0);
-    let mut current = input.slice(first * b, b);
+    let mut current = std::mem::replace(&mut blocks[first], Chunk::empty());
     for s in 0..p - 1 {
         let recv_b = idx::rs_recv_block(r, p, s);
         // Post our own contribution for the arriving block as the receive
         // target; the incoming partial is folded straight into the
         // accumulator, never staged.
-        let mut acc = input.slice(recv_b * b, b);
+        let mut acc = std::mem::replace(&mut blocks[recv_b], Chunk::empty());
         c.sendrecv_combine_into(right, current, left, s as u32, &mut acc, combiner)?;
         current = acc;
     }
@@ -148,6 +191,166 @@ pub fn ring_all_reduce<T: Elem, C: Comm<T>>(
     combiner: &Combiner<T>,
 ) -> Result<Vec<T>> {
     slice_all_reduce(input, |ch| ring_all_reduce_chunks(c, ch, combiner))
+}
+
+/// Clamp a requested lane count to what the communicator can stripe over.
+/// `0` means "as many as available".
+pub(crate) fn effective_lanes<T: Elem, C: Comm<T>>(c: &C, lanes: usize) -> usize {
+    let want = if lanes == 0 { c.lanes() } else { lanes };
+    want.min(c.lanes()).max(1)
+}
+
+/// Lane-parallel ring reduce-scatter: the same `p - 1`-step block schedule
+/// as [`ring_reduce_scatter_chunks`], but every traveling block is split
+/// into `lanes` contiguous stripe views, stripe `l` riding transport lane
+/// `l` (NCCL-channel style). Each step's incoming stripes are folded into
+/// posted views of this rank's contribution via one
+/// [`Comm::sendrecv_striped_combine_into`] — on a multi-lane transport the
+/// per-stripe folds run concurrently on the lane worker threads, dividing
+/// the combine's critical path by the lane count.
+///
+/// `lanes` is clamped to [`Comm::lanes`] (0 = use all); at an effective
+/// lane count of 1 this delegates to the unstriped path. Returns this
+/// rank's reduced block as its stripe list (in order — stripes concatenate
+/// to the block; they are separate storages by construction, since each
+/// stripe's accumulator travels its own lane).
+pub fn ring_reduce_scatter_lanes_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: Chunk<T>,
+    combiner: &Combiner<T>,
+    lanes: usize,
+) -> Result<Vec<Chunk<T>>> {
+    let k = effective_lanes(c, lanes);
+    if k == 1 {
+        return Ok(vec![ring_reduce_scatter_chunks(c, input, combiner)?]);
+    }
+    let p = c.size();
+    let b = check_reduce_scatter(input.as_slice(), p)?;
+    if p == 1 {
+        c.begin_op();
+        return Ok(input.stripes(k));
+    }
+    let blocks = (0..p).map(|i| input.slice(i * b, b)).collect();
+    ring_reduce_scatter_blocks_lanes_chunks(c, blocks, combiner, k)
+}
+
+/// Lane-parallel block-list ring reduce-scatter — the striped counterpart
+/// of [`ring_reduce_scatter_blocks_chunks`], and the function the other
+/// striped reduce paths funnel into. Each block is split into `lanes`
+/// stripes riding their own transport lanes; returns this rank's reduced
+/// block as its stripe list.
+pub fn ring_reduce_scatter_blocks_lanes_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    mut blocks: Vec<Chunk<T>>,
+    combiner: &Combiner<T>,
+    lanes: usize,
+) -> Result<Vec<Chunk<T>>> {
+    let k = effective_lanes(c, lanes);
+    if k == 1 {
+        return Ok(vec![ring_reduce_scatter_blocks_chunks(c, blocks, combiner)?]);
+    }
+    let p = c.size();
+    check_blocks(&blocks, p)?;
+    c.begin_op();
+    let r = c.rank();
+    if p == 1 {
+        return Ok(blocks.pop().expect("p == 1 has exactly one block").stripes(k));
+    }
+    let right = (r + 1) % p;
+    let left = (r + p - 1) % p;
+    let first = idx::rs_send_block(r, p, 0);
+    let mut current = std::mem::replace(&mut blocks[first], Chunk::empty()).stripes(k);
+    for s in 0..p - 1 {
+        let recv_b = idx::rs_recv_block(r, p, s);
+        let mut accs = std::mem::replace(&mut blocks[recv_b], Chunk::empty()).stripes(k);
+        c.sendrecv_striped_combine_into(right, current, left, s as u32, &mut accs, combiner)?;
+        current = accs;
+    }
+    debug_assert_eq!(idx::rs_recv_block(r, p, p - 2), r);
+    Ok(current)
+}
+
+/// Striped ring all-gather core: every rank contributes its block as a
+/// stripe list; blocks travel the ring stripe-parallel and are forwarded
+/// untouched (zero-copy, per stripe). Returns per-origin-rank stripe
+/// lists. All ranks must stripe identically (same `b`, same `k`) — the
+/// shape contract of [`crate::comm::stripe_lens`].
+pub(crate) fn ring_all_gather_striped<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    stripes: Vec<Chunk<T>>,
+) -> Result<Vec<Vec<Chunk<T>>>> {
+    c.begin_op();
+    let p = c.size();
+    let r = c.rank();
+    let k = stripes.len();
+    let mut out: Vec<Option<Vec<Chunk<T>>>> = vec![None; p];
+    out[r] = Some(stripes.clone());
+    if p > 1 {
+        let right = (r + 1) % p;
+        let left = (r + p - 1) % p;
+        let mut current = stripes;
+        for s in 0..p - 1 {
+            let recv_b = idx::ag_recv_block(r, p, s);
+            let got = c.sendrecv_striped(right, current, left, s as u32, k)?;
+            out[recv_b] = Some(got.clone());
+            current = got;
+        }
+    }
+    Ok(out
+        .into_iter()
+        .map(|b| b.expect("ring schedule covers every block"))
+        .collect())
+}
+
+/// Lane-parallel ring all-gather: [`ring_all_gather_chunks`] with each
+/// block split into `lanes` stripes riding their own transport lanes.
+/// Returns `p · k` chunks in rank-major, stripe-minor order
+/// (`out[i * k + l]` = stripe `l` of rank `i`'s block), which concatenate
+/// to the full gathered buffer. At an effective lane count of 1 this is
+/// exactly the unstriped block list.
+pub fn ring_all_gather_lanes_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: Chunk<T>,
+    lanes: usize,
+) -> Result<Vec<Chunk<T>>> {
+    let k = effective_lanes(c, lanes);
+    if k == 1 {
+        return ring_all_gather_chunks(c, input);
+    }
+    check_all_gather(input.as_slice())?;
+    let per_rank = ring_all_gather_striped(c, input.stripes(k))?;
+    Ok(per_rank.into_iter().flatten().collect())
+}
+
+/// Lane-parallel ring all-reduce: striped reduce-scatter ∘ striped
+/// all-gather, no intermediate materialization — each reduced stripe feeds
+/// the gather directly on its lane. Returns `p · k` chunks in rank-major,
+/// stripe-minor order, trimmed of padding (they concatenate to exactly
+/// `input.len()` elements).
+pub fn ring_all_reduce_lanes_chunks<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    input: Chunk<T>,
+    combiner: &Combiner<T>,
+    lanes: usize,
+) -> Result<Vec<Chunk<T>>> {
+    let k = effective_lanes(c, lanes);
+    if k == 1 {
+        return ring_all_reduce_chunks(c, input, combiner);
+    }
+    check_all_gather(input.as_slice())?;
+    let p = c.size();
+    let n = input.len();
+    let padded = n.div_ceil(p) * p;
+    let padded_input = if padded == n {
+        input
+    } else {
+        pad_chunk(&input, padded)
+    };
+    let mine = ring_reduce_scatter_lanes_chunks(c, padded_input, combiner, k)?;
+    let per_rank = ring_all_gather_striped(c, mine)?;
+    let mut blocks: Vec<Chunk<T>> = per_rank.into_iter().flatten().collect();
+    trim_blocks(&mut blocks, n);
+    Ok(blocks)
 }
 
 #[cfg(test)]
@@ -229,6 +432,102 @@ mod tests {
         let expect = oracle::all_reduce(&ins);
         for o in outs {
             assert_eq!(o, expect);
+        }
+    }
+
+    #[test]
+    fn lanes_reduce_scatter_matches_oracle_uneven_stripes() {
+        // b = 5 with 4 lanes → stripe lens [2, 1, 1, 1]: uneven on purpose.
+        for p in [2, 3, 6] {
+            let b = 5;
+            let world = CommWorld::<f32>::new(p).with_lanes(4);
+            let outs = world.run(move |c| {
+                let input: Vec<f32> = (0..p * b).map(|i| (c.rank() * 10 + i) as f32).collect();
+                let stripes = ring_reduce_scatter_lanes_chunks(
+                    c,
+                    Chunk::from_vec(input),
+                    &native_combine(),
+                    4,
+                )
+                .unwrap();
+                assert_eq!(stripes.len(), 4);
+                Chunk::concat(&stripes)
+            });
+            let ins: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..p * b).map(|i| (r * 10 + i) as f32).collect())
+                .collect();
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &oracle::reduce_scatter(&ins, r), "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_all_gather_matches_oracle() {
+        for p in [2, 3, 5] {
+            let m = 7; // 3 lanes over 7 elems → [3, 2, 2]
+            let world = CommWorld::<f32>::new(p).with_lanes(3);
+            let outs = world.run(move |c| {
+                let input: Vec<f32> = (0..m).map(|i| (c.rank() * 100 + i) as f32).collect();
+                let blocks =
+                    ring_all_gather_lanes_chunks(c, Chunk::from_vec(input), 3).unwrap();
+                assert_eq!(blocks.len(), p * 3);
+                Chunk::concat(&blocks)
+            });
+            let expect = oracle::all_gather(&inputs(p, m));
+            for o in outs {
+                assert_eq!(o, expect, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_all_reduce_matches_oracle_unaligned() {
+        // n = 10, p = 4 → padding; 4 lanes stripe the padded 3-elem blocks
+        // as [1, 1, 1, 0] — empty stripes must flow through harmlessly.
+        let p = 4;
+        let n = 10;
+        let world = CommWorld::<f32>::new(p).with_lanes(4);
+        let outs = world.run(move |c| {
+            let input: Vec<f32> = (0..n).map(|i| (c.rank() + i) as f32).collect();
+            let blocks =
+                ring_all_reduce_lanes_chunks(c, Chunk::from_vec(input), &native_combine(), 4)
+                    .unwrap();
+            Chunk::concat(&blocks)
+        });
+        let ins: Vec<Vec<f32>> = (0..p)
+            .map(|r| (0..n).map(|i| (r + i) as f32).collect())
+            .collect();
+        let expect = oracle::all_reduce(&ins);
+        for o in outs {
+            assert_eq!(o, expect);
+        }
+    }
+
+    #[test]
+    fn lanes_clamp_to_single_lane_transport() {
+        // Asking for 4 lanes on a 1-lane world must silently degrade to
+        // the unstriped schedule, not fail.
+        let p = 3;
+        let b = 4;
+        let world = CommWorld::<f32>::new(p);
+        let outs = world.run(move |c| {
+            let input: Vec<f32> = (0..p * b).map(|i| (c.rank() * 10 + i) as f32).collect();
+            let stripes = ring_reduce_scatter_lanes_chunks(
+                c,
+                Chunk::from_vec(input),
+                &native_combine(),
+                4,
+            )
+            .unwrap();
+            assert_eq!(stripes.len(), 1, "single-lane world must not stripe");
+            Chunk::concat(&stripes)
+        });
+        let ins: Vec<Vec<f32>> = (0..p)
+            .map(|r| (0..p * b).map(|i| (r * 10 + i) as f32).collect())
+            .collect();
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o, &oracle::reduce_scatter(&ins, r));
         }
     }
 

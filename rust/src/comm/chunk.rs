@@ -79,6 +79,24 @@ impl<T> Chunk<T> {
         (self.slice(0, at), self.slice(at, self.len - at))
     }
 
+    /// O(k) split into `k` contiguous stripe views covering the whole
+    /// chunk, in order — the unit of multi-lane striping. All stripes
+    /// share this chunk's storage. An uneven length gives the first
+    /// `len % k` stripes one extra element ([`stripe_lens`] is the shape
+    /// contract both sides of a striped exchange compute independently).
+    /// Zero-length stripes are produced when `len < k` so lane schedules
+    /// stay aligned across ranks regardless of payload size.
+    pub fn stripes(&self, k: usize) -> Vec<Self> {
+        stripe_lens(self.len, k)
+            .into_iter()
+            .scan(0usize, |off, n| {
+                let s = self.slice(*off, n);
+                *off += n;
+                Some(s)
+            })
+            .collect()
+    }
+
     /// Identity of the backing storage — two chunks with equal ids share
     /// bytes. Used by the zero-copy (no re-materialization) tests.
     pub fn storage_id(&self) -> usize {
@@ -233,6 +251,16 @@ impl<T: Clone> Chunk<T> {
         }
         out
     }
+}
+
+/// Stripe lengths for splitting `len` elements into `k` contiguous
+/// stripes: the first `len % k` stripes get `len / k + 1` elements, the
+/// rest `len / k`. Both peers of a striped exchange derive the posted
+/// buffer shapes from this, so it is the wire contract for striping.
+pub fn stripe_lens(len: usize, k: usize) -> Vec<usize> {
+    assert!(k >= 1, "stripe count must be at least 1");
+    let (q, r) = (len / k, len % k);
+    (0..k).map(|i| q + usize::from(i < r)).collect()
 }
 
 impl<T> Clone for Chunk<T> {
@@ -415,6 +443,25 @@ mod tests {
         assert_ne!(dest.storage_id(), a.storage_id());
         assert_eq!(dest.as_slice(), &[4.0, 6.0]);
         assert!(dest.is_exclusive(), "fused create yields exact exclusive storage");
+    }
+
+    #[test]
+    fn stripes_cover_unevenly_and_share_storage() {
+        let c = Chunk::from_vec((0..7).collect::<Vec<i32>>());
+        let s = c.stripes(3);
+        assert_eq!(stripe_lens(7, 3), vec![3, 2, 2]);
+        assert_eq!(s[0].as_slice(), &[0, 1, 2]);
+        assert_eq!(s[1].as_slice(), &[3, 4]);
+        assert_eq!(s[2].as_slice(), &[5, 6]);
+        assert!(s.iter().all(|x| x.storage_id() == c.storage_id()));
+        // len < k pads with empty stripes, never drops lanes.
+        let tiny = Chunk::from_vec(vec![1, 2]);
+        let s = tiny.stripes(4);
+        assert_eq!(
+            s.iter().map(Chunk::len).collect::<Vec<_>>(),
+            vec![1, 1, 0, 0]
+        );
+        assert_eq!(Chunk::concat(&s), vec![1, 2]);
     }
 
     #[test]

@@ -59,6 +59,26 @@ fn compose_tag(ctx: u64, op_seq: u64, step: u32) -> u64 {
     fnv64_step(fnv64_step(ctx, op_seq), step as u64)
 }
 
+/// Compose the wire tag for stripe `lane` of `(context, op, step)`: the
+/// lane id is folded through the same FNV mix on top of [`compose_tag`].
+/// Lanes already ride separate transport queues, so this is belt and
+/// braces — a message that somehow landed on the wrong lane's queue (or a
+/// stale-lane replay) can never match, it can only stash and time out.
+/// Note lane 0's striped tag differs from the unstriped tag for the same
+/// step; striped and unstriped exchanges are distinct wire protocols.
+fn compose_tag_lane(ctx: u64, op_seq: u64, step: u32, lane: usize) -> u64 {
+    fnv64_step(compose_tag(ctx, op_seq, step), lane as u64)
+}
+
+/// Stripe-step encoding used by the *default* (single-queue) striped
+/// methods: stripe `l` of step `step` in a `k`-stripe exchange rides tag
+/// step `step * k + l`. Collectives that stripe use this encoding for the
+/// whole op, so it cannot collide with itself; `begin_op` isolates it
+/// from neighboring ops.
+fn stripe_step(step: u32, l: usize, k: usize) -> u32 {
+    step * k as u32 + l as u32
+}
+
 /// Operations collectives need from a communicator.
 pub trait Comm<T: Send + Sync + 'static> {
     /// This rank within the communicator (0-based).
@@ -72,6 +92,120 @@ pub trait Comm<T: Send + Sync + 'static> {
     fn recv_chunk(&mut self, peer: usize, step: u32) -> Result<Chunk<T>>;
     /// Begin a new collective: bumps the op sequence for tag freshness.
     fn begin_op(&mut self);
+
+    /// Number of independent transport lanes this communicator can stripe
+    /// a message over (≥ 1). The default single-queue implementation
+    /// reports 1; endpoint-backed communicators report the transport's
+    /// lane count. Collectives clamp their stripe count to this.
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    /// Post the stripes of one striped exchange to `peer`: stripe `l`
+    /// travels lane `l` (endpoint-backed impls) with the lane id folded
+    /// into its wire tag. The default falls back to the single queue,
+    /// encoding the stripe index into the step — functionally identical,
+    /// serially delivered.
+    fn send_striped(&mut self, peer: usize, step: u32, stripes: Vec<Chunk<T>>) -> Result<()> {
+        let k = stripes.len();
+        for (l, s) in stripes.into_iter().enumerate() {
+            self.send_slice(peer, stripe_step(step, l, k), s)?;
+        }
+        Ok(())
+    }
+
+    /// Matched receive of a `k`-stripe exchange from `peer`, stripes in
+    /// lane order.
+    fn recv_striped(&mut self, peer: usize, step: u32, k: usize) -> Result<Vec<Chunk<T>>> {
+        (0..k)
+            .map(|l| self.recv_chunk(peer, stripe_step(step, l, k)))
+            .collect()
+    }
+
+    /// Posted striped receive: deliver stripe `l` into `dests[l]`.
+    /// Endpoint-backed impls deliver worker-lane stripes concurrently.
+    fn recv_striped_into(&mut self, peer: usize, step: u32, dests: &mut [Chunk<T>]) -> Result<()>
+    where
+        T: Clone,
+    {
+        let k = dests.len();
+        for (l, dest) in dests.iter_mut().enumerate() {
+            self.recv_into(peer, stripe_step(step, l, k), dest)?;
+        }
+        Ok(())
+    }
+
+    /// Posted striped receive fused with a reduction: stripe `l` is folded
+    /// into `dests[l]` — on endpoint-backed impls each worker-lane
+    /// stripe's fold runs on its own lane thread, the lane-parallel
+    /// combine at the heart of multi-NIC striping.
+    fn recv_striped_combine_into(
+        &mut self,
+        peer: usize,
+        step: u32,
+        dests: &mut [Chunk<T>],
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        let k = dests.len();
+        for (l, dest) in dests.iter_mut().enumerate() {
+            self.recv_combine_into(peer, stripe_step(step, l, k), dest, combiner)?;
+        }
+        Ok(())
+    }
+
+    /// Striped exchange: post all stripes to `to`, then receive the
+    /// matched stripes from `from` (non-blocking sends make this
+    /// deadlock-safe in a ring).
+    fn sendrecv_striped(
+        &mut self,
+        to: usize,
+        stripes: Vec<Chunk<T>>,
+        from: usize,
+        step: u32,
+        k: usize,
+    ) -> Result<Vec<Chunk<T>>> {
+        self.send_striped(to, step, stripes)?;
+        self.recv_striped(from, step, k)
+    }
+
+    /// Striped exchange with posted delivery into `dests`.
+    fn sendrecv_striped_into(
+        &mut self,
+        to: usize,
+        stripes: Vec<Chunk<T>>,
+        from: usize,
+        step: u32,
+        dests: &mut [Chunk<T>],
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        self.send_striped(to, step, stripes)?;
+        self.recv_striped_into(from, step, dests)
+    }
+
+    /// Striped exchange with posted combining delivery — the hot-loop
+    /// primitive of the lane-parallel reduce path: one call per ring step
+    /// posts `k` outgoing stripes and folds `k` incoming stripes, the
+    /// folds running lane-parallel on endpoint-backed impls.
+    fn sendrecv_striped_combine_into(
+        &mut self,
+        to: usize,
+        stripes: Vec<Chunk<T>>,
+        from: usize,
+        step: u32,
+        dests: &mut [Chunk<T>],
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        self.send_striped(to, step, stripes)?;
+        self.recv_striped_combine_into(from, step, dests, combiner)
+    }
 
     /// Compat shim: owned-vector send (wrapped into a chunk, still O(1)).
     #[deprecated(note = "owned-Vec compat shim — use `send_slice` with a `Chunk` (O(1) wrap)")]
@@ -321,6 +455,37 @@ impl<T: Send + Sync + 'static> Communicator<T> {
         let g = self.topo.intra_node_group(self.ep.rank());
         self.subcomm(g)
     }
+
+    /// Transport lanes available for striping (inherent mirror of
+    /// [`Comm::lanes`]).
+    pub fn lanes(&self) -> usize {
+        self.ep.lane_count()
+    }
+
+    /// Per-lane traffic counters on this rank's endpoint.
+    pub fn traffic_per_lane(&self) -> Vec<Traffic> {
+        self.ep.traffic_per_lane()
+    }
+
+    /// A single-lane [`Comm`] view pinned to transport lane `lane`: every
+    /// send/receive rides that lane's queue with the lane id folded into
+    /// the wire tag. Lane views share this communicator's op sequence, so
+    /// interleaving ops on different lanes stays tag-fresh.
+    pub fn lane_comm(&mut self, lane: usize) -> Result<LaneComm<'_, T>> {
+        if lane >= self.ep.lane_count() {
+            return Err(Error::PeerOutOfRange {
+                peer: lane,
+                size: self.ep.lane_count(),
+            });
+        }
+        Ok(LaneComm { c: self, lane })
+    }
+
+    fn stripe_tags(&self, step: u32, k: usize) -> Vec<u64> {
+        (0..k)
+            .map(|l| compose_tag_lane(self.ctx, self.op_seq, step, l))
+            .collect()
+    }
 }
 
 impl<T: Send + Sync + 'static> Comm<T> for Communicator<T> {
@@ -367,6 +532,110 @@ impl<T: Send + Sync + 'static> Comm<T> for Communicator<T> {
     fn begin_op(&mut self) {
         self.op_seq = self.op_seq.wrapping_add(1);
     }
+
+    fn lanes(&self) -> usize {
+        self.ep.lane_count()
+    }
+
+    fn send_striped(&mut self, peer: usize, step: u32, stripes: Vec<Chunk<T>>) -> Result<()> {
+        for (l, s) in stripes.into_iter().enumerate() {
+            let tag = compose_tag_lane(self.ctx, self.op_seq, step, l);
+            self.ep.send_chunk_on(peer, l, tag, s)?;
+        }
+        Ok(())
+    }
+
+    fn recv_striped(&mut self, peer: usize, step: u32, k: usize) -> Result<Vec<Chunk<T>>> {
+        let tags = self.stripe_tags(step, k);
+        self.ep.recv_striped(peer, &tags)
+    }
+
+    fn recv_striped_into(&mut self, peer: usize, step: u32, dests: &mut [Chunk<T>]) -> Result<()>
+    where
+        T: Clone,
+    {
+        let tags = self.stripe_tags(step, dests.len());
+        self.ep.recv_striped_into(peer, &tags, dests)
+    }
+
+    fn recv_striped_combine_into(
+        &mut self,
+        peer: usize,
+        step: u32,
+        dests: &mut [Chunk<T>],
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        let tags = self.stripe_tags(step, dests.len());
+        self.ep.recv_striped_combine_into(peer, &tags, dests, combiner)
+    }
+}
+
+/// A [`Comm`] view pinned to one transport lane of a [`Communicator`] —
+/// single-lane from the algorithm's point of view ([`Comm::lanes`] = 1),
+/// but all traffic rides lane `lane`'s queue with lane-folded tags. Used
+/// to run independent single-lane schedules side by side (and by tests to
+/// prove lane isolation).
+pub struct LaneComm<'a, T> {
+    c: &'a mut Communicator<T>,
+    lane: usize,
+}
+
+impl<'a, T: Send + Sync + 'static> LaneComm<'a, T> {
+    /// The transport lane this view is pinned to.
+    pub fn lane(&self) -> usize {
+        self.lane
+    }
+}
+
+impl<'a, T: Send + Sync + 'static> Comm<T> for LaneComm<'a, T> {
+    fn rank(&self) -> usize {
+        self.c.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.c.size()
+    }
+
+    fn send_slice(&mut self, peer: usize, step: u32, chunk: Chunk<T>) -> Result<()> {
+        let tag = compose_tag_lane(self.c.ctx, self.c.op_seq, step, self.lane);
+        self.c.ep.send_chunk_on(peer, self.lane, tag, chunk)
+    }
+
+    fn recv_chunk(&mut self, peer: usize, step: u32) -> Result<Chunk<T>> {
+        let tag = compose_tag_lane(self.c.ctx, self.c.op_seq, step, self.lane);
+        self.c.ep.recv_chunk_on(self.lane, peer, tag)
+    }
+
+    fn recv_into(&mut self, peer: usize, step: u32, dest: &mut Chunk<T>) -> Result<()>
+    where
+        T: Clone,
+    {
+        let tag = compose_tag_lane(self.c.ctx, self.c.op_seq, step, self.lane);
+        self.c.ep.recv_chunk_into_on(self.lane, peer, tag, dest)
+    }
+
+    fn recv_combine_into(
+        &mut self,
+        peer: usize,
+        step: u32,
+        dest: &mut Chunk<T>,
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        let tag = compose_tag_lane(self.c.ctx, self.c.op_seq, step, self.lane);
+        self.c
+            .ep
+            .recv_chunk_combine_into_on(self.lane, peer, tag, dest, combiner)
+    }
+
+    fn begin_op(&mut self) {
+        self.c.op_seq = self.c.op_seq.wrapping_add(1);
+    }
 }
 
 /// Borrowed view over a subset of world ranks.
@@ -382,6 +651,19 @@ impl<'a, T: Send + Sync + 'static> SubComm<'a, T> {
     /// The global (world) ranks of this subgroup, in sub-rank order.
     pub fn group(&self) -> &[usize] {
         &self.group
+    }
+
+    fn global(&self, peer: usize) -> Result<usize> {
+        self.group.get(peer).copied().ok_or(Error::PeerOutOfRange {
+            peer,
+            size: self.group.len(),
+        })
+    }
+
+    fn stripe_tags(&self, step: u32, k: usize) -> Vec<u64> {
+        (0..k)
+            .map(|l| compose_tag_lane(self.ctx, self.op_seq, step, l))
+            .collect()
     }
 }
 
@@ -444,6 +726,49 @@ impl<'a, T: Send + Sync + 'static> Comm<T> for SubComm<'a, T> {
 
     fn begin_op(&mut self) {
         self.op_seq = self.op_seq.wrapping_add(1);
+    }
+
+    fn lanes(&self) -> usize {
+        self.ep.lane_count()
+    }
+
+    fn send_striped(&mut self, peer: usize, step: u32, stripes: Vec<Chunk<T>>) -> Result<()> {
+        let global = self.global(peer)?;
+        for (l, s) in stripes.into_iter().enumerate() {
+            let tag = compose_tag_lane(self.ctx, self.op_seq, step, l);
+            self.ep.send_chunk_on(global, l, tag, s)?;
+        }
+        Ok(())
+    }
+
+    fn recv_striped(&mut self, peer: usize, step: u32, k: usize) -> Result<Vec<Chunk<T>>> {
+        let global = self.global(peer)?;
+        let tags = self.stripe_tags(step, k);
+        self.ep.recv_striped(global, &tags)
+    }
+
+    fn recv_striped_into(&mut self, peer: usize, step: u32, dests: &mut [Chunk<T>]) -> Result<()>
+    where
+        T: Clone,
+    {
+        let global = self.global(peer)?;
+        let tags = self.stripe_tags(step, dests.len());
+        self.ep.recv_striped_into(global, &tags, dests)
+    }
+
+    fn recv_striped_combine_into(
+        &mut self,
+        peer: usize,
+        step: u32,
+        dests: &mut [Chunk<T>],
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        let global = self.global(peer)?;
+        let tags = self.stripe_tags(step, dests.len());
+        self.ep.recv_striped_combine_into(global, &tags, dests, combiner)
     }
 }
 
@@ -628,6 +953,126 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    fn lane_pair(lanes: usize) -> (Communicator<f32>, Communicator<f32>) {
+        let (_hub, mut eps) = TransportHub::<f32>::new_with_lanes(2, lanes);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let t = Topology::flat(2);
+        (
+            Communicator::new(e0, t).unwrap(),
+            Communicator::new(e1, t).unwrap(),
+        )
+    }
+
+    #[test]
+    fn striped_exchange_roundtrip_uneven() {
+        let (mut c0, mut c1) = lane_pair(3);
+        assert_eq!(Comm::lanes(&c0), 3);
+        let data = Chunk::from_vec((0..7).map(|i| i as f32).collect::<Vec<_>>());
+        c0.send_striped(1, 0, data.stripes(3)).unwrap();
+        let got = c1.recv_striped(0, 0, 3).unwrap();
+        assert_eq!(Chunk::concat(&got), data.to_vec());
+        // Stripes share the sender's storage end to end — zero-copy views.
+        assert!(got.iter().all(|s| s.storage_id() == data.storage_id()));
+    }
+
+    #[test]
+    fn striped_combine_folds_lane_parallel_stripes() {
+        let sum = crate::reduction::offload::native_combine::<f32>();
+        let (mut c0, mut c1) = lane_pair(4);
+        let incoming = Chunk::from_vec(vec![1.0; 10]);
+        c0.send_striped(1, 2, incoming.stripes(4)).unwrap();
+        let acc = Chunk::from_vec(vec![5.0; 10]);
+        let mut dests = acc.stripes(4);
+        c1.recv_striped_combine_into(0, 2, &mut dests, &sum).unwrap();
+        assert_eq!(Chunk::concat(&dests), vec![6.0; 10]);
+        let t = c1.traffic();
+        assert_eq!(t.copied_bytes, 0, "striped combine path must stay copy-free");
+        assert_eq!(t.recvd_msgs, 4);
+    }
+
+    #[test]
+    fn lanes_never_cross_deliver_same_step() {
+        // Same (op, step) posted on every lane: each lane view must get
+        // its own payload back, never a neighbor lane's.
+        let (mut c0, mut c1) = lane_pair(3);
+        for l in 0..3 {
+            c0.lane_comm(l)
+                .unwrap()
+                .send_slice(1, 7, Chunk::from_vec(vec![l as f32]))
+                .unwrap();
+        }
+        for l in (0..3).rev() {
+            let got = c1.lane_comm(l).unwrap().recv_chunk(0, 7).unwrap();
+            assert_eq!(got.as_slice(), &[l as f32], "lane {l} cross-delivered");
+        }
+    }
+
+    #[test]
+    fn stale_lane_tag_never_matches_new_op() {
+        // Regression in the spirit of the op-seq wire-tag tests: a stripe
+        // posted under op N must not match the same (step, lane) of op
+        // N+1, even on the same lane queue.
+        let (mut c0, mut c1) = lane_pair(2);
+        c0.send_striped(1, 0, Chunk::from_vec(vec![1.0f32, 2.0]).stripes(2))
+            .unwrap();
+        // Receiver advances its op sequence before looking: the stale
+        // stripes must stash, not match, so the receive times out.
+        c1.begin_op();
+        c1.set_timeout(Duration::from_millis(30));
+        match c1.recv_striped(0, 0, 2) {
+            Err(Error::RecvTimeout { .. }) => {}
+            other => panic!("stale-lane stripes matched a fresh op: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lane_comm_rejects_out_of_range_lane() {
+        let (mut c0, _c1) = lane_pair(2);
+        assert!(c0.lane_comm(1).is_ok());
+        assert!(matches!(
+            c0.lane_comm(2).err(),
+            Some(Error::PeerOutOfRange { peer: 2, size: 2 })
+        ));
+    }
+
+    #[test]
+    fn default_striped_methods_work_single_queue() {
+        // The trait defaults (stripe-in-step encoding over one queue) must
+        // be functionally identical for impls that don't override them.
+        let (mut c0, mut c1) = pair();
+        assert_eq!(Comm::lanes(&c0), 1);
+        let data = Chunk::from_vec(vec![1.0f32, 2.0, 3.0]);
+        c0.send_striped(1, 0, data.stripes(1)).unwrap();
+        let mut dests = Chunk::from_vec(vec![0.0f32; 3]).stripes(1);
+        c1.recv_striped_into(0, 0, &mut dests).unwrap();
+        assert_eq!(Chunk::concat(&dests), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn subcomm_striping_translates_ranks() {
+        let (_hub, eps) = TransportHub::<i32>::new_with_lanes(4, 2);
+        let topo = Topology::new(2, 2, 1).unwrap();
+        let mut comms: Vec<Communicator<i32>> = eps
+            .into_iter()
+            .map(|e| Communicator::new(e, topo).unwrap())
+            .collect();
+        let mut c3 = comms.pop().unwrap();
+        let _c2 = comms.pop().unwrap();
+        let mut c1 = comms.pop().unwrap();
+        {
+            let mut s1 = c1.inter_node().unwrap();
+            assert_eq!(Comm::lanes(&s1), 2);
+            s1.send_striped(1, 0, Chunk::from_vec(vec![7, 8, 9]).stripes(2))
+                .unwrap();
+        }
+        {
+            let mut s3 = c3.inter_node().unwrap();
+            let got = s3.recv_striped(0, 0, 2).unwrap();
+            assert_eq!(Chunk::concat(&got), vec![7, 8, 9]);
         }
     }
 

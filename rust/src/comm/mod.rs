@@ -14,7 +14,7 @@ mod communicator;
 mod transport;
 mod world;
 
-pub use chunk::Chunk;
-pub use communicator::{Comm, Communicator, SubComm};
+pub use chunk::{stripe_lens, Chunk};
+pub use communicator::{Comm, Communicator, LaneComm, SubComm};
 pub use transport::{Endpoint, Traffic, TransportHub, DEFAULT_RECV_TIMEOUT};
 pub use world::CommWorld;

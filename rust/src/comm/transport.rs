@@ -1,19 +1,45 @@
-//! In-process transport: per-rank mailboxes with (source, tag) matching.
+//! In-process transport: per-(rank, lane) mailboxes with (source, tag)
+//! matching.
 //!
-//! Each rank owns an [`Endpoint`]: an MPSC receiver (its mailbox) plus
-//! cloned senders to every peer. Messages are matched MPI-style on
-//! `(src, tag)`; out-of-order arrivals are stashed in a pending map. FIFO
-//! is preserved per `(src, tag)` pair because the underlying channel is
-//! FIFO per sender and stashing appends in arrival order.
+//! Each rank owns an [`Endpoint`]: one MPSC receiver (its mailbox) per
+//! **lane** plus cloned senders to every peer lane. Messages are matched
+//! MPI-style on `(src, tag)`; out-of-order arrivals are stashed in a
+//! pending map. FIFO is preserved per `(src, tag)` pair because the
+//! underlying channel is FIFO per sender and stashing appends in arrival
+//! order.
 //!
 //! The message payload is a [`Chunk`] — an Arc-backed shared buffer view —
 //! so posting a message moves a reference, never the bytes. A rank that
 //! forwards a received chunk (ring/hierarchical all-gather) or sends a
 //! sub-view of its input (recursive doubling, scatter) performs zero
 //! copies end to end.
+//!
+//! ## Lanes
+//!
+//! A hub built with [`TransportHub::new_with_lanes`] gives every rank pair
+//! `lanes` independent queues, modeling the multiple NIC rails a node can
+//! drive at once (NCCL channels / HiCCL rail striping). Lane 0 is served
+//! inline by the owning rank thread — `lanes = 1` is byte-for-byte the old
+//! single-queue transport. Each lane ≥ 1 is served by a dedicated **lane
+//! worker thread** owned by the endpoint: the striped receive family
+//! ([`Endpoint::recv_striped_combine_into`] and friends) fans one posted
+//! buffer per lane out to the workers, so the per-stripe `accept` /
+//! `accept_combine` (the memcpy/fold work of a collective step) runs on
+//! `lanes` threads concurrently while lane 0's stripe is handled on the
+//! calling thread. Workers are long-lived — spawned once per endpoint, fed
+//! over a job queue — so the per-step cost is a channel round-trip, not a
+//! thread spawn.
+//!
+//! Traffic accounting is **per lane** ([`Endpoint::traffic_per_lane`]):
+//! sends are counted by the posting thread into the destination lane's
+//! counters, receives by whichever thread completes the delivery.
+//! [`Endpoint::traffic`] returns the lane sum, so single-lane callers see
+//! the exact counters they always did.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -35,7 +61,9 @@ struct Msg<T> {
 ///
 /// Bytes are exact: `elements × size_of::<T>()`, which for the data-plane
 /// element types equals [`crate::reduction::Elem::SIZE`]. The bench harness
-/// and the launcher's schedule-equivalence guard consume these.
+/// and the launcher's schedule-equivalence guard consume these. With a
+/// multi-lane endpoint one `Traffic` exists per lane; see
+/// [`Endpoint::traffic_per_lane`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Traffic {
     /// Messages posted by this endpoint.
@@ -58,47 +86,294 @@ pub struct Traffic {
     pub copied_bytes: u64,
 }
 
-/// Cloneable handle with senders to every rank's mailbox.
+impl Traffic {
+    /// Field-wise sum — aggregates per-lane counters into endpoint totals.
+    pub fn merged(self, o: Traffic) -> Traffic {
+        Traffic {
+            sent_msgs: self.sent_msgs + o.sent_msgs,
+            sent_elems: self.sent_elems + o.sent_elems,
+            sent_bytes: self.sent_bytes + o.sent_bytes,
+            recvd_msgs: self.recvd_msgs + o.recvd_msgs,
+            recvd_bytes: self.recvd_bytes + o.recvd_bytes,
+            moved_bytes: self.moved_bytes + o.moved_bytes,
+            copied_bytes: self.copied_bytes + o.copied_bytes,
+        }
+    }
+
+    fn count_send<T>(&mut self, elems: usize) {
+        self.sent_msgs += 1;
+        self.sent_elems += elems as u64;
+        self.sent_bytes += (elems * std::mem::size_of::<T>()) as u64;
+    }
+
+    fn count_recv<T>(&mut self, elems: usize, copied_elems: usize) {
+        let bytes = |e: usize| (e * std::mem::size_of::<T>()) as u64;
+        self.recvd_msgs += 1;
+        self.recvd_bytes += bytes(elems);
+        self.copied_bytes += bytes(copied_elems);
+        self.moved_bytes += bytes(elems - copied_elems);
+    }
+}
+
+/// One lane's matching state: its mailbox receiver plus the out-of-order
+/// stash. Lane 0's mailbox lives inside the endpoint; every other lane's
+/// lives inside that lane's worker thread.
+struct Mailbox<T> {
+    rx: Receiver<Msg<T>>,
+    pending: HashMap<(usize, u64), VecDeque<Chunk<T>>>,
+}
+
+impl<T> Mailbox<T> {
+    fn new(rx: Receiver<Msg<T>>) -> Self {
+        Self {
+            rx,
+            pending: HashMap::new(),
+        }
+    }
+
+    /// Matched pull without traffic accounting (counting happens once the
+    /// delivery is classified as moved or copied). `rank` is only for
+    /// error construction.
+    fn pull(&mut self, rank: usize, from: usize, tag: u64, timeout: Duration) -> Result<Chunk<T>> {
+        let key = (from, tag);
+        if let Some(q) = self.pending.get_mut(&key) {
+            if let Some(data) = q.pop_front() {
+                return Ok(data);
+            }
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(remaining) {
+                Ok(msg) => {
+                    if msg.src == from && msg.tag == tag {
+                        return Ok(msg.data);
+                    }
+                    self.pending
+                        .entry((msg.src, msg.tag))
+                        .or_default()
+                        .push_back(msg.data);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(Error::RecvTimeout {
+                        src: from,
+                        tag,
+                        ms: timeout.as_millis() as u64,
+                    })
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::TransportClosed { rank })
+                }
+            }
+        }
+    }
+
+    /// [`Mailbox::pull`] plus the posted-buffer shape check; on mismatch
+    /// the message is requeued at the front (FIFO order preserved — it was
+    /// taken from the front) and the error is recoverable.
+    fn checked_pull(
+        &mut self,
+        rank: usize,
+        from: usize,
+        tag: u64,
+        expected: usize,
+        timeout: Duration,
+    ) -> Result<Chunk<T>> {
+        let data = self.pull(rank, from, tag, timeout)?;
+        if data.len() != expected {
+            let got = data.len();
+            self.pending.entry((from, tag)).or_default().push_front(data);
+            return Err(Error::RecvShapeMismatch {
+                src: from,
+                tag,
+                expected,
+                got,
+            });
+        }
+        Ok(data)
+    }
+}
+
+/// A receive request shipped to a lane worker. `dest: None` is a plain
+/// matched pull (the chunk reference comes back); `Some` is a posted
+/// receive, folded through `combiner` when one is attached.
+struct LaneJob<T> {
+    from: usize,
+    tag: u64,
+    timeout: Duration,
+    dest: Option<Chunk<T>>,
+    combiner: Option<Combiner<T>>,
+}
+
+/// A lane worker's answer: the delivered (or returned-on-error) chunk plus
+/// the delivery result. On error a posted `dest` comes back untouched.
+struct LaneDone<T> {
+    chunk: Option<Chunk<T>>,
+    result: Result<()>,
+}
+
+/// Owner-side handle to one lane worker thread (lanes ≥ 1).
+struct LaneWorker<T> {
+    job_tx: Sender<LaneJob<T>>,
+    done_rx: Receiver<LaneDone<T>>,
+    traffic: Arc<Mutex<Traffic>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Cloneable handle with senders to every `(rank, lane)` mailbox.
 pub struct TransportHub<T> {
+    /// Flattened `[rank * lanes + lane]`.
     senders: Vec<Sender<Msg<T>>>,
+    lanes: usize,
 }
 
 impl<T> Clone for TransportHub<T> {
     fn clone(&self) -> Self {
         Self {
             senders: self.senders.clone(),
+            lanes: self.lanes,
         }
     }
 }
 
 impl<T: Send + Sync + 'static> TransportHub<T> {
-    /// Build a hub + one endpoint per rank.
+    /// Build a single-lane hub + one endpoint per rank — byte-for-byte the
+    /// pre-lane transport (no worker threads are spawned).
     pub fn new(size: usize) -> (Self, Vec<Endpoint<T>>) {
-        let mut senders = Vec::with_capacity(size);
-        let mut receivers = Vec::with_capacity(size);
-        for _ in 0..size {
-            let (tx, rx) = mpsc::channel();
-            senders.push(tx);
-            receivers.push(rx);
-        }
-        let hub = Self { senders };
-        let endpoints = receivers
+        let (hub, rxs) = Self::channels(size, 1);
+        let endpoints = rxs
             .into_iter()
             .enumerate()
-            .map(|(rank, rx)| Endpoint {
-                rank,
-                hub: hub.clone(),
-                rx,
-                pending: HashMap::new(),
-                timeout: DEFAULT_RECV_TIMEOUT,
-                traffic: Traffic::default(),
+            .map(|(rank, mut lane_rxs)| {
+                Endpoint::assemble(rank, hub.clone(), lane_rxs.pop().expect("lane 0"), Vec::new())
             })
             .collect();
         (hub, endpoints)
     }
 
+    fn channels(size: usize, lanes: usize) -> (Self, Vec<Vec<Receiver<Msg<T>>>>) {
+        assert!(lanes >= 1, "transport needs at least one lane");
+        let mut senders = Vec::with_capacity(size * lanes);
+        let mut receivers: Vec<Vec<Receiver<Msg<T>>>> = Vec::with_capacity(size);
+        for _ in 0..size {
+            let mut lane_rxs = Vec::with_capacity(lanes);
+            for _ in 0..lanes {
+                let (tx, rx) = mpsc::channel();
+                senders.push(tx);
+                lane_rxs.push(rx);
+            }
+            receivers.push(lane_rxs);
+        }
+        (Self { senders, lanes }, receivers)
+    }
+
     fn size(&self) -> usize {
-        self.senders.len()
+        self.senders.len() / self.lanes
+    }
+
+    fn sender(&self, to: usize, lane: usize) -> &Sender<Msg<T>> {
+        &self.senders[to * self.lanes + lane]
+    }
+}
+
+impl<T: Send + Sync + Clone + 'static> TransportHub<T> {
+    /// Build a hub with `lanes` independent queues per rank pair. Each
+    /// endpoint owns `lanes - 1` long-lived lane worker threads (lane 0 is
+    /// served inline by the rank thread), so striped receives fold their
+    /// stripes in parallel.
+    pub fn new_with_lanes(size: usize, lanes: usize) -> (Self, Vec<Endpoint<T>>) {
+        let (hub, rxs) = Self::channels(size, lanes);
+        let endpoints = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(rank, lane_rxs)| {
+                let mut it = lane_rxs.into_iter();
+                let lane0 = it.next().expect("lane 0");
+                let workers = it
+                    .enumerate()
+                    .map(|(i, rx)| spawn_lane_worker(rank, i + 1, rx))
+                    .collect();
+                Endpoint::assemble(rank, hub.clone(), lane0, workers)
+            })
+            .collect();
+        (hub, endpoints)
+    }
+}
+
+/// Spawn the worker thread serving lane `lane` of rank `rank`.
+fn spawn_lane_worker<T: Send + Sync + Clone + 'static>(
+    rank: usize,
+    lane: usize,
+    rx: Receiver<Msg<T>>,
+) -> LaneWorker<T> {
+    let (job_tx, job_rx) = mpsc::channel::<LaneJob<T>>();
+    let (done_tx, done_rx) = mpsc::channel::<LaneDone<T>>();
+    let traffic = Arc::new(Mutex::new(Traffic::default()));
+    let shared = Arc::clone(&traffic);
+    let handle = std::thread::Builder::new()
+        .name(format!("pccl-lane-{rank}.{lane}"))
+        .spawn(move || {
+            let mut mailbox = Mailbox::new(rx);
+            while let Ok(job) = job_rx.recv() {
+                let done = serve_lane_job(&mut mailbox, &shared, rank, job);
+                if done_tx.send(done).is_err() {
+                    return; // endpoint dropped
+                }
+            }
+        })
+        .expect("spawn lane worker thread");
+    LaneWorker {
+        job_tx,
+        done_rx,
+        traffic,
+        handle: Some(handle),
+    }
+}
+
+/// One receive on a worker lane: pull, deliver per the job's mode, count.
+fn serve_lane_job<T: Send + Sync + Clone + 'static>(
+    mailbox: &mut Mailbox<T>,
+    traffic: &Mutex<Traffic>,
+    rank: usize,
+    job: LaneJob<T>,
+) -> LaneDone<T> {
+    match job.dest {
+        None => match mailbox.pull(rank, job.from, job.tag, job.timeout) {
+            Ok(data) => {
+                traffic.lock().unwrap().count_recv::<T>(data.len(), 0);
+                LaneDone {
+                    chunk: Some(data),
+                    result: Ok(()),
+                }
+            }
+            Err(e) => LaneDone {
+                chunk: None,
+                result: Err(e),
+            },
+        },
+        Some(mut dest) => {
+            match mailbox.checked_pull(rank, job.from, job.tag, dest.len(), job.timeout) {
+                Ok(data) => {
+                    let len = data.len();
+                    let copied = match &job.combiner {
+                        Some(comb) => {
+                            dest.accept_combine(data, comb);
+                            0
+                        }
+                        None => dest.accept(data),
+                    };
+                    traffic.lock().unwrap().count_recv::<T>(len, copied);
+                    LaneDone {
+                        chunk: Some(dest),
+                        result: Ok(()),
+                    }
+                }
+                Err(e) => LaneDone {
+                    chunk: Some(dest),
+                    result: Err(e),
+                },
+            }
+        }
     }
 }
 
@@ -107,13 +382,29 @@ impl<T: Send + Sync + 'static> TransportHub<T> {
 pub struct Endpoint<T> {
     rank: usize,
     hub: TransportHub<T>,
-    rx: Receiver<Msg<T>>,
-    pending: HashMap<(usize, u64), VecDeque<Chunk<T>>>,
+    lane0: Mailbox<T>,
+    workers: Vec<LaneWorker<T>>,
     timeout: Duration,
     traffic: Traffic,
 }
 
 impl<T: Send + Sync + 'static> Endpoint<T> {
+    fn assemble(
+        rank: usize,
+        hub: TransportHub<T>,
+        lane0_rx: Receiver<Msg<T>>,
+        workers: Vec<LaneWorker<T>>,
+    ) -> Self {
+        Self {
+            rank,
+            hub,
+            lane0: Mailbox::new(lane0_rx),
+            workers,
+            timeout: DEFAULT_RECV_TIMEOUT,
+            traffic: Traffic::default(),
+        }
+    }
+
     pub fn rank(&self) -> usize {
         self.rank
     }
@@ -122,30 +413,67 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
         self.hub.size()
     }
 
+    /// Number of independent lanes per rank pair (≥ 1; lane 0 always exists).
+    pub fn lane_count(&self) -> usize {
+        1 + self.workers.len()
+    }
+
     /// Override the receive timeout (failure-injection tests use short ones).
     pub fn set_timeout(&mut self, timeout: Duration) {
         self.timeout = timeout;
     }
 
-    /// Traffic counters so far (monotonic).
+    /// Traffic counters so far, summed over all lanes (monotonic).
     pub fn traffic(&self) -> Traffic {
-        self.traffic
+        self.traffic_per_lane()
+            .into_iter()
+            .fold(Traffic::default(), Traffic::merged)
     }
 
-    /// Post `chunk` to `to`'s mailbox — a reference move, never a byte
-    /// copy. Non-blocking (unbounded channel — the collectives are
+    /// Per-lane traffic counters (index = lane id). Lane 0 is the inline
+    /// lane; the rest are worker lanes.
+    pub fn traffic_per_lane(&self) -> Vec<Traffic> {
+        let mut out = Vec::with_capacity(self.lane_count());
+        out.push(self.traffic);
+        for w in &self.workers {
+            out.push(*w.traffic.lock().unwrap());
+        }
+        out
+    }
+
+    /// Post `chunk` to `to`'s lane-0 mailbox — a reference move, never a
+    /// byte copy. Non-blocking (unbounded channel — the collectives are
     /// self-throttling, at most one outstanding message per peer per step).
     pub fn send_chunk(&mut self, to: usize, tag: u64, chunk: Chunk<T>) -> Result<()> {
+        self.send_chunk_on(to, 0, tag, chunk)
+    }
+
+    /// Post `chunk` to `to`'s mailbox on `lane`. Counting lands in this
+    /// endpoint's per-lane send counters.
+    pub fn send_chunk_on(&mut self, to: usize, lane: usize, tag: u64, chunk: Chunk<T>) -> Result<()> {
         if to >= self.hub.size() {
             return Err(Error::PeerOutOfRange {
                 peer: to,
                 size: self.hub.size(),
             });
         }
-        self.traffic.sent_msgs += 1;
-        self.traffic.sent_elems += chunk.len() as u64;
-        self.traffic.sent_bytes += (chunk.len() * std::mem::size_of::<T>()) as u64;
-        self.hub.senders[to]
+        if lane >= self.lane_count() {
+            return Err(Error::PeerOutOfRange {
+                peer: lane,
+                size: self.lane_count(),
+            });
+        }
+        if lane == 0 {
+            self.traffic.count_send::<T>(chunk.len());
+        } else {
+            self.workers[lane - 1]
+                .traffic
+                .lock()
+                .unwrap()
+                .count_send::<T>(chunk.len());
+        }
+        self.hub
+            .sender(to, lane)
             .send(Msg {
                 src: self.rank,
                 tag,
@@ -160,12 +488,25 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
         self.send_chunk(to, tag, Chunk::from_vec(data))
     }
 
-    /// Blocking matched receive of a chunk from `(from, tag)` — the caller
-    /// takes the delivered reference, so the whole message counts as moved.
+    /// Blocking matched receive of a chunk from `(from, tag)` on lane 0 —
+    /// the caller takes the delivered reference, so the whole message
+    /// counts as moved.
     pub fn recv_chunk(&mut self, from: usize, tag: u64) -> Result<Chunk<T>> {
-        let data = self.pull(from, tag)?;
-        self.count_recv(data.len(), 0);
+        let data = self.lane0.pull(self.rank, from, tag, self.timeout)?;
+        self.traffic.count_recv::<T>(data.len(), 0);
         Ok(data)
+    }
+
+    /// Blocking matched receive on an explicit lane. Lanes ≥ 1 round-trip
+    /// through that lane's worker thread (its mailbox lives there).
+    pub fn recv_chunk_on(&mut self, lane: usize, from: usize, tag: u64) -> Result<Chunk<T>> {
+        if lane == 0 {
+            return self.recv_chunk(from, tag);
+        }
+        self.dispatch_lane(lane, from, tag, None, None)?;
+        let done = self.collect_lane(lane)?;
+        done.result?;
+        done.chunk.ok_or(Error::TransportClosed { rank: self.rank })
     }
 
     /// Posted receive: deliver the matched chunk into `dest`, preferring a
@@ -179,10 +520,12 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
     where
         T: Clone,
     {
-        let data = self.checked_pull(from, tag, dest.len())?;
+        let data = self
+            .lane0
+            .checked_pull(self.rank, from, tag, dest.len(), self.timeout)?;
         let len = data.len();
         let copied = dest.accept(data);
-        self.count_recv(len, copied);
+        self.traffic.count_recv::<T>(len, copied);
         Ok(())
     }
 
@@ -200,10 +543,12 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
     where
         T: Clone,
     {
-        let data = self.checked_pull(from, tag, dest.len())?;
+        let data = self
+            .lane0
+            .checked_pull(self.rank, from, tag, dest.len(), self.timeout)?;
         let len = data.len();
         dest.accept_combine(data, combiner);
-        self.count_recv(len, 0);
+        self.traffic.count_recv::<T>(len, 0);
         Ok(())
     }
 
@@ -219,66 +564,236 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
         Ok(self.recv_chunk(from, tag)?.into_vec())
     }
 
-    /// Matched pull without traffic accounting (counting happens once the
-    /// delivery is classified as moved or copied).
-    fn pull(&mut self, from: usize, tag: u64) -> Result<Chunk<T>> {
-        let key = (from, tag);
-        if let Some(q) = self.pending.get_mut(&key) {
-            if let Some(data) = q.pop_front() {
-                return Ok(data);
+    fn dispatch_lane(
+        &mut self,
+        lane: usize,
+        from: usize,
+        tag: u64,
+        dest: Option<Chunk<T>>,
+        combiner: Option<Combiner<T>>,
+    ) -> Result<()> {
+        let w = self
+            .workers
+            .get(lane - 1)
+            .ok_or(Error::PeerOutOfRange {
+                peer: lane,
+                size: self.lane_count(),
+            })?;
+        w.job_tx
+            .send(LaneJob {
+                from,
+                tag,
+                timeout: self.timeout,
+                dest,
+                combiner,
+            })
+            .map_err(|_| Error::TransportClosed { rank: self.rank })
+    }
+
+    fn collect_lane(&mut self, lane: usize) -> Result<LaneDone<T>> {
+        // Workers answer every job exactly once; a generous wait beyond the
+        // job's own recv timeout means a missing answer is a dead worker.
+        self.workers[lane - 1]
+            .done_rx
+            .recv_timeout(self.timeout + Duration::from_secs(30))
+            .map_err(|_| Error::TransportClosed { rank: self.rank })
+    }
+
+    /// Posted receive on an explicit lane (see [`Endpoint::recv_chunk_into`]).
+    pub fn recv_chunk_into_on(
+        &mut self,
+        lane: usize,
+        from: usize,
+        tag: u64,
+        dest: &mut Chunk<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        if lane == 0 {
+            return self.recv_chunk_into(from, tag, dest);
+        }
+        let posted = std::mem::replace(dest, Chunk::empty());
+        self.dispatch_lane(lane, from, tag, Some(posted), None)?;
+        let done = self.collect_lane(lane)?;
+        if let Some(chunk) = done.chunk {
+            *dest = chunk;
+        }
+        done.result
+    }
+
+    /// Posted combining receive on an explicit lane (see
+    /// [`Endpoint::recv_chunk_combine_into`]).
+    pub fn recv_chunk_combine_into_on(
+        &mut self,
+        lane: usize,
+        from: usize,
+        tag: u64,
+        dest: &mut Chunk<T>,
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        if lane == 0 {
+            return self.recv_chunk_combine_into(from, tag, dest, combiner);
+        }
+        let posted = std::mem::replace(dest, Chunk::empty());
+        self.dispatch_lane(lane, from, tag, Some(posted), Some(combiner.clone()))?;
+        let done = self.collect_lane(lane)?;
+        if let Some(chunk) = done.chunk {
+            *dest = chunk;
+        }
+        done.result
+    }
+
+    /// Striped matched receive: pull stripe `l` from `(from, tags[l])` on
+    /// lane `l`. Stripes on worker lanes are pulled concurrently; the
+    /// returned chunks are in lane order. `tags.len()` must be ≤
+    /// [`Endpoint::lane_count`].
+    pub fn recv_striped(&mut self, from: usize, tags: &[u64]) -> Result<Vec<Chunk<T>>> {
+        let k = self.check_stripes(tags.len())?;
+        for (l, &tag) in tags.iter().enumerate().skip(1) {
+            self.dispatch_lane(l, from, tag, None, None)?;
+        }
+        let lane0 = self.lane0.pull(self.rank, from, tags[0], self.timeout);
+        if let Ok(data) = &lane0 {
+            self.traffic.count_recv::<T>(data.len(), 0);
+        }
+        let mut out: Vec<Option<Chunk<T>>> = Vec::with_capacity(k);
+        out.push(lane0.as_ref().ok().cloned());
+        let mut first_err: Option<Error> = lane0.err();
+        for l in 1..k {
+            match self.collect_lane(l) {
+                Ok(done) => {
+                    if let Err(e) = done.result {
+                        first_err.get_or_insert(e);
+                        out.push(None);
+                    } else {
+                        out.push(done.chunk);
+                    }
+                }
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                    out.push(None);
+                }
             }
         }
-        let deadline = Instant::now() + self.timeout;
-        loop {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            match self.rx.recv_timeout(remaining) {
-                Ok(msg) => {
-                    if msg.src == from && msg.tag == tag {
-                        return Ok(msg.data);
-                    }
-                    self.pending
-                        .entry((msg.src, msg.tag))
-                        .or_default()
-                        .push_back(msg.data);
-                }
-                Err(RecvTimeoutError::Timeout) => {
-                    return Err(Error::RecvTimeout {
-                        src: from,
-                        tag,
-                        ms: self.timeout.as_millis() as u64,
-                    })
-                }
-                Err(RecvTimeoutError::Disconnected) => {
-                    return Err(Error::TransportClosed { rank: self.rank })
-                }
-            }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out.into_iter().map(|c| c.expect("stripe delivered")).collect()),
         }
     }
 
-    /// [`Endpoint::pull`] plus the posted-buffer shape check; on mismatch
-    /// the message is requeued at the front (FIFO order preserved — it was
-    /// taken from the front) and the error is recoverable.
-    fn checked_pull(&mut self, from: usize, tag: u64, expected: usize) -> Result<Chunk<T>> {
-        let data = self.pull(from, tag)?;
-        if data.len() != expected {
-            let got = data.len();
-            self.pending.entry((from, tag)).or_default().push_front(data);
-            return Err(Error::RecvShapeMismatch {
-                src: from,
-                tag,
-                expected,
-                got,
+    /// Striped posted receive: deliver stripe `l` from `(from, tags[l])`
+    /// on lane `l` into `dests[l]`. Worker-lane stripes are delivered
+    /// concurrently with lane 0's. On error, already-delivered stripes
+    /// keep their payload and the rest come back untouched (the whole
+    /// collective op is abandoned anyway).
+    pub fn recv_striped_into(
+        &mut self,
+        from: usize,
+        tags: &[u64],
+        dests: &mut [Chunk<T>],
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        self.striped_delivery(from, tags, dests, None)
+    }
+
+    /// Striped posted receive fused with a reduction — the lane-parallel
+    /// combine primitive. Stripe `l` is folded into `dests[l]` via
+    /// [`Chunk::accept_combine`] on lane `l`'s worker thread (lane 0 on the
+    /// calling thread), so the fold work of one collective step runs on
+    /// `tags.len()` threads at once.
+    pub fn recv_striped_combine_into(
+        &mut self,
+        from: usize,
+        tags: &[u64],
+        dests: &mut [Chunk<T>],
+        combiner: &Combiner<T>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        self.striped_delivery(from, tags, dests, Some(combiner))
+    }
+
+    fn striped_delivery(
+        &mut self,
+        from: usize,
+        tags: &[u64],
+        dests: &mut [Chunk<T>],
+        combiner: Option<&Combiner<T>>,
+    ) -> Result<()>
+    where
+        T: Clone,
+    {
+        let k = self.check_stripes(tags.len())?;
+        if dests.len() != k {
+            return Err(Error::BadBufferSize {
+                len: dests.len(),
+                size: k,
+                why: "striped receive needs one posted buffer per stripe tag",
             });
         }
-        Ok(data)
+        // Fan worker-lane stripes out first so they overlap lane 0's work.
+        for l in 1..k {
+            let dest = std::mem::replace(&mut dests[l], Chunk::empty());
+            self.dispatch_lane(l, from, tags[l], Some(dest), combiner.cloned())?;
+        }
+        let lane0_result = match combiner {
+            Some(comb) => self.recv_chunk_combine_into(from, tags[0], &mut dests[0], comb),
+            None => self.recv_chunk_into(from, tags[0], &mut dests[0]),
+        };
+        let mut first_err: Option<Error> = lane0_result.err();
+        for l in 1..k {
+            match self.collect_lane(l) {
+                Ok(done) => {
+                    if let Some(chunk) = done.chunk {
+                        dests[l] = chunk;
+                    }
+                    if let Err(e) = done.result {
+                        first_err.get_or_insert(e);
+                    }
+                }
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
-    fn count_recv(&mut self, elems: usize, copied_elems: usize) {
-        let bytes = |e: usize| (e * std::mem::size_of::<T>()) as u64;
-        self.traffic.recvd_msgs += 1;
-        self.traffic.recvd_bytes += bytes(elems);
-        self.traffic.copied_bytes += bytes(copied_elems);
-        self.traffic.moved_bytes += bytes(elems - copied_elems);
+    fn check_stripes(&self, k: usize) -> Result<usize> {
+        if k == 0 || k > self.lane_count() {
+            return Err(Error::BadBufferSize {
+                len: k,
+                size: self.lane_count(),
+                why: "stripe count must be 1..=lane_count",
+            });
+        }
+        Ok(k)
+    }
+}
+
+impl<T> Drop for Endpoint<T> {
+    fn drop(&mut self) {
+        // Closing each worker's job queue ends its loop; join so no lane
+        // thread outlives the transport it serves.
+        for w in &mut self.workers {
+            let (dead_tx, _) = mpsc::channel();
+            let _ = std::mem::replace(&mut w.job_tx, dead_tx);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -475,5 +990,95 @@ mod tests {
         // Reference handover to the caller is a move, never a copy.
         assert_eq!((t.moved_bytes, t.copied_bytes), (12, 0));
         assert_eq!(t.moved_bytes + t.copied_bytes, t.recvd_bytes);
+    }
+
+    #[test]
+    fn lanes_are_independent_queues() {
+        let (_hub, mut eps) = TransportHub::<f32>::new_with_lanes(2, 3);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        assert_eq!(e0.lane_count(), 3);
+        // Same tag on every lane: no cross-delivery.
+        for lane in 0..3 {
+            e0.send_chunk_on(1, lane, 42, Chunk::from_vec(vec![lane as f32]))
+                .unwrap();
+        }
+        for lane in (0..3).rev() {
+            assert_eq!(e1.recv_chunk_on(lane, 0, 42).unwrap(), vec![lane as f32]);
+        }
+    }
+
+    #[test]
+    fn striped_combine_folds_every_stripe() {
+        let sum = crate::reduction::offload::native_combine::<f32>();
+        let (_hub, mut eps) = TransportHub::<f32>::new_with_lanes(2, 4);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let tags = [10u64, 11, 12, 13];
+        for (l, &tag) in tags.iter().enumerate() {
+            e0.send_chunk_on(1, l, tag, Chunk::from_vec(vec![l as f32; 2]))
+                .unwrap();
+        }
+        let mut dests: Vec<Chunk<f32>> =
+            (0..4).map(|_| Chunk::from_vec(vec![100.0, 200.0])).collect();
+        e1.recv_striped_combine_into(0, &tags, &mut dests, &sum).unwrap();
+        for (l, d) in dests.iter().enumerate() {
+            assert_eq!(d.as_slice(), &[100.0 + l as f32, 200.0 + l as f32]);
+        }
+        let t = e1.traffic();
+        assert_eq!((t.recvd_msgs, t.copied_bytes), (4, 0), "striped combine never copies");
+        let per_lane = e1.traffic_per_lane();
+        assert_eq!(per_lane.len(), 4);
+        assert!(per_lane.iter().all(|t| t.recvd_msgs == 1 && t.recvd_bytes == 8));
+    }
+
+    #[test]
+    fn striped_recv_into_returns_lane_order() {
+        let (_hub, mut eps) = TransportHub::<i32>::new_with_lanes(2, 2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // Post lane 1 first: delivery order must still follow lane index.
+        e0.send_chunk_on(1, 1, 8, Chunk::from_vec(vec![222])).unwrap();
+        e0.send_chunk_on(1, 0, 7, Chunk::from_vec(vec![111])).unwrap();
+        let mut dests = vec![Chunk::from_vec(vec![0]), Chunk::from_vec(vec![0])];
+        e1.recv_striped_into(0, &[7, 8], &mut dests).unwrap();
+        assert_eq!(dests[0].as_slice(), &[111]);
+        assert_eq!(dests[1].as_slice(), &[222]);
+        // Per-lane send counters on the poster's side.
+        let sent = e0.traffic_per_lane();
+        assert_eq!(sent[0].sent_msgs, 1);
+        assert_eq!(sent[1].sent_msgs, 1);
+    }
+
+    #[test]
+    fn striped_timeout_is_typed_per_lane() {
+        let (_hub, mut eps) = TransportHub::<f32>::new_with_lanes(2, 2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.set_timeout(Duration::from_millis(20));
+        // Only lane 0 gets a message; lane 1 must time out.
+        e0.send_chunk_on(1, 0, 5, Chunk::from_vec(vec![1.0])).unwrap();
+        let mut dests = vec![Chunk::from_vec(vec![0.0]), Chunk::from_vec(vec![0.0])];
+        match e1.recv_striped_into(0, &[5, 5], &mut dests) {
+            Err(Error::RecvTimeout { src: 0, tag: 5, .. }) => {}
+            other => panic!("expected RecvTimeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stripe_count_validated() {
+        let (_hub, mut eps) = TransportHub::<f32>::new_with_lanes(2, 2);
+        let mut e1 = eps.remove(1);
+        assert!(e1.recv_striped(0, &[]).is_err());
+        assert!(e1.recv_striped(0, &[1, 2, 3]).is_err());
+        let mut dests = vec![Chunk::from_vec(vec![0.0])];
+        assert!(e1.recv_striped_into(0, &[1, 2], &mut dests).is_err());
+    }
+
+    #[test]
+    fn single_lane_hub_has_no_workers() {
+        let (_hub, eps) = TransportHub::<f32>::new(3);
+        assert!(eps.iter().all(|e| e.lane_count() == 1));
+        assert_eq!(eps[0].traffic_per_lane().len(), 1);
     }
 }

@@ -16,14 +16,16 @@ use super::transport::TransportHub;
 /// Factory for SPMD runs over `size` rank threads.
 pub struct CommWorld<T> {
     topo: Topology,
+    lanes: usize,
     _t: PhantomData<T>,
 }
 
-impl<T: Send + Sync + 'static> CommWorld<T> {
+impl<T: Send + Sync + Clone + 'static> CommWorld<T> {
     /// Flat world (one "node" containing all ranks).
     pub fn new(size: usize) -> Self {
         Self {
             topo: Topology::flat(size),
+            lanes: 1,
             _t: PhantomData,
         }
     }
@@ -32,8 +34,17 @@ impl<T: Send + Sync + 'static> CommWorld<T> {
     pub fn with_topology(topo: Topology) -> Self {
         Self {
             topo,
+            lanes: 1,
             _t: PhantomData,
         }
+    }
+
+    /// Give every rank pair `lanes` transport lanes (striped collectives
+    /// run lane-parallel; `1` is the plain single-queue transport).
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        assert!(lanes >= 1, "world needs at least one lane");
+        self.lanes = lanes;
+        self
     }
 
     pub fn size(&self) -> usize {
@@ -44,6 +55,10 @@ impl<T: Send + Sync + 'static> CommWorld<T> {
         self.topo
     }
 
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
     /// Run `f` on every rank concurrently; returns per-rank results in rank
     /// order. Panics in a rank thread are propagated.
     pub fn run<R, F>(&self, f: F) -> Vec<R>
@@ -51,7 +66,11 @@ impl<T: Send + Sync + 'static> CommWorld<T> {
         R: Send + 'static,
         F: Fn(&mut Communicator<T>) -> R + Send + Clone + 'static,
     {
-        let (_hub, eps) = TransportHub::<T>::new(self.size());
+        let (_hub, eps) = if self.lanes == 1 {
+            TransportHub::<T>::new(self.size())
+        } else {
+            TransportHub::<T>::new_with_lanes(self.size(), self.lanes)
+        };
         let topo = self.topo;
         let handles: Vec<_> = eps
             .into_iter()
@@ -107,6 +126,27 @@ mod tests {
         });
         let total: f32 = got.iter().sum();
         assert_eq!(total, 15.0);
+    }
+
+    #[test]
+    fn lane_world_striped_pass() {
+        // Striped neighbor exchange across a 4-lane world: every rank's
+        // payload survives the stripe/unstripe round trip.
+        let world = CommWorld::<f32>::new(4).with_lanes(4);
+        assert_eq!(world.lanes(), 4);
+        let ok = world.run(|c| {
+            c.begin_op();
+            let p = c.size();
+            let r = c.rank();
+            use crate::comm::Chunk;
+            let data = Chunk::from_vec((0..10).map(|i| (r * 100 + i) as f32).collect::<Vec<_>>());
+            let k = c.lanes();
+            c.send_striped((r + 1) % p, 0, data.stripes(k)).unwrap();
+            let got = c.recv_striped((r + p - 1) % p, 0, k).unwrap();
+            let left = (r + p - 1) % p;
+            Chunk::concat(&got) == (0..10).map(|i| (left * 100 + i) as f32).collect::<Vec<_>>()
+        });
+        assert!(ok.into_iter().all(|b| b));
     }
 
     #[test]

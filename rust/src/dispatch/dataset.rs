@@ -4,15 +4,16 @@
 
 use crate::backends::{Backend, CollKind};
 use crate::error::{Error, Result};
-use crate::netsim::libmodel::{simulate, LibModel};
+use crate::netsim::libmodel::{simulate_lanes, LibModel};
 use crate::topology::Machine;
 use crate::util::rng::Rng;
 
 /// One labeled configuration.
 #[derive(Debug, Clone)]
 pub struct Sample {
-    /// Features: `[log2(message MiB), log2(ranks)]` — the paper's two
-    /// dominant factors.
+    /// Features: `[log2(message MiB), log2(ranks), log2(lanes)]` — the
+    /// paper's two dominant factors plus the transport-lane count (the
+    /// striped PCCL paths shift the regime crossover).
     pub features: Vec<f64>,
     /// Class id = index into [`Backend::CONCRETE`].
     pub label: usize,
@@ -20,6 +21,8 @@ pub struct Sample {
     pub msg: usize,
     /// Rank count (for reporting).
     pub ranks: usize,
+    /// Transport-lane count of the configuration.
+    pub lanes: usize,
 }
 
 /// A labeled dataset for one (machine, collective).
@@ -29,14 +32,20 @@ pub struct Dataset {
 }
 
 /// Dispatcher feature vector for a call site.
-pub fn features(msg_bytes: usize, ranks: usize) -> Vec<f64> {
+pub fn features(msg_bytes: usize, ranks: usize, lanes: usize) -> Vec<f64> {
     let mb = (msg_bytes as f64 / (1024.0 * 1024.0)).max(1e-6);
-    vec![mb.log2(), (ranks as f64).log2()]
+    vec![
+        mb.log2(),
+        (ranks as f64).log2(),
+        (lanes.max(1) as f64).log2(),
+    ]
 }
 
 impl Dataset {
     /// Build the dataset by sweeping the netsim: `trials` runs per
-    /// (backend, size, ranks); label = argmin of mean time.
+    /// (backend, size, ranks, lanes); label = argmin of mean time. The
+    /// lane sweep covers the single-lane baseline and the machine's full
+    /// rail count (one lane per NIC).
     pub fn build(
         machine: Machine,
         kind: CollKind,
@@ -45,25 +54,30 @@ impl Dataset {
         trials: usize,
         seed: u64,
     ) -> Result<Self> {
+        let nics = machine.params().nics_per_node;
+        let lane_counts: &[usize] = if nics > 1 { &[1, nics][..] } else { &[1][..] };
         let mut samples = Vec::new();
         for &mb in sizes_mb {
             let msg = mb << 20;
             for &p in ranks {
-                let mut best: Option<(f64, usize)> = None;
-                for (class, backend) in Backend::CONCRETE.iter().enumerate() {
-                    let lib = LibModel::from_backend(*backend).expect("concrete backend");
-                    let out = simulate(machine, lib, kind, msg, p, trials, seed)?;
-                    let mean = out.stats.mean();
-                    if best.map_or(true, |(b, _)| mean < b) {
-                        best = Some((mean, class));
+                for &lanes in lane_counts {
+                    let mut best: Option<(f64, usize)> = None;
+                    for (class, backend) in Backend::CONCRETE.iter().enumerate() {
+                        let lib = LibModel::from_backend(*backend).expect("concrete backend");
+                        let out = simulate_lanes(machine, lib, kind, msg, p, lanes, trials, seed)?;
+                        let mean = out.stats.mean();
+                        if best.map_or(true, |(b, _)| mean < b) {
+                            best = Some((mean, class));
+                        }
                     }
+                    samples.push(Sample {
+                        features: features(msg, p, lanes),
+                        label: best.expect("non-empty backends").1,
+                        msg,
+                        ranks: p,
+                        lanes,
+                    });
                 }
-                samples.push(Sample {
-                    features: features(msg, p),
-                    label: best.expect("non-empty backends").1,
-                    msg,
-                    ranks: p,
-                });
             }
         }
         Ok(Self { samples })
@@ -76,6 +90,7 @@ impl Dataset {
         &mut self,
         msg: usize,
         ranks: usize,
+        lanes: usize,
         times: &[(Backend, f64)],
     ) -> Result<()> {
         let mut best: Option<(f64, usize)> = None;
@@ -89,10 +104,16 @@ impl Dataset {
         }
         let Some((_, label)) = best else {
             return Err(Error::Dispatch(format!(
-                "no measurements for configuration msg={msg} ranks={ranks}"
+                "no measurements for configuration msg={msg} ranks={ranks} lanes={lanes}"
             )));
         };
-        self.samples.push(Sample { features: features(msg, ranks), label, msg, ranks });
+        self.samples.push(Sample {
+            features: features(msg, ranks, lanes),
+            label,
+            msg,
+            ranks,
+            lanes,
+        });
         Ok(())
     }
 
@@ -163,18 +184,20 @@ mod tests {
             1,
         )
         .unwrap();
-        assert_eq!(d.len(), 4);
-        let find = |msg_mb: usize, p: usize| {
+        // 2 sizes × 2 rank counts × 2 lane counts (Frontier has 4 NICs).
+        assert_eq!(d.len(), 8);
+        assert!(d.samples.iter().all(|s| s.lanes == 1 || s.lanes == 4));
+        let find = |msg_mb: usize, p: usize, lanes: usize| {
             d.samples
                 .iter()
-                .find(|s| s.msg == msg_mb << 20 && s.ranks == p)
+                .find(|s| s.msg == msg_mb << 20 && s.ranks == p && s.lanes == lanes)
                 .unwrap()
                 .label
         };
         let vendor = Backend::Vendor.class_id().unwrap();
         let rec = Backend::PcclRec.class_id().unwrap();
-        assert_eq!(find(1024, 32), vendor, "bandwidth-bound corner");
-        assert_eq!(find(16, 2048), rec, "latency-bound corner");
+        assert_eq!(find(1024, 32, 1), vendor, "bandwidth-bound corner");
+        assert_eq!(find(16, 2048, 1), rec, "latency-bound corner");
     }
 
     #[test]
@@ -186,6 +209,7 @@ mod tests {
                 label: i % 2,
                 msg: 1,
                 ranks: 1,
+                lanes: 1,
             });
         }
         let (train, test) = d.stratified_split(0.2, 7);
@@ -202,6 +226,7 @@ mod tests {
         d.push_measured(
             64 << 20,
             128,
+            4,
             &[
                 (Backend::Vendor, 3.0e-3),
                 (Backend::CrayMpich, 9.0e-3),
@@ -212,14 +237,19 @@ mod tests {
         .unwrap();
         assert_eq!(d.samples[0].label, Backend::PcclRec.class_id().unwrap());
         assert_eq!(d.samples[0].msg, 64 << 20);
-        assert!(d.push_measured(1, 1, &[]).is_err());
-        assert!(d.push_measured(1, 1, &[(Backend::Auto, 1.0)]).is_err());
+        assert_eq!(d.samples[0].lanes, 4);
+        assert!(d.push_measured(1, 1, 1, &[]).is_err());
+        assert!(d.push_measured(1, 1, 1, &[(Backend::Auto, 1.0)]).is_err());
     }
 
     #[test]
     fn features_are_log_scaled() {
-        let f = features(64 << 20, 1024);
+        let f = features(64 << 20, 1024, 4);
+        assert_eq!(f.len(), 3);
         assert!((f[0] - 6.0).abs() < 1e-9);
         assert!((f[1] - 10.0).abs() < 1e-9);
+        assert!((f[2] - 2.0).abs() < 1e-9);
+        // lanes = 0 is treated as single-lane, not -inf.
+        assert_eq!(features(1 << 20, 2, 0)[2], 0.0);
     }
 }

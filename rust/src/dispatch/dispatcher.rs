@@ -1,5 +1,6 @@
 //! The adaptive dispatcher: per-(machine, collective) SVMs that map
-//! `(message size, rank count)` to the fastest backend at runtime (§IV-C).
+//! `(message size, rank count, lane count)` to the fastest backend at
+//! runtime (§IV-C, extended with the transport-lane feature).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -12,6 +13,13 @@ use crate::util::json::Value;
 
 use super::dataset::{features, Dataset};
 use super::svm::{train_with_cv, MultiClassSvm, Scaler, SvmParams};
+
+/// Persisted dispatcher payload schema. Schema 1 (implicit — the field was
+/// absent) carried 2-feature `(size, ranks)` models; schema 2 adds the
+/// transport-lane feature. Loading a pre-lane payload into this build would
+/// feed the SVM a short feature vector, so it is refused with
+/// [`Error::ArtifactSchema`] instead.
+pub const DISPATCHER_SCHEMA: u32 = 2;
 
 /// One trained collective model + its evaluation record (a Table-I row).
 #[derive(Debug, Clone)]
@@ -72,9 +80,15 @@ impl DispatcherModel {
         })
     }
 
-    /// Predicted backend for a raw (message bytes, rank count) call site.
+    /// Predicted backend for a raw (message bytes, rank count) call site
+    /// on the single-lane transport.
     pub fn predict(&self, msg_bytes: usize, ranks: usize) -> Backend {
-        let x = self.scaler.transform(&features(msg_bytes, ranks));
+        self.predict_lanes(msg_bytes, ranks, 1)
+    }
+
+    /// Predicted backend for a lane-striped call site.
+    pub fn predict_lanes(&self, msg_bytes: usize, ranks: usize, lanes: usize) -> Backend {
+        let x = self.scaler.transform(&features(msg_bytes, ranks, lanes));
         Backend::CONCRETE[self.svm.predict(&x).min(Backend::CONCRETE.len() - 1)]
     }
 
@@ -158,10 +172,21 @@ impl SvmDispatcher {
             .ok_or_else(|| Error::Dispatch(format!("no model for {}", kind.label())))
     }
 
-    /// Predict the fastest backend for a call site.
+    /// Predict the fastest backend for a single-lane call site.
     pub fn choose(&self, kind: CollKind, msg_bytes: usize, ranks: usize) -> Backend {
+        self.choose_lanes(kind, msg_bytes, ranks, 1)
+    }
+
+    /// Predict the fastest backend for a lane-striped call site.
+    pub fn choose_lanes(
+        &self,
+        kind: CollKind,
+        msg_bytes: usize,
+        ranks: usize,
+        lanes: usize,
+    ) -> Backend {
         match self.model(kind) {
-            Ok(m) => m.predict(msg_bytes, ranks),
+            Ok(m) => m.predict_lanes(msg_bytes, ranks, lanes),
             Err(_) => Backend::PcclRec,
         }
     }
@@ -170,7 +195,7 @@ impl SvmDispatcher {
     /// [`crate::backends::CollectiveOptions`].
     pub fn chooser(self: &Arc<Self>) -> Chooser {
         let this = Arc::clone(self);
-        Arc::new(move |kind, bytes, ranks| this.choose(kind, bytes, ranks))
+        Arc::new(move |kind, bytes, ranks, lanes| this.choose_lanes(kind, bytes, ranks, lanes))
     }
 
     /// Serialize to JSON (model persistence — train once, ship with the
@@ -187,6 +212,7 @@ impl SvmDispatcher {
 
     fn to_json(&self) -> Value {
         Value::obj(vec![
+            ("schema", Value::Num(DISPATCHER_SCHEMA as f64)),
             (
                 "machine",
                 Value::Str(self.machine.params().name.to_string()),
@@ -204,6 +230,20 @@ impl SvmDispatcher {
     }
 
     fn from_json(v: &Value) -> Result<Self> {
+        // A payload with no schema field predates the lane feature
+        // (schema 1): its models expect 2-feature inputs and would silently
+        // mis-scale a 3-feature call, so refuse it with a migration note.
+        let got = match v.get("schema") {
+            Ok(s) => s.as_usize()? as u32,
+            Err(_) => 1,
+        };
+        if got != DISPATCHER_SCHEMA {
+            return Err(Error::ArtifactSchema {
+                what: "dispatcher model".to_string(),
+                expected: DISPATCHER_SCHEMA,
+                got,
+            });
+        }
         let machine: Machine = v
             .get("machine")?
             .as_str()?
@@ -328,7 +368,53 @@ mod tests {
         let opts = crate::backends::CollectiveOptions::<f32>::default()
             .backend(Backend::Auto)
             .chooser(d.chooser());
-        let b = opts.resolve(CollKind::AllGather, 16 << 20, 2048);
+        let b = opts.resolve(CollKind::AllGather, 16 << 20, 2048, 1);
         assert_eq!(b, Backend::PcclRec);
+    }
+
+    #[test]
+    fn persisted_payload_carries_schema_and_rejects_pre_lane_models() {
+        let d = quick_dispatcher();
+        let text = d.to_json().to_string();
+        assert!(text.contains("\"schema\""));
+
+        // Strip the schema field to forge a pre-lane (schema 1) payload:
+        // loading it must fail with the typed schema error, not a JSON or
+        // shape error deep inside the SVM.
+        let v = Value::parse(&text).unwrap();
+        let mut fields = v.as_obj().unwrap().clone();
+        fields.remove("schema");
+        match SvmDispatcher::from_json(&Value::Obj(fields.clone())) {
+            Err(Error::ArtifactSchema { expected, got, .. }) => {
+                assert_eq!(expected, DISPATCHER_SCHEMA);
+                assert_eq!(got, 1);
+            }
+            other => panic!("expected ArtifactSchema, got {other:?}"),
+        }
+
+        // A future schema is refused the same way.
+        fields.insert("schema".to_string(), Value::Num(99.0));
+        assert!(matches!(
+            SvmDispatcher::from_json(&Value::Obj(fields)),
+            Err(Error::ArtifactSchema { got: 99, .. })
+        ));
+    }
+
+    #[test]
+    fn lane_feature_reaches_the_model() {
+        // The lane-aware entry points must flow the lane count into the
+        // feature vector (not ignore it): predictions may legitimately
+        // coincide, but the feature transform must differ.
+        let d = quick_dispatcher();
+        let m = d.model(CollKind::ReduceScatter).unwrap();
+        let x1 = m.scaler.transform(&features(64 << 20, 128, 1));
+        let x4 = m.scaler.transform(&features(64 << 20, 128, 4));
+        assert_eq!(x1.len(), 3);
+        assert_ne!(x1[2], x4[2], "lane feature must survive scaling");
+        // And the single-lane delegates agree with the lane form.
+        assert_eq!(
+            d.choose(CollKind::ReduceScatter, 64 << 20, 128),
+            d.choose_lanes(CollKind::ReduceScatter, 64 << 20, 128, 1)
+        );
     }
 }

@@ -42,6 +42,17 @@ pub enum Error {
     /// An artifact produced by `make artifacts` is missing or malformed.
     Artifact(String),
 
+    /// A persisted payload (dispatcher model, bench record) carries a
+    /// schema version this build cannot consume — e.g. a pre-lane
+    /// 2-feature dispatcher model loaded by a 3-feature build. Refusing
+    /// loudly beats silently mis-dispatching on garbage features; re-train
+    /// with `pccl train` to migrate.
+    ArtifactSchema {
+        what: String,
+        expected: u32,
+        got: u32,
+    },
+
     /// The PJRT runtime failed to compile or execute an HLO module (or the
     /// build carries only the offline stub backend).
     Xla(String),
@@ -83,6 +94,13 @@ impl fmt::Display for Error {
             }
             Error::InvalidTopology(m) => write!(f, "invalid topology: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::ArtifactSchema { what, expected, got } => {
+                write!(
+                    f,
+                    "artifact schema mismatch for {what}: this build expects schema \
+                     {expected}, found {got} — re-train/regenerate to migrate"
+                )
+            }
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),
             Error::Dispatch(m) => write!(f, "dispatch error: {m}"),
             Error::NetSim(m) => write!(f, "netsim error: {m}"),

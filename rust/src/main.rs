@@ -246,6 +246,12 @@ fn run_bench(
 /// (all-gather, reduce-scatter, and all-reduce cells are each required to
 /// be present, so the reduce path cannot silently drop out of the guard),
 /// and the flat-library cells must match the closed-form schedule volume.
+///
+/// A third pass sweeps transport lanes ∈ {1, 4} at 8 ranks
+/// ([`LauncherConfig::lanes_smoke`]): the cross-lane guard fails the run
+/// if striping changes a configuration's byte total or result checksum,
+/// and the lanes=4 vs lanes=1 wall-clock ratio on the striped PCCL paths
+/// is printed for the large size.
 fn run_smoke(out: &Path) -> Result<()> {
     use pccl::runtime::{expected_schedule_bytes, Launcher, LauncherConfig};
     use pccl::util::json::Value;
@@ -346,25 +352,77 @@ fn run_smoke(out: &Path) -> Result<()> {
         }
     }
 
-    let cells: Vec<Value> = sweep
-        .cells
-        .iter()
-        .map(|c| {
-            Value::obj(vec![
-                ("collective", Value::Str(c.kind.label().to_string())),
-                ("backend", Value::Str(c.backend.label().to_string())),
-                ("msg_bytes", Value::Num(c.msg_bytes as f64)),
-                ("ranks", Value::Num(c.ranks as f64)),
-                ("mean_s", Value::Num(c.stats.mean())),
-                ("stddev_s", Value::Num(c.stats.stddev())),
-                ("trials", Value::Num(c.stats.count() as f64)),
-                ("bytes_per_op", Value::Num(c.bytes_per_op as f64)),
-                ("copied_bytes", Value::Num(c.copied_bytes_per_op as f64)),
-            ])
-        })
-        .collect();
+    // Lane sweep: lanes ∈ {1, 4} at 8 ranks on persistent worlds. The
+    // cross-lane guard fails the whole smoke run on byte-total or result
+    // divergence between lane counts of the same configuration.
+    let t = Timer::start();
+    let lane_sweep = Launcher::new(LauncherConfig::lanes_smoke()).sweep()?;
+    let lanes_wall = t.secs();
+    lane_sweep.check_lane_equivalence()?;
+    for c in &lane_sweep.cells {
+        if matches!(c.kind, CollKind::ReduceScatter | CollKind::AllReduce)
+            && c.copied_bytes_per_op != 0
+        {
+            return Err(pccl::error::Error::Dispatch(format!(
+                "reduce path is no longer copy-free at lanes={}: {}/{} {} B × {} ranks \
+                 copied {} B per op on delivery",
+                c.lanes,
+                c.kind.label(),
+                c.backend.label(),
+                c.msg_bytes,
+                c.ranks,
+                c.copied_bytes_per_op
+            )));
+        }
+    }
+    // Lane win report (informational — wall clock on shared CI boxes is
+    // too noisy for a hard assert): striped PCCL ring at the large size.
+    let max_msg = lane_sweep.cells.iter().map(|c| c.msg_bytes).max().unwrap_or(0);
+    for kind in [CollKind::ReduceScatter, CollKind::AllReduce] {
+        let cell_at = |lanes: usize| {
+            lane_sweep.cells.iter().find(|c| {
+                c.kind == kind
+                    && c.backend == pccl::backends::Backend::PcclRing
+                    && c.msg_bytes == max_msg
+                    && c.lanes == lanes
+            })
+        };
+        if let (Some(one), Some(four)) = (cell_at(1), cell_at(4)) {
+            println!(
+                "lanes: {} pccl_ring {} B × {} ranks: lanes=1 {} vs lanes=4 {} ({:.2}x)",
+                kind.label(),
+                max_msg,
+                one.ranks,
+                fmt_secs(one.stats.mean()),
+                fmt_secs(four.stats.mean()),
+                one.stats.mean() / four.stats.mean().max(1e-12)
+            );
+        }
+    }
+
+    let cell_json = |c: &pccl::runtime::MeasuredCell| {
+        Value::obj(vec![
+            ("collective", Value::Str(c.kind.label().to_string())),
+            ("backend", Value::Str(c.backend.label().to_string())),
+            ("msg_bytes", Value::Num(c.msg_bytes as f64)),
+            ("ranks", Value::Num(c.ranks as f64)),
+            ("lanes", Value::Num(c.lanes as f64)),
+            ("mean_s", Value::Num(c.stats.mean())),
+            ("stddev_s", Value::Num(c.stats.stddev())),
+            ("trials", Value::Num(c.stats.count() as f64)),
+            ("bytes_per_op", Value::Num(c.bytes_per_op as f64)),
+            ("copied_bytes", Value::Num(c.copied_bytes_per_op as f64)),
+            (
+                "moved_bytes_per_lane",
+                Value::arr_usize(
+                    &c.moved_bytes_per_lane.iter().map(|&b| b as usize).collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    };
+    let cells: Vec<Value> = sweep.cells.iter().chain(&lane_sweep.cells).map(cell_json).collect();
     let doc = Value::obj(vec![
-        ("schema", Value::Num(4.0)),
+        ("schema", Value::Num(5.0)),
         ("suite", Value::Str("pccl-smoke".to_string())),
         ("mode", Value::Str("persistent".to_string())),
         ("schedule_equivalent", Value::Bool(true)),
@@ -382,8 +440,12 @@ fn run_smoke(out: &Path) -> Result<()> {
                     .collect(),
             ),
         ),
+        // The lane sweep's cross-lane guard: byte totals and checksums
+        // matched across lane counts for every configuration.
+        ("lane_equivalent", Value::Bool(true)),
         ("wall_s", Value::Num(wall)),
         ("guard_wall_s", Value::Num(guard_wall)),
+        ("lanes_wall_s", Value::Num(lanes_wall)),
         ("cells", Value::Arr(cells)),
     ]);
     if let Some(parent) = out.parent() {
@@ -392,21 +454,25 @@ fn run_smoke(out: &Path) -> Result<()> {
         }
     }
     std::fs::write(out, doc.to_string())?;
-    for c in &sweep.cells {
+    for c in sweep.cells.iter().chain(&lane_sweep.cells) {
         println!(
-            "{:<16} {:<12} {:>10} B {:>4} ranks  {:>12}  {:>8.2} GiB/s moved",
+            "{:<16} {:<12} {:>10} B {:>4} ranks {:>2} lanes  {:>12}  {:>8.2} GiB/s moved",
             c.kind.label(),
             c.backend.label(),
             c.msg_bytes,
             c.ranks,
+            c.lanes,
             fmt_secs(c.stats.mean()),
             pccl::metrics::gib_per_s(c.bytes_per_op, c.stats.mean())
         );
     }
     println!(
-        "{} cells in {:.1}s (persistent world, schedule-equivalence guard OK) → {}",
+        "{} cells in {:.1}s + lane sweep {} cells in {:.1}s \
+         (schedule-equivalence and cross-lane guards OK) → {}",
         sweep.cells.len(),
         wall,
+        lane_sweep.cells.len(),
+        lanes_wall,
         out.display()
     );
     Ok(())

@@ -38,6 +38,13 @@ pub struct RoundCost {
     pub copy_bytes: f64,
     /// Bandwidth of the overflow copy path.
     pub copy_bw: f64,
+    /// Effective NIC-rail/lane occupancy of this round (`0` or `1` =
+    /// single-lane). A `k`-lane striped round folds its stripes on `k`
+    /// parallel lane workers, so the reduce and copy terms divide by the
+    /// occupancy. The wire terms do NOT: with every GPU striping, node
+    /// egress is unchanged and the busiest NIC carries the same bytes —
+    /// the per-lane alpha penalty is charged by the model via `alpha`.
+    pub rails: f64,
     /// Number of identical repetitions of this round.
     pub repeat: usize,
 }
@@ -45,14 +52,15 @@ pub struct RoundCost {
 impl RoundCost {
     /// Seconds for one repetition given machine bandwidths.
     pub fn time_once(&self, p: &MachineParams) -> f64 {
+        let rails = if self.rails > 1.0 { self.rails } else { 1.0 };
         let wire = (self.nic_bytes / p.nic_bw).max(self.intra_bytes / p.intra_bw);
         let reduce = if self.reduce_bytes > 0.0 {
-            self.reduce_bytes / self.reduce_bw
+            self.reduce_bytes / self.reduce_bw / rails
         } else {
             0.0
         };
         let copy = if self.copy_bytes > 0.0 {
-            self.copy_bytes / self.copy_bw
+            self.copy_bytes / self.copy_bw / rails
         } else {
             0.0
         };
@@ -161,6 +169,18 @@ mod tests {
         r.copy_bytes = p.overflow_copy_bw; // 1 s of copy
         r.copy_bw = p.overflow_copy_bw;
         assert!((r.time(&p) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rails_divide_reduce_and_copy_but_not_wire() {
+        let p = Machine::Generic.params();
+        let mut r = round(0.0, 25.0e9, 0.0, 1); // 1 s on the NIC
+        r.reduce_bytes = p.gpu_reduce_bw; // 1 s of reduce single-lane
+        r.reduce_bw = p.gpu_reduce_bw;
+        assert!((r.time(&p) - 2.0).abs() < 1e-9);
+        r.rails = 4.0;
+        // Reduce drops to 0.25 s, wire stays at 1 s.
+        assert!((r.time(&p) - 1.25).abs() < 1e-9);
     }
 
     #[test]

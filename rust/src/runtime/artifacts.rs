@@ -364,6 +364,28 @@ mod tests {
     }
 
     #[test]
+    fn pre_lane_dispatcher_artifact_is_refused_with_schema_error() {
+        // A dispatcher persisted before the lane feature (schema 1 — no
+        // schema field) must surface the typed migration error, not a JSON
+        // shape error from deep inside the SVM parser.
+        let dir = TempDir::new().unwrap();
+        let arts = Artifacts::open_or_init(dir.path()).unwrap();
+        std::fs::write(
+            arts.dispatcher_path(Machine::Frontier),
+            r#"{"machine": "frontier", "models": {}}"#,
+        )
+        .unwrap();
+        let err = arts.load_dispatcher(Machine::Frontier).unwrap_err();
+        assert!(
+            matches!(err, Error::ArtifactSchema { expected: 2, got: 1, .. }),
+            "got: {err:?}"
+        );
+        assert!(err.to_string().contains("re-train"), "got: {err}");
+        let err = arts.load_any_dispatcher().unwrap_err();
+        assert!(matches!(err, Error::ArtifactSchema { .. }), "got: {err:?}");
+    }
+
+    #[test]
     fn manifest_without_model_is_fine() {
         let dir = TempDir::new().unwrap();
         std::fs::write(

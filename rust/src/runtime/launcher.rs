@@ -26,8 +26,8 @@
 use std::time::Instant;
 
 use crate::backends::{
-    all_gather_chunks, all_reduce_chunks, reduce_scatter_chunks, Backend, CollKind,
-    CollectiveOptions,
+    all_gather_chunks, all_gather_lanes_chunks, all_reduce_chunks, all_reduce_lanes_chunks,
+    reduce_scatter_chunks, reduce_scatter_stripes, Backend, CollKind, CollectiveOptions,
 };
 use crate::comm::{Chunk, Communicator, TransportHub};
 use crate::dispatch::{Dataset, SvmDispatcher};
@@ -48,13 +48,23 @@ pub struct MeasuredCell {
     pub msg_bytes: usize,
     pub ranks: usize,
     pub stats: Stats,
+    /// Transport lanes the cell ran on (1 = the pre-lane data plane).
+    pub lanes: usize,
     /// Bytes actually sent per collective op, summed over all ranks —
-    /// schedule-determined and identical across launcher modes.
+    /// schedule-determined and identical across launcher modes AND across
+    /// lane counts (striping partitions the same schedule).
     pub bytes_per_op: u64,
     /// Received bytes delivered by *copying* per collective op, summed over
     /// all ranks ([`crate::comm::Traffic::copied_bytes`] deltas). The
     /// reduce path must report 0 — `pccl smoke` enforces it.
     pub copied_bytes_per_op: u64,
+    /// Bytes sent per op on each transport lane, summed over ranks
+    /// (`moved_bytes_per_lane.iter().sum() == bytes_per_op`).
+    pub moved_bytes_per_lane: Vec<u64>,
+    /// Order-independent checksum of every rank's result (sum of output
+    /// elements as f64, summed over ranks) — lane-count invariant on the
+    /// integer-valued sweep inputs, so `pccl smoke` compares it exactly.
+    pub checksum: f64,
 }
 
 /// Sweep configuration for the launcher.
@@ -75,6 +85,9 @@ pub struct LauncherConfig {
     /// Serve the sweep from one persistent world per topology instead of
     /// spawning a fresh world per trial.
     pub persistent: bool,
+    /// Transport lane counts to sweep (each count gets its own transport;
+    /// `[1]` reproduces the pre-lane sweep cell for cell).
+    pub lane_counts: Vec<usize>,
 }
 
 impl Default for LauncherConfig {
@@ -86,6 +99,7 @@ impl Default for LauncherConfig {
             inner_iters: 8,
             warmup_iters: 1,
             persistent: false,
+            lane_counts: vec![1],
         }
     }
 }
@@ -100,12 +114,36 @@ impl LauncherConfig {
             inner_iters: 4,
             warmup_iters: 1,
             persistent: false,
+            lane_counts: vec![1],
+        }
+    }
+
+    /// Lane-sweep preset for `pccl smoke`: 8 ranks so the striped phases
+    /// have real rings to drive, one small and one large size (the large
+    /// one is where lanes must win), lanes ∈ {1, 4} for the cross-lane
+    /// schedule-equivalence guard, persistent worlds to keep the timings
+    /// comparable across lane counts.
+    pub fn lanes_smoke() -> Self {
+        Self {
+            topologies: vec![Topology::flat(8)],
+            elem_counts: vec![1 << 14, 1 << 20],
+            trials: 2,
+            inner_iters: 2,
+            warmup_iters: 1,
+            persistent: true,
+            lane_counts: vec![1, 4],
         }
     }
 
     /// Builder-style toggle for persistent-world mode.
     pub fn with_persistent(mut self, on: bool) -> Self {
         self.persistent = on;
+        self
+    }
+
+    /// Builder-style lane-count sweep.
+    pub fn with_lane_counts(mut self, lanes: Vec<usize>) -> Self {
+        self.lane_counts = if lanes.is_empty() { vec![1] } else { lanes };
         self
     }
 }
@@ -117,27 +155,83 @@ pub struct MeasuredSweep {
 }
 
 impl MeasuredSweep {
-    /// Labeled dataset for one collective: each (size, ranks) configuration
-    /// is labeled with its measured-fastest backend.
+    /// Labeled dataset for one collective: each (size, ranks, lanes)
+    /// configuration is labeled with its measured-fastest backend.
     pub fn dataset(&self, kind: CollKind) -> Result<Dataset> {
         let mut data = Dataset::default();
         // Group cells by configuration, preserving sweep order.
-        let mut configs: Vec<(usize, usize)> = Vec::new();
+        let mut configs: Vec<(usize, usize, usize)> = Vec::new();
         for c in self.cells.iter().filter(|c| c.kind == kind) {
-            if !configs.contains(&(c.msg_bytes, c.ranks)) {
-                configs.push((c.msg_bytes, c.ranks));
+            if !configs.contains(&(c.msg_bytes, c.ranks, c.lanes)) {
+                configs.push((c.msg_bytes, c.ranks, c.lanes));
             }
         }
-        for (msg, ranks) in configs {
+        for (msg, ranks, lanes) in configs {
             let times: Vec<(Backend, f64)> = self
                 .cells
                 .iter()
-                .filter(|c| c.kind == kind && c.msg_bytes == msg && c.ranks == ranks)
+                .filter(|c| {
+                    c.kind == kind && c.msg_bytes == msg && c.ranks == ranks && c.lanes == lanes
+                })
                 .map(|c| (c.backend, c.stats.mean()))
                 .collect();
-            data.push_measured(msg, ranks, &times)?;
+            data.push_measured(msg, ranks, lanes, &times)?;
         }
         Ok(data)
+    }
+
+    /// The cross-lane schedule-equivalence guard: every (collective,
+    /// backend, size, ranks) configuration measured at several lane counts
+    /// must move the same total bytes and produce the same checksum —
+    /// striping partitions the schedule, it must never change it. Errors
+    /// name the first diverging configuration.
+    pub fn check_lane_equivalence(&self) -> Result<()> {
+        let mut seen: Vec<(CollKind, Backend, usize, usize)> = Vec::new();
+        for c in &self.cells {
+            let key = (c.kind, c.backend, c.msg_bytes, c.ranks);
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+            let group: Vec<&MeasuredCell> = self
+                .cells
+                .iter()
+                .filter(|x| {
+                    x.kind == c.kind
+                        && x.backend == c.backend
+                        && x.msg_bytes == c.msg_bytes
+                        && x.ranks == c.ranks
+                })
+                .collect();
+            for x in &group {
+                let lane_sum: u64 = x.moved_bytes_per_lane.iter().sum();
+                if lane_sum != x.bytes_per_op {
+                    return Err(Error::Dispatch(format!(
+                        "per-lane counters disagree with the total: {:?}/{:?} msg={} p={} \
+                         lanes={}: {} per-lane vs {} total",
+                        x.kind, x.backend, x.msg_bytes, x.ranks,
+                        x.lanes, lane_sum, x.bytes_per_op
+                    )));
+                }
+                if x.bytes_per_op != c.bytes_per_op {
+                    return Err(Error::Dispatch(format!(
+                        "lane schedule divergence: {:?}/{:?} msg={} p={} moved {} bytes at \
+                         lanes={} but {} bytes at lanes={}",
+                        c.kind, c.backend, c.msg_bytes, c.ranks,
+                        c.bytes_per_op, c.lanes, x.bytes_per_op, x.lanes
+                    )));
+                }
+                if x.checksum != c.checksum {
+                    return Err(Error::Dispatch(format!(
+                        "lane result divergence: {:?}/{:?} msg={} p={} checksum {} at \
+                         lanes={} but {} at lanes={}",
+                        c.kind, c.backend, c.msg_bytes, c.ranks,
+                        c.checksum, c.lanes, x.checksum, x.lanes
+                    )));
+                }
+            }
+        }
+        Ok(())
     }
 
     /// One labeled dataset per collective.
@@ -234,57 +328,83 @@ pub fn expected_schedule_bytes(
     }
 }
 
-/// One collective op over the chunk-native entry points. The input chunk
-/// clone is O(1), so the timed section measures the data plane's actual
-/// hot path — not a per-op `Vec → Chunk` staging copy that the real
-/// chunk-holding callers (ZeRO-3) never pay.
+/// Sum a chunk list's elements as f64 — the order-independent result
+/// checksum the cross-lane guard compares (exact for the launcher's
+/// integer-valued f32 inputs).
+fn checksum_chunks(chunks: &[Chunk<f32>]) -> f64 {
+    chunks
+        .iter()
+        .flat_map(|c| c.as_slice())
+        .map(|&x| x as f64)
+        .sum()
+}
+
+/// One collective op over the chunk-native entry points, returning the
+/// result checksum. The input chunk clone is O(1), so the timed section
+/// measures the data plane's actual hot path — not a per-op `Vec → Chunk`
+/// staging copy that the real chunk-holding callers (ZeRO-3) never pay.
+/// `lanes <= 1` takes the exact pre-lane entry points (byte-for-byte the
+/// old schedule); `lanes > 1` takes the lane-aware entry points with
+/// `opts.lanes` pre-set by [`cell_trial`].
 fn run_collective(
     kind: CollKind,
+    lanes: usize,
     comm: &mut Communicator<f32>,
     input: &Chunk<f32>,
     opts: &CollectiveOptions<f32>,
-) -> Result<()> {
-    match kind {
-        CollKind::AllGather => {
-            all_gather_chunks(comm, input.clone(), opts)?;
+) -> Result<f64> {
+    let out = match (kind, lanes > 1) {
+        (CollKind::AllGather, false) => all_gather_chunks(comm, input.clone(), opts)?,
+        (CollKind::AllGather, true) => all_gather_lanes_chunks(comm, input.clone(), opts)?,
+        (CollKind::ReduceScatter, false) => {
+            vec![reduce_scatter_chunks(comm, input.clone(), opts)?]
         }
-        CollKind::ReduceScatter => {
-            reduce_scatter_chunks(comm, input.clone(), opts)?;
-        }
-        CollKind::AllReduce => {
-            all_reduce_chunks(comm, input.clone(), opts)?;
-        }
-    }
-    Ok(())
+        (CollKind::ReduceScatter, true) => reduce_scatter_stripes(comm, input.clone(), opts)?,
+        (CollKind::AllReduce, false) => all_reduce_chunks(comm, input.clone(), opts)?,
+        (CollKind::AllReduce, true) => all_reduce_lanes_chunks(comm, input.clone(), opts)?,
+    };
+    Ok(checksum_chunks(&out))
 }
 
 /// The per-rank trial body shared by both launcher modes: warmup, then a
-/// timed run of `inner` back-to-back collectives with traffic deltas.
+/// timed run of `inner` back-to-back collectives with traffic deltas
+/// (total and per lane) and the last op's result checksum.
 fn cell_trial(
     kind: CollKind,
     backend: Backend,
     input_len: usize,
+    lanes: usize,
     inner: usize,
     warmup: usize,
 ) -> impl Fn(&mut Communicator<f32>) -> Result<TrialReport> + Send + Sync + Clone + 'static {
     move |comm: &mut Communicator<f32>| {
-        let opts = CollectiveOptions::<f32>::default().backend(backend);
+        let opts = CollectiveOptions::<f32>::default().backend(backend).lanes(lanes.max(1));
         let input = Chunk::from_vec(vec![comm.rank() as f32; input_len]);
         for _ in 0..warmup {
-            run_collective(kind, comm, &input, &opts)?;
+            run_collective(kind, lanes, comm, &input, &opts)?;
         }
         let before = comm.traffic();
+        let before_lanes = comm.traffic_per_lane();
         let start = Instant::now();
+        let mut checksum = 0.0;
         for _ in 0..inner {
-            run_collective(kind, comm, &input, &opts)?;
+            checksum = run_collective(kind, lanes, comm, &input, &opts)?;
         }
         let secs = start.elapsed().as_secs_f64() / inner as f64;
         let after = comm.traffic();
+        let after_lanes = comm.traffic_per_lane();
+        let moved_bytes_per_lane = after_lanes
+            .iter()
+            .zip(&before_lanes)
+            .map(|(a, b)| (a.sent_bytes - b.sent_bytes) / inner as u64)
+            .collect();
         Ok(TrialReport {
             secs,
             sent_msgs: (after.sent_msgs - before.sent_msgs) / inner as u64,
             sent_bytes: (after.sent_bytes - before.sent_bytes) / inner as u64,
             copied_bytes: (after.copied_bytes - before.copied_bytes) / inner as u64,
+            moved_bytes_per_lane,
+            checksum,
         })
     }
 }
@@ -311,6 +431,33 @@ impl Launcher {
         F: Fn(&mut Communicator<T>) -> Result<R> + Sync,
     {
         let (_hub, eps) = TransportHub::<T>::new(topo.world_size());
+        self.launch_on(topo, eps, f)
+    }
+
+    /// [`Launcher::launch`] over a multi-lane transport (`lanes == 1` is
+    /// identical to `launch`). The extra `Clone` bound is what the lane
+    /// workers need to take over stripe storage.
+    pub fn launch_lanes<T, R, F>(&self, topo: Topology, lanes: usize, f: F) -> Result<Vec<R>>
+    where
+        T: Send + Sync + Clone + 'static,
+        R: Send,
+        F: Fn(&mut Communicator<T>) -> Result<R> + Sync,
+    {
+        let (_hub, eps) = TransportHub::<T>::new_with_lanes(topo.world_size(), lanes.max(1));
+        self.launch_on(topo, eps, f)
+    }
+
+    fn launch_on<T, R, F>(
+        &self,
+        topo: Topology,
+        eps: Vec<crate::comm::Endpoint<T>>,
+        f: F,
+    ) -> Result<Vec<R>>
+    where
+        T: Send + Sync + 'static,
+        R: Send,
+        F: Fn(&mut Communicator<T>) -> Result<R> + Sync,
+    {
         let results: Vec<Result<R>> = std::thread::scope(|s| {
             let f = &f;
             let handles: Vec<_> = eps
@@ -351,36 +498,40 @@ impl Launcher {
         backend: Backend,
         elems: usize,
     ) -> Result<MeasuredCell> {
+        self.time_cell_lanes(topo, kind, backend, elems, 1)
+    }
+
+    /// [`Launcher::time_cell`] on a `lanes`-lane transport through the
+    /// lane-aware entry points.
+    pub fn time_cell_lanes(
+        &self,
+        topo: Topology,
+        kind: CollKind,
+        backend: Backend,
+        elems: usize,
+        lanes: usize,
+    ) -> Result<MeasuredCell> {
         let p = topo.world_size();
         let (input_len, msg_bytes) = cell_shape(kind, elems, p);
         let trial = cell_trial(
             kind,
             backend,
             input_len,
+            lanes,
             self.cfg.inner_iters.max(1),
             self.cfg.warmup_iters,
         );
         let mut stats = Stats::new();
-        let mut bytes_per_op = 0u64;
-        let mut copied_bytes_per_op = 0u64;
+        let mut reports = Vec::new();
         for _ in 0..self.cfg.trials.max(1) {
-            let reports = self.launch::<f32, _, _>(topo, &trial)?;
+            reports = self.launch_lanes::<f32, _, _>(topo, lanes, &trial)?;
             stats.push(reports[0].secs);
-            bytes_per_op = reports.iter().map(|t| t.sent_bytes).sum();
-            copied_bytes_per_op = reports.iter().map(|t| t.copied_bytes).sum();
         }
-        Ok(MeasuredCell {
-            kind,
-            backend,
-            msg_bytes,
-            ranks: p,
-            stats,
-            bytes_per_op,
-            copied_bytes_per_op,
-        })
+        Ok(Self::collect_cell(kind, backend, msg_bytes, p, lanes, stats, &reports))
     }
 
-    /// Time one cell on a pinned [`PersistentWorld`].
+    /// Time one cell on a pinned [`PersistentWorld`] (its lane count
+    /// decides the entry points, exactly like [`Launcher::time_cell_lanes`]).
     pub fn time_cell_in(
         &self,
         world: &mut PersistentWorld<f32>,
@@ -389,32 +540,59 @@ impl Launcher {
         elems: usize,
     ) -> Result<MeasuredCell> {
         let p = world.size();
+        let lanes = world.lanes();
         let (input_len, msg_bytes) = cell_shape(kind, elems, p);
         let trial = cell_trial(
             kind,
             backend,
             input_len,
+            lanes,
             self.cfg.inner_iters.max(1),
             self.cfg.warmup_iters,
         );
         let mut stats = Stats::new();
-        let mut bytes_per_op = 0u64;
-        let mut copied_bytes_per_op = 0u64;
+        let mut reports = Vec::new();
         for _ in 0..self.cfg.trials.max(1) {
-            let reports = world.run_trial(trial.clone())?;
+            reports = world.run_trial(trial.clone())?;
             stats.push(reports[0].secs);
-            bytes_per_op = reports.iter().map(|t| t.sent_bytes).sum();
-            copied_bytes_per_op = reports.iter().map(|t| t.copied_bytes).sum();
         }
-        Ok(MeasuredCell {
+        Ok(Self::collect_cell(kind, backend, msg_bytes, p, lanes, stats, &reports))
+    }
+
+    /// Fold the last trial's per-rank reports into a cell: byte totals,
+    /// per-lane byte totals, and the cross-rank checksum sum.
+    fn collect_cell(
+        kind: CollKind,
+        backend: Backend,
+        msg_bytes: usize,
+        ranks: usize,
+        lanes: usize,
+        stats: Stats,
+        reports: &[TrialReport],
+    ) -> MeasuredCell {
+        let lane_count = reports
+            .iter()
+            .map(|t| t.moved_bytes_per_lane.len())
+            .max()
+            .unwrap_or(0);
+        let mut moved_bytes_per_lane = vec![0u64; lane_count];
+        for t in reports {
+            for (l, &b) in t.moved_bytes_per_lane.iter().enumerate() {
+                moved_bytes_per_lane[l] += b;
+            }
+        }
+        MeasuredCell {
             kind,
             backend,
             msg_bytes,
-            ranks: p,
+            ranks,
             stats,
-            bytes_per_op,
-            copied_bytes_per_op,
-        })
+            lanes: lanes.max(1),
+            bytes_per_op: reports.iter().map(|t| t.sent_bytes).sum(),
+            copied_bytes_per_op: reports.iter().map(|t| t.copied_bytes).sum(),
+            moved_bytes_per_lane,
+            checksum: reports.iter().map(|t| t.checksum).sum(),
+        }
     }
 
     /// The full sweep: every registered backend × every collective × every
@@ -425,10 +603,12 @@ impl Launcher {
         }
         let mut cells = Vec::new();
         for &topo in &self.cfg.topologies {
-            for &elems in &self.cfg.elem_counts {
-                for kind in CollKind::ALL {
-                    for backend in Backend::CONCRETE {
-                        cells.push(self.time_cell(topo, kind, backend, elems)?);
+            for &lanes in &self.cfg.lane_counts {
+                for &elems in &self.cfg.elem_counts {
+                    for kind in CollKind::ALL {
+                        for backend in Backend::CONCRETE {
+                            cells.push(self.time_cell_lanes(topo, kind, backend, elems, lanes)?);
+                        }
                     }
                 }
             }
@@ -436,16 +616,19 @@ impl Launcher {
         Ok(MeasuredSweep { cells })
     }
 
-    /// The sweep served from one persistent world per topology: world
-    /// setup is amortized over all of that topology's cells and trials.
+    /// The sweep served from one persistent world per (topology, lane
+    /// count): world setup is amortized over all of that world's cells and
+    /// trials.
     pub fn sweep_persistent(&self) -> Result<MeasuredSweep> {
         let mut cells = Vec::new();
         for &topo in &self.cfg.topologies {
-            let mut world = PersistentWorld::<f32>::new(topo);
-            for &elems in &self.cfg.elem_counts {
-                for kind in CollKind::ALL {
-                    for backend in Backend::CONCRETE {
-                        cells.push(self.time_cell_in(&mut world, kind, backend, elems)?);
+            for &lanes in &self.cfg.lane_counts {
+                let mut world = PersistentWorld::<f32>::new_with_lanes(topo, lanes);
+                for &elems in &self.cfg.elem_counts {
+                    for kind in CollKind::ALL {
+                        for backend in Backend::CONCRETE {
+                            cells.push(self.time_cell_in(&mut world, kind, backend, elems)?);
+                        }
                     }
                 }
             }
@@ -507,6 +690,7 @@ mod tests {
             inner_iters: 2,
             warmup_iters: 1,
             persistent: false,
+            lane_counts: vec![1],
         });
         let sweep = launcher.sweep().unwrap();
         // 2 topologies × 2 sizes × 3 collectives × 4 backends.
@@ -536,6 +720,7 @@ mod tests {
             inner_iters: 2,
             warmup_iters: 1,
             persistent: false,
+            lane_counts: vec![1],
         });
         for kind in [CollKind::AllGather, CollKind::ReduceScatter] {
             let cell = launcher
@@ -559,5 +744,49 @@ mod tests {
         // closed form here.
         assert!(expected_schedule_bytes(CollKind::AllReduce, Backend::Vendor, 512, 4).is_none());
         assert!(expected_schedule_bytes(CollKind::AllGather, Backend::PcclRec, 512, 4).is_none());
+    }
+
+    #[test]
+    fn lane_sweep_preserves_schedule_and_results() {
+        // 8192 elements on 4 ranks keeps every striped path above
+        // MIN_STRIPE_ELEMS at 2 lanes, so the lanes=2 cells genuinely
+        // stripe — and must still move the same bytes to the same results.
+        let launcher = Launcher::new(LauncherConfig {
+            topologies: vec![Topology::flat(4)],
+            elem_counts: vec![1 << 13],
+            trials: 1,
+            inner_iters: 2,
+            warmup_iters: 1,
+            persistent: true,
+            lane_counts: vec![1, 2],
+        });
+        let sweep = launcher.sweep().unwrap();
+        // 2 lane counts × 1 size × 3 collectives × 4 backends.
+        assert_eq!(sweep.cells.len(), 2 * 3 * 4);
+        sweep.check_lane_equivalence().unwrap();
+        // The PCCL ring cells actually used both lanes.
+        let striped = sweep
+            .cells
+            .iter()
+            .find(|c| {
+                c.kind == CollKind::ReduceScatter && c.backend == Backend::PcclRing && c.lanes == 2
+            })
+            .unwrap();
+        assert_eq!(striped.moved_bytes_per_lane.len(), 2);
+        assert!(
+            striped.moved_bytes_per_lane.iter().all(|&b| b > 0),
+            "both lanes must carry stripe traffic: {:?}",
+            striped.moved_bytes_per_lane
+        );
+        assert_eq!(striped.copied_bytes_per_op, 0, "reduce path must stay copy-free");
+        // And the guard actually fires on a forged divergence.
+        let mut bad = sweep.clone();
+        let idx = bad
+            .cells
+            .iter()
+            .position(|c| c.lanes == 2 && c.backend == Backend::PcclRing)
+            .unwrap();
+        bad.cells[idx].checksum += 1.0;
+        assert!(bad.check_lane_equivalence().is_err());
     }
 }

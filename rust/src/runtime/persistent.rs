@@ -22,7 +22,7 @@ use crate::reduction::Elem;
 use crate::topology::Topology;
 
 /// What one rank reports for one trial.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TrialReport {
     /// Wall seconds of the timed section (per collective op if the trial
     /// divides by its inner iteration count).
@@ -36,6 +36,15 @@ pub struct TrialReport {
     /// [`crate::comm::Traffic::copied_bytes`] delta). Zero on the whole
     /// reduce path — `pccl smoke` fails the run otherwise.
     pub copied_bytes: u64,
+    /// Bytes this rank sent on each transport lane inside the timed
+    /// section (`[lane 0, lane 1, ...]`; empty when the trial did not
+    /// sample per-lane counters). The cross-lane schedule-equivalence
+    /// guard sums these and checks them against the single-lane run.
+    pub moved_bytes_per_lane: Vec<u64>,
+    /// Order-independent checksum of the trial's result elements (sum of
+    /// the output converted to f64). Identical schedules must produce
+    /// identical checksums regardless of lane count.
+    pub checksum: f64,
 }
 
 type Job<T> = Box<dyn FnOnce(&mut Communicator<T>) -> Result<TrialReport> + Send>;
@@ -49,6 +58,7 @@ type Job<T> = Box<dyn FnOnce(&mut Communicator<T>) -> Result<TrialReport> + Send
 /// return an error instead.
 pub struct PersistentWorld<T: Elem> {
     topo: Topology,
+    lanes: usize,
     job_txs: Vec<Sender<Job<T>>>,
     done_rx: Receiver<(usize, Result<TrialReport>)>,
     handles: Vec<JoinHandle<()>>,
@@ -58,8 +68,15 @@ pub struct PersistentWorld<T: Elem> {
 impl<T: Elem> PersistentWorld<T> {
     /// Stand up the transport and pin one worker thread per rank.
     pub fn new(topo: Topology) -> Self {
+        Self::new_with_lanes(topo, 1)
+    }
+
+    /// Stand up a multi-lane transport (one stripe queue + lane worker per
+    /// extra lane, see [`TransportHub::new_with_lanes`]) and pin one rank
+    /// thread per rank. `lanes == 1` is byte-for-byte [`PersistentWorld::new`].
+    pub fn new_with_lanes(topo: Topology, lanes: usize) -> Self {
         let size = topo.world_size();
-        let (_hub, eps) = TransportHub::<T>::new(size);
+        let (_hub, eps) = TransportHub::<T>::new_with_lanes(size, lanes.max(1));
         let (done_tx, done_rx) = mpsc::channel();
         let mut job_txs = Vec::with_capacity(size);
         let mut handles = Vec::with_capacity(size);
@@ -90,6 +107,7 @@ impl<T: Elem> PersistentWorld<T> {
         }
         Self {
             topo,
+            lanes: lanes.max(1),
             job_txs,
             done_rx,
             handles,
@@ -99,6 +117,11 @@ impl<T: Elem> PersistentWorld<T> {
 
     pub fn topology(&self) -> Topology {
         self.topo
+    }
+
+    /// Transport lanes each pinned rank's endpoint carries.
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     pub fn size(&self) -> usize {
@@ -199,6 +222,7 @@ mod tests {
                         sent_msgs: after.sent_msgs - before.sent_msgs,
                         sent_bytes: after.sent_bytes - before.sent_bytes,
                         copied_bytes: after.copied_bytes - before.copied_bytes,
+                        ..Default::default()
                     })
                 })
                 .unwrap();
@@ -207,6 +231,20 @@ mod tests {
                 .iter()
                 .all(|t| t.sent_msgs == 1 && t.sent_bytes == 8 && t.copied_bytes == 0));
         }
+    }
+
+    #[test]
+    fn lane_world_pins_ranks_on_a_striped_transport() {
+        let mut world = PersistentWorld::<f32>::new_with_lanes(Topology::flat(3), 2);
+        let reports = world
+            .run_trial(|c| {
+                if c.lanes() != 2 {
+                    return Err(Error::Dispatch(format!("expected 2 lanes, got {}", c.lanes())));
+                }
+                Ok(TrialReport::default())
+            })
+            .unwrap();
+        assert_eq!(reports.len(), 3);
     }
 
     #[test]

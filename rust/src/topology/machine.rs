@@ -33,6 +33,11 @@ pub struct MachineParams {
     pub nic_bw: f64,
     /// Per-message inter-node startup latency, seconds (MPI p2p path).
     pub alpha_inter: f64,
+    /// Extra per-message startup cost for each *additional* NIC rail a
+    /// striped (multi-lane) collective drives: per-lane queue-pair setup,
+    /// doorbell and completion handling. Total inter-node alpha for a
+    /// `k`-lane step is `alpha_inter + (k − 1)·alpha_lane`.
+    pub alpha_lane: f64,
     /// Per-step overhead of the vendor (NCCL/RCCL) inter-node ring,
     /// seconds — kernel launch + proto handshake, higher than raw MPI p2p.
     pub alpha_vendor: f64,
@@ -84,6 +89,7 @@ impl Machine {
                 nics_per_node: 4,
                 nic_bw: 25.0e9,
                 alpha_inter: 4.0e-6,
+                alpha_lane: 2.0e-6,
                 alpha_vendor: 20.0e-6,
                 intra_bw: 100.0e9,
                 alpha_intra: 2.0e-6,
@@ -100,6 +106,7 @@ impl Machine {
                 nics_per_node: 4,
                 nic_bw: 25.0e9,
                 alpha_inter: 3.5e-6,
+                alpha_lane: 2.0e-6,
                 alpha_vendor: 0.8e-6,
                 intra_bw: 200.0e9,
                 alpha_intra: 1.5e-6,
@@ -119,6 +126,7 @@ impl Machine {
                 nics_per_node: 8,
                 nic_bw: 50.0e9, // NDR 400 Gb/s per HCA
                 alpha_inter: 2.5e-6,
+                alpha_lane: 2.0e-6,
                 alpha_vendor: 1.5e-6,
                 intra_bw: 450.0e9, // NVLink4
                 alpha_intra: 1.0e-6,
@@ -137,6 +145,7 @@ impl Machine {
                 nics_per_node: 4,
                 nic_bw: 25.0e9,
                 alpha_inter: 4.0e-6,
+                alpha_lane: 2.0e-6,
                 alpha_vendor: 20.0e-6,
                 intra_bw: 100.0e9,
                 alpha_intra: 2.0e-6,
@@ -177,6 +186,7 @@ mod tests {
             assert!(p.nic_bw > 0.0 && p.intra_bw >= p.nic_bw);
             assert!(p.gpu_reduce_bw > p.cpu_reduce_bw * 10.0);
             assert!(p.alpha_vendor > 0.0 && p.alpha_inter > 0.0);
+            assert!(p.alpha_lane > 0.0 && p.alpha_lane <= p.alpha_inter);
         }
     }
 }

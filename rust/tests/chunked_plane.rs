@@ -226,6 +226,7 @@ fn persistent_world_sweep_matches_spawn_mode_bytes() {
         inner_iters: 2,
         warmup_iters: 1,
         persistent: false,
+        lane_counts: vec![1],
     };
     let spawn = Launcher::new(base.clone()).sweep().unwrap();
     let persist = Launcher::new(base.with_persistent(true)).sweep().unwrap();

@@ -1,0 +1,264 @@
+//! The multi-lane striped transport, end to end:
+//!
+//! * **Lane isolation** — traffic on lane `l` must never satisfy a
+//!   receive on lane `l' != l`, even when the `(peer, op, step)` triple is
+//!   identical: each lane has its own queue and its id is folded into the
+//!   wire tag. The stale-lane probe is the wire-tag regression for the
+//!   lane dimension (mirroring the op-seq freshness probes of the chunked
+//!   plane).
+//! * **Striped collectives ≡ oracle** — lane-parallel ring and
+//!   hierarchical RS/AG/AR over 3/6/12 ranks with stripe splits that are
+//!   uneven against the lane count (and zero-length when the block is
+//!   shorter than the lane count), concatenating to exactly the unstriped
+//!   result.
+//! * **Per-lane accounting** — a striped run through the dispatch layer
+//!   moves bytes on *every* lane, and the per-lane counters sum to the
+//!   endpoint totals the single-lane guards already check.
+
+use pccl::backends::{
+    all_gather_lanes_chunks, all_reduce_lanes_chunks, reduce_scatter_stripes, Backend,
+    CollectiveOptions, MIN_STRIPE_ELEMS,
+};
+use pccl::collectives::{
+    hier_all_gather_lanes_chunks, hier_all_reduce_lanes_chunks, hier_reduce_scatter_lanes_chunks,
+    oracle, ring_all_gather_lanes_chunks, ring_all_reduce_lanes_chunks,
+    ring_reduce_scatter_lanes_chunks, InterAlgo,
+};
+use pccl::comm::{stripe_lens, Chunk, Comm, CommWorld};
+use pccl::reduction::offload::native_combine;
+use pccl::topology::Topology;
+
+fn rank_input(r: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| (r * 1000 + i) as f32).collect()
+}
+
+/// Same `(peer, step)` posted on three lanes at once, received in
+/// *reverse* lane order: each receive must pull its own lane's payload.
+/// A shared queue (or a tag that failed to fold the lane id) would hand
+/// the first receive lane 0's message FIFO-style.
+#[test]
+fn lane_views_deliver_per_lane_despite_identical_steps() {
+    let lanes = 3;
+    let world = CommWorld::<f32>::new(2).with_lanes(lanes);
+    let outs = world.run(move |c| {
+        c.begin_op();
+        if c.rank() == 0 {
+            for l in 0..lanes {
+                c.lane_comm(l)
+                    .unwrap()
+                    .send_slice(1, 0, Chunk::from_vec(vec![(100 * l) as f32; 2]))
+                    .unwrap();
+            }
+            Vec::new()
+        } else {
+            let mut got = vec![Vec::new(); lanes];
+            for l in (0..lanes).rev() {
+                got[l] = c.lane_comm(l).unwrap().recv_chunk(0, 0).unwrap().to_vec();
+            }
+            got
+        }
+    });
+    for l in 0..lanes {
+        assert_eq!(
+            outs[1][l],
+            vec![(100 * l) as f32; 2],
+            "lane {l} received another lane's payload"
+        );
+    }
+}
+
+/// Stale-lane wire-tag regression: an unreceived message parked on lane 1
+/// must not be matched by a later lane-0 exchange using the same step, and
+/// must still be waiting — intact — on its own lane afterwards.
+#[test]
+fn stale_lane_message_never_satisfies_another_lane() {
+    let world = CommWorld::<f32>::new(1).with_lanes(2);
+    let outs = world.run(|c| {
+        c.begin_op();
+        // Stale message on lane 1, deliberately not received.
+        c.lane_comm(1)
+            .unwrap()
+            .send_slice(0, 7, Chunk::from_vec(vec![111.0]))
+            .unwrap();
+        // Fresh self-exchange on lane 0 with the identical step: if lane
+        // ids leaked out of the wire tag or the queues were shared, this
+        // receive would match the stale 111.
+        let fresh = {
+            let mut l0 = c.lane_comm(0).unwrap();
+            l0.send_slice(0, 7, Chunk::from_vec(vec![222.0])).unwrap();
+            l0.recv_chunk(0, 7).unwrap().to_vec()
+        };
+        // And the stale message still sits on lane 1, undamaged.
+        let stale = c.lane_comm(1).unwrap().recv_chunk(0, 7).unwrap().to_vec();
+        (fresh, stale)
+    });
+    assert_eq!(outs[0].0, vec![222.0], "lane 0 matched a lane-1 message");
+    assert_eq!(outs[0].1, vec![111.0], "lane 1's message must survive untouched");
+}
+
+/// Striped flat-ring RS/AG/AR ≡ oracle at 3 ranks with a prime block
+/// length (uneven against every stripe split), including the padded
+/// all-reduce length, with the reduce path staying copy-free.
+#[test]
+fn striped_ring_collectives_match_oracle_uneven_stripes() {
+    let p = 3;
+    let b = 7; // stripe_lens(7, 2) = [4, 3] — uneven
+    let k = 2;
+    let n_ar = 2 * p + 1; // never a multiple of p → padded path
+    let world = CommWorld::<f32>::new(p).with_lanes(k);
+    let outs = world.run(move |c| {
+        let comb = native_combine();
+        let r = c.rank();
+        let before = c.traffic().copied_bytes;
+        let rs =
+            ring_reduce_scatter_lanes_chunks(c, Chunk::from_vec(rank_input(r, p * b)), &comb, k)
+                .unwrap();
+        assert_eq!(
+            rs.iter().map(Chunk::len).collect::<Vec<_>>(),
+            stripe_lens(b, k),
+            "r={r}: RS stripe shapes must follow the wire contract"
+        );
+        let ag =
+            ring_all_gather_lanes_chunks(c, Chunk::from_vec(rank_input(r, b)), k).unwrap();
+        assert_eq!(ag.len(), p * k, "r={r}: AG must return rank-major stripe lists");
+        let ar =
+            ring_all_reduce_lanes_chunks(c, Chunk::from_vec(rank_input(r, n_ar)), &comb, k)
+                .unwrap();
+        let copied = c.traffic().copied_bytes - before;
+        assert_eq!(copied, 0, "r={r}: striped reduce deliveries must not copy");
+        (Chunk::concat(&rs), Chunk::concat(&ag), Chunk::concat(&ar))
+    });
+    let rs_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+    let ag_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, b)).collect();
+    let ar_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, n_ar)).collect();
+    for (r, (rs, ag, ar)) in outs.iter().enumerate() {
+        assert_eq!(rs, &oracle::reduce_scatter(&rs_ins, r), "rs r={r}");
+        assert_eq!(ag, &oracle::all_gather(&ag_ins), "ag r={r}");
+        assert_eq!(ar.len(), n_ar, "ar r={r}: trim must drop the padding");
+        assert_eq!(ar, &oracle::all_reduce(&ar_ins), "ar r={r}");
+    }
+}
+
+/// Striped hierarchical RS/AG/AR ≡ oracle at 6 (3×2) and 12 (3×4) ranks —
+/// non-power-of-two node counts over the striped inter-node ring.
+#[test]
+fn striped_hier_collectives_match_oracle_on_non_pow2_ranks() {
+    for topo in [
+        Topology::new(3, 2, 1).unwrap(), // 6 ranks
+        Topology::new(3, 4, 1).unwrap(), // 12 ranks
+    ] {
+        let p = topo.world_size();
+        let b = 7;
+        let k = 2;
+        let n_ar = 2 * p + 1;
+        let world = CommWorld::<f32>::with_topology(topo).with_lanes(k);
+        let outs = world.run(move |c| {
+            let comb = native_combine();
+            let r = c.rank();
+            let rs = hier_reduce_scatter_lanes_chunks(
+                c,
+                Chunk::from_vec(rank_input(r, p * b)),
+                &comb,
+                InterAlgo::Ring,
+                k,
+            )
+            .unwrap();
+            let ag = hier_all_gather_lanes_chunks(
+                c,
+                Chunk::from_vec(rank_input(r, b)),
+                InterAlgo::Ring,
+                k,
+            )
+            .unwrap();
+            let ar = hier_all_reduce_lanes_chunks(
+                c,
+                Chunk::from_vec(rank_input(r, n_ar)),
+                &comb,
+                InterAlgo::Ring,
+                k,
+            )
+            .unwrap();
+            (Chunk::concat(&rs), Chunk::concat(&ag), Chunk::concat(&ar))
+        });
+        let rs_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+        let ag_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, b)).collect();
+        let ar_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, n_ar)).collect();
+        for (r, (rs, ag, ar)) in outs.iter().enumerate() {
+            assert_eq!(rs, &oracle::reduce_scatter(&rs_ins, r), "p={p} rs r={r}");
+            assert_eq!(ag, &oracle::all_gather(&ag_ins), "p={p} ag r={r}");
+            assert_eq!(ar.len(), n_ar, "p={p} ar r={r}: trim must drop the padding");
+            assert_eq!(ar, &oracle::all_reduce(&ar_ins), "p={p} ar r={r}");
+        }
+    }
+}
+
+/// Blocks shorter than the lane count produce zero-length tail stripes
+/// (the shape contract keeps lane schedules aligned); the collectives must
+/// still match the oracle with empty stripes riding their lanes.
+#[test]
+fn zero_length_stripes_keep_lane_schedules_aligned() {
+    let p = 3;
+    let b = 3; // stripe_lens(3, 4) = [1, 1, 1, 0]
+    let k = 4;
+    assert_eq!(stripe_lens(b, k), vec![1, 1, 1, 0]);
+    let world = CommWorld::<f32>::new(p).with_lanes(k);
+    let outs = world.run(move |c| {
+        let comb = native_combine();
+        let r = c.rank();
+        let rs =
+            ring_reduce_scatter_lanes_chunks(c, Chunk::from_vec(rank_input(r, p * b)), &comb, k)
+                .unwrap();
+        assert_eq!(rs.len(), k, "r={r}: every lane owns a stripe, even empty ones");
+        assert_eq!(rs[k - 1].len(), 0, "r={r}: the tail stripe must be empty");
+        let ag = ring_all_gather_lanes_chunks(c, Chunk::from_vec(rank_input(r, b)), k).unwrap();
+        assert_eq!(ag.len(), p * k);
+        (Chunk::concat(&rs), Chunk::concat(&ag))
+    });
+    let rs_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+    let ag_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, b)).collect();
+    for (r, (rs, ag)) in outs.iter().enumerate() {
+        assert_eq!(rs, &oracle::reduce_scatter(&rs_ins, r), "rs r={r}");
+        assert_eq!(ag, &oracle::all_gather(&ag_ins), "ag r={r}");
+    }
+}
+
+/// The dispatch-layer striped entry points on a multi-lane world: every
+/// lane moves bytes, the per-lane counters sum to the endpoint totals,
+/// and results still match the oracle. (Payload sized so the per-stripe
+/// length clears [`MIN_STRIPE_ELEMS`] and striping genuinely engages.)
+#[test]
+fn dispatch_striped_paths_move_bytes_on_every_lane() {
+    let p = 4;
+    let k = 2;
+    let b = k * MIN_STRIPE_ELEMS; // per-stripe block length stays at the floor
+    let world = CommWorld::<f32>::new(p).with_lanes(k);
+    let outs = world.run(move |c| {
+        let opts = CollectiveOptions::default().backend(Backend::PcclRing).lanes(k);
+        let r = c.rank();
+        let before_total = c.traffic();
+        let before: Vec<u64> = c.traffic_per_lane().iter().map(|t| t.sent_bytes).collect();
+        let rs = reduce_scatter_stripes(c, Chunk::from_vec(rank_input(r, p * b)), &opts).unwrap();
+        assert_eq!(rs.len(), k, "r={r}: dispatch layer must keep {k} stripes");
+        let ag = all_gather_lanes_chunks(c, Chunk::from_vec(rank_input(r, b)), &opts).unwrap();
+        let ar = all_reduce_lanes_chunks(c, Chunk::from_vec(rank_input(r, p * b)), &opts).unwrap();
+        let after: Vec<u64> = c.traffic_per_lane().iter().map(|t| t.sent_bytes).collect();
+        let per_lane: Vec<u64> = after.iter().zip(&before).map(|(a, b)| a - b).collect();
+        assert_eq!(per_lane.len(), k);
+        for (l, moved) in per_lane.iter().enumerate() {
+            assert!(*moved > 0, "r={r}: lane {l} moved no bytes on a striped run");
+        }
+        assert_eq!(
+            per_lane.iter().sum::<u64>(),
+            c.traffic().sent_bytes - before_total.sent_bytes,
+            "r={r}: per-lane counters must sum to the endpoint total"
+        );
+        (Chunk::concat(&rs), Chunk::concat(&ag), Chunk::concat(&ar))
+    });
+    let rs_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, p * b)).collect();
+    let ag_ins: Vec<Vec<f32>> = (0..p).map(|r| rank_input(r, b)).collect();
+    for (r, (rs, ag, ar)) in outs.iter().enumerate() {
+        assert_eq!(rs, &oracle::reduce_scatter(&rs_ins, r), "rs r={r}");
+        assert_eq!(ag, &oracle::all_gather(&ag_ins), "ag r={r}");
+        assert_eq!(ar, &oracle::all_reduce(&rs_ins), "ar r={r}");
+    }
+}
