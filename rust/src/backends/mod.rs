@@ -14,6 +14,7 @@
 
 use std::sync::Arc;
 
+use crate::collectives::plan::{Algo, PlanKind, PlanSpec};
 use crate::collectives::{
     hier_all_gather, hier_all_gather_chunks, hier_all_gather_lanes_chunks, hier_all_reduce_chunks,
     hier_all_reduce_lanes_chunks, hier_reduce_scatter_chunks, hier_reduce_scatter_lanes_chunks,
@@ -89,6 +90,79 @@ impl CollKind {
             CollKind::AllGather => "all-gather",
             CollKind::ReduceScatter => "reduce-scatter",
             CollKind::AllReduce => "all-reduce",
+        }
+    }
+
+    /// Stable ordinal (index into [`CollKind::ALL`]) — the dispatcher's
+    /// `collective_id` feature, also recorded in its model files.
+    pub fn collective_id(self) -> usize {
+        CollKind::ALL
+            .iter()
+            .position(|&k| k == self)
+            .expect("every CollKind is in ALL")
+    }
+}
+
+/// The plan a `(collective, backend, topology, lanes)` dispatch cell lowers
+/// to — the *same* spec the entry points in this module build at run time,
+/// fallback gating and all (degenerate topologies route to the flat
+/// algorithms, a recursive inter-node phase refuses striping and non-pow2
+/// node counts, all-reduce pads to a multiple of `p` first, the vendor
+/// all-reduce is the binomial tree). `lanes` is the *effective* stripe
+/// count of the call (post [`effective_lane_count`]; `1` = unstriped).
+///
+/// `pccl verify-plans` statically verifies the spec of every grid cell
+/// before the launcher ever times it; the property tests replay the specs
+/// against the schedule index math.
+pub fn plan_spec_for(
+    kind: CollKind,
+    backend: Backend,
+    topo: crate::topology::Topology,
+    elems: usize,
+    lanes: usize,
+) -> PlanSpec {
+    let p = topo.world_size();
+    let (n, m) = (topo.nodes(), topo.gpus_per_node());
+    let k = lanes.max(1);
+    let pk = match kind {
+        CollKind::AllGather => PlanKind::AllGather,
+        CollKind::ReduceScatter => PlanKind::ReduceScatter,
+        CollKind::AllReduce => PlanKind::AllReduce,
+    };
+    // All-reduce pads its input to a multiple of p before lowering.
+    let eff_elems = if kind == CollKind::AllReduce {
+        elems.div_ceil(p) * p
+    } else {
+        elems
+    };
+    match backend {
+        // Vendor all-reduce is the (whole-buffer, unpadded) binomial tree;
+        // everything else vendor/Cray is the flat single-lane ring.
+        Backend::Vendor if kind == CollKind::AllReduce => {
+            PlanSpec::flat(pk, Algo::Tree, p, elems, 1)
+        }
+        Backend::Vendor | Backend::CrayMpich => PlanSpec::flat(pk, Algo::Ring, p, eff_elems, 1),
+        Backend::PcclRing => {
+            if topo.supports_hierarchical() {
+                PlanSpec::hier(pk, Algo::HierRing, n, m, eff_elems, k)
+            } else {
+                PlanSpec::flat(pk, Algo::Ring, p, eff_elems, k)
+            }
+        }
+        // PcclRec resolves recursive → ring when the relevant level is not
+        // a power of two, and a recursive inter phase runs unstriped.
+        Backend::PcclRec | Backend::Auto => {
+            if topo.supports_hierarchical() {
+                if n.is_power_of_two() {
+                    PlanSpec::hier(pk, Algo::HierRec, n, m, eff_elems, 1)
+                } else {
+                    PlanSpec::hier(pk, Algo::HierRing, n, m, eff_elems, k)
+                }
+            } else if p.is_power_of_two() {
+                PlanSpec::flat(pk, Algo::Rec, p, eff_elems, 1)
+            } else {
+                PlanSpec::flat(pk, Algo::Ring, p, eff_elems, k)
+            }
         }
     }
 }
@@ -478,6 +552,33 @@ mod tests {
                 assert_eq!(ar, &oracle::all_reduce(&ar_ins), "{backend:?} ar r={r}");
             }
         }
+    }
+
+    #[test]
+    fn dispatch_cell_specs_all_verify() {
+        use crate::collectives::plan;
+        // One hierarchical and one degenerate (single-node) topology, with
+        // and without striping: every cell's lowered spec must pass static
+        // verification — exactly what `pccl verify-plans` enforces.
+        for topo in [Topology::new(2, 4, 2).unwrap(), Topology::new(1, 5, 1).unwrap()] {
+            let p = topo.world_size();
+            for backend in Backend::CONCRETE {
+                for kind in CollKind::ALL {
+                    for lanes in [1usize, 2] {
+                        let elems = match kind {
+                            CollKind::AllGather => 6,
+                            _ => 6 * p,
+                        };
+                        let spec = plan_spec_for(kind, backend, topo, elems, lanes);
+                        plan::verify_cached(&spec).unwrap_or_else(|e| {
+                            panic!("{backend:?} {kind:?} lanes={lanes} p={p}: {e}")
+                        });
+                    }
+                }
+            }
+        }
+        assert_eq!(CollKind::AllGather.collective_id(), 0);
+        assert_eq!(CollKind::AllReduce.collective_id(), 2);
     }
 
     #[test]

@@ -13,23 +13,37 @@
 //! power-of-two node count and otherwise falls back to ring (logged by the
 //! caller via [`InterAlgo::effective`]).
 //!
+//! Since the Plan IR refactor the whole two-level composition is lowered
+//! as **one plan** per collective ([`super::plan::build_hier`] internally):
+//! slot `j·m + l` is the global block of rank `(node j, local l)`, the
+//! inter-node phase runs over this rank's slot column, the intra-node
+//! phase rotates/folds rows, and the Step-3 unshuffle is free — the plan's
+//! global-rank-ordered `outputs` list *is* the permutation.
+//! [`super::engine::run_hier`] segments the ops at scope changes and runs
+//! each segment on the matching sub-communicator.
+//!
 //! Over the chunked plane the all-gather is copy-free end to end: the
 //! inter phase yields one chunk per node, the intra ring forwards those
-//! *views* (`n` messages per step, zero bytes moved), and the unshuffle is
-//! a pointer permutation of the output list — each block reaches every
-//! rank still backed by its origin rank's input storage. The seed path
-//! re-materialized `p·m` elements at this layer.
+//! *views* (`n` messages per step, zero bytes moved) — each block reaches
+//! every rank still backed by its origin rank's input storage. The reduce
+//! paths post every combining receive (`RecvCombine` ops on
+//! [`Comm::recv_combine_into`]) — including the intra-node strided phase
+//! of the `Rec` inter path, which pre-IR gathered a contiguous staging
+//! partial per step; the lowered schedule exchanges the per-node blocks
+//! individually, so the contribution views fold in place and the last
+//! copying reduce path is gone.
 
 use crate::comm::{Chunk, Comm, Communicator};
 use crate::error::Result;
 use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
-use super::recursive::{rec_all_gather_chunks, rec_reduce_scatter_chunks};
+use super::engine;
+use super::plan::{self, Algo, PlanKind, PlanSpec};
+use super::recursive::{rec_all_gather_chunks, rec_all_reduce_chunks, rec_reduce_scatter_chunks};
 use super::ring::{
-    effective_lanes, ring_all_gather_chunks, ring_all_gather_lanes_chunks, ring_all_gather_striped,
-    ring_all_reduce_lanes_chunks, ring_reduce_scatter_blocks_chunks,
-    ring_reduce_scatter_blocks_lanes_chunks, ring_reduce_scatter_chunks,
+    effective_lanes, ring_all_gather_chunks, ring_all_gather_lanes_chunks,
+    ring_all_reduce_chunks, ring_all_reduce_lanes_chunks, ring_reduce_scatter_chunks,
     ring_reduce_scatter_lanes_chunks,
 };
 use super::{
@@ -56,17 +70,34 @@ impl InterAlgo {
     }
 }
 
-fn inter_all_gather_chunks<T: Elem>(
-    c: &mut Communicator<T>,
-    input: Chunk<T>,
-    algo: InterAlgo,
-) -> Result<Vec<Chunk<T>>> {
-    let n = c.topology().nodes();
-    let mut inter = c.inter_node()?;
-    match algo.effective(n) {
-        InterAlgo::Ring => ring_all_gather_chunks(&mut inter, input),
-        InterAlgo::Rec => rec_all_gather_chunks(&mut inter, input),
+/// The hierarchical plan algorithm for an inter choice over `n` nodes
+/// (resolved *before* spec construction, so a non-power-of-two `Rec`
+/// request lowers as `HierRing`).
+fn hier_algo(inter: InterAlgo, n: usize) -> Algo {
+    match inter.effective(n) {
+        InterAlgo::Ring => Algo::HierRing,
+        InterAlgo::Rec => Algo::HierRec,
     }
+}
+
+/// Lower a hierarchical spec for this communicator's topology, verify it
+/// (memoized), and execute it segment-by-segment on the matching
+/// sub-communicators.
+fn run_hier_plan<T: Elem>(
+    c: &mut Communicator<T>,
+    kind: PlanKind,
+    inter: InterAlgo,
+    elems: usize,
+    lanes: usize,
+    inputs: Vec<Chunk<T>>,
+    combiner: Option<&Combiner<T>>,
+) -> Result<Vec<Chunk<T>>> {
+    let topo = c.topology();
+    let (n, m) = (topo.nodes(), topo.gpus_per_node());
+    let spec = PlanSpec::hier(kind, hier_algo(inter, n), n, m, elems, lanes);
+    plan::verify_cached(&spec)?;
+    let pl = plan::build(&spec, c.rank())?;
+    engine::run_hier(c, &pl, inputs, combiner)
 }
 
 /// Two-level all-gather over chunks: returns the `p` per-rank blocks in
@@ -76,9 +107,8 @@ fn inter_all_gather_chunks<T: Elem>(
 ///
 /// Hot-path note (§Perf): the intra phase forwards the inter-phase chunk
 /// *list* (`n` messages per ring step instead of one concatenated buffer)
-/// and the Step-3 unshuffle degenerates to placing views at their final
-/// `(node, local)` positions — no staging buffer, no transpose copy, no
-/// per-hop materialization.
+/// and the Step-3 unshuffle degenerates to the plan's output ordering —
+/// no staging buffer, no transpose copy, no per-hop materialization.
 pub fn hier_all_gather_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
@@ -93,45 +123,8 @@ pub fn hier_all_gather_chunks<T: Elem>(
             InterAlgo::Rec => rec_all_gather_chunks(c, input),
         };
     }
-    let n = topo.nodes();
-    let m_local = topo.gpus_per_node();
-    let p = n * m_local;
-    // Step 1: concurrent inter-node all-gathers (one per local id). Chunk
-    // `node` holds the input of global rank (node·M + our local id).
-    let node_chunks = inter_all_gather_chunks(c, input, inter)?;
-    debug_assert_eq!(node_chunks.len(), n);
-    // Steps 2+3 fused: the intra-node ring forwards the chunk views; each
-    // arrival is placed straight at its final (node, local) slot.
-    let mut out: Vec<Option<Chunk<T>>> = vec![None; p];
-    let mut intra = c.intra_node()?;
-    let l = intra.rank();
-    for (node, ch) in node_chunks.iter().enumerate() {
-        out[node * m_local + l] = Some(ch.clone());
-    }
-    if m_local > 1 {
-        intra.begin_op();
-        let right = (l + 1) % m_local;
-        let left = (l + m_local - 1) % m_local;
-        let mut current = node_chunks;
-        for s in 0..m_local - 1 {
-            let recv_l = super::schedule::ring::ag_recv_block(l, m_local, s);
-            for (j, ch) in current.iter().enumerate() {
-                intra.send_slice(right, (s * n + j) as u32, ch.clone())?;
-            }
-            let mut got = Vec::with_capacity(n);
-            for j in 0..n {
-                got.push(intra.recv_chunk(left, (s * n + j) as u32)?);
-            }
-            for (j, ch) in got.iter().enumerate() {
-                out[j * m_local + recv_l] = Some(ch.clone());
-            }
-            current = got;
-        }
-    }
-    Ok(out
-        .into_iter()
-        .map(|b| b.expect("hierarchical schedule covers every rank"))
-        .collect())
+    let elems = input.len();
+    run_hier_plan(c, PlanKind::AllGather, inter, elems, 1, vec![input], None)
 }
 
 /// Two-level all-gather, slice API — adapter over
@@ -151,6 +144,15 @@ pub fn hier_all_gather<T: Elem>(
 /// full-range view of transport-delivered storage, so `into_vec` on it is
 /// a move (see [`ring_reduce_scatter_chunks`]); a ZeRO-3 shard update can
 /// hold it directly with zero copies.
+///
+/// Both inter algorithms now share the posted intra phase: the virtual
+/// pre-shuffle's segment `seg` is the block set `{(node, seg)}`, strided
+/// across `input` as a segment but contiguous per block, so the intra
+/// ring exchanges `n` block messages per step and posts this rank's own
+/// block views straight out of `input` as combine targets — no
+/// gather-segment staging copy. The `Rec` inter phase then halves over
+/// the same per-node block column (block-granular messages) instead of a
+/// materialized contiguous partial.
 pub fn hier_reduce_scatter_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
@@ -166,121 +168,13 @@ pub fn hier_reduce_scatter_chunks<T: Elem>(
             InterAlgo::Rec => rec_reduce_scatter_chunks(c, input, combiner),
         };
     }
-    let n = topo.nodes();
-    let out = match inter.effective(n) {
-        InterAlgo::Ring => {
-            // Posted intra phase + block-list inter ring: zero staging
-            // copies end to end (see `intra_reduce_blocks`).
-            let blocks = intra_reduce_blocks(c, &input, combiner, b)?;
-            let mut inter_c = c.inter_node()?;
-            ring_reduce_scatter_blocks_chunks(&mut inter_c, blocks, combiner)?
-        }
-        InterAlgo::Rec => {
-            // Documented fallback for true strides: recursive halving's
-            // exchange ranges span multiple per-node blocks, so the inter
-            // phase needs one contiguous n·b partial. The intra loop
-            // therefore does NOT post a receive buffer — this rank's
-            // contribution to a segment is *strided* across `input`
-            // (blocks {(node, seg)}), and materializing a contiguous view
-            // to post would reintroduce exactly the staging copy the
-            // posted-receive plane removed. Instead the traveling partial
-            // arrives exclusive (the sender moved its only reference into
-            // the transport), `make_mut_exact` resolves in place, and the
-            // strided contribution is folded in with no allocation at all.
-            let m_local = topo.gpus_per_node();
-            let gather_segment = |seg: usize| -> Vec<T> {
-                let mut v = Vec::with_capacity(n * b);
-                for node in 0..n {
-                    let src = (node * m_local + seg) * b;
-                    v.extend_from_slice(&input.as_slice()[src..src + b]);
-                }
-                v
-            };
-            let add_segment = |acc: &mut [T], seg: usize| {
-                for node in 0..n {
-                    let src = (node * m_local + seg) * b;
-                    combiner
-                        .fold(&mut acc[node * b..(node + 1) * b], &input.as_slice()[src..src + b]);
-                }
-            };
-            let partial = {
-                let mut intra = c.intra_node()?;
-                let l = intra.rank();
-                if m_local == 1 {
-                    Chunk::from_vec(gather_segment(0))
-                } else {
-                    intra.begin_op();
-                    let right = (l + 1) % m_local;
-                    let left = (l + m_local - 1) % m_local;
-                    use super::schedule::ring as idx;
-                    let mut current =
-                        Chunk::from_vec(gather_segment(idx::rs_send_block(l, m_local, 0)));
-                    for s in 0..m_local - 1 {
-                        let recv_seg = idx::rs_recv_block(l, m_local, s);
-                        let mut got = intra.sendrecv_chunk(right, current, left, s as u32)?;
-                        add_segment(got.make_mut_exact(), recv_seg);
-                        current = got;
-                    }
-                    current
-                }
-            };
-            debug_assert_eq!(partial.len(), n * b);
-            let mut inter_c = c.inter_node()?;
-            rec_reduce_scatter_chunks(&mut inter_c, partial, combiner)?
-        }
-    };
+    let blocks = (0..p).map(|i| input.slice(i * b, b)).collect();
+    let mut out =
+        run_hier_plan(c, PlanKind::ReduceScatter, inter, p * b, 1, blocks, Some(combiner))?;
+    debug_assert_eq!(out.len(), 1, "unstriped reduce-scatter yields one block");
+    let out = out.pop().expect("reduce-scatter plan outputs this rank's block");
     debug_assert_eq!(out.len(), b);
     Ok(out)
-}
-
-/// Intra-node reduce phase with **posted contiguous-block receives**: the
-/// virtual pre-shuffle's segment `seg` is the block set
-/// `{(node, seg) : node ∈ 0..N}`, and while the *segment* is strided
-/// across `input`, each per-node block at offset `(node·M + seg)·b` is
-/// contiguous on its own. The intra ring therefore exchanges `n` block
-/// messages per step and posts this rank's own block views straight out of
-/// `input` as combine targets ([`Comm::recv_combine_into`]) — no
-/// gather-segment staging copy, no `make_mut_exact` resolution; the first
-/// fold of each block fuses into fresh exact storage and every later hop
-/// folds in place. Returns the `n` reduced per-node blocks of this rank's
-/// segment, ready for a block-list inter-node reduce-scatter.
-fn intra_reduce_blocks<T: Elem>(
-    c: &mut Communicator<T>,
-    input: &Chunk<T>,
-    combiner: &Combiner<T>,
-    b: usize,
-) -> Result<Vec<Chunk<T>>> {
-    let topo = c.topology();
-    let n = topo.nodes();
-    let m_local = topo.gpus_per_node();
-    let seg_blocks = |seg: usize| -> Vec<Chunk<T>> {
-        (0..n)
-            .map(|node| input.slice((node * m_local + seg) * b, b))
-            .collect()
-    };
-    let mut intra = c.intra_node()?;
-    let l = intra.rank();
-    if m_local == 1 {
-        return Ok(seg_blocks(0));
-    }
-    intra.begin_op();
-    let right = (l + 1) % m_local;
-    let left = (l + m_local - 1) % m_local;
-    use super::schedule::ring as idx;
-    let mut current = seg_blocks(idx::rs_send_block(l, m_local, 0));
-    for s in 0..m_local - 1 {
-        let recv_seg = idx::rs_recv_block(l, m_local, s);
-        let mut accs = seg_blocks(recv_seg);
-        for (j, ch) in current.into_iter().enumerate() {
-            intra.send_slice(right, (s * n + j) as u32, ch)?;
-        }
-        for (j, acc) in accs.iter_mut().enumerate() {
-            intra.recv_combine_into(left, (s * n + j) as u32, acc, combiner)?;
-        }
-        current = accs;
-    }
-    debug_assert_eq!(idx::rs_recv_block(l, m_local, m_local - 2), l);
-    Ok(current)
 }
 
 /// Two-level reduce-scatter, slice API — adapter over
@@ -294,13 +188,14 @@ pub fn hier_reduce_scatter<T: Elem>(
     slice_reduce(input, |ch| hier_reduce_scatter_chunks(c, ch, combiner, inter))
 }
 
-/// Two-level all-reduce over chunks = hierarchical RS ∘ hierarchical AG
-/// with no intermediate `Vec`: the reduced shard chunk feeds the gather
-/// directly. Pads once when `p ∤ n` and trims the padding off the
-/// returned block list as a view adjustment; the blocks concatenate to
-/// exactly `input.len()` elements. Runs the composition at every `p`
-/// (including degenerate single-rank topologies), keeping op-sequence
-/// numbering size-independent.
+/// Two-level all-reduce over chunks = hierarchical RS ∘ hierarchical AG,
+/// lowered as **one four-phase plan** (intra RS, inter RS, inter AG,
+/// intra AG) over a single slot table — the reduced shard feeds the
+/// gather directly, no intermediate `Vec`. Pads once when `p ∤ n` and
+/// trims the padding off the returned block list as a view adjustment;
+/// the blocks concatenate to exactly `input.len()` elements. Runs the
+/// composition at every `p` (including degenerate single-rank
+/// topologies), keeping op-sequence numbering size-independent.
 pub fn hier_all_reduce_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
@@ -317,8 +212,25 @@ pub fn hier_all_reduce_chunks<T: Elem>(
     } else {
         pad_chunk(&input, padded)
     };
-    let mine = hier_reduce_scatter_chunks(c, padded_input, combiner, inter)?;
-    let mut blocks = hier_all_gather_chunks(c, mine, inter)?;
+    let topo = c.topology();
+    if !topo.supports_hierarchical() {
+        return match inter.effective(p) {
+            InterAlgo::Ring => {
+                let mut blocks = ring_all_reduce_chunks(c, padded_input, combiner)?;
+                trim_blocks(&mut blocks, n);
+                Ok(blocks)
+            }
+            InterAlgo::Rec => {
+                let mut blocks = rec_all_reduce_chunks(c, padded_input, combiner)?;
+                trim_blocks(&mut blocks, n);
+                Ok(blocks)
+            }
+        };
+    }
+    let b = padded / p;
+    let blocks = (0..p).map(|i| padded_input.slice(i * b, b)).collect();
+    let mut blocks =
+        run_hier_plan(c, PlanKind::AllReduce, inter, padded, 1, blocks, Some(combiner))?;
     trim_blocks(&mut blocks, n);
     Ok(blocks)
 }
@@ -337,8 +249,8 @@ pub fn hier_all_reduce<T: Elem>(
 /// Lane-parallel two-level reduce-scatter: the intra-node phase runs
 /// unstriped (it models NVLink, which one lane already saturates), the
 /// NIC-bound inter-node phase stripes every block over `lanes` transport
-/// lanes ([`ring_reduce_scatter_blocks_lanes_chunks`]). Returns this
-/// rank's reduced block as a stripe list (concatenates to the block).
+/// lanes. Returns this rank's reduced block as a stripe list
+/// (concatenates to the block).
 ///
 /// Falls back gracefully: an effective lane count of 1 delegates to
 /// [`hier_reduce_scatter_chunks`]; a degenerate (non-hierarchical)
@@ -368,65 +280,8 @@ pub fn hier_reduce_scatter_lanes_chunks<T: Elem>(
     if inter.effective(topo.nodes()) == InterAlgo::Rec {
         return Ok(vec![hier_reduce_scatter_chunks(c, input, combiner, inter)?]);
     }
-    let blocks = intra_reduce_blocks(c, &input, combiner, b)?;
-    let mut inter_c = c.inter_node()?;
-    ring_reduce_scatter_blocks_lanes_chunks(&mut inter_c, blocks, combiner, k)
-}
-
-/// Striped two-level all-gather core over an already-striped block: the
-/// inter phase gathers the stripe lists lane-parallel, the intra ring then
-/// forwards the `n·k` stripe views (zero-copy, as in the unstriped path).
-/// Returns `p·k` chunks in global-rank-major, stripe-minor order.
-fn hier_all_gather_striped_core<T: Elem>(
-    c: &mut Communicator<T>,
-    stripes: Vec<Chunk<T>>,
-) -> Result<Vec<Chunk<T>>> {
-    let topo = c.topology();
-    let n = topo.nodes();
-    let m_local = topo.gpus_per_node();
-    let k = stripes.len();
-    let node_stripes: Vec<Chunk<T>> = {
-        let mut inter_c = c.inter_node()?;
-        ring_all_gather_striped(&mut inter_c, stripes)?
-            .into_iter()
-            .flatten()
-            .collect()
-    };
-    debug_assert_eq!(node_stripes.len(), n * k);
-    let p = n * m_local;
-    let mut out: Vec<Option<Chunk<T>>> = vec![None; p * k];
-    let place = |out: &mut Vec<Option<Chunk<T>>>, who_l: usize, list: &[Chunk<T>]| {
-        for (j, ch) in list.iter().enumerate() {
-            let (node, stripe) = (j / k, j % k);
-            out[(node * m_local + who_l) * k + stripe] = Some(ch.clone());
-        }
-    };
-    let mut intra = c.intra_node()?;
-    let l = intra.rank();
-    place(&mut out, l, &node_stripes);
-    if m_local > 1 {
-        intra.begin_op();
-        let right = (l + 1) % m_local;
-        let left = (l + m_local - 1) % m_local;
-        let nk = n * k;
-        let mut current = node_stripes;
-        for s in 0..m_local - 1 {
-            let recv_l = super::schedule::ring::ag_recv_block(l, m_local, s);
-            for (j, ch) in current.iter().enumerate() {
-                intra.send_slice(right, (s * nk + j) as u32, ch.clone())?;
-            }
-            let mut got = Vec::with_capacity(nk);
-            for j in 0..nk {
-                got.push(intra.recv_chunk(left, (s * nk + j) as u32)?);
-            }
-            place(&mut out, recv_l, &got);
-            current = got;
-        }
-    }
-    Ok(out
-        .into_iter()
-        .map(|b| b.expect("striped hierarchical schedule covers every stripe"))
-        .collect())
+    let blocks = (0..p).map(|i| input.slice(i * b, b)).collect();
+    run_hier_plan(c, PlanKind::ReduceScatter, inter, p * b, k, blocks, Some(combiner))
 }
 
 /// Lane-parallel two-level all-gather: each rank's block is split into
@@ -456,13 +311,14 @@ pub fn hier_all_gather_lanes_chunks<T: Elem>(
     if inter.effective(topo.nodes()) == InterAlgo::Rec {
         return hier_all_gather_chunks(c, input, inter);
     }
-    hier_all_gather_striped_core(c, input.stripes(k))
+    let elems = input.len();
+    run_hier_plan(c, PlanKind::AllGather, inter, elems, k, vec![input], None)
 }
 
 /// Lane-parallel two-level all-reduce: striped hierarchical RS ∘ striped
-/// hierarchical AG, the reduced stripes feeding the gather directly on
-/// their lanes. Returns chunks that concatenate to exactly `input.len()`
-/// elements (stripe-granular on the striped path).
+/// hierarchical AG as one four-phase plan, the reduced stripes feeding
+/// the gather directly on their lanes. Returns chunks that concatenate to
+/// exactly `input.len()` elements (stripe-granular on the striped path).
 pub fn hier_all_reduce_lanes_chunks<T: Elem>(
     c: &mut Communicator<T>,
     input: Chunk<T>,
@@ -493,8 +349,10 @@ pub fn hier_all_reduce_lanes_chunks<T: Elem>(
     } else {
         pad_chunk(&input, padded)
     };
-    let stripes = hier_reduce_scatter_lanes_chunks(c, padded_input, combiner, inter, k)?;
-    let mut blocks = hier_all_gather_striped_core(c, stripes)?;
+    let b = padded / p;
+    let blocks = (0..p).map(|i| padded_input.slice(i * b, b)).collect();
+    let mut blocks =
+        run_hier_plan(c, PlanKind::AllReduce, inter, padded, k, blocks, Some(combiner))?;
     trim_blocks(&mut blocks, n);
     Ok(blocks)
 }
@@ -687,25 +545,33 @@ mod tests {
 
     #[test]
     fn hier_reduce_path_is_copy_free() {
-        // The posted intra phase (contiguous per-node block receives) must
-        // keep the whole hierarchical reduce path at zero copied bytes.
-        let (nodes, gpn) = (3, 2);
-        let p = nodes * gpn;
-        let b = 4;
-        let oks = lane_world(nodes, gpn, 2).run(move |c| {
-            let input = rank_input(c.rank(), p * b);
-            let before = c.traffic().copied_bytes;
-            let _ = hier_reduce_scatter_lanes_chunks(
-                c,
-                Chunk::from_vec(input),
-                &native_combine(),
-                InterAlgo::Ring,
-                2,
-            )
-            .unwrap();
-            c.traffic().copied_bytes == before
-        });
-        assert!(oks.into_iter().all(|ok| ok), "reduce path copied bytes");
+        // Every combining receive in the hierarchical reduce path is
+        // posted — including the intra phase feeding the Rec inter phase
+        // (pre-IR the last copying path: it staged a contiguous partial
+        // per step). Zero copied bytes for both inter algorithms.
+        for (nodes, gpn, algo) in
+            [(3, 2, InterAlgo::Ring), (4, 2, InterAlgo::Rec), (2, 4, InterAlgo::Rec)]
+        {
+            let p = nodes * gpn;
+            let b = 4;
+            let oks = lane_world(nodes, gpn, 2).run(move |c| {
+                let input = rank_input(c.rank(), p * b);
+                let before = c.traffic().copied_bytes;
+                let _ = hier_reduce_scatter_lanes_chunks(
+                    c,
+                    Chunk::from_vec(input),
+                    &native_combine(),
+                    algo,
+                    2,
+                )
+                .unwrap();
+                c.traffic().copied_bytes == before
+            });
+            assert!(
+                oks.into_iter().all(|ok| ok),
+                "reduce path copied bytes (nodes={nodes} gpn={gpn} algo={algo:?})"
+            );
+        }
     }
 
     #[test]

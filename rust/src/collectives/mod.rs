@@ -1,9 +1,28 @@
-//! Collective algorithms.
+//! Collective algorithms, organized as a **builder → verifier → engine**
+//! pipeline.
 //!
-//! Every algorithm is written against the [`crate::comm::Comm`] trait, so
-//! the same code runs over the real data plane and (via the step/index
-//! helpers in [`schedule`]) drives the network simulator's message
-//! schedules.
+//! Every collective is *lowered*, not hand-coded: a [`plan::PlanSpec`]
+//! (kind × algorithm × world shape) is compiled by [`plan::build`] into a
+//! declarative per-rank [`plan::Plan`] — a slot table plus a flat op list
+//! of sends, posted receives, and posted combining receives — and a
+//! single interpreter, [`engine`], executes any plan against the
+//! [`crate::comm::Comm`] trait. The public entry points in this module
+//! are thin shells: validate the input, build the spec, run it through
+//! the statically-memoized verifier ([`plan::verify_cached`] simulates
+//! all `p` ranks in lockstep and proves deadlock-freedom, exactly-once
+//! block coverage, and byte-exactness against
+//! [`crate::runtime::expected_schedule_bytes`]), then hand the lowered
+//! plan and the input chunks to the engine. The network simulator costs
+//! the *same* plan objects ([`plan::phase_shapes`]), so the schedule that
+//! is verified is the schedule that is timed and the schedule that runs.
+//!
+//! Eight algorithm families lower through the IR: flat ring, recursive
+//! doubling/halving, the two-level hierarchical forms (ring or recursive
+//! inter-node phase — one multi-phase plan each), the binomial tree
+//! all-reduce, the rooted pt2pt collectives, the device-local shuffle,
+//! and the lane-striped variants of all of the above. The index math
+//! they share lives in [`schedule`]; the plan builders consume it, and
+//! the property tests replay it independently against the lowered ops.
 //!
 //! The `*_chunks` functions are the **canonical signatures**: chunk in,
 //! chunk(s) out, zero-copy end to end. The borrowed-slice entry points are
@@ -126,10 +145,12 @@
 //!   transport's lane count) delegates straight to the unstriped
 //!   algorithm, tags and all.
 
+pub mod engine;
 mod hierarchical;
 pub mod oracle;
 mod pccl;
 mod pipelined;
+pub mod plan;
 mod pt2pt;
 mod recursive;
 mod ring;

@@ -14,7 +14,11 @@
 //! through [`hier_all_gather_chunks`], so the per-stage hierarchy forwards
 //! views the whole way; the single copy is the final placement into the
 //! caller's contiguous output (the seed path paid a second, per-stage
-//! gather copy on top of that).
+//! gather copy on top of that). Since the Plan IR refactor every stage is
+//! itself a lowered, verified hierarchical plan — all stages of one call
+//! share a [`super::plan::PlanSpec`], so verification is paid once (the
+//! verifier cache) and the stage loop replays the same per-rank schedule
+//! with fresh chunk views.
 //!
 //! The reduce path is pipelined the same way. All-reduce is elementwise,
 //! so contiguous input slices compose directly ([`Chunk::slice`] per

@@ -1,0 +1,1710 @@
+//! The Plan IR: every collective lowered to a verifiable per-rank schedule.
+//!
+//! A [`PlanSpec`] names a collective shape — kind, algorithm, world size,
+//! element count, stripe lanes, node geometry, root. [`build`] compiles the
+//! spec into a [`Plan`] for one rank: a slot table ([`SlotInit`]) describing
+//! how caller-provided chunks seed the block map, a flat op sequence
+//! ([`Op`]) over those slots, and the slot order of the delivered outputs.
+//! The ops are exactly the posted-receive / striped-lane primitives of
+//! [`crate::comm::Comm`], so [`super::engine`] can execute any plan without
+//! knowing which algorithm produced it — and the network simulator can
+//! cost the *same* op sequence via [`phase_shapes`] instead of re-deriving
+//! index math on the side.
+//!
+//! [`verify`] statically checks a spec before any rank executes it: it
+//! builds the plans of *all* `p` ranks and runs them in a lockstep
+//! simulation where payloads are symbolic block fragments. That proves
+//! deadlock-freedom (every receive has a matching send; no rank blocks
+//! forever), coverage (all-gather delivers every block everywhere;
+//! reduce-scatter folds every contribution exactly once, alignment
+//! included), and yields the exact wire byte total for comparison against
+//! `runtime::expected_schedule_bytes`. [`verify_cached`] memoizes per spec
+//! so the data plane pays the simulation once per shape, not per call.
+//!
+//! Index math is shared with the legacy closed forms in
+//! [`super::schedule`]; the property tests in `tests/plan_properties.rs`
+//! pin the lowered plans to that math step by step.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Mutex, OnceLock};
+
+use crate::comm::stripe_lens;
+use crate::error::{Error, Result};
+
+use super::schedule::{recursive, ring};
+
+/// Which collective a plan computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlanKind {
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+    Broadcast,
+    Reduce,
+    Gather,
+    Scatter,
+    Shuffle,
+}
+
+/// Which algorithm family lowers the spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Flat ring over the world.
+    Ring,
+    /// Flat recursive doubling/halving (power-of-two world).
+    Rec,
+    /// Hierarchical: ring inter-node phase, ring intra-node phase.
+    HierRing,
+    /// Hierarchical: recursive inter-node phase (power-of-two node count),
+    /// ring intra-node phase.
+    HierRec,
+    /// Binomial-tree reduce + broadcast fan-out (all-reduce).
+    Tree,
+    /// Binomial tree rooted at `root` (broadcast / reduce).
+    Binomial,
+    /// Direct root exchange (gather / scatter).
+    Direct,
+    /// No communication — a local pointer permutation (shuffle).
+    Local,
+}
+
+/// Which communicator an op runs on. `Inter`/`Intra` peers are ranks
+/// *within* that sub-communicator (node index / local id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scope {
+    World,
+    Inter,
+    Intra,
+}
+
+/// A collective shape: everything `build` needs to lower one rank's
+/// schedule, and everything `verify` needs to simulate all of them.
+///
+/// `elems` semantics per kind: all-gather — the per-rank block length;
+/// reduce-scatter / all-reduce — the full (padded) input length, a
+/// multiple of `p`; broadcast / reduce / gather — the per-rank input
+/// length; scatter — the root's input length (`0` on non-root ranks,
+/// whose schedule does not depend on it); shuffle — the symbolic block
+/// length used by verification (the runtime permutation is length-blind).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanSpec {
+    pub kind: PlanKind,
+    pub algo: Algo,
+    /// World size (`nodes * gpn` for hierarchical algorithms).
+    pub p: usize,
+    pub elems: usize,
+    /// Stripe lanes (1 = unstriped; >1 only on ring paths).
+    pub lanes: usize,
+    /// Node count (1 for flat specs; shuffle `outer`).
+    pub nodes: usize,
+    /// GPUs per node (`p` for flat specs; shuffle `inner`).
+    pub gpn: usize,
+    /// Root rank for rooted collectives (0 otherwise).
+    pub root: usize,
+}
+
+impl PlanSpec {
+    /// A flat (single-scope) spec: ring / rec / tree over the world.
+    pub fn flat(kind: PlanKind, algo: Algo, p: usize, elems: usize, lanes: usize) -> Self {
+        Self { kind, algo, p, elems, lanes, nodes: 1, gpn: p, root: 0 }
+    }
+
+    /// A hierarchical spec over `nodes * gpn` ranks.
+    pub fn hier(
+        kind: PlanKind,
+        algo: Algo,
+        nodes: usize,
+        gpn: usize,
+        elems: usize,
+        lanes: usize,
+    ) -> Self {
+        Self { kind, algo, p: nodes * gpn, elems, lanes, nodes, gpn, root: 0 }
+    }
+
+    /// A rooted spec (broadcast / reduce / gather / scatter).
+    pub fn rooted(kind: PlanKind, algo: Algo, p: usize, elems: usize, root: usize) -> Self {
+        Self { kind, algo, p, elems, lanes: 1, nodes: 1, gpn: p, root }
+    }
+
+    /// The local shuffle (block transpose) spec over an `outer x inner`
+    /// grid; `elems` is symbolic (1) — the permutation is length-blind.
+    pub fn shuffle(outer: usize, inner: usize) -> Self {
+        Self {
+            kind: PlanKind::Shuffle,
+            algo: Algo::Local,
+            p: outer * inner,
+            elems: 1,
+            lanes: 1,
+            nodes: outer,
+            gpn: inner,
+            root: 0,
+        }
+    }
+}
+
+/// How a slot of the block map is seeded before the first op runs.
+///
+/// All input slicing happens at the entry point (O(1) chunk views); the
+/// plan only *moves* caller chunks into slots, so whole-input slots regain
+/// storage exclusivity once the engine drops the leftover input list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotInit {
+    /// No initial payload; `parts` placeholder parts (stripe arity).
+    Empty { parts: usize },
+    /// Move caller input `0` at index `i` into the slot (one part).
+    Take(usize),
+    /// Move caller input `input` in and split it into `k` stripes.
+    TakeStripes { input: usize, k: usize },
+}
+
+/// One engine primitive. `step` is the wire tag step; `part` selects a
+/// stripe of the slot; `lanes` on the fused exchanges is `0` for the
+/// plain (single-chunk) protocol and the stripe count `k` for the striped
+/// one — they are distinct wire protocols, never mixed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Bump the scope communicator's op sequence (tag freshness). Every
+    /// phase opens with one, which is also what segments a hierarchical
+    /// plan into per-scope runs.
+    BeginOp { scope: Scope },
+    /// Cost-model round boundary; the engine ignores it.
+    Round,
+    /// Post one part to `peer`. `take: true` moves the part out of the
+    /// slot (ownership transferred); `false` sends a clone (slot keeps a
+    /// shared view).
+    Send { scope: Scope, peer: usize, step: u32, slot: usize, part: usize, take: bool },
+    /// Blocking matched receive into a slot part (replaces it).
+    Recv { scope: Scope, peer: usize, step: u32, slot: usize, part: usize },
+    /// Posted combining receive: fold the matched message into the slot
+    /// part in place (`Comm::recv_combine_into`).
+    RecvCombine { scope: Scope, peer: usize, step: u32, slot: usize, part: usize },
+    /// Fused exchange: send `send_slot` (cloned), receive into
+    /// `recv_slot` (replaced). The ring all-gather step.
+    SendRecv {
+        scope: Scope,
+        send_peer: usize,
+        recv_peer: usize,
+        step: u32,
+        send_slot: usize,
+        recv_slot: usize,
+        lanes: usize,
+    },
+    /// Fused exchange with combining delivery: send `send_slot` (moved
+    /// out), fold the incoming message into `recv_slot`. The ring
+    /// reduce-scatter step.
+    SendRecvCombine {
+        scope: Scope,
+        send_peer: usize,
+        recv_peer: usize,
+        step: u32,
+        send_slot: usize,
+        recv_slot: usize,
+        lanes: usize,
+    },
+}
+
+impl Op {
+    /// The communicator scope this op runs on (`None` for round markers).
+    pub fn scope(&self) -> Option<Scope> {
+        match *self {
+            Op::Round => None,
+            Op::BeginOp { scope }
+            | Op::Send { scope, .. }
+            | Op::Recv { scope, .. }
+            | Op::RecvCombine { scope, .. }
+            | Op::SendRecv { scope, .. }
+            | Op::SendRecvCombine { scope, .. } => Some(scope),
+        }
+    }
+
+    /// Whether the op carries a combining delivery (needs a combiner).
+    pub fn combines(&self) -> bool {
+        matches!(self, Op::RecvCombine { .. } | Op::SendRecvCombine { .. })
+    }
+}
+
+/// One rank's compiled schedule.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub spec: PlanSpec,
+    pub rank: usize,
+    pub slots: Vec<SlotInit>,
+    pub ops: Vec<Op>,
+    /// Slots whose parts, flattened in order, are the collective's result.
+    pub outputs: Vec<usize>,
+}
+
+fn perr(m: String) -> Error {
+    Error::Plan(m)
+}
+
+/// Compile `spec` into rank `rank`'s plan.
+pub fn build(spec: &PlanSpec, rank: usize) -> Result<Plan> {
+    let p = spec.p;
+    if p == 0 || rank >= p {
+        return Err(perr(format!("rank {rank} out of range for p={p}")));
+    }
+    if spec.lanes == 0 {
+        return Err(perr("lanes must be >= 1".into()));
+    }
+    if spec.nodes * spec.gpn != p {
+        return Err(perr(format!(
+            "node geometry {}x{} inconsistent with p={p}",
+            spec.nodes, spec.gpn
+        )));
+    }
+    let k = spec.lanes;
+    use Algo::*;
+    use PlanKind::*;
+    match (spec.kind, spec.algo) {
+        (AllGather, Ring) => Ok(build_flat_ag(spec, rank, false)),
+        (AllGather, Rec) => {
+            require_unstriped(spec)?;
+            require_pow2(p, "recursive doubling")?;
+            Ok(build_flat_ag(spec, rank, true))
+        }
+        (ReduceScatter, Ring) => {
+            require_divisible(spec)?;
+            Ok(build_flat_rs(spec, rank, false))
+        }
+        (ReduceScatter, Rec) => {
+            require_unstriped(spec)?;
+            require_pow2(p, "recursive halving")?;
+            require_divisible(spec)?;
+            Ok(build_flat_rs(spec, rank, true))
+        }
+        (AllReduce, Ring) => {
+            require_divisible(spec)?;
+            Ok(build_flat_ar(spec, rank, false))
+        }
+        (AllReduce, Rec) => {
+            require_unstriped(spec)?;
+            require_pow2(p, "recursive all-reduce")?;
+            require_divisible(spec)?;
+            Ok(build_flat_ar(spec, rank, true))
+        }
+        (AllGather | ReduceScatter | AllReduce, HierRing | HierRec) => {
+            if spec.algo == HierRec {
+                require_unstriped(spec)?;
+                require_pow2(spec.nodes, "recursive inter-node phase")?;
+            }
+            if spec.kind != AllGather {
+                require_divisible(spec)?;
+            }
+            build_hier(spec, rank)
+        }
+        (AllReduce, Tree) => {
+            require_unstriped(spec)?;
+            Ok(build_tree_ar(spec, rank))
+        }
+        (Broadcast, Binomial) => {
+            require_root(spec)?;
+            Ok(build_broadcast(spec, rank))
+        }
+        (Reduce, Binomial) => {
+            require_root(spec)?;
+            Ok(build_reduce(spec, rank))
+        }
+        (Gather, Direct) => {
+            require_root(spec)?;
+            Ok(build_gather(spec, rank))
+        }
+        (Scatter, Direct) => {
+            require_root(spec)?;
+            Ok(build_scatter(spec, rank))
+        }
+        (Shuffle, Local) => Ok(build_shuffle(spec, rank)),
+        (kind, algo) => Err(perr(format!("no lowering for {kind:?} via {algo:?} (lanes {k})"))),
+    }
+}
+
+fn require_pow2(n: usize, what: &str) -> Result<()> {
+    if n.is_power_of_two() {
+        Ok(())
+    } else {
+        Err(perr(format!("{what} requires a power-of-two rank count, got {n}")))
+    }
+}
+
+fn require_unstriped(spec: &PlanSpec) -> Result<()> {
+    if spec.lanes == 1 {
+        Ok(())
+    } else {
+        Err(perr(format!("{:?}/{:?} has no striped lowering", spec.kind, spec.algo)))
+    }
+}
+
+fn require_divisible(spec: &PlanSpec) -> Result<()> {
+    if spec.elems % spec.p == 0 {
+        Ok(())
+    } else {
+        Err(perr(format!(
+            "{:?} input of {} elems not divisible by p={}",
+            spec.kind, spec.elems, spec.p
+        )))
+    }
+}
+
+fn require_root(spec: &PlanSpec) -> Result<()> {
+    if spec.root < spec.p {
+        Ok(())
+    } else {
+        Err(perr(format!("root {} out of range for p={}", spec.root, spec.p)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Op emitters (composable phases shared by flat and hierarchical builders)
+// ---------------------------------------------------------------------------
+
+/// Ring all-gather phase over ranks `0..p` of `scope`; `lanes` is the
+/// striped-exchange stripe count (0 = plain protocol).
+fn ring_ag_ops(
+    ops: &mut Vec<Op>,
+    scope: Scope,
+    r: usize,
+    p: usize,
+    slot_of: &dyn Fn(usize) -> usize,
+    lanes: usize,
+) {
+    ops.push(Op::BeginOp { scope });
+    if p <= 1 {
+        return;
+    }
+    let right = (r + 1) % p;
+    let left = (r + p - 1) % p;
+    for s in 0..ring::steps(p) {
+        ops.push(Op::Round);
+        ops.push(Op::SendRecv {
+            scope,
+            send_peer: right,
+            recv_peer: left,
+            step: s as u32,
+            send_slot: slot_of(ring::ag_send_block(r, p, s)),
+            recv_slot: slot_of(ring::ag_recv_block(r, p, s)),
+            lanes,
+        });
+    }
+}
+
+/// Ring reduce-scatter phase: the traveling-partial schedule. After the
+/// phase, `slot_of(r)` holds the fully reduced block of rank `r`.
+fn ring_rs_ops(
+    ops: &mut Vec<Op>,
+    scope: Scope,
+    r: usize,
+    p: usize,
+    slot_of: &dyn Fn(usize) -> usize,
+    lanes: usize,
+) {
+    ops.push(Op::BeginOp { scope });
+    if p <= 1 {
+        return;
+    }
+    let right = (r + 1) % p;
+    let left = (r + p - 1) % p;
+    for s in 0..ring::steps(p) {
+        ops.push(Op::Round);
+        ops.push(Op::SendRecvCombine {
+            scope,
+            send_peer: right,
+            recv_peer: left,
+            step: s as u32,
+            send_slot: slot_of(ring::rs_send_block(r, p, s)),
+            recv_slot: slot_of(ring::rs_recv_block(r, p, s)),
+            lanes,
+        });
+    }
+}
+
+/// Recursive-doubling all-gather phase (power-of-two `p`, plain protocol).
+fn rec_ag_ops(ops: &mut Vec<Op>, scope: Scope, r: usize, p: usize, slot_of: &dyn Fn(usize) -> usize) {
+    ops.push(Op::BeginOp { scope });
+    for s in 0..recursive::steps(p) {
+        ops.push(Op::Round);
+        let partner = recursive::ag_partner(r, s);
+        let (lo, hi) = recursive::ag_owned_range(r, s);
+        let (plo, phi) = recursive::ag_owned_range(partner, s);
+        for i in lo..hi {
+            ops.push(Op::Send {
+                scope,
+                peer: partner,
+                step: (s * p + i) as u32,
+                slot: slot_of(i),
+                part: 0,
+                take: false,
+            });
+        }
+        for i in plo..phi {
+            ops.push(Op::Recv {
+                scope,
+                peer: partner,
+                step: (s * p + i) as u32,
+                slot: slot_of(i),
+                part: 0,
+            });
+        }
+    }
+}
+
+/// Recursive-halving reduce-scatter phase (power-of-two `p`, plain
+/// protocol). After the phase, `slot_of(r)` holds the reduced block.
+fn rec_rs_ops(ops: &mut Vec<Op>, scope: Scope, r: usize, p: usize, slot_of: &dyn Fn(usize) -> usize) {
+    ops.push(Op::BeginOp { scope });
+    let (mut lo, mut hi) = (0usize, p);
+    for s in 0..recursive::steps(p) {
+        ops.push(Op::Round);
+        let partner = recursive::rs_partner(r, p, s);
+        let mid = (lo + hi) / 2;
+        let (keep, send) = if r < mid { ((lo, mid), (mid, hi)) } else { ((mid, hi), (lo, mid)) };
+        for i in send.0..send.1 {
+            ops.push(Op::Send {
+                scope,
+                peer: partner,
+                step: (s * p + i) as u32,
+                slot: slot_of(i),
+                part: 0,
+                take: false,
+            });
+        }
+        for i in keep.0..keep.1 {
+            ops.push(Op::RecvCombine {
+                scope,
+                peer: partner,
+                step: (s * p + i) as u32,
+                slot: slot_of(i),
+                part: 0,
+            });
+        }
+        lo = keep.0;
+        hi = keep.1;
+    }
+    debug_assert!(recursive::steps(p) == 0 || (lo, hi) == (r, r + 1));
+}
+
+/// Intra-node ring all-gather phase of a hierarchical plan: rotate every
+/// node-column's blocks around the local ring, one plain send per
+/// `(node block, stripe)` pair. Slot `j * m + l` is node-block `j` of
+/// local rank `l`; `k` is the stripe arity of each slot (1 = unstriped).
+fn intra_ag_ops(ops: &mut Vec<Op>, l: usize, m: usize, n: usize, k: usize) {
+    ops.push(Op::BeginOp { scope: Scope::Intra });
+    if m <= 1 {
+        return;
+    }
+    let right = (l + 1) % m;
+    let left = (l + m - 1) % m;
+    let nk = n * k;
+    for s in 0..ring::steps(m) {
+        ops.push(Op::Round);
+        let send_l = ring::ag_send_block(l, m, s);
+        let recv_l = ring::ag_recv_block(l, m, s);
+        for j in 0..n {
+            for t in 0..k {
+                ops.push(Op::Send {
+                    scope: Scope::Intra,
+                    peer: right,
+                    step: (s * nk + j * k + t) as u32,
+                    slot: j * m + send_l,
+                    part: t,
+                    take: false,
+                });
+            }
+        }
+        for j in 0..n {
+            for t in 0..k {
+                ops.push(Op::Recv {
+                    scope: Scope::Intra,
+                    peer: left,
+                    step: (s * nk + j * k + t) as u32,
+                    slot: j * m + recv_l,
+                    part: t,
+                });
+            }
+        }
+    }
+}
+
+/// Intra-node ring reduce-scatter phase of a hierarchical plan: for every
+/// node block `j`, combine local segment `l` across the node's ranks via
+/// the traveling-partial schedule (posted combining receives, moved
+/// sends). After the phase, slot `j * m + l` holds this rank's partial of
+/// global block `j * m + l`.
+fn intra_rs_ops(ops: &mut Vec<Op>, l: usize, m: usize, n: usize) {
+    ops.push(Op::BeginOp { scope: Scope::Intra });
+    if m <= 1 {
+        return;
+    }
+    let right = (l + 1) % m;
+    let left = (l + m - 1) % m;
+    for s in 0..ring::steps(m) {
+        ops.push(Op::Round);
+        let send_seg = ring::rs_send_block(l, m, s);
+        let recv_seg = ring::rs_recv_block(l, m, s);
+        for j in 0..n {
+            ops.push(Op::Send {
+                scope: Scope::Intra,
+                peer: right,
+                step: (s * n + j) as u32,
+                slot: j * m + send_seg,
+                part: 0,
+                take: true,
+            });
+        }
+        for j in 0..n {
+            ops.push(Op::RecvCombine {
+                scope: Scope::Intra,
+                peer: left,
+                step: (s * n + j) as u32,
+                slot: j * m + recv_seg,
+                part: 0,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builders
+// ---------------------------------------------------------------------------
+
+fn striped(k: usize) -> usize {
+    if k > 1 { k } else { 0 }
+}
+
+fn build_flat_ag(spec: &PlanSpec, r: usize, rec: bool) -> Plan {
+    let (p, k) = (spec.p, spec.lanes);
+    let slots = (0..p)
+        .map(|i| {
+            if i == r {
+                if k > 1 { SlotInit::TakeStripes { input: 0, k } } else { SlotInit::Take(0) }
+            } else {
+                SlotInit::Empty { parts: k }
+            }
+        })
+        .collect();
+    let mut ops = Vec::new();
+    if rec {
+        rec_ag_ops(&mut ops, Scope::World, r, p, &|i| i);
+    } else {
+        ring_ag_ops(&mut ops, Scope::World, r, p, &|i| i, striped(k));
+    }
+    Plan { spec: *spec, rank: r, slots, ops, outputs: (0..p).collect() }
+}
+
+/// Reduce-scatter / all-reduce slot table: every caller block is moved in;
+/// this rank's own block is pre-striped when lanes are in play (it is the
+/// final accumulator, and at `p == 1` the untouched output).
+fn rs_slots(r: usize, p: usize, k: usize) -> Vec<SlotInit> {
+    (0..p)
+        .map(|i| {
+            if i == r && k > 1 {
+                SlotInit::TakeStripes { input: i, k }
+            } else {
+                SlotInit::Take(i)
+            }
+        })
+        .collect()
+}
+
+fn build_flat_rs(spec: &PlanSpec, r: usize, rec: bool) -> Plan {
+    let (p, k) = (spec.p, spec.lanes);
+    let mut ops = Vec::new();
+    if rec {
+        rec_rs_ops(&mut ops, Scope::World, r, p, &|i| i);
+    } else {
+        ring_rs_ops(&mut ops, Scope::World, r, p, &|i| i, striped(k));
+    }
+    Plan { spec: *spec, rank: r, slots: rs_slots(r, p, k), ops, outputs: vec![r] }
+}
+
+/// All-reduce = reduce-scatter then all-gather over the *same* slot
+/// table: after the RS phase only slot `r` holds payload (the reduced
+/// block), which is exactly the all-gather phase's initial condition.
+fn build_flat_ar(spec: &PlanSpec, r: usize, rec: bool) -> Plan {
+    let (p, k) = (spec.p, spec.lanes);
+    let mut ops = Vec::new();
+    if rec {
+        rec_rs_ops(&mut ops, Scope::World, r, p, &|i| i);
+        rec_ag_ops(&mut ops, Scope::World, r, p, &|i| i);
+    } else {
+        ring_rs_ops(&mut ops, Scope::World, r, p, &|i| i, striped(k));
+        ring_ag_ops(&mut ops, Scope::World, r, p, &|i| i, striped(k));
+    }
+    Plan { spec: *spec, rank: r, slots: rs_slots(r, p, k), ops, outputs: (0..p).collect() }
+}
+
+/// Hierarchical lowering. Slot `j * m + l` is global block of rank
+/// `(node j, local l)`; the inter-node phase runs over this rank's column
+/// `{ j * m + l : j }`, the intra-node phase rotates/folds rows.
+fn build_hier(spec: &PlanSpec, rank: usize) -> Result<Plan> {
+    let (n, m, k) = (spec.nodes, spec.gpn, spec.lanes);
+    let p = spec.p;
+    let (nd, l) = (rank / m, rank % m);
+    let rec = spec.algo == Algo::HierRec;
+    let col = |j: usize| j * m + l;
+    let mut ops = Vec::new();
+    let (slots, outputs) = match spec.kind {
+        PlanKind::AllGather => {
+            // Inter: gather the column's blocks across nodes; intra:
+            // rotate every node's column around the local ring.
+            if rec {
+                rec_ag_ops(&mut ops, Scope::Inter, nd, n, &col);
+            } else {
+                ring_ag_ops(&mut ops, Scope::Inter, nd, n, &col, striped(k));
+            }
+            intra_ag_ops(&mut ops, l, m, n, k);
+            let slots = (0..p)
+                .map(|i| {
+                    if i == rank {
+                        if k > 1 {
+                            SlotInit::TakeStripes { input: 0, k }
+                        } else {
+                            SlotInit::Take(0)
+                        }
+                    } else {
+                        SlotInit::Empty { parts: k }
+                    }
+                })
+                .collect();
+            (slots, (0..p).collect())
+        }
+        PlanKind::ReduceScatter => {
+            // Intra: fold local segment l of every node block; inter:
+            // reduce-scatter the column of partials across nodes.
+            intra_rs_ops(&mut ops, l, m, n);
+            if rec {
+                rec_rs_ops(&mut ops, Scope::Inter, nd, n, &col);
+            } else {
+                ring_rs_ops(&mut ops, Scope::Inter, nd, n, &col, striped(k));
+            }
+            ((0..p).map(SlotInit::Take).collect(), vec![rank])
+        }
+        PlanKind::AllReduce => {
+            intra_rs_ops(&mut ops, l, m, n);
+            if rec {
+                rec_rs_ops(&mut ops, Scope::Inter, nd, n, &col);
+                rec_ag_ops(&mut ops, Scope::Inter, nd, n, &col);
+            } else {
+                ring_rs_ops(&mut ops, Scope::Inter, nd, n, &col, striped(k));
+                ring_ag_ops(&mut ops, Scope::Inter, nd, n, &col, striped(k));
+            }
+            intra_ag_ops(&mut ops, l, m, n, k);
+            ((0..p).map(SlotInit::Take).collect(), (0..p).collect())
+        }
+        kind => return Err(perr(format!("no hierarchical lowering for {kind:?}"))),
+    };
+    Ok(Plan { spec: *spec, rank, slots, ops, outputs })
+}
+
+/// Binomial-tree all-reduce rooted at rank 0: reduce up the tree (moved
+/// leaf sends, posted combining receives), then broadcast the result back
+/// down the same tree.
+fn build_tree_ar(spec: &PlanSpec, r: usize) -> Plan {
+    let p = spec.p;
+    let mut ops = vec![Op::BeginOp { scope: Scope::World }];
+    let mut recv_mask = p.next_power_of_two();
+    let mut mask = 1usize;
+    while mask < p {
+        let step = mask.trailing_zeros();
+        if r & mask != 0 {
+            ops.push(Op::Round);
+            ops.push(Op::Send {
+                scope: Scope::World,
+                peer: r & !mask,
+                step,
+                slot: 0,
+                part: 0,
+                take: true,
+            });
+            recv_mask = mask;
+            break;
+        }
+        let src = r | mask;
+        if src < p {
+            ops.push(Op::Round);
+            ops.push(Op::RecvCombine { scope: Scope::World, peer: src, step, slot: 0, part: 0 });
+        }
+        mask <<= 1;
+    }
+    if r != 0 {
+        ops.push(Op::Round);
+        ops.push(Op::Recv {
+            scope: Scope::World,
+            peer: r & !recv_mask,
+            step: 0x100 + recv_mask.trailing_zeros(),
+            slot: 0,
+            part: 0,
+        });
+    }
+    let mut child_mask = recv_mask >> 1;
+    while child_mask > 0 {
+        let dst = r | child_mask;
+        if dst != r && dst < p {
+            ops.push(Op::Round);
+            ops.push(Op::Send {
+                scope: Scope::World,
+                peer: dst,
+                step: 0x100 + child_mask.trailing_zeros(),
+                slot: 0,
+                part: 0,
+                take: false,
+            });
+        }
+        child_mask >>= 1;
+    }
+    Plan { spec: *spec, rank: r, slots: vec![SlotInit::Take(0)], ops, outputs: vec![0] }
+}
+
+fn rel(rank: usize, root: usize, p: usize) -> usize {
+    (rank + p - root) % p
+}
+
+fn unrel(r: usize, root: usize, p: usize) -> usize {
+    (r + root) % p
+}
+
+/// Binomial broadcast from `root`: receive from the parent in
+/// root-relative rank space, fan out to children highest-bit-first.
+fn build_broadcast(spec: &PlanSpec, rank: usize) -> Plan {
+    let (p, root) = (spec.p, spec.root);
+    let r = rel(rank, root, p);
+    let mut ops = vec![Op::BeginOp { scope: Scope::World }];
+    let mut recv_mask = p.next_power_of_two();
+    if r != 0 {
+        let mut mask = 1usize;
+        while r & mask == 0 {
+            mask <<= 1;
+        }
+        recv_mask = mask;
+        ops.push(Op::Round);
+        ops.push(Op::Recv {
+            scope: Scope::World,
+            peer: unrel(r & !mask, root, p),
+            step: mask.trailing_zeros(),
+            slot: 0,
+            part: 0,
+        });
+    }
+    let mut child_mask = recv_mask >> 1;
+    while child_mask > 0 {
+        let dst_rel = r | child_mask;
+        if dst_rel != r && dst_rel < p {
+            ops.push(Op::Round);
+            ops.push(Op::Send {
+                scope: Scope::World,
+                peer: unrel(dst_rel, root, p),
+                step: child_mask.trailing_zeros(),
+                slot: 0,
+                part: 0,
+                take: false,
+            });
+        }
+        child_mask >>= 1;
+    }
+    let slots = if r == 0 { vec![SlotInit::Take(0)] } else { vec![SlotInit::Empty { parts: 1 }] };
+    Plan { spec: *spec, rank, slots, ops, outputs: vec![0] }
+}
+
+/// Binomial reduce to `root`: fold children's partials into the local
+/// accumulator, then move it to the parent. Only the root keeps output.
+fn build_reduce(spec: &PlanSpec, rank: usize) -> Plan {
+    let (p, root) = (spec.p, spec.root);
+    let r = rel(rank, root, p);
+    let mut ops = vec![Op::BeginOp { scope: Scope::World }];
+    let mut mask = 1usize;
+    while mask < p {
+        let step = mask.trailing_zeros();
+        if r & mask != 0 {
+            ops.push(Op::Round);
+            ops.push(Op::Send {
+                scope: Scope::World,
+                peer: unrel(r & !mask, root, p),
+                step,
+                slot: 0,
+                part: 0,
+                take: true,
+            });
+            break;
+        }
+        let src_rel = r | mask;
+        if src_rel < p {
+            ops.push(Op::Round);
+            ops.push(Op::RecvCombine {
+                scope: Scope::World,
+                peer: unrel(src_rel, root, p),
+                step,
+                slot: 0,
+                part: 0,
+            });
+        }
+        mask <<= 1;
+    }
+    let outputs = if r == 0 { vec![0] } else { Vec::new() };
+    Plan { spec: *spec, rank, slots: vec![SlotInit::Take(0)], ops, outputs }
+}
+
+/// Direct gather to `root`: every non-root rank moves its input to the
+/// root; the root receives one block per peer into its block map.
+fn build_gather(spec: &PlanSpec, rank: usize) -> Plan {
+    let (p, root) = (spec.p, spec.root);
+    let mut ops = vec![Op::BeginOp { scope: Scope::World }];
+    if rank == root {
+        let slots = (0..p)
+            .map(|i| if i == root { SlotInit::Take(0) } else { SlotInit::Empty { parts: 1 } })
+            .collect();
+        for peer in 0..p {
+            if peer != root {
+                ops.push(Op::Round);
+                ops.push(Op::Recv { scope: Scope::World, peer, step: 0, slot: peer, part: 0 });
+            }
+        }
+        Plan { spec: *spec, rank, slots, ops, outputs: (0..p).collect() }
+    } else {
+        ops.push(Op::Round);
+        ops.push(Op::Send { scope: Scope::World, peer: root, step: 0, slot: 0, part: 0, take: true });
+        Plan { spec: *spec, rank, slots: vec![SlotInit::Take(0)], ops, outputs: Vec::new() }
+    }
+}
+
+/// Direct scatter from `root`: the root moves block `i` to rank `i` and
+/// keeps its own; non-roots receive theirs.
+fn build_scatter(spec: &PlanSpec, rank: usize) -> Plan {
+    let (p, root) = (spec.p, spec.root);
+    let mut ops = vec![Op::BeginOp { scope: Scope::World }];
+    if rank == root {
+        for peer in 0..p {
+            if peer != root {
+                ops.push(Op::Round);
+                ops.push(Op::Send {
+                    scope: Scope::World,
+                    peer,
+                    step: 0,
+                    slot: peer,
+                    part: 0,
+                    take: true,
+                });
+            }
+        }
+        let slots = (0..p).map(SlotInit::Take).collect();
+        Plan { spec: *spec, rank, slots, ops, outputs: vec![root] }
+    } else {
+        ops.push(Op::Round);
+        ops.push(Op::Recv { scope: Scope::World, peer: root, step: 0, slot: 0, part: 0 });
+        Plan { spec: *spec, rank, slots: vec![SlotInit::Empty { parts: 1 }], ops, outputs: vec![0] }
+    }
+}
+
+/// Local block transpose: no ops, outputs are a permutation of the moved
+/// inputs (blocks `i * inner + j` emitted in `(j, i)` order).
+fn build_shuffle(spec: &PlanSpec, rank: usize) -> Plan {
+    let (outer, inner) = (spec.nodes, spec.gpn);
+    let mut outputs = Vec::with_capacity(outer * inner);
+    for j in 0..inner {
+        for i in 0..outer {
+            outputs.push(i * inner + j);
+        }
+    }
+    Plan {
+        spec: *spec,
+        rank,
+        slots: (0..outer * inner).map(SlotInit::Take).collect(),
+        ops: Vec::new(),
+        outputs,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cost-model shapes: the netsim reads round structure off the lowered plan
+// ---------------------------------------------------------------------------
+
+/// Element counts of one cost-model round (rank-0 perspective: what one
+/// rank sends and combines between two round markers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundShape {
+    /// Elements this rank posts to the wire during the round.
+    pub sent_elems: u64,
+    /// Elements folded through the combiner during the round.
+    pub combine_elems: u64,
+}
+
+/// One phase (BeginOp-delimited op segment) of a lowered plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PhaseShape {
+    pub scope: Scope,
+    pub rounds: Vec<RoundShape>,
+}
+
+/// Uniform block length of the spec (what one slot part sums to).
+pub fn block_elems(spec: &PlanSpec) -> usize {
+    // The tree all-reduce is unblocked: the whole buffer travels as one
+    // unit (no reduce-scatter decomposition), so the block is the input.
+    if spec.algo == Algo::Tree {
+        return spec.elems;
+    }
+    match spec.kind {
+        PlanKind::AllGather | PlanKind::Broadcast | PlanKind::Reduce | PlanKind::Gather => {
+            spec.elems
+        }
+        PlanKind::ReduceScatter | PlanKind::AllReduce | PlanKind::Scatter => {
+            spec.elems / spec.p.max(1)
+        }
+        PlanKind::Shuffle => spec.elems,
+    }
+}
+
+/// Walk rank 0's lowered plan and report its per-phase, per-round element
+/// counts — the structure the network simulator costs. Collectives are
+/// SPMD-symmetric, so rank 0 is representative of every rank's per-round
+/// volume.
+pub fn phase_shapes(spec: &PlanSpec) -> Result<Vec<PhaseShape>> {
+    let plan = build(spec, 0)?;
+    let b = block_elems(spec) as u64;
+    // Stripe arity per slot, tracked so per-part sends cost stripe lengths.
+    let mut arity: Vec<usize> = plan
+        .slots
+        .iter()
+        .map(|s| match *s {
+            SlotInit::Empty { parts } => parts,
+            SlotInit::Take(_) => 1,
+            SlotInit::TakeStripes { k, .. } => k,
+        })
+        .collect();
+    let part_len = |arity: usize, part: usize| -> u64 {
+        if arity <= 1 { b } else { stripe_lens(b as usize, arity)[part] as u64 }
+    };
+    let mut phases: Vec<PhaseShape> = Vec::new();
+    for op in &plan.ops {
+        match *op {
+            Op::BeginOp { scope } => phases.push(PhaseShape { scope, rounds: Vec::new() }),
+            Op::Round => {
+                let ph = phases.last_mut().ok_or_else(|| perr("round before any phase".into()))?;
+                ph.rounds.push(RoundShape { sent_elems: 0, combine_elems: 0 });
+            }
+            _ => {
+                let ph = phases.last_mut().ok_or_else(|| perr("op before any phase".into()))?;
+                if ph.rounds.is_empty() {
+                    ph.rounds.push(RoundShape { sent_elems: 0, combine_elems: 0 });
+                }
+                let round = ph.rounds.last_mut().expect("round present");
+                match *op {
+                    Op::Send { slot, part, .. } => {
+                        round.sent_elems += part_len(arity[slot], part);
+                    }
+                    Op::Recv { slot, part, .. } => {
+                        arity[slot] = arity[slot].max(part + 1);
+                    }
+                    Op::RecvCombine { slot, part, .. } => {
+                        round.combine_elems += part_len(arity[slot], part);
+                    }
+                    Op::SendRecv { recv_slot, lanes, .. } => {
+                        round.sent_elems += b;
+                        arity[recv_slot] = lanes.max(1);
+                    }
+                    Op::SendRecvCombine { recv_slot, lanes, .. } => {
+                        round.sent_elems += b;
+                        round.combine_elems += b;
+                        arity[recv_slot] = lanes.max(1);
+                    }
+                    Op::BeginOp { .. } | Op::Round => unreachable!(),
+                }
+            }
+        }
+    }
+    Ok(phases)
+}
+
+// ---------------------------------------------------------------------------
+// Static verification: all-rank lockstep simulation over symbolic payloads
+// ---------------------------------------------------------------------------
+
+/// What the verifier proves beyond pass/fail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VerifyStats {
+    /// Total elements posted to the wire across all ranks — multiply by
+    /// the element width for the schedule's exact byte total.
+    pub total_sent_elems: u64,
+}
+
+/// A contiguous fragment of origin rank `origin`'s input block `block`:
+/// source elements `[lo, lo + len)`.
+#[derive(Clone, Copy, Debug)]
+struct Atom {
+    origin: usize,
+    block: usize,
+    lo: usize,
+    len: usize,
+}
+
+/// A symbolic payload: `layers` are summands (one per folded
+/// contribution), each an ordered atom list covering the value's length.
+#[derive(Clone, Debug)]
+struct Val {
+    len: usize,
+    layers: Vec<Vec<Atom>>,
+}
+
+impl Val {
+    fn solid(origin: usize, block: usize, len: usize) -> Self {
+        let layer = if len == 0 { Vec::new() } else { vec![Atom { origin, block, lo: 0, len }] };
+        Val { len, layers: vec![layer] }
+    }
+
+    fn combine(&mut self, other: Val, at: &str) -> Result<()> {
+        if self.len != other.len {
+            return Err(perr(format!(
+                "{at}: combine of {}-elem value into {}-elem accumulator",
+                other.len, self.len
+            )));
+        }
+        self.layers.extend(other.layers);
+        Ok(())
+    }
+}
+
+/// Split a value at the stripe boundaries of its length.
+fn split_val(v: &Val, k: usize) -> Vec<Val> {
+    let lens = stripe_lens(v.len, k);
+    let mut outs: Vec<Val> =
+        lens.iter().map(|&l| Val { len: l, layers: Vec::new() }).collect();
+    for layer in &v.layers {
+        let mut iter = layer.iter().copied();
+        let mut cur = iter.next();
+        for (si, &sl) in lens.iter().enumerate() {
+            let mut need = sl;
+            let mut seg = Vec::new();
+            while need > 0 {
+                let a = cur.expect("layer shorter than value length");
+                if a.len <= need {
+                    need -= a.len;
+                    seg.push(a);
+                    cur = iter.next();
+                } else {
+                    seg.push(Atom { len: need, ..a });
+                    cur = Some(Atom { lo: a.lo + need, len: a.len - need, ..a });
+                    need = 0;
+                }
+            }
+            outs[si].layers.push(seg);
+        }
+        debug_assert!(cur.is_none(), "layer longer than value length");
+    }
+    outs
+}
+
+/// The symbolic inputs rank `rank` contributes under `spec` (mirrors the
+/// entry-point slicing: one value per caller chunk).
+fn input_vals(spec: &PlanSpec, rank: usize) -> Vec<Val> {
+    let b = block_elems(spec);
+    // Tree all-reduce: every rank contributes its whole buffer as the
+    // single block 0 (no per-destination decomposition).
+    if spec.algo == Algo::Tree {
+        return vec![Val::solid(rank, 0, b)];
+    }
+    match spec.kind {
+        PlanKind::AllGather | PlanKind::Reduce | PlanKind::Gather => {
+            vec![Val::solid(rank, 0, b)]
+        }
+        PlanKind::Broadcast => {
+            if rank == spec.root { vec![Val::solid(rank, 0, b)] } else { Vec::new() }
+        }
+        PlanKind::ReduceScatter | PlanKind::AllReduce => {
+            (0..spec.p).map(|i| Val::solid(rank, i, b)).collect()
+        }
+        PlanKind::Scatter => {
+            if rank == spec.root {
+                (0..spec.p).map(|i| Val::solid(rank, i, b)).collect()
+            } else {
+                Vec::new()
+            }
+        }
+        PlanKind::Shuffle => (0..spec.p).map(|i| Val::solid(rank, i, b)).collect(),
+    }
+}
+
+/// The (origins, block, length) an output position must cover exactly.
+fn expected_output(spec: &PlanSpec, rank: usize, oi: usize) -> (Vec<usize>, usize, usize) {
+    let b = block_elems(spec);
+    let p = spec.p;
+    // Tree all-reduce: one output, the whole buffer folded across ranks.
+    if spec.algo == Algo::Tree {
+        return ((0..p).collect(), 0, b);
+    }
+    match spec.kind {
+        PlanKind::AllGather | PlanKind::Gather => (vec![oi], 0, b),
+        PlanKind::ReduceScatter => ((0..p).collect(), rank, b),
+        PlanKind::AllReduce => ((0..p).collect(), oi, b),
+        PlanKind::Broadcast => (vec![spec.root], 0, b),
+        PlanKind::Reduce => ((0..p).collect(), 0, b),
+        PlanKind::Scatter => (vec![spec.root], rank, b),
+        PlanKind::Shuffle => {
+            let outer = spec.nodes;
+            let (j, i) = (oi / outer, oi % outer);
+            (vec![rank], i * spec.gpn + j, b)
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct ChanKey {
+    src: usize,
+    dst: usize,
+    scope: u8,
+    epoch: u32,
+    step: u32,
+    striped: bool,
+}
+
+fn scope_disc(s: Scope) -> u8 {
+    match s {
+        Scope::World => 0,
+        Scope::Inter => 1,
+        Scope::Intra => 2,
+    }
+}
+
+/// Map a scope-local peer index to a global rank.
+fn global_peer(spec: &PlanSpec, rank: usize, scope: Scope, peer: usize) -> usize {
+    match scope {
+        Scope::World => peer,
+        Scope::Inter => peer * spec.gpn + rank % spec.gpn,
+        Scope::Intra => (rank / spec.gpn) * spec.gpn + peer,
+    }
+}
+
+struct RankSim {
+    plan: Plan,
+    slots: Vec<Vec<Option<Val>>>,
+    cursor: usize,
+    /// BeginOps executed so far: the tag-freshness dimension of the
+    /// channel key. Plans are SPMD-uniform in their BeginOp structure, so
+    /// matching epochs is faithful to (or stricter than) the transport's
+    /// FIFO-per-`(src, tag)` matching.
+    epoch: u32,
+    /// Send half of a fused exchange already posted (recv still pending).
+    sent_half: bool,
+}
+
+type Chans = HashMap<ChanKey, VecDeque<Vec<Val>>>;
+
+impl RankSim {
+    fn new(plan: Plan, spec: &PlanSpec) -> Result<Self> {
+        let mut inputs: Vec<Option<Val>> =
+            input_vals(spec, plan.rank).into_iter().map(Some).collect();
+        let mut slots = Vec::with_capacity(plan.slots.len());
+        for init in &plan.slots {
+            slots.push(match *init {
+                SlotInit::Empty { parts } => vec![None; parts],
+                SlotInit::Take(i) => {
+                    vec![Some(take_input(&mut inputs, i, plan.rank)?)]
+                }
+                SlotInit::TakeStripes { input, k } => {
+                    let v = take_input(&mut inputs, input, plan.rank)?;
+                    split_val(&v, k).into_iter().map(Some).collect()
+                }
+            });
+        }
+        Ok(RankSim { plan, slots, cursor: 0, epoch: 0, sent_half: false })
+    }
+
+    fn done(&self) -> bool {
+        self.cursor >= self.plan.ops.len()
+    }
+
+    fn key(&self, spec: &PlanSpec, scope: Scope, peer: usize, step: u32, striped: bool, incoming: bool) -> ChanKey {
+        let me = self.plan.rank;
+        let other = global_peer(spec, me, scope, peer);
+        let (src, dst) = if incoming { (other, me) } else { (me, other) };
+        ChanKey { src, dst, scope: scope_disc(scope), epoch: self.epoch, step, striped }
+    }
+
+    fn part(&mut self, slot: usize, part: usize, take: bool, at: &str) -> Result<Val> {
+        let parts = self
+            .slots
+            .get_mut(slot)
+            .ok_or_else(|| perr(format!("{at}: slot {slot} out of range")))?;
+        let cell = parts
+            .get_mut(part)
+            .ok_or_else(|| perr(format!("{at}: part {part} out of range for slot {slot}")))?;
+        let v = if take { cell.take() } else { cell.clone() };
+        v.ok_or_else(|| perr(format!("{at}: slot {slot} part {part} is empty")))
+    }
+
+    fn put(&mut self, slot: usize, part: usize, v: Val) {
+        let parts = &mut self.slots[slot];
+        if parts.len() <= part {
+            parts.resize(part + 1, None);
+        }
+        parts[part] = Some(v);
+    }
+
+    /// The parts posted by a fused exchange: the whole slot, striped on
+    /// demand when the protocol is striped but the slot is still one part
+    /// (the stripe-at-take semantics of the lane data plane).
+    fn exchange_parts(&mut self, slot: usize, lanes: usize, take: bool, at: &str) -> Result<Vec<Val>> {
+        if lanes == 0 {
+            return Ok(vec![self.part(slot, 0, take, at)?]);
+        }
+        let arity = self.slots.get(slot).map(Vec::len).unwrap_or(0);
+        if arity == lanes {
+            (0..lanes).map(|t| self.part(slot, t, take, at)).collect()
+        } else if arity == 1 {
+            Ok(split_val(&self.part(slot, 0, take, at)?, lanes))
+        } else {
+            Err(perr(format!("{at}: slot {slot} arity {arity} vs {lanes} stripes")))
+        }
+    }
+
+    /// Run ops until blocked on a receive or finished. Returns whether
+    /// any progress was made.
+    fn drain(&mut self, spec: &PlanSpec, chans: &mut Chans, total: &mut u64) -> Result<bool> {
+        let mut progressed = false;
+        while self.cursor < self.plan.ops.len() {
+            let op = self.plan.ops[self.cursor];
+            match op {
+                Op::BeginOp { .. } => self.epoch += 1,
+                Op::Round => {}
+                Op::Send { scope, peer, step, slot, part, take } => {
+                    let v = self.part(slot, part, take, "send")?;
+                    *total += v.len as u64;
+                    let key = self.key(spec, scope, peer, step, false, false);
+                    chans.entry(key).or_default().push_back(vec![v]);
+                }
+                Op::Recv { scope, peer, step, slot, part } => {
+                    let key = self.key(spec, scope, peer, step, false, true);
+                    let Some(mut msg) = pop_chan(chans, &key) else {
+                        return Ok(progressed);
+                    };
+                    debug_assert_eq!(msg.len(), 1);
+                    self.put(slot, part, msg.pop().expect("plain message"));
+                }
+                Op::RecvCombine { scope, peer, step, slot, part } => {
+                    let key = self.key(spec, scope, peer, step, false, true);
+                    let Some(mut msg) = pop_chan(chans, &key) else {
+                        return Ok(progressed);
+                    };
+                    let incoming = msg.pop().expect("plain message");
+                    let mut acc = self.part(slot, part, true, "recv-combine")?;
+                    acc.combine(incoming, "recv-combine")?;
+                    self.put(slot, part, acc);
+                }
+                Op::SendRecv { scope, send_peer, recv_peer, step, send_slot, recv_slot, lanes } => {
+                    if !self.sent_half {
+                        let parts = self.exchange_parts(send_slot, lanes, false, "sendrecv")?;
+                        *total += parts.iter().map(|v| v.len as u64).sum::<u64>();
+                        let key = self.key(spec, scope, send_peer, step, lanes > 0, false);
+                        chans.entry(key).or_default().push_back(parts);
+                        self.sent_half = true;
+                        progressed = true;
+                    }
+                    let key = self.key(spec, scope, recv_peer, step, lanes > 0, true);
+                    let Some(msg) = pop_chan(chans, &key) else {
+                        return Ok(progressed);
+                    };
+                    self.slots[recv_slot] = msg.into_iter().map(Some).collect();
+                    self.sent_half = false;
+                }
+                Op::SendRecvCombine {
+                    scope,
+                    send_peer,
+                    recv_peer,
+                    step,
+                    send_slot,
+                    recv_slot,
+                    lanes,
+                } => {
+                    if !self.sent_half {
+                        let parts =
+                            self.exchange_parts(send_slot, lanes, true, "sendrecv-combine")?;
+                        *total += parts.iter().map(|v| v.len as u64).sum::<u64>();
+                        let key = self.key(spec, scope, send_peer, step, lanes > 0, false);
+                        chans.entry(key).or_default().push_back(parts);
+                        self.sent_half = true;
+                        progressed = true;
+                    }
+                    let key = self.key(spec, scope, recv_peer, step, lanes > 0, true);
+                    let Some(msg) = pop_chan(chans, &key) else {
+                        return Ok(progressed);
+                    };
+                    let mut accs =
+                        self.exchange_parts(recv_slot, lanes, true, "sendrecv-combine")?;
+                    if accs.len() != msg.len() {
+                        return Err(perr(format!(
+                            "sendrecv-combine: {} accumulators vs {} incoming stripes",
+                            accs.len(),
+                            msg.len()
+                        )));
+                    }
+                    for (acc, v) in accs.iter_mut().zip(msg) {
+                        acc.combine(v, "sendrecv-combine")?;
+                    }
+                    self.slots[recv_slot] = accs.into_iter().map(Some).collect();
+                    self.sent_half = false;
+                }
+            }
+            self.cursor += 1;
+            progressed = true;
+        }
+        Ok(progressed)
+    }
+
+    fn check_outputs(&self, spec: &PlanSpec) -> Result<()> {
+        for (oi, &slot) in self.plan.outputs.iter().enumerate() {
+            let parts = self
+                .slots
+                .get(slot)
+                .ok_or_else(|| perr(format!("output slot {slot} out of range")))?;
+            let vals: Vec<&Val> = parts
+                .iter()
+                .map(|c| {
+                    c.as_ref().ok_or_else(|| {
+                        perr(format!(
+                            "rank {}: output slot {slot} has an undelivered part",
+                            self.plan.rank
+                        ))
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let (origins, block, b) = expected_output(spec, self.plan.rank, oi);
+            check_cover(&vals, &origins, block, b).map_err(|e| {
+                perr(format!("rank {} output {oi} (slot {slot}): {e}", self.plan.rank))
+            })?;
+        }
+        Ok(())
+    }
+}
+
+fn take_input(inputs: &mut [Option<Val>], i: usize, rank: usize) -> Result<Val> {
+    inputs
+        .get_mut(i)
+        .and_then(Option::take)
+        .ok_or_else(|| perr(format!("rank {rank}: input {i} missing or taken twice")))
+}
+
+fn pop_chan(chans: &mut Chans, key: &ChanKey) -> Option<Vec<Val>> {
+    let q = chans.get_mut(key)?;
+    let msg = q.pop_front();
+    if q.is_empty() {
+        chans.remove(key);
+    }
+    msg
+}
+
+/// Check that `parts` cover exactly `[0, b)` of block `block` from every
+/// origin in `origins`, contiguously, alignment-preserving, exactly once,
+/// with no foreign contributions.
+fn check_cover(parts: &[&Val], origins: &[usize], block: usize, b: usize) -> Result<()> {
+    let mut per: HashMap<(usize, usize), Vec<(usize, usize, usize)>> = HashMap::new();
+    let mut base = 0usize;
+    for v in parts {
+        for layer in &v.layers {
+            let mut pos = base;
+            for a in layer {
+                per.entry((a.origin, a.block)).or_default().push((pos, a.lo, a.len));
+                pos += a.len;
+            }
+            if pos - base != v.len {
+                return Err(perr(format!(
+                    "layer covers {} of a {}-elem value",
+                    pos - base,
+                    v.len
+                )));
+            }
+        }
+        base += v.len;
+    }
+    if base != b {
+        return Err(perr(format!("output holds {base} elems, expected {b}")));
+    }
+    for &o in origins {
+        let Some(mut ivs) = per.remove(&(o, block)) else {
+            if b == 0 {
+                continue;
+            }
+            return Err(perr(format!("missing contribution of rank {o} block {block}")));
+        };
+        ivs.sort_unstable();
+        let mut pos = 0usize;
+        for (dst, lo, len) in ivs {
+            if dst != pos {
+                return Err(perr(format!(
+                    "rank {o} block {block}: gap or double-fold at element {pos}"
+                )));
+            }
+            if lo != dst {
+                return Err(perr(format!(
+                    "rank {o} block {block}: element {lo} misaligned to position {dst}"
+                )));
+            }
+            pos += len;
+        }
+        if pos != b {
+            return Err(perr(format!(
+                "rank {o} block {block}: only {pos} of {b} elems delivered"
+            )));
+        }
+    }
+    if let Some(((o, blk), _)) = per.iter().next() {
+        return Err(perr(format!("stray contribution of rank {o} block {blk}")));
+    }
+    Ok(())
+}
+
+/// Verify externally supplied plans (one per rank, in rank order) against
+/// `spec`. Used by `verify` and by the property tests that forge broken
+/// plans to prove the checker rejects them.
+pub fn verify_plans(spec: &PlanSpec, plans: Vec<Plan>) -> Result<VerifyStats> {
+    if plans.len() != spec.p {
+        return Err(perr(format!("{} plans for p={}", plans.len(), spec.p)));
+    }
+    let mut sims = plans
+        .into_iter()
+        .map(|pl| RankSim::new(pl, spec))
+        .collect::<Result<Vec<_>>>()?;
+    let mut chans: Chans = HashMap::new();
+    let mut total = 0u64;
+    loop {
+        let mut progressed = false;
+        let mut done = true;
+        for sim in sims.iter_mut() {
+            progressed |= sim.drain(spec, &mut chans, &mut total)?;
+            done &= sim.done();
+        }
+        if done {
+            break;
+        }
+        if !progressed {
+            let stuck = sims.iter().find(|s| !s.done()).expect("some rank is stuck");
+            return Err(perr(format!(
+                "deadlock: rank {} blocked at op {} ({:?}) with no matching send",
+                stuck.plan.rank, stuck.cursor, stuck.plan.ops[stuck.cursor]
+            )));
+        }
+    }
+    if let Some((key, _)) = chans.iter().find(|(_, q)| !q.is_empty()) {
+        return Err(perr(format!("message sent but never received: {key:?}")));
+    }
+    for sim in &sims {
+        sim.check_outputs(spec)?;
+    }
+    Ok(VerifyStats { total_sent_elems: total })
+}
+
+/// Build every rank's plan for `spec` and statically verify the ensemble:
+/// deadlock-freedom, exact block coverage, and the wire byte total.
+pub fn verify(spec: &PlanSpec) -> Result<VerifyStats> {
+    let plans = (0..spec.p).map(|r| build(spec, r)).collect::<Result<Vec<_>>>()?;
+    verify_plans(spec, plans)
+}
+
+/// Memoized [`verify`]: each distinct spec is simulated once per process;
+/// the data-plane entry points call this before executing, so the cost is
+/// paid at first dispatch, not per collective call.
+pub fn verify_cached(spec: &PlanSpec) -> Result<()> {
+    static VERIFIED: OnceLock<Mutex<HashSet<PlanSpec>>> = OnceLock::new();
+    let cache = VERIFIED.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut seen = cache.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    if seen.contains(spec) {
+        return Ok(());
+    }
+    verify(spec)?;
+    seen.insert(*spec);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(kind: PlanKind, algo: Algo, p: usize, elems: usize, lanes: usize) -> PlanSpec {
+        PlanSpec::flat(kind, algo, p, elems, lanes)
+    }
+
+    #[test]
+    fn flat_specs_verify_across_sizes() {
+        for p in [1, 2, 3, 5, 8] {
+            for spec in [
+                flat(PlanKind::AllGather, Algo::Ring, p, 6, 1),
+                flat(PlanKind::ReduceScatter, Algo::Ring, p, 6 * p, 1),
+                flat(PlanKind::AllReduce, Algo::Ring, p, 6 * p, 1),
+                flat(PlanKind::AllReduce, Algo::Tree, p, 7, 1),
+            ] {
+                verify(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            }
+        }
+        for p in [1, 2, 4, 8] {
+            for spec in [
+                flat(PlanKind::AllGather, Algo::Rec, p, 5, 1),
+                flat(PlanKind::ReduceScatter, Algo::Rec, p, 5 * p, 1),
+                flat(PlanKind::AllReduce, Algo::Rec, p, 5 * p, 1),
+            ] {
+                verify(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn striped_specs_verify_with_uneven_stripes() {
+        for (p, k) in [(3, 2), (5, 4), (8, 3)] {
+            for spec in [
+                flat(PlanKind::AllGather, Algo::Ring, p, 5, k),
+                flat(PlanKind::ReduceScatter, Algo::Ring, p, 5 * p, k),
+                flat(PlanKind::AllReduce, Algo::Ring, p, 5 * p, k),
+            ] {
+                verify(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn hier_specs_verify_both_algos_and_stripes() {
+        for (n, m) in [(2, 2), (3, 2), (2, 4), (4, 3)] {
+            let p = n * m;
+            for kind in [PlanKind::AllGather, PlanKind::ReduceScatter, PlanKind::AllReduce] {
+                let spec = PlanSpec::hier(kind, Algo::HierRing, n, m, elems_for(kind, p), 1);
+                verify(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+                let spec = PlanSpec::hier(kind, Algo::HierRing, n, m, elems_for(kind, p), 3);
+                verify(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+                if n.is_power_of_two() {
+                    let spec = PlanSpec::hier(kind, Algo::HierRec, n, m, elems_for(kind, p), 1);
+                    verify(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+                }
+            }
+        }
+    }
+
+    fn elems_for(kind: PlanKind, p: usize) -> usize {
+        match kind {
+            PlanKind::AllGather => 6,
+            _ => 6 * p,
+        }
+    }
+
+    #[test]
+    fn rooted_and_shuffle_specs_verify() {
+        for p in [1, 2, 3, 5, 8] {
+            for root in [0, p - 1] {
+                verify(&PlanSpec::rooted(PlanKind::Broadcast, Algo::Binomial, p, 4, root))
+                    .unwrap();
+                verify(&PlanSpec::rooted(PlanKind::Reduce, Algo::Binomial, p, 4, root)).unwrap();
+                verify(&PlanSpec::rooted(PlanKind::Gather, Algo::Direct, p, 4, root)).unwrap();
+                verify(&PlanSpec::rooted(PlanKind::Scatter, Algo::Direct, p, 4 * p, root))
+                    .unwrap();
+            }
+        }
+        verify(&PlanSpec::shuffle(3, 4)).unwrap();
+        verify(&PlanSpec::shuffle(1, 5)).unwrap();
+    }
+
+    #[test]
+    fn ring_byte_totals_match_closed_form() {
+        // Flat ring all-gather: every rank posts (p - 1) blocks of b.
+        let (p, b) = (6, 7);
+        let stats = verify(&flat(PlanKind::AllGather, Algo::Ring, p, b, 1)).unwrap();
+        assert_eq!(stats.total_sent_elems, (p * (p - 1) * b) as u64);
+        // Striping does not change the wire volume.
+        let striped = verify(&flat(PlanKind::AllGather, Algo::Ring, p, b, 4)).unwrap();
+        assert_eq!(striped.total_sent_elems, stats.total_sent_elems);
+        // Ring all-reduce: RS + AG, each (p - 1) blocks per rank.
+        let stats = verify(&flat(PlanKind::AllReduce, Algo::Ring, p, b * p, 1)).unwrap();
+        assert_eq!(stats.total_sent_elems, (2 * p * (p - 1) * b) as u64);
+    }
+
+    #[test]
+    fn rec_volume_halves_per_step() {
+        // Recursive halving posts p*b/2 + p*b/4 + ... + b per rank.
+        let (p, b) = (8, 3);
+        let stats = verify(&flat(PlanKind::ReduceScatter, Algo::Rec, p, b * p, 1)).unwrap();
+        assert_eq!(stats.total_sent_elems, (p * (p - 1) * b) as u64);
+    }
+
+    #[test]
+    fn non_pow2_rec_is_rejected() {
+        let err = build(&flat(PlanKind::AllGather, Algo::Rec, 6, 4, 1), 0).unwrap_err();
+        assert!(matches!(err, Error::Plan(_)), "{err}");
+        assert!(err.to_string().contains("power-of-two"));
+    }
+
+    #[test]
+    fn forged_plans_are_rejected() {
+        let spec = flat(PlanKind::AllGather, Algo::Ring, 3, 4, 1);
+        // Drop one rank's final exchange: its left neighbor's send is never
+        // received and its own block map stays incomplete.
+        let mut plans: Vec<Plan> = (0..3).map(|r| build(&spec, r).unwrap()).collect();
+        let last = plans[1].ops.len() - 1;
+        plans[1].ops.truncate(last);
+        let err = verify_plans(&spec, plans).unwrap_err();
+        assert!(matches!(err, Error::Plan(_)), "{err}");
+
+        // Swap two recv slots: coverage check catches the misplaced block.
+        let mut plans: Vec<Plan> = (0..3).map(|r| build(&spec, r).unwrap()).collect();
+        for op in plans[2].ops.iter_mut() {
+            if let Op::SendRecv { recv_slot, .. } = op {
+                *recv_slot = (*recv_slot + 1) % 3;
+            }
+        }
+        let err = verify_plans(&spec, plans).unwrap_err();
+        assert!(matches!(err, Error::Plan(_)), "{err}");
+
+        // A send with no matching recv anywhere deadlocks the ensemble.
+        let mut plans: Vec<Plan> = (0..3).map(|r| build(&spec, r).unwrap()).collect();
+        if let Op::SendRecv { step, .. } = &mut plans[0].ops[1] {
+            *step += 99;
+        }
+        let err = verify_plans(&spec, plans).unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn phase_shapes_report_ring_and_rec_structure() {
+        // Flat ring AG at b=1: p-1 rounds of 1 element, no combining.
+        let p = 6;
+        let shapes = phase_shapes(&flat(PlanKind::AllGather, Algo::Ring, p, 1, 1)).unwrap();
+        assert_eq!(shapes.len(), 1);
+        assert_eq!(shapes[0].scope, Scope::World);
+        assert_eq!(shapes[0].rounds.len(), p - 1);
+        assert!(shapes[0]
+            .rounds
+            .iter()
+            .all(|r| r.sent_elems == 1 && r.combine_elems == 0));
+
+        // Flat rec RS at elems=p (b=1): halving volumes p/2, p/4, ..., 1.
+        let p = 8;
+        let shapes = phase_shapes(&flat(PlanKind::ReduceScatter, Algo::Rec, p, p, 1)).unwrap();
+        assert_eq!(shapes[0].rounds.len(), 3);
+        let sent: Vec<u64> = shapes[0].rounds.iter().map(|r| r.sent_elems).collect();
+        assert_eq!(sent, vec![4, 2, 1]);
+        assert!(shapes[0].rounds.iter().all(|r| r.combine_elems == r.sent_elems));
+
+        // Hierarchical AR: intra-RS, inter-RS, inter-AG, intra-AG phases.
+        let (n, m) = (4, 3);
+        let spec = PlanSpec::hier(PlanKind::AllReduce, Algo::HierRing, n, m, n * m, 1);
+        let shapes = phase_shapes(&spec).unwrap();
+        let scopes: Vec<Scope> = shapes.iter().map(|s| s.scope).collect();
+        assert_eq!(scopes, vec![Scope::Intra, Scope::Inter, Scope::Inter, Scope::Intra]);
+        // Intra rounds move n blocks of b=1 each; inter rounds move one.
+        assert!(shapes[0].rounds.iter().all(|r| r.sent_elems == n as u64));
+        assert_eq!(shapes[1].rounds.len(), n - 1);
+        assert!(shapes[1].rounds.iter().all(|r| r.sent_elems == 1));
+    }
+
+    #[test]
+    fn degenerate_hier_shapes_keep_phase_structure() {
+        // The cost model builds hier specs even for single-node / single-
+        // GPU geometries; the empty phase must still be present.
+        let spec = PlanSpec::hier(PlanKind::AllGather, Algo::HierRing, 1, 4, 1, 1);
+        let shapes = phase_shapes(&spec).unwrap();
+        assert_eq!(shapes.len(), 2);
+        assert!(shapes[0].rounds.is_empty(), "inter phase of n=1 is empty");
+        let spec = PlanSpec::hier(PlanKind::AllGather, Algo::HierRing, 4, 1, 1, 1);
+        let shapes = phase_shapes(&spec).unwrap();
+        assert!(shapes[1].rounds.is_empty(), "intra phase of m=1 is empty");
+    }
+
+    #[test]
+    fn verify_cached_memoizes() {
+        let spec = flat(PlanKind::AllGather, Algo::Ring, 4, 3, 1);
+        verify_cached(&spec).unwrap();
+        verify_cached(&spec).unwrap();
+        let bad = flat(PlanKind::AllGather, Algo::Rec, 6, 3, 1);
+        assert!(verify_cached(&bad).is_err());
+    }
+}

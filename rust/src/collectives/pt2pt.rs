@@ -4,22 +4,31 @@
 //! framework can adopt needs them: ZeRO-3 broadcasts initial parameters,
 //! checkpointing gathers shards, schedulers scatter work. Broadcast and
 //! reduce use binomial trees (`O(log p)` rounds, any `p`); gather/scatter
-//! use direct point-to-point rounds rooted at `root`.
+//! use direct point-to-point rounds rooted at `root`. All four lower
+//! through [`super::plan`]'s rooted builders and run on
+//! [`super::engine`].
 //!
 //! Chunked-plane notes: broadcast forwards one shared chunk down the whole
-//! tree (zero-copy fan-out — the seed path cloned the buffer per child);
-//! reduce posts its accumulator as the receive target for every child's
-//! partial ([`Comm::recv_combine_into`] — in-place folds, no staging) and
-//! leaves send their contribution as a zero-copy post; scatter
-//! materializes one block per destination (the source lives in the root's
-//! borrowed input, so each destination must own its block); gather copies
-//! received blocks into the root's contiguous output (the output
-//! materialization).
+//! tree (zero-copy fan-out); reduce posts its accumulator as the receive
+//! target for every child's partial (lowered `RecvCombine` ops — in-place
+//! folds, no staging) and leaves send their contribution as a zero-copy
+//! moved post; scatter materializes one block per destination (the source
+//! lives in the root's borrowed input, so each destination must own its
+//! block); gather copies received blocks into the root's contiguous
+//! output (the output materialization).
+//!
+//! The specs these slice APIs lower need not agree on `elems` across
+//! ranks (non-root inputs are ignored); that is sound because the rooted
+//! builders' op structure depends only on `(p, root)`, and each spec is
+//! verified as an SPMD-uniform world of its own.
 
 use crate::comm::{Chunk, Comm};
 use crate::error::{Error, Result};
 use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
+
+use super::engine;
+use super::plan::{self, Algo, PlanKind, PlanSpec};
 
 fn check_root<T: Send + Sync + 'static, C: Comm<T>>(c: &C, root: usize) -> Result<()> {
     if root >= c.size() {
@@ -31,15 +40,21 @@ fn check_root<T: Send + Sync + 'static, C: Comm<T>>(c: &C, root: usize) -> Resul
     Ok(())
 }
 
-/// Relative rank so the binomial tree can be rooted anywhere.
-#[inline]
-fn rel(rank: usize, root: usize, p: usize) -> usize {
-    (rank + p - root) % p
-}
-
-#[inline]
-fn unrel(r: usize, root: usize, p: usize) -> usize {
-    (r + root) % p
+/// Lower a rooted spec for this communicator, verify it (memoized), and
+/// execute it.
+fn run_rooted<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    kind: PlanKind,
+    algo: Algo,
+    elems: usize,
+    root: usize,
+    inputs: Vec<Chunk<T>>,
+    combiner: Option<&Combiner<T>>,
+) -> Result<Vec<Chunk<T>>> {
+    let spec = PlanSpec::rooted(kind, algo, c.size(), elems, root);
+    plan::verify_cached(&spec)?;
+    let pl = plan::build(&spec, c.rank())?;
+    engine::run_flat(c, &pl, inputs, combiner)
 }
 
 /// Binomial-tree broadcast from `root`. Non-root inputs are ignored;
@@ -48,39 +63,10 @@ fn unrel(r: usize, root: usize, p: usize) -> usize {
 /// per-hop copies.
 pub fn broadcast<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Result<Vec<T>> {
     check_root(c, root)?;
-    c.begin_op();
-    let p = c.size();
-    let r = rel(c.rank(), root, p);
-    if p == 1 {
-        return Ok(input.to_vec());
-    }
-    let buf: Chunk<T>;
-    let mut recv_mask = p.next_power_of_two();
-    if r == 0 {
-        buf = Chunk::from_slice(input);
-    } else {
-        // Receive from the parent (clear the lowest set bit of r).
-        let mut mask = 1usize;
-        while r & mask == 0 {
-            mask <<= 1;
-        }
-        recv_mask = mask;
-        let src = unrel(r & !mask, root, p);
-        buf = c.recv_chunk(src, mask.trailing_zeros())?;
-    }
-    let mut child_mask = recv_mask >> 1;
-    while child_mask > 0 {
-        let dst_rel = r | child_mask;
-        if dst_rel != r && dst_rel < p {
-            c.send_slice(
-                unrel(dst_rel, root, p),
-                child_mask.trailing_zeros(),
-                buf.clone(),
-            )?;
-        }
-        child_mask >>= 1;
-    }
-    Ok(buf.into_vec())
+    let inputs = if c.rank() == root { vec![Chunk::from_slice(input)] } else { Vec::new() };
+    let mut out =
+        run_rooted(c, PlanKind::Broadcast, Algo::Binomial, input.len(), root, inputs, None)?;
+    Ok(out.pop().expect("broadcast delivers the buffer to every rank").into_vec())
 }
 
 /// Binomial-tree reduce to `root`: root returns the elementwise combine of
@@ -91,7 +77,7 @@ pub fn broadcast<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Re
 /// every child's partial, so each delivery folds in place — a rank whose
 /// child sent a different length gets a typed
 /// [`Error::RecvShapeMismatch`] with the message left queued. Leaves send
-/// the accumulator itself (zero-copy post), and the root's final
+/// the accumulator itself (zero-copy moved post), and the root's final
 /// materialization is a move.
 pub fn reduce<T: Elem, C: Comm<T>>(
     c: &mut C,
@@ -100,46 +86,32 @@ pub fn reduce<T: Elem, C: Comm<T>>(
     combiner: &Combiner<T>,
 ) -> Result<Vec<T>> {
     check_root(c, root)?;
-    c.begin_op();
-    let p = c.size();
-    let r = rel(c.rank(), root, p);
-    let mut acc = Chunk::from_slice(input);
-    let mut mask = 1usize;
-    while mask < p {
-        let step = mask.trailing_zeros();
-        if r & mask != 0 {
-            let dst = unrel(r & !mask, root, p);
-            c.send_slice(dst, step, acc)?;
-            return Ok(Vec::new());
-        }
-        let src_rel = r | mask;
-        if src_rel < p {
-            c.recv_combine_into(unrel(src_rel, root, p), step, &mut acc, combiner)?;
-        }
-        mask <<= 1;
-    }
-    Ok(acc.into_vec())
+    let inputs = vec![Chunk::from_slice(input)];
+    let mut out = run_rooted(
+        c,
+        PlanKind::Reduce,
+        Algo::Binomial,
+        input.len(),
+        root,
+        inputs,
+        Some(combiner),
+    )?;
+    Ok(out.pop().map_or_else(Vec::new, Chunk::into_vec))
 }
 
 /// Gather to `root`: root returns the rank-ordered concatenation; others
 /// return an empty vec. Equal-length contributions required.
 pub fn gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Result<Vec<T>> {
     check_root(c, root)?;
-    c.begin_op();
-    let p = c.size();
-    let rank = c.rank();
-    if rank != root {
-        c.send_slice(root, 0, Chunk::from_slice(input))?;
+    let m = input.len();
+    let inputs = vec![Chunk::from_slice(input)];
+    let blocks = run_rooted(c, PlanKind::Gather, Algo::Direct, m, root, inputs, None)?;
+    if c.rank() != root {
+        debug_assert!(blocks.is_empty());
         return Ok(Vec::new());
     }
-    let m = input.len();
-    let mut out = vec![T::zero(); p * m];
-    out[root * m..(root + 1) * m].copy_from_slice(input);
-    for peer in 0..p {
-        if peer == root {
-            continue;
-        }
-        let got = c.recv_chunk(peer, 0)?;
+    let mut out = Vec::with_capacity(m * blocks.len());
+    for got in &blocks {
         if got.len() != m {
             return Err(Error::BadBufferSize {
                 len: got.len(),
@@ -147,7 +119,7 @@ pub fn gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Resul
                 why: "gather contributions must have equal length",
             });
         }
-        out[peer * m..(peer + 1) * m].copy_from_slice(got.as_slice());
+        out.extend_from_slice(got.as_slice());
     }
     Ok(out)
 }
@@ -156,10 +128,8 @@ pub fn gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Resul
 /// blocks; every rank returns its block. Non-root inputs are ignored.
 pub fn scatter<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Result<Vec<T>> {
     check_root(c, root)?;
-    c.begin_op();
     let p = c.size();
-    let rank = c.rank();
-    if rank == root {
+    let inputs = if c.rank() == root {
         if input.is_empty() || input.len() % p != 0 {
             return Err(Error::BadBufferSize {
                 len: input.len(),
@@ -168,17 +138,15 @@ pub fn scatter<T: Elem, C: Comm<T>>(c: &mut C, input: &[T], root: usize) -> Resu
             });
         }
         let b = input.len() / p;
-        for peer in 0..p {
-            if peer != root {
-                // One owned block per destination: the receiver takes the
-                // storage over for free in `into_vec`.
-                c.send_slice(peer, 0, Chunk::from_slice(&input[peer * b..(peer + 1) * b]))?;
-            }
-        }
-        Ok(input[root * b..(root + 1) * b].to_vec())
+        // One owned block per destination: the receiver takes the storage
+        // over for free in `into_vec`.
+        (0..p).map(|i| Chunk::from_slice(&input[i * b..(i + 1) * b])).collect()
     } else {
-        Ok(c.recv_chunk(root, 0)?.into_vec())
-    }
+        Vec::new()
+    };
+    let elems = if c.rank() == root { input.len() } else { 0 };
+    let mut out = run_rooted(c, PlanKind::Scatter, Algo::Direct, elems, root, inputs, None)?;
+    Ok(out.pop().expect("scatter delivers one block to every rank").into_vec())
 }
 
 #[cfg(test)]

@@ -6,20 +6,25 @@
 //! hierarchical composition) fall back to the ring when `p` is not a power
 //! of two — the paper's target systems are all power-of-two node counts.
 //!
-//! Over the chunked plane each *block* is its own message (the step tag
-//! encodes `(step, block)`), so the doubling exchange forwards views of
-//! the blocks gathered so far instead of re-materializing a contiguous
-//! payload every step — the seed path's per-step `to_vec` staging is gone.
-//! Byte volume is unchanged; message count rises from `log2 p` to `p - 1`
-//! per rank, matching the ring (sends are non-blocking and free on this
-//! transport; a libfabric backend would post them as one iovec).
+//! Since the Plan IR refactor the doubling/halving step math lives in
+//! [`super::plan`]'s builders (which delegate to
+//! [`super::schedule::recursive`]); these entry points validate, lower a
+//! [`PlanSpec`], verify it against the memoized static checker, and run
+//! the plan on [`engine::run_flat`]. Over the chunked plane each *block*
+//! is its own message (the step tag encodes `(step, block)`), so the
+//! doubling exchange forwards views of the blocks gathered so far instead
+//! of re-materializing a contiguous payload every step. Byte volume is
+//! unchanged; message count rises from `log2 p` to `p - 1` per rank,
+//! matching the ring (sends are non-blocking and free on this transport; a
+//! libfabric backend would post them as one iovec).
 
 use crate::comm::{Chunk, Comm};
 use crate::error::{Error, Result};
 use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
-use super::schedule::recursive as idx;
+use super::engine;
+use super::plan::{self, Algo, PlanKind, PlanSpec};
 use super::{
     check_all_gather, check_reduce_scatter, pad_chunk, slice_all_reduce, slice_gather,
     slice_reduce, trim_blocks,
@@ -36,6 +41,21 @@ fn require_pow2(p: usize) -> Result<()> {
     Ok(())
 }
 
+/// Lower a flat recursive spec for this communicator, verify it
+/// (memoized), and execute it. All rec entry points funnel through here.
+fn run_rec<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    kind: PlanKind,
+    elems: usize,
+    inputs: Vec<Chunk<T>>,
+    combiner: Option<&Combiner<T>>,
+) -> Result<Vec<Chunk<T>>> {
+    let spec = PlanSpec::flat(kind, Algo::Rec, c.size(), elems, 1);
+    plan::verify_cached(&spec)?;
+    let pl = plan::build(&spec, c.rank())?;
+    engine::run_flat(c, &pl, inputs, combiner)
+}
+
 /// Recursive-doubling all-gather over chunks: `log2 p` exchanges of
 /// doubling size, every block forwarded as a zero-copy view.
 ///
@@ -46,28 +66,9 @@ pub fn rec_all_gather_chunks<T: Elem, C: Comm<T>>(
     input: Chunk<T>,
 ) -> Result<Vec<Chunk<T>>> {
     check_all_gather(input.as_slice())?;
-    let p = c.size();
-    require_pow2(p)?;
-    c.begin_op();
-    let r = c.rank();
-    let mut blocks: Vec<Option<Chunk<T>>> = vec![None; p];
-    blocks[r] = Some(input);
-    for s in 0..idx::steps(p) {
-        let partner = idx::ag_partner(r, s);
-        let (lo, hi) = idx::ag_owned_range(r, s);
-        let (plo, phi) = idx::ag_owned_range(partner, s);
-        for i in lo..hi {
-            let ch = blocks[i].clone().expect("owned range is populated");
-            c.send_slice(partner, (s * p + i) as u32, ch)?;
-        }
-        for i in plo..phi {
-            blocks[i] = Some(c.recv_chunk(partner, (s * p + i) as u32)?);
-        }
-    }
-    Ok(blocks
-        .into_iter()
-        .map(|b| b.expect("doubling schedule covers every block"))
-        .collect())
+    require_pow2(c.size())?;
+    let elems = input.len();
+    run_rec(c, PlanKind::AllGather, elems, vec![input], None)
 }
 
 /// Recursive-doubling all-gather, slice API — adapter over
@@ -82,13 +83,15 @@ pub fn rec_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Vec
 /// The `p` blocks start as zero-copy views of the caller's input chunk;
 /// the blocks we *send* go out as those views (no payload copies), and
 /// each kept block is *posted* as the receive target of its partner's
-/// partial ([`Comm::recv_combine_into`]). At a block's first combine the
-/// delivery is a one-pass fuse into fresh exact-size storage (both
-/// operands are still input views — one allocation, zero copies); on every
-/// later step the now-exclusive accumulator is folded in place, so its
-/// storage pointer is stable from the first combine to the final shard.
-/// For `p > 1` the returned chunk is the unique full-range view of its
-/// storage (`into_vec` is a move); at `p == 1` the input comes back.
+/// partial (the lowered `RecvCombine` ops land on
+/// [`Comm::recv_combine_into`]). At a block's first combine the delivery
+/// is a one-pass fuse into fresh exact-size storage (both operands are
+/// still input views — one allocation, zero copies); on every later step
+/// the now-exclusive accumulator is folded in place, so its storage
+/// pointer is stable from the first combine to the final shard. For
+/// `p > 1` the returned chunk is the unique full-range view of its
+/// storage (`into_vec` is a move); at `p == 1` the block comes back
+/// backed by the input's storage.
 pub fn rec_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
@@ -97,37 +100,10 @@ pub fn rec_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
     let p = c.size();
     let b = check_reduce_scatter(input.as_slice(), p)?;
     require_pow2(p)?;
-    c.begin_op();
-    let r = c.rank();
-    if p == 1 {
-        return Ok(input);
-    }
-    let mut blocks: Vec<Chunk<T>> = (0..p).map(|i| input.slice(i * b, b)).collect();
-    // Current segment of *block indices* this rank is still responsible for.
-    let mut lo = 0usize;
-    let mut hi = p;
-    for s in 0..idx::steps(p) {
-        let partner = idx::rs_partner(r, p, s);
-        let mid = (lo + hi) / 2;
-        // If our rank lies in the lower half of the segment, we keep
-        // [lo, mid) and send [mid, hi); otherwise the reverse.
-        let keep_low = r < mid;
-        let (keep_lo, keep_hi, send_lo, send_hi) = if keep_low {
-            (lo, mid, mid, hi)
-        } else {
-            (mid, hi, lo, mid)
-        };
-        for i in send_lo..send_hi {
-            c.send_slice(partner, (s * p + i) as u32, blocks[i].clone())?;
-        }
-        for i in keep_lo..keep_hi {
-            c.recv_combine_into(partner, (s * p + i) as u32, &mut blocks[i], combiner)?;
-        }
-        lo = keep_lo;
-        hi = keep_hi;
-    }
-    debug_assert_eq!((lo, hi), (r, r + 1));
-    Ok(blocks.swap_remove(r))
+    let blocks = (0..p).map(|i| input.slice(i * b, b)).collect();
+    let mut out = run_rec(c, PlanKind::ReduceScatter, p * b, blocks, Some(combiner))?;
+    debug_assert_eq!(out.len(), 1, "reduce-scatter yields one block");
+    Ok(out.pop().expect("reduce-scatter plan outputs this rank's block"))
 }
 
 /// Recursive-halving reduce-scatter, slice API — adapter over
@@ -142,11 +118,11 @@ pub fn rec_reduce_scatter<T: Elem, C: Comm<T>>(
 
 /// All-reduce over chunks = recursive halving reduce-scatter ∘ recursive
 /// doubling all-gather (§IV-B: "our all-reduce in PCCL_rec uses recursive
-/// halving followed by recursive doubling") with no intermediate `Vec`.
-/// Pads once into the reduce-scatter input when `p ∤ n` and trims the
-/// padding off the returned block list as a view adjustment. Runs the
-/// composition at every `p` (including 1), keeping op-sequence numbering
-/// size-independent.
+/// halving followed by recursive doubling"), lowered as one two-phase plan
+/// with no intermediate `Vec`. Pads once into the reduce-scatter input
+/// when `p ∤ n` and trims the padding off the returned block list as a
+/// view adjustment. Runs the composition at every `p` (including 1),
+/// keeping op-sequence numbering size-independent.
 pub fn rec_all_reduce_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
@@ -163,8 +139,9 @@ pub fn rec_all_reduce_chunks<T: Elem, C: Comm<T>>(
     } else {
         pad_chunk(&input, padded)
     };
-    let mine = rec_reduce_scatter_chunks(c, padded_input, combiner)?;
-    let mut blocks = rec_all_gather_chunks(c, mine)?;
+    let b = padded / p;
+    let blocks = (0..p).map(|i| padded_input.slice(i * b, b)).collect();
+    let mut blocks = run_rec(c, PlanKind::AllReduce, padded, blocks, Some(combiner))?;
     trim_blocks(&mut blocks, n);
     Ok(blocks)
 }

@@ -2,17 +2,42 @@
 //! (Eq. 1 of the paper). This is what NCCL/RCCL use for all-gather and
 //! reduce-scatter (Observation 2), and PCCL's `PCCL_ring` inter-node
 //! backend.
+//!
+//! Since the Plan IR refactor these entry points own no schedule logic:
+//! each one validates its input, lowers a [`PlanSpec`] with
+//! [`plan::build`], checks it against the statically verified cache
+//! ([`plan::verify_cached`]), and hands the blocks to
+//! [`engine::run_flat`]. The ring index math lives once, in
+//! [`super::plan`]'s builders (which delegate to
+//! [`super::schedule::ring`]).
 
 use crate::comm::{Chunk, Comm};
 use crate::error::{Error, Result};
 use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
-use super::schedule::ring as idx;
+use super::engine;
+use super::plan::{self, Algo, PlanKind, PlanSpec};
 use super::{
     check_all_gather, check_reduce_scatter, pad_chunk, slice_all_reduce, slice_gather,
     slice_reduce, trim_blocks,
 };
+
+/// Lower a flat ring spec for this communicator, verify it (memoized),
+/// and execute it. All ring entry points funnel through here.
+fn run_ring<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    kind: PlanKind,
+    elems: usize,
+    lanes: usize,
+    inputs: Vec<Chunk<T>>,
+    combiner: Option<&Combiner<T>>,
+) -> Result<Vec<Chunk<T>>> {
+    let spec = PlanSpec::flat(kind, Algo::Ring, c.size(), elems, lanes);
+    plan::verify_cached(&spec)?;
+    let pl = plan::build(&spec, c.rank())?;
+    engine::run_flat(c, &pl, inputs, combiner)
+}
 
 /// Ring all-gather over the chunked plane: `p - 1` steps, each rank
 /// forwards the *chunk* it received in the previous step to its right
@@ -26,29 +51,8 @@ pub fn ring_all_gather_chunks<T: Elem, C: Comm<T>>(
     input: Chunk<T>,
 ) -> Result<Vec<Chunk<T>>> {
     check_all_gather(input.as_slice())?;
-    c.begin_op();
-    let p = c.size();
-    let r = c.rank();
-    let mut out: Vec<Option<Chunk<T>>> = vec![None; p];
-    out[r] = Some(input.clone());
-    if p > 1 {
-        let right = (r + 1) % p;
-        let left = (r + p - 1) % p;
-        // Block (r - s) travels: at s = 0 it's our input; afterwards it's
-        // the chunk that just arrived from the left, forwarded untouched.
-        let mut current = input;
-        for s in 0..p - 1 {
-            debug_assert_eq!(idx::ag_send_block(r, p, s), (r + p - s) % p);
-            let recv_b = idx::ag_recv_block(r, p, s);
-            let got = c.sendrecv_chunk(right, current, left, s as u32)?;
-            out[recv_b] = Some(got.clone());
-            current = got;
-        }
-    }
-    Ok(out
-        .into_iter()
-        .map(|b| b.expect("ring schedule covers every block"))
-        .collect())
+    let elems = input.len();
+    run_ring(c, PlanKind::AllGather, elems, 1, vec![input], None)
 }
 
 /// Ring all-gather, slice API — adapter over [`ring_all_gather_chunks`].
@@ -60,17 +64,17 @@ pub fn ring_all_gather<T: Elem, C: Comm<T>>(c: &mut C, input: &[T]) -> Result<Ve
 /// for each block travels once around the ring, combined at every hop (on
 /// the "GPU" — the injected [`Combiner`]).
 ///
-/// Hot-path note (§Perf): every step posts a view of this rank's own
-/// contribution as the receive target and folds the incoming partial into
-/// it via [`Comm::sendrecv_combine_into`]. At a partial's *first* combine
-/// (incoming is still a shared view of the sender's input) the delivery is
-/// a one-pass three-address fuse into fresh exact-size storage — one
-/// allocation, zero verbatim copies; on every later hop the exclusive
-/// traveling partial is taken over and folded in place, so the storage
-/// created at the first combine survives every remaining hop. For `p > 1`
-/// the returned chunk is the unique full-range view of that storage:
-/// `into_vec` on it is a move, never a copy. At `p == 1` the input chunk
-/// comes straight back.
+/// Hot-path note (§Perf): every step's lowered `SendRecvCombine` op posts
+/// a view of this rank's own contribution as the receive target and folds
+/// the incoming partial into it via [`Comm::sendrecv_combine_into`]. At a
+/// partial's *first* combine (incoming is still a shared view of the
+/// sender's input) the delivery is a one-pass three-address fuse into
+/// fresh exact-size storage — one allocation, zero verbatim copies; on
+/// every later hop the exclusive traveling partial is taken over and
+/// folded in place, so the storage created at the first combine survives
+/// every remaining hop. For `p > 1` the returned chunk is the unique
+/// full-range view of that storage: `into_vec` on it is a move, never a
+/// copy. At `p == 1` the block comes back backed by the input's storage.
 pub fn ring_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
@@ -78,10 +82,6 @@ pub fn ring_reduce_scatter_chunks<T: Elem, C: Comm<T>>(
 ) -> Result<Chunk<T>> {
     let p = c.size();
     let b = check_reduce_scatter(input.as_slice(), p)?;
-    if p == 1 {
-        c.begin_op();
-        return Ok(input);
-    }
     let blocks = (0..p).map(|i| input.slice(i * b, b)).collect();
     ring_reduce_scatter_blocks_chunks(c, blocks, combiner)
 }
@@ -109,38 +109,22 @@ fn check_blocks<T>(blocks: &[Chunk<T>], p: usize) -> Result<usize> {
 
 /// Ring reduce-scatter over an explicit per-destination block list:
 /// `blocks[i]` is this rank's contribution to rank `i`'s result. Same
-/// schedule and posted-combine hot path as [`ring_reduce_scatter_chunks`]
-/// (which delegates here), but the contributions need not be slices of one
-/// contiguous buffer — this is what lets the hierarchical intra phase hand
-/// its per-node *views* straight to the inter phase with no staging copy.
-/// Blocks are consumed (taken by value as the schedule reaches them).
+/// lowered schedule and posted-combine hot path as
+/// [`ring_reduce_scatter_chunks`] (which delegates here), but the
+/// contributions need not be slices of one contiguous buffer — this is
+/// what lets callers hand per-node *views* straight in with no staging
+/// copy. Blocks are consumed (moved into the plan's slot table; the
+/// engine drops each one as the schedule takes it).
 pub fn ring_reduce_scatter_blocks_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
-    mut blocks: Vec<Chunk<T>>,
+    blocks: Vec<Chunk<T>>,
     combiner: &Combiner<T>,
 ) -> Result<Chunk<T>> {
     let p = c.size();
-    check_blocks(&blocks, p)?;
-    c.begin_op();
-    let r = c.rank();
-    if p == 1 {
-        return Ok(blocks.pop().expect("p == 1 has exactly one block"));
-    }
-    let right = (r + 1) % p;
-    let left = (r + p - 1) % p;
-    let first = idx::rs_send_block(r, p, 0);
-    let mut current = std::mem::replace(&mut blocks[first], Chunk::empty());
-    for s in 0..p - 1 {
-        let recv_b = idx::rs_recv_block(r, p, s);
-        // Post our own contribution for the arriving block as the receive
-        // target; the incoming partial is folded straight into the
-        // accumulator, never staged.
-        let mut acc = std::mem::replace(&mut blocks[recv_b], Chunk::empty());
-        c.sendrecv_combine_into(right, current, left, s as u32, &mut acc, combiner)?;
-        current = acc;
-    }
-    debug_assert_eq!(idx::rs_recv_block(r, p, p - 2), r);
-    Ok(current)
+    let b = check_blocks(&blocks, p)?;
+    let mut out = run_ring(c, PlanKind::ReduceScatter, p * b, 1, blocks, Some(combiner))?;
+    debug_assert_eq!(out.len(), 1, "unstriped reduce-scatter yields one block");
+    Ok(out.pop().expect("reduce-scatter plan outputs this rank's block"))
 }
 
 /// Ring reduce-scatter, slice API — adapter over
@@ -154,15 +138,16 @@ pub fn ring_reduce_scatter<T: Elem, C: Comm<T>>(
 }
 
 /// Ring all-reduce over chunks = chunk reduce-scatter ∘ chunk all-gather
-/// (the bandwidth-optimal Patarasuk–Yuan composition) with no intermediate
-/// `Vec`: the reduced shard chunk feeds the gather directly. Unaligned
-/// inputs are padded once into the chunk the reduce-scatter consumes, and
-/// the padding is trimmed off the returned block list as a view
-/// adjustment — the blocks concatenate to exactly `input.len()` elements.
+/// (the bandwidth-optimal Patarasuk–Yuan composition), lowered as a single
+/// two-phase plan over one slot table: the reduced shard feeds the gather
+/// directly, no intermediate `Vec`. Unaligned inputs are padded once into
+/// the chunk the reduce-scatter consumes, and the padding is trimmed off
+/// the returned block list as a view adjustment — the blocks concatenate
+/// to exactly `input.len()` elements.
 ///
 /// The composition also runs at `p == 1` (both phases degenerate to
-/// zero-message ops), so op-sequence numbering advances identically for
-/// every communicator size.
+/// zero-message ops but still bump the op sequence), so tag numbering
+/// advances identically for every communicator size.
 pub fn ring_all_reduce_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
@@ -178,8 +163,9 @@ pub fn ring_all_reduce_chunks<T: Elem, C: Comm<T>>(
     } else {
         pad_chunk(&input, padded)
     };
-    let mine = ring_reduce_scatter_chunks(c, padded_input, combiner)?;
-    let mut blocks = ring_all_gather_chunks(c, mine)?;
+    let b = padded / p;
+    let blocks = (0..p).map(|i| padded_input.slice(i * b, b)).collect();
+    let mut blocks = run_ring(c, PlanKind::AllReduce, padded, 1, blocks, Some(combiner))?;
     trim_blocks(&mut blocks, n);
     Ok(blocks)
 }
@@ -201,13 +187,13 @@ pub(crate) fn effective_lanes<T: Elem, C: Comm<T>>(c: &C, lanes: usize) -> usize
 }
 
 /// Lane-parallel ring reduce-scatter: the same `p - 1`-step block schedule
-/// as [`ring_reduce_scatter_chunks`], but every traveling block is split
-/// into `lanes` contiguous stripe views, stripe `l` riding transport lane
-/// `l` (NCCL-channel style). Each step's incoming stripes are folded into
-/// posted views of this rank's contribution via one
-/// [`Comm::sendrecv_striped_combine_into`] — on a multi-lane transport the
-/// per-stripe folds run concurrently on the lane worker threads, dividing
-/// the combine's critical path by the lane count.
+/// as [`ring_reduce_scatter_chunks`], but lowered with `lanes > 1`, so
+/// every traveling block is split into `lanes` contiguous stripe views,
+/// stripe `l` riding transport lane `l` (NCCL-channel style). Each step's
+/// incoming stripes are folded into posted views of this rank's
+/// contribution via one [`Comm::sendrecv_striped_combine_into`] — on a
+/// multi-lane transport the per-stripe folds run concurrently on the lane
+/// worker threads, dividing the combine's critical path by the lane count.
 ///
 /// `lanes` is clamped to [`Comm::lanes`] (0 = use all); at an effective
 /// lane count of 1 this delegates to the unstriped path. Returns this
@@ -226,12 +212,8 @@ pub fn ring_reduce_scatter_lanes_chunks<T: Elem, C: Comm<T>>(
     }
     let p = c.size();
     let b = check_reduce_scatter(input.as_slice(), p)?;
-    if p == 1 {
-        c.begin_op();
-        return Ok(input.stripes(k));
-    }
     let blocks = (0..p).map(|i| input.slice(i * b, b)).collect();
-    ring_reduce_scatter_blocks_lanes_chunks(c, blocks, combiner, k)
+    run_ring(c, PlanKind::ReduceScatter, p * b, k, blocks, Some(combiner))
 }
 
 /// Lane-parallel block-list ring reduce-scatter — the striped counterpart
@@ -241,7 +223,7 @@ pub fn ring_reduce_scatter_lanes_chunks<T: Elem, C: Comm<T>>(
 /// block as its stripe list.
 pub fn ring_reduce_scatter_blocks_lanes_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
-    mut blocks: Vec<Chunk<T>>,
+    blocks: Vec<Chunk<T>>,
     combiner: &Combiner<T>,
     lanes: usize,
 ) -> Result<Vec<Chunk<T>>> {
@@ -250,64 +232,16 @@ pub fn ring_reduce_scatter_blocks_lanes_chunks<T: Elem, C: Comm<T>>(
         return Ok(vec![ring_reduce_scatter_blocks_chunks(c, blocks, combiner)?]);
     }
     let p = c.size();
-    check_blocks(&blocks, p)?;
-    c.begin_op();
-    let r = c.rank();
-    if p == 1 {
-        return Ok(blocks.pop().expect("p == 1 has exactly one block").stripes(k));
-    }
-    let right = (r + 1) % p;
-    let left = (r + p - 1) % p;
-    let first = idx::rs_send_block(r, p, 0);
-    let mut current = std::mem::replace(&mut blocks[first], Chunk::empty()).stripes(k);
-    for s in 0..p - 1 {
-        let recv_b = idx::rs_recv_block(r, p, s);
-        let mut accs = std::mem::replace(&mut blocks[recv_b], Chunk::empty()).stripes(k);
-        c.sendrecv_striped_combine_into(right, current, left, s as u32, &mut accs, combiner)?;
-        current = accs;
-    }
-    debug_assert_eq!(idx::rs_recv_block(r, p, p - 2), r);
-    Ok(current)
+    let b = check_blocks(&blocks, p)?;
+    run_ring(c, PlanKind::ReduceScatter, p * b, k, blocks, Some(combiner))
 }
 
-/// Striped ring all-gather core: every rank contributes its block as a
-/// stripe list; blocks travel the ring stripe-parallel and are forwarded
-/// untouched (zero-copy, per stripe). Returns per-origin-rank stripe
-/// lists. All ranks must stripe identically (same `b`, same `k`) — the
-/// shape contract of [`crate::comm::stripe_lens`].
-pub(crate) fn ring_all_gather_striped<T: Elem, C: Comm<T>>(
-    c: &mut C,
-    stripes: Vec<Chunk<T>>,
-) -> Result<Vec<Vec<Chunk<T>>>> {
-    c.begin_op();
-    let p = c.size();
-    let r = c.rank();
-    let k = stripes.len();
-    let mut out: Vec<Option<Vec<Chunk<T>>>> = vec![None; p];
-    out[r] = Some(stripes.clone());
-    if p > 1 {
-        let right = (r + 1) % p;
-        let left = (r + p - 1) % p;
-        let mut current = stripes;
-        for s in 0..p - 1 {
-            let recv_b = idx::ag_recv_block(r, p, s);
-            let got = c.sendrecv_striped(right, current, left, s as u32, k)?;
-            out[recv_b] = Some(got.clone());
-            current = got;
-        }
-    }
-    Ok(out
-        .into_iter()
-        .map(|b| b.expect("ring schedule covers every block"))
-        .collect())
-}
-
-/// Lane-parallel ring all-gather: [`ring_all_gather_chunks`] with each
-/// block split into `lanes` stripes riding their own transport lanes.
-/// Returns `p · k` chunks in rank-major, stripe-minor order
-/// (`out[i * k + l]` = stripe `l` of rank `i`'s block), which concatenate
-/// to the full gathered buffer. At an effective lane count of 1 this is
-/// exactly the unstriped block list.
+/// Lane-parallel ring all-gather: [`ring_all_gather_chunks`] lowered with
+/// `lanes > 1` — each block split into `lanes` stripes riding their own
+/// transport lanes. Returns `p · k` chunks in rank-major, stripe-minor
+/// order (`out[i * k + l]` = stripe `l` of rank `i`'s block), which
+/// concatenate to the full gathered buffer. At an effective lane count of
+/// 1 this is exactly the unstriped block list.
 pub fn ring_all_gather_lanes_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
@@ -318,15 +252,15 @@ pub fn ring_all_gather_lanes_chunks<T: Elem, C: Comm<T>>(
         return ring_all_gather_chunks(c, input);
     }
     check_all_gather(input.as_slice())?;
-    let per_rank = ring_all_gather_striped(c, input.stripes(k))?;
-    Ok(per_rank.into_iter().flatten().collect())
+    let elems = input.len();
+    run_ring(c, PlanKind::AllGather, elems, k, vec![input], None)
 }
 
 /// Lane-parallel ring all-reduce: striped reduce-scatter ∘ striped
-/// all-gather, no intermediate materialization — each reduced stripe feeds
-/// the gather directly on its lane. Returns `p · k` chunks in rank-major,
-/// stripe-minor order, trimmed of padding (they concatenate to exactly
-/// `input.len()` elements).
+/// all-gather as one two-phase plan, no intermediate materialization —
+/// each reduced stripe feeds the gather directly on its lane. Returns
+/// `p · k` chunks in rank-major, stripe-minor order, trimmed of padding
+/// (they concatenate to exactly `input.len()` elements).
 pub fn ring_all_reduce_lanes_chunks<T: Elem, C: Comm<T>>(
     c: &mut C,
     input: Chunk<T>,
@@ -346,9 +280,9 @@ pub fn ring_all_reduce_lanes_chunks<T: Elem, C: Comm<T>>(
     } else {
         pad_chunk(&input, padded)
     };
-    let mine = ring_reduce_scatter_lanes_chunks(c, padded_input, combiner, k)?;
-    let per_rank = ring_all_gather_striped(c, mine)?;
-    let mut blocks: Vec<Chunk<T>> = per_rank.into_iter().flatten().collect();
+    let b = padded / p;
+    let blocks = (0..p).map(|i| padded_input.slice(i * b, b)).collect();
+    let mut blocks = run_ring(c, PlanKind::AllReduce, padded, k, blocks, Some(combiner))?;
     trim_blocks(&mut blocks, n);
     Ok(blocks)
 }

@@ -41,6 +41,11 @@ pub fn shuffle_gather<T: Copy>(buf: &[T], n_nodes: usize, m_local: usize, block:
 /// the block *list* (O(outer·inner) pointer clones) without touching a
 /// byte. This is why the fused hierarchical all-gather needs no transpose
 /// kernel at all — the unshuffle is free once blocks are views.
+///
+/// Lowered as a communication-free [`super::plan`] shuffle (the plan's
+/// `outputs` list *is* the permutation) and applied by
+/// [`super::engine::run_local`], so the same verified object the netsim
+/// costs is what reorders the blocks here.
 pub fn transpose_chunk_blocks<T>(
     blocks: &[crate::comm::Chunk<T>],
     outer: usize,
@@ -52,13 +57,13 @@ pub fn transpose_chunk_blocks<T>(
         "transpose_chunk_blocks: {} blocks != {outer}×{inner}",
         blocks.len()
     );
-    let mut out = Vec::with_capacity(blocks.len());
-    for j in 0..inner {
-        for i in 0..outer {
-            out.push(blocks[i * inner + j].clone());
-        }
+    if blocks.is_empty() {
+        return Vec::new();
     }
-    out
+    let spec = super::plan::PlanSpec::shuffle(outer, inner);
+    super::plan::verify_cached(&spec).expect("shuffle plans are statically valid");
+    let pl = super::plan::build(&spec, 0).expect("shuffle plans lower for any grid");
+    super::engine::run_local(&pl, blocks.to_vec()).expect("local plans cannot fail")
 }
 
 #[cfg(test)]

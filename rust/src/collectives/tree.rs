@@ -7,27 +7,30 @@
 //! broadcast — the same `O(log p)` step structure; the netsim library
 //! models use the proper double-binary-tree cost.
 //!
-//! Over the chunked plane the reduce phase *posts* the local accumulator
-//! as the receive target for every child's partial
-//! ([`Comm::recv_combine_into`]): the first delivery into a still-shared
-//! accumulator is a one-pass fuse into fresh storage, every later child is
-//! folded in place, and a leaf's contribution leaves as a zero-copy view —
-//! no rank ever materializes a staging vector (the seed path paid a
-//! `to_vec` of the input on every rank plus an owned-Vec send per leaf).
-//! The broadcast phase fans the reduced chunk out as zero-copy clones.
+//! The schedule is lowered by [`super::plan`]'s tree builder and executed
+//! by [`super::engine`]. Over the chunked plane the reduce phase *posts*
+//! the local accumulator as the receive target for every child's partial
+//! (lowered `RecvCombine` ops on [`Comm::recv_combine_into`]): the first
+//! delivery into a still-shared accumulator is a one-pass fuse into fresh
+//! storage, every later child is folded in place, and a leaf's
+//! contribution leaves as a zero-copy moved send — no rank ever
+//! materializes a staging vector. The broadcast phase fans the reduced
+//! chunk out as zero-copy clones.
 
 use crate::comm::{Chunk, Comm};
 use crate::error::Result;
 use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
 
+use super::engine;
+use super::plan::{self, Algo, PlanKind, PlanSpec};
 use super::slice_reduce;
 
 /// Binomial-tree all-reduce over chunks, any communicator size.
 ///
 /// Consumes the input chunk as the reduction accumulator: on ranks that
 /// receive (rank 0 and interior nodes) children's partials are delivered
-/// straight into it via [`Comm::recv_combine_into`]; on leaf ranks it is
+/// straight into it via posted combining receives; on leaf ranks it is
 /// sent up the tree as-is. Every rank returns the same reduced chunk; for
 /// `p > 1` on rank 0 that is the accumulator itself, elsewhere the
 /// broadcast-delivered view (shared with this rank's children until their
@@ -38,58 +41,12 @@ pub fn tree_all_reduce_chunks<T: Elem, C: Comm<T>>(
     combiner: &Combiner<T>,
 ) -> Result<Chunk<T>> {
     super::check_all_gather(input.as_slice())?;
-    c.begin_op();
-    let p = c.size();
-    let r = c.rank();
-    if p == 1 {
-        return Ok(input);
-    }
-    // `Some` until the accumulator is sent up the tree — i.e. exactly on
-    // rank 0 once phase 1 completes.
-    let mut acc = Some(input);
-
-    // Phase 1: binomial reduce toward rank 0.
-    let mut mask = 1usize;
-    let mut recv_mask = p.next_power_of_two(); // where *we* sent (root: never)
-    while mask < p {
-        let step = mask.trailing_zeros();
-        if r & mask != 0 {
-            let dst = r & !mask;
-            // Move the accumulator up (we receive the final value in
-            // phase 2) — a zero-copy post of whatever storage it holds.
-            c.send_slice(dst, step, acc.take().expect("accumulator live until sent"))?;
-            recv_mask = mask;
-            break;
-        }
-        let src = r | mask;
-        if src < p {
-            let dest = acc.as_mut().expect("receiving rank still holds accumulator");
-            c.recv_combine_into(src, step, dest, combiner)?;
-        }
-        mask <<= 1;
-    }
-
-    // Phase 2: binomial broadcast from rank 0 (mirror of phase 1).
-    let result = match acc {
-        Some(chunk) => chunk, // rank 0
-        None => {
-            // Receive the final value from the rank we reduced into.
-            let src = r & !(recv_mask);
-            let step = 0x100 + recv_mask.trailing_zeros();
-            c.recv_chunk(src, step)?
-        }
-    };
-    // Root keeps its initial recv_mask = next_power_of_two(p).
-    let mut child_mask = recv_mask >> 1;
-    while child_mask > 0 {
-        let dst = r | child_mask;
-        if dst != r && dst < p {
-            let step = 0x100 + child_mask.trailing_zeros();
-            c.send_slice(dst, step, result.clone())?;
-        }
-        child_mask >>= 1;
-    }
-    Ok(result)
+    let spec = PlanSpec::flat(PlanKind::AllReduce, Algo::Tree, c.size(), input.len(), 1);
+    plan::verify_cached(&spec)?;
+    let pl = plan::build(&spec, c.rank())?;
+    let mut out = engine::run_flat(c, &pl, vec![input], Some(combiner))?;
+    debug_assert_eq!(out.len(), 1, "tree all-reduce yields one chunk");
+    Ok(out.pop().expect("tree plan outputs the reduced buffer"))
 }
 
 /// Binomial-tree all-reduce, slice API — adapter over

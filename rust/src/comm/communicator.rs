@@ -12,9 +12,8 @@
 //! receives ([`Comm::recv_into`] / [`Comm::recv_combine_into`]) go one
 //! step further and deliver — or fold — the incoming chunk directly into
 //! receiver-designated storage, which is what keeps the reduce path free
-//! of staging copies. The owned `Vec` [`Comm::send`] / [`Comm::recv`] /
-//! [`Comm::sendrecv`] shims are deprecated and remain only for external
-//! callers mid-migration.
+//! of staging copies. There is no owned-`Vec` surface: every payload is a
+//! [`Chunk`] (an owned `Vec` wraps in O(1) via [`Chunk::from_vec`]).
 //!
 //! Tag namespacing: every communicator has a 64-bit context id (an FNV hash
 //! of its member list and lineage); the per-instance op sequence number and
@@ -207,25 +206,6 @@ pub trait Comm<T: Send + Sync + 'static> {
         self.recv_striped_combine_into(from, step, dests, combiner)
     }
 
-    /// Compat shim: owned-vector send (wrapped into a chunk, still O(1)).
-    #[deprecated(note = "owned-Vec compat shim — use `send_slice` with a `Chunk` (O(1) wrap)")]
-    fn send(&mut self, peer: usize, step: u32, data: Vec<T>) -> Result<()> {
-        self.send_slice(peer, step, Chunk::from_vec(data))
-    }
-
-    /// Compat shim: materializing receive (copy only if the storage is
-    /// still shared — a moved-in message is taken over for free).
-    #[deprecated(
-        note = "owned-Vec compat shim — use `recv_chunk` (zero-copy) or `recv_into` \
-                (posted receive)"
-    )]
-    fn recv(&mut self, peer: usize, step: u32) -> Result<Vec<T>>
-    where
-        T: Clone,
-    {
-        Ok(self.recv_chunk(peer, step)?.into_vec())
-    }
-
     /// Posted receive: deliver the matched chunk from `peer` directly into
     /// `dest`'s storage — a reference move when the incoming chunk is
     /// exclusive, a copy into the posted buffer otherwise. Returns
@@ -328,18 +308,6 @@ pub trait Comm<T: Send + Sync + 'static> {
     {
         self.send_slice(to, step, chunk)?;
         self.recv_combine_into(from, step, dest, combiner)
-    }
-
-    /// Owned-vector combined exchange (compat shim).
-    #[deprecated(
-        note = "owned-Vec compat shim — use `sendrecv_chunk` or `sendrecv_combine_into`"
-    )]
-    fn sendrecv(&mut self, to: usize, data: Vec<T>, from: usize, step: u32) -> Result<Vec<T>>
-    where
-        T: Clone,
-    {
-        self.send_slice(to, step, Chunk::from_vec(data))?;
-        Ok(self.recv_chunk(from, step)?.into_vec())
     }
 
     /// Dissemination barrier: O(log p) rounds of empty-chunk tokens.
@@ -793,19 +761,6 @@ mod tests {
         let (mut c0, mut c1) = pair();
         c0.send_slice(1, 0, Chunk::from_vec(vec![42.0])).unwrap();
         assert_eq!(c1.recv_chunk(0, 0).unwrap(), vec![42.0]);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn owned_vec_shims_still_work() {
-        // The deprecated Vec shims must keep matching the chunk API until
-        // they are removed.
-        let (mut c0, mut c1) = pair();
-        c0.send(1, 0, vec![42.0]).unwrap();
-        assert_eq!(c1.recv(0, 0).unwrap(), vec![42.0]);
-        c1.send(0, 1, vec![7.0]).unwrap();
-        assert_eq!(c0.sendrecv(1, vec![3.0], 1, 1).unwrap(), vec![7.0]);
-        assert_eq!(c1.recv(0, 1).unwrap(), vec![3.0]);
     }
 
     #[test]

@@ -482,12 +482,6 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
             .map_err(|_| Error::TransportClosed { rank: self.rank })
     }
 
-    /// Owned-vector send: wraps into a [`Chunk`] (O(1)) and posts it.
-    #[deprecated(note = "owned-Vec compat shim — use `send_chunk` (O(1) wrap, zero-copy post)")]
-    pub fn send(&mut self, to: usize, tag: u64, data: Vec<T>) -> Result<()> {
-        self.send_chunk(to, tag, Chunk::from_vec(data))
-    }
-
     /// Blocking matched receive of a chunk from `(from, tag)` on lane 0 —
     /// the caller takes the delivered reference, so the whole message
     /// counts as moved.
@@ -550,18 +544,6 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
         dest.accept_combine(data, combiner);
         self.traffic.count_recv::<T>(len, 0);
         Ok(())
-    }
-
-    /// Materializing receive (compat shim over [`Endpoint::recv_chunk`]).
-    #[deprecated(
-        note = "owned-Vec compat shim — use `recv_chunk` (zero-copy) or `recv_chunk_into` \
-                (posted receive)"
-    )]
-    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<T>>
-    where
-        T: Clone,
-    {
-        Ok(self.recv_chunk(from, tag)?.into_vec())
     }
 
     fn dispatch_lane(
@@ -833,18 +815,6 @@ mod tests {
         for v in 0..4u8 {
             assert_eq!(e1.recv_chunk(0, 9).unwrap(), vec![v]);
         }
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn owned_vec_shims_still_work() {
-        // The deprecated compat shims must stay behaviorally identical to
-        // the chunk API until they are removed.
-        let (_hub, mut eps) = TransportHub::<f32>::new(2);
-        let mut e1 = eps.pop().unwrap();
-        let mut e0 = eps.pop().unwrap();
-        e0.send(1, 7, vec![1.0, 2.0]).unwrap();
-        assert_eq!(e1.recv(0, 7).unwrap(), vec![1.0, 2.0]);
     }
 
     #[test]

@@ -11,9 +11,14 @@ use crate::util::rng::Rng;
 /// One labeled configuration.
 #[derive(Debug, Clone)]
 pub struct Sample {
-    /// Features: `[log2(message MiB), log2(ranks), log2(lanes)]` — the
-    /// paper's two dominant factors plus the transport-lane count (the
-    /// striped PCCL paths shift the regime crossover).
+    /// Features: `[log2(message MiB), log2(ranks), log2(lanes),
+    /// collective_id]` — the paper's two dominant factors, the
+    /// transport-lane count (the striped PCCL paths shift the regime
+    /// crossover), and the collective's stable id
+    /// ([`CollKind::collective_id`]). The id is constant within one
+    /// per-collective model (the scaler zeroes it out there) but keeps
+    /// feature vectors self-describing and lets pooled datasets train a
+    /// single cross-collective model.
     pub features: Vec<f64>,
     /// Class id = index into [`Backend::CONCRETE`].
     pub label: usize,
@@ -32,12 +37,13 @@ pub struct Dataset {
 }
 
 /// Dispatcher feature vector for a call site.
-pub fn features(msg_bytes: usize, ranks: usize, lanes: usize) -> Vec<f64> {
+pub fn features(kind: CollKind, msg_bytes: usize, ranks: usize, lanes: usize) -> Vec<f64> {
     let mb = (msg_bytes as f64 / (1024.0 * 1024.0)).max(1e-6);
     vec![
         mb.log2(),
         (ranks as f64).log2(),
         (lanes.max(1) as f64).log2(),
+        kind.collective_id() as f64,
     ]
 }
 
@@ -71,7 +77,7 @@ impl Dataset {
                         }
                     }
                     samples.push(Sample {
-                        features: features(msg, p, lanes),
+                        features: features(kind, msg, p, lanes),
                         label: best.expect("non-empty backends").1,
                         msg,
                         ranks: p,
@@ -88,6 +94,7 @@ impl Dataset {
     /// label is the argmin backend's class id.
     pub fn push_measured(
         &mut self,
+        kind: CollKind,
         msg: usize,
         ranks: usize,
         lanes: usize,
@@ -108,7 +115,7 @@ impl Dataset {
             )));
         };
         self.samples.push(Sample {
-            features: features(msg, ranks, lanes),
+            features: features(kind, msg, ranks, lanes),
             label,
             msg,
             ranks,
@@ -224,6 +231,7 @@ mod tests {
     fn push_measured_labels_argmin() {
         let mut d = Dataset::default();
         d.push_measured(
+            CollKind::AllReduce,
             64 << 20,
             128,
             4,
@@ -238,18 +246,26 @@ mod tests {
         assert_eq!(d.samples[0].label, Backend::PcclRec.class_id().unwrap());
         assert_eq!(d.samples[0].msg, 64 << 20);
         assert_eq!(d.samples[0].lanes, 4);
-        assert!(d.push_measured(1, 1, 1, &[]).is_err());
-        assert!(d.push_measured(1, 1, 1, &[(Backend::Auto, 1.0)]).is_err());
+        assert!(d.push_measured(CollKind::AllGather, 1, 1, 1, &[]).is_err());
+        assert!(d
+            .push_measured(CollKind::AllGather, 1, 1, 1, &[(Backend::Auto, 1.0)])
+            .is_err());
     }
 
     #[test]
-    fn features_are_log_scaled() {
-        let f = features(64 << 20, 1024, 4);
-        assert_eq!(f.len(), 3);
+    fn features_are_log_scaled_and_kind_tagged() {
+        let f = features(CollKind::AllReduce, 64 << 20, 1024, 4);
+        assert_eq!(f.len(), 4);
         assert!((f[0] - 6.0).abs() < 1e-9);
         assert!((f[1] - 10.0).abs() < 1e-9);
         assert!((f[2] - 2.0).abs() < 1e-9);
+        assert_eq!(f[3], CollKind::AllReduce.collective_id() as f64);
         // lanes = 0 is treated as single-lane, not -inf.
-        assert_eq!(features(1 << 20, 2, 0)[2], 0.0);
+        assert_eq!(features(CollKind::AllGather, 1 << 20, 2, 0)[2], 0.0);
+        // The collective id distinguishes kinds at identical shapes.
+        assert_ne!(
+            features(CollKind::AllGather, 1 << 20, 2, 1),
+            features(CollKind::ReduceScatter, 1 << 20, 2, 1)
+        );
     }
 }

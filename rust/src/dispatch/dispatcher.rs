@@ -1,6 +1,7 @@
 //! The adaptive dispatcher: per-(machine, collective) SVMs that map
-//! `(message size, rank count, lane count)` to the fastest backend at
-//! runtime (§IV-C, extended with the transport-lane feature).
+//! `(message size, rank count, lane count, collective)` to the fastest
+//! backend at runtime (§IV-C, extended with the transport-lane and
+//! collective-id features).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -15,11 +16,13 @@ use super::dataset::{features, Dataset};
 use super::svm::{train_with_cv, MultiClassSvm, Scaler, SvmParams};
 
 /// Persisted dispatcher payload schema. Schema 1 (implicit — the field was
-/// absent) carried 2-feature `(size, ranks)` models; schema 2 adds the
-/// transport-lane feature. Loading a pre-lane payload into this build would
-/// feed the SVM a short feature vector, so it is refused with
-/// [`Error::ArtifactSchema`] instead.
-pub const DISPATCHER_SCHEMA: u32 = 2;
+/// absent) carried 2-feature `(size, ranks)` models; schema 2 added the
+/// transport-lane feature; schema 3 appends the collective-id feature
+/// ([`crate::backends::CollKind::collective_id`]). Loading an older payload
+/// into this build would feed the SVM a short feature vector, so any
+/// mismatched schema — including a well-formed schema-2 payload — is
+/// refused with [`Error::ArtifactSchema`] instead.
+pub const DISPATCHER_SCHEMA: u32 = 3;
 
 /// One trained collective model + its evaluation record (a Table-I row).
 #[derive(Debug, Clone)]
@@ -82,13 +85,19 @@ impl DispatcherModel {
 
     /// Predicted backend for a raw (message bytes, rank count) call site
     /// on the single-lane transport.
-    pub fn predict(&self, msg_bytes: usize, ranks: usize) -> Backend {
-        self.predict_lanes(msg_bytes, ranks, 1)
+    pub fn predict(&self, kind: CollKind, msg_bytes: usize, ranks: usize) -> Backend {
+        self.predict_lanes(kind, msg_bytes, ranks, 1)
     }
 
     /// Predicted backend for a lane-striped call site.
-    pub fn predict_lanes(&self, msg_bytes: usize, ranks: usize, lanes: usize) -> Backend {
-        let x = self.scaler.transform(&features(msg_bytes, ranks, lanes));
+    pub fn predict_lanes(
+        &self,
+        kind: CollKind,
+        msg_bytes: usize,
+        ranks: usize,
+        lanes: usize,
+    ) -> Backend {
+        let x = self.scaler.transform(&features(kind, msg_bytes, ranks, lanes));
         Backend::CONCRETE[self.svm.predict(&x).min(Backend::CONCRETE.len() - 1)]
     }
 
@@ -186,7 +195,7 @@ impl SvmDispatcher {
         lanes: usize,
     ) -> Backend {
         match self.model(kind) {
-            Ok(m) => m.predict_lanes(msg_bytes, ranks, lanes),
+            Ok(m) => m.predict_lanes(kind, msg_bytes, ranks, lanes),
             Err(_) => Backend::PcclRec,
         }
     }
@@ -348,8 +357,8 @@ mod tests {
             for mb in [1usize, 8, 48, 192, 768, 1536, 4096] {
                 for p in [16usize, 96, 384, 1536, 4096] {
                     assert_eq!(
-                        m.predict(mb << 20, p),
-                        back.predict(mb << 20, p),
+                        m.predict(kind, mb << 20, p),
+                        back.predict(kind, mb << 20, p),
                         "{} mb={mb} p={p}",
                         kind.label()
                     );
@@ -373,7 +382,7 @@ mod tests {
     }
 
     #[test]
-    fn persisted_payload_carries_schema_and_rejects_pre_lane_models() {
+    fn persisted_payload_carries_schema_and_rejects_stale_models() {
         let d = quick_dispatcher();
         let text = d.to_json().to_string();
         assert!(text.contains("\"schema\""));
@@ -392,6 +401,18 @@ mod tests {
             other => panic!("expected ArtifactSchema, got {other:?}"),
         }
 
+        // A well-formed schema-2 payload (lane feature but no collective-id
+        // feature) is refused the same typed way — its 3-feature scalers
+        // would silently mis-scale a 4-feature call.
+        fields.insert("schema".to_string(), Value::Num(2.0));
+        match SvmDispatcher::from_json(&Value::Obj(fields.clone())) {
+            Err(Error::ArtifactSchema { expected, got, .. }) => {
+                assert_eq!(expected, DISPATCHER_SCHEMA);
+                assert_eq!(got, 2);
+            }
+            other => panic!("expected ArtifactSchema for schema 2, got {other:?}"),
+        }
+
         // A future schema is refused the same way.
         fields.insert("schema".to_string(), Value::Num(99.0));
         assert!(matches!(
@@ -401,15 +422,15 @@ mod tests {
     }
 
     #[test]
-    fn lane_feature_reaches_the_model() {
+    fn lane_and_kind_features_reach_the_model() {
         // The lane-aware entry points must flow the lane count into the
         // feature vector (not ignore it): predictions may legitimately
         // coincide, but the feature transform must differ.
         let d = quick_dispatcher();
         let m = d.model(CollKind::ReduceScatter).unwrap();
-        let x1 = m.scaler.transform(&features(64 << 20, 128, 1));
-        let x4 = m.scaler.transform(&features(64 << 20, 128, 4));
-        assert_eq!(x1.len(), 3);
+        let x1 = m.scaler.transform(&features(CollKind::ReduceScatter, 64 << 20, 128, 1));
+        let x4 = m.scaler.transform(&features(CollKind::ReduceScatter, 64 << 20, 128, 4));
+        assert_eq!(x1.len(), 4);
         assert_ne!(x1[2], x4[2], "lane feature must survive scaling");
         // And the single-lane delegates agree with the lane form.
         assert_eq!(

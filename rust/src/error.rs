@@ -60,6 +60,12 @@ pub enum Error {
     /// SVM training / dispatcher errors.
     Dispatch(String),
 
+    /// A lowered collective plan failed static verification (deadlock,
+    /// coverage, or shape defect) or could not be built for the requested
+    /// spec. Plans are verified before any rank executes them, so this
+    /// surfaces at dispatch time, not mid-collective.
+    Plan(String),
+
     /// Simulator configuration errors.
     NetSim(String),
 
@@ -103,6 +109,7 @@ impl fmt::Display for Error {
             }
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),
             Error::Dispatch(m) => write!(f, "dispatch error: {m}"),
+            Error::Plan(m) => write!(f, "plan verification failed: {m}"),
             Error::NetSim(m) => write!(f, "netsim error: {m}"),
             // Transparent: the io error's own message is the message.
             Error::Io(e) => write!(f, "{e}"),

@@ -12,7 +12,8 @@
 //! pccl dispatch [--trials 10] [--save results/models]
 //! pccl train    <ddp|zero3> [--ranks 4] [--steps 100] [--lr 0.5]
 //!               [--backend pccl_rec] [--artifacts DIR]
-//! pccl smoke    [--out BENCH_smoke.json]
+//! pccl smoke        [--out BENCH_smoke.json]
+//! pccl verify-plans
 //! pccl info
 //! ```
 
@@ -29,12 +30,13 @@ use pccl::topology::{Machine, Topology};
 use pccl::train::{ddp::run_ddp, zero3::run_zero3, DdpConfig, Zero3Config};
 use pccl::util::cli::Args;
 
-const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|smoke|info> [options]
-  pccl bench    [--collective C] [--backend B] [--ranks N] [--nodes N] [--size-kb K] [--trials T]
-  pccl figures  <fig1..fig13|table1|all> [--out DIR]
-  pccl dispatch [--trials T] [--save DIR]
-  pccl train    <ddp|zero3> [--ranks N] [--steps S] [--lr F] [--backend B] [--artifacts DIR]
-  pccl smoke    [--out FILE]   (quick measured bench of every backend; writes JSON)
+const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|smoke|verify-plans|info> [options]
+  pccl bench        [--collective C] [--backend B] [--ranks N] [--nodes N] [--size-kb K] [--trials T]
+  pccl figures      <fig1..fig13|table1|all> [--out DIR]
+  pccl dispatch     [--trials T] [--save DIR]
+  pccl train        <ddp|zero3> [--ranks N] [--steps S] [--lr F] [--backend B] [--artifacts DIR]
+  pccl smoke        [--out FILE]   (quick measured bench of every backend; writes JSON)
+  pccl verify-plans (statically verify every dispatch cell's lowered plan)
   pccl info";
 
 fn parse_collective(s: &str) -> Result<CollKind> {
@@ -252,9 +254,36 @@ fn run_bench(
 /// if striping changes a configuration's byte total or result checksum,
 /// and the lanes=4 vs lanes=1 wall-clock ratio on the striped PCCL paths
 /// is printed for the large size.
+/// Statically verify the lowered plan of every dispatch cell the smoke
+/// and lane sweeps will time: for each backend × collective × topology ×
+/// size × lane count, build all `p` per-rank plans, simulate them in
+/// lockstep (deadlock-freedom, exactly-once block coverage), and check
+/// the total element volume against the closed-form schedule bytes where
+/// one exists. Prints the verified-cell count.
+fn run_verify_plans() -> Result<()> {
+    use pccl::runtime::{verify_plan_grid, LauncherConfig};
+    let t = Timer::start();
+    let smoke_cells = verify_plan_grid(&LauncherConfig::smoke())?;
+    let lane_cells = verify_plan_grid(&LauncherConfig::lanes_smoke())?;
+    println!(
+        "verify-plans: {} smoke-grid + {} lane-grid cells verified in {}",
+        smoke_cells,
+        lane_cells,
+        fmt_secs(t.secs())
+    );
+    Ok(())
+}
+
 fn run_smoke(out: &Path) -> Result<()> {
-    use pccl::runtime::{expected_schedule_bytes, Launcher, LauncherConfig};
+    use pccl::runtime::{expected_schedule_bytes, verify_plan_grid, Launcher, LauncherConfig};
     use pccl::util::json::Value;
+
+    // Preamble: no schedule is timed before its lowered plan has been
+    // statically verified — deadlock-free, exactly-once block coverage,
+    // byte-exact against the closed-form volumes.
+    let verified =
+        verify_plan_grid(&LauncherConfig::smoke())? + verify_plan_grid(&LauncherConfig::lanes_smoke())?;
+    println!("verify-plans preamble: {verified} cells verified");
 
     let t = Timer::start();
     let spawn_sweep = Launcher::new(LauncherConfig::smoke()).sweep()?;
@@ -578,6 +607,9 @@ fn main() -> Result<()> {
         "smoke" => {
             let out = PathBuf::from(args.get("out").unwrap_or("BENCH_smoke.json"));
             run_smoke(&out)?;
+        }
+        "verify-plans" => {
+            run_verify_plans()?;
         }
         "info" => {
             for m in [Machine::Frontier, Machine::Perlmutter] {

@@ -1,8 +1,15 @@
 //! Per-library performance models.
 //!
 //! Each model turns `(collective, message size, rank count)` into the round
-//! schedule its algorithm executes, using the same step/block math as the
-//! data plane ([`crate::collectives::schedule`]). The models encode the
+//! schedule its algorithm executes. The PCCL models cost the **lowered
+//! plan itself**: they build the same [`crate::collectives::plan::PlanSpec`]
+//! the data plane executes (at a symbolic one element per block) and read
+//! the per-phase, per-round element factors off
+//! [`crate::collectives::plan::phase_shapes`] — so the schedule that is
+//! statically verified is the schedule that is timed. The third-party
+//! models (vendor, Cray-MPICH, the diagnostics) stay closed-form over the
+//! step math in [`crate::collectives::schedule`]; they describe libraries
+//! whose schedules this repo does not lower. The models encode the
 //! behaviours the paper measures:
 //!
 //! * **Vendor (NCCL/RCCL)** — flat ring all-gather/reduce-scatter across all
@@ -22,6 +29,7 @@
 //!   doubling/halving.
 
 use crate::backends::CollKind;
+use crate::collectives::plan::{self, Algo, PhaseShape, PlanKind, PlanSpec, Scope};
 use crate::collectives::schedule::{recursive, ring};
 use crate::error::{Error, Result};
 use crate::metrics::Stats;
@@ -184,12 +192,12 @@ pub fn schedule_lanes(
             lib == LibModel::PcclRec,
             lanes,
             &mut counters,
-        ),
+        )?,
         LibModel::VendorPat => {
             vendor_pat_phases(&mp, kind, msg, ranks, b, &mut counters, &mut extra_sigma)
         }
         LibModel::PcclRecPipelined => {
-            let phases = pccl_phases(&mp, &topo, kind, msg, ranks, true, lanes, &mut counters);
+            let phases = pccl_phases(&mp, &topo, kind, msg, ranks, true, lanes, &mut counters)?;
             pipeline_phases(&mp, phases)
         }
     };
@@ -349,9 +357,12 @@ fn custom_phases(
     }]
 }
 
-/// PCCL hierarchical phases (§IV-A). `rec` selects the recursive
-/// doubling/halving inter-node backend; `lanes` stripes the inter-node
-/// phase over that many transport lanes (rails).
+/// PCCL hierarchical phases (§IV-A), costed off the **lowered plan**:
+/// the same `PlanSpec` the data plane runs is built at one symbolic
+/// element per block, [`plan::phase_shapes`] reports each phase's
+/// per-round element factors, and round bytes = factor × `b`. `rec`
+/// selects the recursive doubling/halving inter-node backend; `lanes`
+/// stripes the inter-node phase over that many transport lanes (rails).
 #[allow(clippy::too_many_arguments)]
 fn pccl_phases(
     mp: &MachineParams,
@@ -362,71 +373,102 @@ fn pccl_phases(
     rec: bool,
     lanes: usize,
     counters: &mut NicCounters,
-) -> Vec<Phase> {
+) -> Result<Vec<Phase>> {
     let n = topo.nodes();
     let m_local = topo.gpus_per_node();
     let gpg = (m_local / topo.nics_per_node()) as f64; // GPUs per NIC
     let p = ranks as f64;
     let b = msg / p;
-    let nb = b * n as f64; // per-GPU buffer in the intra phase
     // Effective rail occupancy of the striped inter phase: one lane per
     // NIC rail at most (extra lanes share rails and buy nothing). The
     // recursive inter path runs unstriped (its exchange ranges span
     // blocks), matching the data plane's fallback.
     let rails = lanes.min(mp.nics_per_node).max(1);
     let inter_alpha = mp.alpha_inter + (rails - 1) as f64 * mp.alpha_lane;
+    let use_rec = rec && n.is_power_of_two();
 
-    // Inter-node phase rounds (per-GPU byte volumes; NIC load = gpg×).
-    let inter_rounds = |reduce: bool| -> Vec<RoundCost> {
-        if n <= 1 {
-            return vec![];
+    // Lower rank 0's plan (SPMD-symmetric, so it is representative) with
+    // block length 1, so each round's `sent_elems`/`combine_elems` is an
+    // exact small-integer byte *factor*.
+    let algo = if use_rec { Algo::HierRec } else { Algo::HierRing };
+    let (pk, elems0) = match kind {
+        CollKind::AllGather => (PlanKind::AllGather, 1),
+        CollKind::ReduceScatter => (PlanKind::ReduceScatter, n * m_local),
+        CollKind::AllReduce => (PlanKind::AllReduce, n * m_local),
+    };
+    let spec = PlanSpec::hier(pk, algo, n, m_local, elems0, 1);
+    let shapes = plan::phase_shapes(&spec)?;
+
+    // Inter-node phase (NIC-bound; per-GPU byte volumes, NIC load = gpg×).
+    let cost_inter = |ph: &PhaseShape| -> Vec<RoundCost> {
+        debug_assert_eq!(ph.scope, Scope::Inter);
+        if ph.rounds.is_empty() {
+            return vec![]; // single-node topology: phase is a no-op
         }
-        if rec && n.is_power_of_two() {
-            (0..recursive::steps(n))
-                .map(|s| {
-                    // All-gather doubling sends 2^s·b at step s; the
-                    // halving reduce-scatter mirrors it (largest first).
-                    let bytes = b * (1 << s) as f64;
-                    RoundCost {
-                        label: "inter-rec",
-                        alpha: mp.alpha_inter,
-                        nic_bytes: gpg * bytes,
-                        reduce_bytes: if reduce { bytes } else { 0.0 },
-                        reduce_bw: mp.gpu_reduce_bw,
-                        repeat: 1,
-                        ..Default::default()
-                    }
+        if use_rec {
+            // Non-uniform doubling/halving rounds, costed smallest first
+            // (the halving reduce-scatter runs largest first; cost order
+            // is immaterial to the round sum).
+            let mut rounds: Vec<(u64, u64)> =
+                ph.rounds.iter().map(|r| (r.sent_elems, r.combine_elems)).collect();
+            rounds.sort_unstable();
+            rounds
+                .into_iter()
+                .map(|(sent, combine)| RoundCost {
+                    label: "inter-rec",
+                    alpha: mp.alpha_inter,
+                    nic_bytes: gpg * sent as f64 * b,
+                    reduce_bytes: combine as f64 * b,
+                    reduce_bw: mp.gpu_reduce_bw,
+                    repeat: 1,
+                    ..Default::default()
                 })
                 .collect()
         } else {
+            // Ring rounds are uniform: compress to one repeated round.
+            let (sent, combine) = (ph.rounds[0].sent_elems, ph.rounds[0].combine_elems);
+            debug_assert!(ph
+                .rounds
+                .iter()
+                .all(|r| (r.sent_elems, r.combine_elems) == (sent, combine)));
             vec![RoundCost {
                 label: "inter-ring",
                 alpha: inter_alpha,
-                nic_bytes: gpg * b,
-                reduce_bytes: if reduce { b } else { 0.0 },
+                nic_bytes: gpg * sent as f64 * b,
+                reduce_bytes: combine as f64 * b,
                 reduce_bw: mp.gpu_reduce_bw,
                 rails: rails as f64,
-                repeat: ring::steps(n),
+                repeat: ph.rounds.len(),
                 ..Default::default()
             }]
         }
     };
-    // Intra-node ring phase (vendor library, NVLink/IF only).
-    let intra_rounds = |reduce: bool| -> Vec<RoundCost> {
-        if m_local <= 1 {
-            return vec![];
+    // Intra-node ring phase (vendor library, NVLink/IF only): uniform
+    // rounds of n block messages each.
+    let cost_intra = |ph: &PhaseShape| -> Vec<RoundCost> {
+        debug_assert_eq!(ph.scope, Scope::Intra);
+        if ph.rounds.is_empty() {
+            return vec![]; // single GPU per node: phase is a no-op
         }
+        let (sent, combine) = (ph.rounds[0].sent_elems, ph.rounds[0].combine_elems);
+        debug_assert!(ph
+            .rounds
+            .iter()
+            .all(|r| (r.sent_elems, r.combine_elems) == (sent, combine)));
         vec![RoundCost {
             label: "intra-ring",
             alpha: mp.alpha_intra,
-            intra_bytes: nb,
-            reduce_bytes: if reduce { nb } else { 0.0 },
+            intra_bytes: sent as f64 * b,
+            reduce_bytes: combine as f64 * b,
             reduce_bw: mp.gpu_reduce_bw,
-            repeat: ring::steps(m_local),
+            repeat: ph.rounds.len(),
             ..Default::default()
         }]
     };
     // Device-local shuffle of the full buffer (Step 3 / pre-shuffle).
+    // Communication-free, so it has no rounds in the lowered plan — the
+    // plan's output ordering *is* the unshuffle; its kernel cost is added
+    // here positionally.
     let shuffle_round = || RoundCost {
         label: "shuffle",
         reduce_bytes: msg,
@@ -444,45 +486,35 @@ fn pccl_phases(
     // Zero-copy priority-list path: residual overflow only.
     counters.match_overflow += 0.005 * (n as f64).log2().max(0.0) * m_local as f64;
 
-    let ag = |phases: &mut Vec<Phase>| {
-        phases.push(Phase {
-            label: "pccl-inter-ag",
-            rounds: inter_rounds(false),
-        });
-        phases.push(Phase {
-            label: "pccl-intra-ag",
-            rounds: intra_rounds(false),
-        });
-        phases.push(Phase {
-            label: "pccl-unshuffle",
-            rounds: vec![shuffle_round()],
-        });
-    };
-    let rs = |phases: &mut Vec<Phase>| {
-        phases.push(Phase {
-            label: "pccl-preshuffle",
-            rounds: vec![shuffle_round()],
-        });
-        phases.push(Phase {
-            label: "pccl-intra-rs",
-            rounds: intra_rounds(true),
-        });
-        phases.push(Phase {
-            label: "pccl-inter-rs",
-            rounds: inter_rounds(true),
-        });
-    };
-
+    // Map the plan's phases positionally (builders emit AG = [inter,
+    // intra], RS = [intra, inter], AR = RS phases then AG phases) and
+    // splice the shuffle kernels in where the device-local permutation
+    // sits in the paper's Fig. 5 description.
     let mut phases = Vec::new();
     match kind {
-        CollKind::AllGather => ag(&mut phases),
-        CollKind::ReduceScatter => rs(&mut phases),
+        CollKind::AllGather => {
+            debug_assert_eq!(shapes.len(), 2);
+            phases.push(Phase { label: "pccl-inter-ag", rounds: cost_inter(&shapes[0]) });
+            phases.push(Phase { label: "pccl-intra-ag", rounds: cost_intra(&shapes[1]) });
+            phases.push(Phase { label: "pccl-unshuffle", rounds: vec![shuffle_round()] });
+        }
+        CollKind::ReduceScatter => {
+            debug_assert_eq!(shapes.len(), 2);
+            phases.push(Phase { label: "pccl-preshuffle", rounds: vec![shuffle_round()] });
+            phases.push(Phase { label: "pccl-intra-rs", rounds: cost_intra(&shapes[0]) });
+            phases.push(Phase { label: "pccl-inter-rs", rounds: cost_inter(&shapes[1]) });
+        }
         CollKind::AllReduce => {
-            rs(&mut phases);
-            ag(&mut phases);
+            debug_assert_eq!(shapes.len(), 4);
+            phases.push(Phase { label: "pccl-preshuffle", rounds: vec![shuffle_round()] });
+            phases.push(Phase { label: "pccl-intra-rs", rounds: cost_intra(&shapes[0]) });
+            phases.push(Phase { label: "pccl-inter-rs", rounds: cost_inter(&shapes[1]) });
+            phases.push(Phase { label: "pccl-inter-ag", rounds: cost_inter(&shapes[2]) });
+            phases.push(Phase { label: "pccl-intra-ag", rounds: cost_intra(&shapes[3]) });
+            phases.push(Phase { label: "pccl-unshuffle", rounds: vec![shuffle_round()] });
         }
     }
-    phases
+    Ok(phases)
 }
 
 /// Pipeline stages used by the `pccl_rec_pipe4` ablation.

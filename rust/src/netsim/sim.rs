@@ -5,9 +5,11 @@
 //! *rounds*, and a round cannot start before the previous one finished.
 //! Simulation therefore reduces to costing each round — the completion
 //! time of its slowest resource — and summing. Per-round resource loads
-//! are produced by [`crate::netsim::libmodel`] from the same step/block
-//! index math the data plane executes
-//! ([`crate::collectives::schedule`]), which is what makes the simulated
+//! are produced by [`crate::netsim::libmodel`]: for the PCCL models they
+//! are read directly off the lowered, statically-verified plan
+//! ([`crate::collectives::plan::phase_shapes`]), for the third-party
+//! library models off the closed-form step math in
+//! [`crate::collectives::schedule`] — which is what makes the simulated
 //! pattern the shipped pattern.
 //!
 //! Round cost = `alpha` (startup/protocol latency)

@@ -27,8 +27,10 @@ use std::time::Instant;
 
 use crate::backends::{
     all_gather_chunks, all_gather_lanes_chunks, all_reduce_chunks, all_reduce_lanes_chunks,
-    reduce_scatter_chunks, reduce_scatter_stripes, Backend, CollKind, CollectiveOptions,
+    plan_spec_for, reduce_scatter_chunks, reduce_scatter_stripes, Backend, CollKind,
+    CollectiveOptions, MIN_STRIPE_ELEMS,
 };
+use crate::collectives::plan;
 use crate::comm::{Chunk, Communicator, TransportHub};
 use crate::dispatch::{Dataset, SvmDispatcher};
 use crate::error::{Error, Result};
@@ -175,7 +177,7 @@ impl MeasuredSweep {
                 })
                 .map(|c| (c.backend, c.stats.mean()))
                 .collect();
-            data.push_measured(msg, ranks, lanes, &times)?;
+            data.push_measured(kind, msg, ranks, lanes, &times)?;
         }
         Ok(data)
     }
@@ -326,6 +328,74 @@ pub fn expected_schedule_bytes(
         }
         _ => None,
     }
+}
+
+/// The stripe count a sweep cell actually runs at: mirrors
+/// [`crate::backends::effective_lane_count`] (which needs a live
+/// communicator) for a cell whose transport has `lanes` lanes and whose
+/// per-rank input is `input_len` elements.
+fn effective_cell_lanes(kind: CollKind, input_len: usize, p: usize, lanes: usize) -> usize {
+    if lanes <= 1 {
+        return 1; // cell_trial routes lanes <= 1 through the unstriped entry points
+    }
+    let per_block = match kind {
+        CollKind::AllGather => input_len,
+        CollKind::ReduceScatter | CollKind::AllReduce => input_len / p.max(1),
+    };
+    if per_block / lanes < MIN_STRIPE_ELEMS {
+        1
+    } else {
+        lanes
+    }
+}
+
+/// Statically verify the lowered plan of **every cell** in a sweep grid —
+/// the `pccl verify-plans` core, also run as the `pccl smoke` preamble so
+/// no schedule is ever timed without first proving it deadlock-free,
+/// exactly-once covering, and byte-exact.
+///
+/// For each `(topology, lane count, size, collective, backend)` cell this
+/// builds the same [`crate::collectives::plan::PlanSpec`] the dispatch
+/// layer lowers at run time ([`plan_spec_for`], including the fallback
+/// and lane gating), runs the all-rank lockstep verifier, and — where a
+/// closed-form byte total exists ([`expected_schedule_bytes`]) — checks
+/// the verifier's wire element total against it (×4: the sweep dtype is
+/// f32). Returns the number of verified cells.
+pub fn verify_plan_grid(cfg: &LauncherConfig) -> Result<usize> {
+    let mut verified = 0usize;
+    for &topo in &cfg.topologies {
+        let p = topo.world_size();
+        for &lanes in &cfg.lane_counts {
+            for &elems in &cfg.elem_counts {
+                for kind in CollKind::ALL {
+                    let (input_len, _) = cell_shape(kind, elems, p);
+                    let k = effective_cell_lanes(kind, input_len, p, lanes);
+                    for backend in Backend::CONCRETE {
+                        let spec = plan_spec_for(kind, backend, topo, input_len, k);
+                        let stats = plan::verify(&spec).map_err(|e| {
+                            Error::Dispatch(format!(
+                                "plan verification failed: {:?}/{:?} elems={elems} p={p} \
+                                 lanes={k}: {e}",
+                                kind, backend
+                            ))
+                        })?;
+                        if let Some(expect) = expected_schedule_bytes(kind, backend, elems, p) {
+                            let got = stats.total_sent_elems * 4;
+                            if got != expect {
+                                return Err(Error::Dispatch(format!(
+                                    "verified plan moves {got} bytes but the analytic schedule \
+                                     expects {expect}: {:?}/{:?} elems={elems} p={p} lanes={k}",
+                                    kind, backend
+                                )));
+                            }
+                        }
+                        verified += 1;
+                    }
+                }
+            }
+        }
+    }
+    Ok(verified)
 }
 
 /// Sum a chunk list's elements as f64 — the order-independent result
@@ -744,6 +814,21 @@ mod tests {
         // closed form here.
         assert!(expected_schedule_bytes(CollKind::AllReduce, Backend::Vendor, 512, 4).is_none());
         assert!(expected_schedule_bytes(CollKind::AllGather, Backend::PcclRec, 512, 4).is_none());
+    }
+
+    #[test]
+    fn verify_plan_grid_covers_smoke_and_lane_grids() {
+        // The exact grids `pccl smoke` runs must verify statically —
+        // including the closed-form byte cross-checks for the flat cells.
+        let n = verify_plan_grid(&LauncherConfig::smoke()).unwrap();
+        // 2 topologies × 1 lane count × 2 sizes × 3 collectives × 4 backends.
+        assert_eq!(n, 2 * 2 * 3 * 4);
+        // 1 topology × 2 lane counts × 2 sizes × 3 collectives × 4 backends.
+        let n = verify_plan_grid(&LauncherConfig::lanes_smoke()).unwrap();
+        assert_eq!(n, 2 * 2 * 3 * 4);
+        // Lane gating mirrors the dispatch layer: small blocks demote.
+        assert_eq!(effective_cell_lanes(CollKind::AllGather, 2048, 8, 4), 1);
+        assert_eq!(effective_cell_lanes(CollKind::AllGather, 4 * MIN_STRIPE_ELEMS, 8, 4), 4);
     }
 
     #[test]

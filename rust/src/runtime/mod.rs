@@ -32,8 +32,8 @@ pub(crate) mod xla_stub;
 pub use artifacts::{ArtifactEntry, Artifacts, Manifest, ModelMeta, TensorSpecJson};
 pub use executable::{Executable, HostTensor, Runtime, TensorSpec};
 pub use launcher::{
-    expected_schedule_bytes, flat_ring_expected_bytes, Launcher, LauncherConfig, MeasuredCell,
-    MeasuredSweep,
+    expected_schedule_bytes, flat_ring_expected_bytes, verify_plan_grid, Launcher, LauncherConfig,
+    MeasuredCell, MeasuredSweep,
 };
 pub use persistent::{PersistentWorld, TrialReport};
 pub use service::{DeviceHandle, DeviceService};

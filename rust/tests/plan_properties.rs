@@ -1,0 +1,282 @@
+//! Plan-IR properties: the lowered per-rank schedules are the *same*
+//! schedules the closed-form index math in `collectives::schedule`
+//! describes, the static verifier rejects forged plans, the verified
+//! element totals reproduce the launcher's analytic byte volumes, and the
+//! one engine executes plans with chunk-identity preserved end to end.
+
+use pccl::backends::{plan_spec_for, Backend, CollKind};
+use pccl::collectives::engine;
+use pccl::collectives::oracle;
+use pccl::collectives::plan::{self, Algo, Op, PlanKind, PlanSpec};
+use pccl::collectives::schedule::{recursive, ring};
+use pccl::comm::{Chunk, CommWorld};
+use pccl::runtime::expected_schedule_bytes;
+use pccl::topology::Topology;
+
+/// Split a plan's op list into rounds (the verifier's cost boundaries):
+/// ops between consecutive `Op::Round` markers, `BeginOp`s dropped.
+fn rounds(ops: &[Op]) -> Vec<Vec<Op>> {
+    let mut out: Vec<Vec<Op>> = Vec::new();
+    for op in ops {
+        match op {
+            Op::Round => out.push(Vec::new()),
+            Op::BeginOp { .. } => {}
+            other => {
+                if let Some(last) = out.last_mut() {
+                    last.push(*other);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Every flat ring plan must replay `schedule::ring` verbatim: same step
+/// count, same left/right peers, and the exact send/recv block of every
+/// step — for divisible and non-divisible rank counts alike.
+#[test]
+fn lowered_ring_plans_replay_schedule_index_math() {
+    for p in [3usize, 6, 8, 12] {
+        let b = 4;
+        for r in 0..p {
+            let ag = plan::build(&PlanSpec::flat(PlanKind::AllGather, Algo::Ring, p, b, 1), r)
+                .unwrap();
+            let ag_rounds = rounds(&ag.ops);
+            assert_eq!(ag_rounds.len(), ring::steps(p), "p={p} r={r}: AG step count");
+            for (s, round) in ag_rounds.iter().enumerate() {
+                match round[..] {
+                    [Op::SendRecv { send_peer, recv_peer, send_slot, recv_slot, .. }] => {
+                        assert_eq!(send_peer, (r + 1) % p, "p={p} r={r} s={s}");
+                        assert_eq!(recv_peer, (r + p - 1) % p, "p={p} r={r} s={s}");
+                        assert_eq!(send_slot, ring::ag_send_block(r, p, s), "p={p} r={r} s={s}");
+                        assert_eq!(recv_slot, ring::ag_recv_block(r, p, s), "p={p} r={r} s={s}");
+                    }
+                    _ => panic!("p={p} r={r} s={s}: AG round is not one fused exchange"),
+                }
+            }
+
+            let rs =
+                plan::build(&PlanSpec::flat(PlanKind::ReduceScatter, Algo::Ring, p, p * b, 1), r)
+                    .unwrap();
+            let rs_rounds = rounds(&rs.ops);
+            assert_eq!(rs_rounds.len(), ring::steps(p), "p={p} r={r}: RS step count");
+            for (s, round) in rs_rounds.iter().enumerate() {
+                match round[..] {
+                    [Op::SendRecvCombine { send_peer, recv_peer, send_slot, recv_slot, .. }] => {
+                        assert_eq!(send_peer, (r + 1) % p, "p={p} r={r} s={s}");
+                        assert_eq!(recv_peer, (r + p - 1) % p, "p={p} r={r} s={s}");
+                        assert_eq!(send_slot, ring::rs_send_block(r, p, s), "p={p} r={r} s={s}");
+                        assert_eq!(recv_slot, ring::rs_recv_block(r, p, s), "p={p} r={r} s={s}");
+                    }
+                    _ => panic!("p={p} r={r} s={s}: RS round is not one fused combine"),
+                }
+            }
+
+            // All-reduce = the RS schedule then the AG schedule over the
+            // same slots; the phase boundary is the second BeginOp.
+            let ar = plan::build(&PlanSpec::flat(PlanKind::AllReduce, Algo::Ring, p, p * b, 1), r)
+                .unwrap();
+            let ar_rounds = rounds(&ar.ops);
+            assert_eq!(ar_rounds.len(), 2 * ring::steps(p), "p={p} r={r}: AR step count");
+            for (s, round) in ar_rounds.iter().enumerate() {
+                let combining = s < ring::steps(p);
+                match round[..] {
+                    [Op::SendRecvCombine { .. }] => {
+                        assert!(combining, "p={p} r={r} s={s}: combine in the AG phase")
+                    }
+                    [Op::SendRecv { .. }] => {
+                        assert!(!combining, "p={p} r={r} s={s}: plain exchange in the RS phase")
+                    }
+                    _ => panic!("p={p} r={r} s={s}: AR round shape"),
+                }
+            }
+        }
+    }
+}
+
+/// Recursive doubling/halving plans must follow `schedule::recursive`:
+/// XOR partners, doubling owned ranges on the gather side, and halving
+/// volumes (`p / 2^(s+1)` blocks each way) on the scatter side.
+#[test]
+fn lowered_rec_plans_replay_schedule_index_math() {
+    for p in [4usize, 8] {
+        let b = 4;
+        for r in 0..p {
+            let ag = plan::build(&PlanSpec::flat(PlanKind::AllGather, Algo::Rec, p, b, 1), r)
+                .unwrap();
+            let ag_rounds = rounds(&ag.ops);
+            assert_eq!(ag_rounds.len(), recursive::steps(p), "p={p} r={r}: AG step count");
+            for (s, round) in ag_rounds.iter().enumerate() {
+                let partner = recursive::ag_partner(r, s);
+                let (lo, hi) = recursive::ag_owned_range(r, s);
+                let (plo, phi) = recursive::ag_owned_range(partner, s);
+                let sends: Vec<usize> = round
+                    .iter()
+                    .filter_map(|op| match *op {
+                        Op::Send { peer, slot, .. } => {
+                            assert_eq!(peer, partner, "p={p} r={r} s={s}: send partner");
+                            Some(slot)
+                        }
+                        _ => None,
+                    })
+                    .collect();
+                let recvs: Vec<usize> = round
+                    .iter()
+                    .filter_map(|op| match *op {
+                        Op::Recv { peer, slot, .. } => {
+                            assert_eq!(peer, partner, "p={p} r={r} s={s}: recv partner");
+                            Some(slot)
+                        }
+                        _ => None,
+                    })
+                    .collect();
+                assert_eq!(sends, (lo..hi).collect::<Vec<_>>(), "p={p} r={r} s={s}: sent blocks");
+                assert_eq!(recvs, (plo..phi).collect::<Vec<_>>(), "p={p} r={r} s={s}: got blocks");
+            }
+
+            let rs =
+                plan::build(&PlanSpec::flat(PlanKind::ReduceScatter, Algo::Rec, p, p * b, 1), r)
+                    .unwrap();
+            let rs_rounds = rounds(&rs.ops);
+            assert_eq!(rs_rounds.len(), recursive::steps(p), "p={p} r={r}: RS step count");
+            for (s, round) in rs_rounds.iter().enumerate() {
+                let partner = recursive::rs_partner(r, p, s);
+                let volume = p / recursive::rs_fraction_denom(s);
+                let mut sends = 0;
+                let mut folds = 0;
+                for op in round {
+                    match *op {
+                        Op::Send { peer, .. } => {
+                            assert_eq!(peer, partner, "p={p} r={r} s={s}: halving partner");
+                            sends += 1;
+                        }
+                        Op::RecvCombine { peer, .. } => {
+                            assert_eq!(peer, partner, "p={p} r={r} s={s}: halving partner");
+                            folds += 1;
+                        }
+                        _ => panic!("p={p} r={r} s={s}: unexpected op in halving round"),
+                    }
+                }
+                assert_eq!(sends, volume, "p={p} r={r} s={s}: halving send volume");
+                assert_eq!(folds, volume, "p={p} r={r} s={s}: halving fold volume");
+            }
+        }
+    }
+}
+
+/// The lockstep verifier is load-bearing: a forged plan set — one rank's
+/// final exchange dropped, or one receive rerouted to the wrong peer —
+/// must be rejected, while the untampered set passes with the exact
+/// schedule volume.
+#[test]
+fn verifier_rejects_forged_plans() {
+    let (p, b) = (4usize, 3usize);
+    let spec = PlanSpec::flat(PlanKind::ReduceScatter, Algo::Ring, p, p * b, 1);
+    let build_all = || -> Vec<plan::Plan> {
+        (0..p).map(|r| plan::build(&spec, r).unwrap()).collect()
+    };
+
+    // Baseline: the honest set verifies and moves (p-1)·b elems per rank.
+    let stats = plan::verify_plans(&spec, build_all()).unwrap();
+    assert_eq!(stats.total_sent_elems, (p * (p - 1) * b) as u64);
+
+    // Forgery 1: drop rank 0's last fused exchange. Its neighbors now
+    // wait on a message that is never posted — the simulation must not
+    // hang, it must return a typed deadlock/coverage error.
+    let mut forged = build_all();
+    let last = forged[0]
+        .ops
+        .iter()
+        .rposition(|op| matches!(op, Op::SendRecvCombine { .. }))
+        .unwrap();
+    forged[0].ops.remove(last);
+    assert!(
+        plan::verify_plans(&spec, forged).is_err(),
+        "a plan with a dropped exchange must not verify"
+    );
+
+    // Forgery 2: reroute one receive to the wrong peer.
+    let mut forged = build_all();
+    for op in forged[2].ops.iter_mut() {
+        if let Op::SendRecvCombine { recv_peer, .. } = op {
+            *recv_peer = (*recv_peer + 1) % p;
+            break;
+        }
+    }
+    assert!(
+        plan::verify_plans(&spec, forged).is_err(),
+        "a plan with a rerouted receive must not verify"
+    );
+
+    // Forgery 3: claim the wrong slot as the output — block coverage must
+    // catch a result that is not the rank's reduced block.
+    let mut forged = build_all();
+    forged[1].outputs = vec![0];
+    assert!(
+        plan::verify_plans(&spec, forged).is_err(),
+        "a plan with a forged output slot must not verify"
+    );
+}
+
+/// The verifier's element totals are the launcher's analytic byte volumes:
+/// for every flat-library cell with a closed form, `verify(spec)` must
+/// account for exactly `expected_schedule_bytes` of traffic (f32 cells).
+#[test]
+fn verified_totals_match_the_closed_form_schedule_bytes() {
+    for p in [2usize, 4, 8] {
+        let topo = Topology::flat(p);
+        for elems in [64usize, 1 << 10] {
+            for kind in [CollKind::AllGather, CollKind::ReduceScatter] {
+                // Mirror the launcher's §III-A shape convention.
+                let input_len = match kind {
+                    CollKind::AllGather => (elems / p).max(1),
+                    _ => elems.div_ceil(p) * p,
+                };
+                let spec = plan_spec_for(kind, Backend::Vendor, topo, input_len, 1);
+                let stats = plan::verify(&spec).unwrap();
+                let expect = expected_schedule_bytes(kind, Backend::Vendor, elems, p)
+                    .expect("flat ring cells have a closed form");
+                assert_eq!(
+                    stats.total_sent_elems * 4,
+                    expect,
+                    "{} p={p} elems={elems}: verified volume vs closed form",
+                    kind.label()
+                );
+            }
+        }
+    }
+}
+
+/// Chunk identity through the engine: an all-gather block delivered to
+/// every rank is the *sender's allocation*, not a copy — the zero-copy
+/// contract holds through plan lowering and engine execution, and the
+/// engine's results match the oracle.
+#[test]
+fn engine_executed_plans_preserve_storage_identity() {
+    let (p, b) = (4usize, 5usize);
+    let spec = PlanSpec::flat(PlanKind::AllGather, Algo::Ring, p, b, 1);
+    plan::verify(&spec).unwrap();
+    let world = CommWorld::<f32>::new(p);
+    let outs = world.run(move |c| {
+        let r = c.rank();
+        let input = Chunk::from_vec((0..b).map(|i| (r * 100 + i) as f32).collect::<Vec<_>>());
+        let my_id = input.storage_id();
+        let pl = plan::build(&spec, r).unwrap();
+        let blocks = engine::run_flat(c, &pl, vec![input], None).unwrap();
+        assert_eq!(blocks.len(), p, "r={r}: one block per rank");
+        let ids: Vec<_> = blocks.iter().map(Chunk::storage_id).collect();
+        (my_id, ids, Chunk::concat(&blocks))
+    });
+    let inputs: Vec<Vec<f32>> =
+        (0..p).map(|r| (0..b).map(|i| (r * 100 + i) as f32).collect()).collect();
+    let expect = oracle::all_gather(&inputs);
+    for (r, (_, ids, gathered)) in outs.iter().enumerate() {
+        assert_eq!(gathered, &expect, "r={r}: engine result vs oracle");
+        for (j, id) in ids.iter().enumerate() {
+            assert_eq!(
+                *id, outs[j].0,
+                "r={r}: block {j} must be rank {j}'s original allocation"
+            );
+        }
+    }
+}
