@@ -22,10 +22,13 @@
 //!   ([`Chunk::stripes`] on demand), matching the lane data plane's
 //!   stripe-at-take semantics.
 
+use std::time::Instant;
+
 use crate::comm::{Chunk, Comm, Communicator};
 use crate::error::{Error, Result};
 use crate::reduction::offload::Combiner;
 use crate::reduction::Elem;
+use crate::trace::{self, RankTrace};
 
 use super::plan::{Op, Plan, Scope, SlotInit};
 
@@ -62,14 +65,19 @@ fn put_part<T>(slots: &mut [Vec<Chunk<T>>], slot: usize, part: usize, chunk: Chu
 }
 
 /// A slot's parts as the stripe list of a striped exchange: already at
-/// stripe arity, or striped on demand from a single whole-block part.
-fn stripe_parts<T: Elem>(parts: Vec<Chunk<T>>, k: usize) -> Vec<Chunk<T>> {
-    if parts.len() == k {
-        parts
-    } else {
-        debug_assert_eq!(parts.len(), 1, "slot arity must be 1 or the stripe count");
-        let whole = parts.into_iter().next().expect("one part");
-        whole.stripes(k)
+/// stripe arity, or striped on demand from a single whole-block part. Any
+/// other arity means the plan and the slot table disagree — a typed error
+/// beats the index panic it used to be.
+fn stripe_parts<T: Elem>(parts: Vec<Chunk<T>>, k: usize) -> Result<Vec<Chunk<T>>> {
+    match parts.len() {
+        n if n == k => Ok(parts),
+        1 => {
+            let whole = parts.into_iter().next().expect("length checked above");
+            Ok(whole.stripes(k))
+        }
+        n => Err(Error::Plan(format!(
+            "slot arity {n} cannot stripe to {k} lanes (must be 1 or the stripe count)"
+        ))),
     }
 }
 
@@ -77,40 +85,81 @@ fn need_combiner<'a, T>(combiner: Option<&'a Combiner<T>>) -> Result<&'a Combine
     combiner.ok_or_else(|| Error::Plan("combining op in a plan run without a combiner".into()))
 }
 
+/// What one executed op moved, for the tracer: kind label, peer, stripe
+/// count, and (sent, received, combined) byte totals.
+type SpanInfo = (&'static str, usize, u32, u64, u64, u64);
+
+fn chunk_bytes<T>(len: usize) -> u64 {
+    (len * std::mem::size_of::<T>()) as u64
+}
+
+fn stripe_bytes<T>(stripes: &[Chunk<T>]) -> u64 {
+    stripes.iter().map(|s| chunk_bytes::<T>(s.len())).sum()
+}
+
 /// Execute a run of ops against one communicator. All ops must target the
 /// communicator `c` represents; scope changes are the caller's job.
+///
+/// When `tracer` is present, one span is recorded per executed comm op;
+/// the phase/round markers update its counters instead. When absent the
+/// only overhead is an `Option` check per op — no clocks are read.
 fn exec<T: Elem, C: Comm<T>>(
     c: &mut C,
     ops: &[Op],
     slots: &mut [Vec<Chunk<T>>],
     combiner: Option<&Combiner<T>>,
+    mut tracer: Option<&mut RankTrace>,
 ) -> Result<()> {
     for op in ops {
-        match *op {
-            Op::BeginOp { .. } => c.begin_op(),
-            Op::Round => {}
+        let started = tracer.as_ref().map(|_| Instant::now());
+        let span: Option<SpanInfo> = match *op {
+            Op::BeginOp { .. } => {
+                if let Some(t) = tracer.as_deref_mut() {
+                    t.on_begin_op();
+                }
+                c.begin_op();
+                None
+            }
+            Op::Round => {
+                if let Some(t) = tracer.as_deref_mut() {
+                    t.on_round();
+                }
+                None
+            }
             Op::Send { peer, step, slot, part, take, .. } => {
                 let chunk =
                     if take { take_part(slots, slot, part) } else { slots[slot][part].clone() };
+                let sent = chunk_bytes::<T>(chunk.len());
                 c.send_slice(peer, step, chunk)?;
+                Some(("send", peer, 0, sent, 0, 0))
             }
             Op::Recv { peer, step, slot, part, .. } => {
                 let got = c.recv_chunk(peer, step)?;
+                let recvd = chunk_bytes::<T>(got.len());
                 put_part(slots, slot, part, got);
+                Some(("recv", peer, 0, 0, recvd, 0))
             }
             Op::RecvCombine { peer, step, slot, part, .. } => {
                 let comb = need_combiner(combiner)?;
                 c.recv_combine_into(peer, step, &mut slots[slot][part], comb)?;
+                let folded = chunk_bytes::<T>(slots[slot][part].len());
+                Some(("recv_combine", peer, 0, 0, folded, folded))
             }
             Op::SendRecv { send_peer, recv_peer, step, send_slot, recv_slot, lanes, .. } => {
                 if lanes == 0 {
                     let out = slots[send_slot][0].clone();
+                    let sent = chunk_bytes::<T>(out.len());
                     let got = c.sendrecv_chunk(send_peer, out, recv_peer, step)?;
+                    let recvd = chunk_bytes::<T>(got.len());
                     slots[recv_slot] = vec![got];
+                    Some(("sendrecv", send_peer, 0, sent, recvd, 0))
                 } else {
-                    let out = stripe_parts(slots[send_slot].clone(), lanes);
+                    let out = stripe_parts(slots[send_slot].clone(), lanes)?;
+                    let sent = stripe_bytes(&out);
                     let got = c.sendrecv_striped(send_peer, out, recv_peer, step, lanes)?;
+                    let recvd = stripe_bytes(&got);
                     slots[recv_slot] = got;
+                    Some(("sendrecv", send_peer, lanes as u32, sent, recvd, 0))
                 }
             }
             Op::SendRecvCombine {
@@ -126,17 +175,38 @@ fn exec<T: Elem, C: Comm<T>>(
                 if lanes == 0 {
                     let out = take_part(slots, send_slot, 0);
                     let mut acc = take_part(slots, recv_slot, 0);
+                    let sent = chunk_bytes::<T>(out.len());
+                    let folded = chunk_bytes::<T>(acc.len());
                     c.sendrecv_combine_into(send_peer, out, recv_peer, step, &mut acc, comb)?;
                     slots[recv_slot][0] = acc;
+                    Some(("sendrecv_combine", send_peer, 0, sent, folded, folded))
                 } else {
-                    let out = stripe_parts(std::mem::take(&mut slots[send_slot]), lanes);
-                    let mut accs = stripe_parts(std::mem::take(&mut slots[recv_slot]), lanes);
+                    let out = stripe_parts(std::mem::take(&mut slots[send_slot]), lanes)?;
+                    let mut accs = stripe_parts(std::mem::take(&mut slots[recv_slot]), lanes)?;
+                    let sent = stripe_bytes(&out);
+                    let folded = stripe_bytes(&accs);
                     c.sendrecv_striped_combine_into(
                         send_peer, out, recv_peer, step, &mut accs, comb,
                     )?;
                     slots[recv_slot] = accs;
+                    Some(("sendrecv_combine", send_peer, lanes as u32, sent, folded, folded))
                 }
             }
+        };
+        if let (Some(t), Some((kind, peer, lanes, sent, recvd, folded))) =
+            (tracer.as_deref_mut(), span)
+        {
+            let started = started.expect("span timing starts whenever a tracer is present");
+            t.record(
+                kind,
+                op.scope().unwrap_or(Scope::World),
+                peer,
+                lanes,
+                sent,
+                recvd,
+                folded,
+                started,
+            );
         }
     }
     Ok(())
@@ -163,7 +233,15 @@ pub fn run_flat<T: Elem, C: Comm<T>>(
         "flat runs take world-scope plans; use run_hier"
     );
     let mut slots = materialize(&plan.slots, inputs)?;
-    exec(c, &plan.ops, &mut slots, combiner)?;
+    // Detach the thread's tracer (if any) for the op loop and put it back
+    // before surfacing any error, so a failed traced trial still leaves
+    // the partial spans collectable via `trace::end`.
+    let mut tracer = trace::take();
+    let run = exec(c, &plan.ops, &mut slots, combiner, tracer.as_deref_mut());
+    if let Some(t) = tracer {
+        trace::restore(t);
+    }
+    run?;
     Ok(collect_outputs(plan, slots))
 }
 
@@ -178,7 +256,24 @@ pub fn run_hier<T: Elem>(
     combiner: Option<&Combiner<T>>,
 ) -> Result<Vec<Chunk<T>>> {
     let mut slots = materialize(&plan.slots, inputs)?;
-    let ops = &plan.ops;
+    // One take/restore brackets all segments, so a mid-plan error still
+    // re-installs the tracer with the spans recorded so far.
+    let mut tracer = trace::take();
+    let run = exec_segments(c, &plan.ops, &mut slots, combiner, &mut tracer);
+    if let Some(t) = tracer {
+        trace::restore(t);
+    }
+    run?;
+    Ok(collect_outputs(plan, slots))
+}
+
+fn exec_segments<T: Elem>(
+    c: &mut Communicator<T>,
+    ops: &[Op],
+    slots: &mut [Vec<Chunk<T>>],
+    combiner: Option<&Combiner<T>>,
+    tracer: &mut Option<Box<RankTrace>>,
+) -> Result<()> {
     let mut start = 0;
     while start < ops.len() {
         let scope = ops[start..]
@@ -194,24 +289,29 @@ pub fn run_hier<T: Elem>(
         }
         let seg = &ops[start..end];
         match scope {
-            Scope::World => exec(c, seg, &mut slots, combiner)?,
+            Scope::World => exec(c, seg, slots, combiner, tracer.as_deref_mut())?,
             Scope::Inter => {
                 let mut sub = c.inter_node()?;
-                exec(&mut sub, seg, &mut slots, combiner)?;
+                exec(&mut sub, seg, slots, combiner, tracer.as_deref_mut())?;
             }
             Scope::Intra => {
                 let mut sub = c.intra_node()?;
-                exec(&mut sub, seg, &mut slots, combiner)?;
+                exec(&mut sub, seg, slots, combiner, tracer.as_deref_mut())?;
             }
         }
         start = end;
     }
-    Ok(collect_outputs(plan, slots))
+    Ok(())
 }
 
 /// Execute a communication-free plan (shuffle): pure slot permutation.
 pub fn run_local<T>(plan: &Plan, inputs: Vec<Chunk<T>>) -> Result<Vec<Chunk<T>>> {
     debug_assert!(plan.ops.is_empty(), "local plans carry no ops");
+    if let Some(mut t) = trace::take() {
+        // No comm ops to span; just count the op-free execution.
+        t.on_local_run();
+        trace::restore(t);
+    }
     let slots = materialize(&plan.slots, inputs)?;
     Ok(collect_outputs(plan, slots))
 }

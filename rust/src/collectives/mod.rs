@@ -1,5 +1,5 @@
-//! Collective algorithms, organized as a **builder → verifier → engine**
-//! pipeline.
+//! Collective algorithms, organized as a **builder → verifier → engine →
+//! tracer** pipeline.
 //!
 //! Every collective is *lowered*, not hand-coded: a [`plan::PlanSpec`]
 //! (kind × algorithm × world shape) is compiled by [`plan::build`] into a
@@ -15,6 +15,20 @@
 //! plan and the input chunks to the engine. The network simulator costs
 //! the *same* plan objects ([`plan::phase_shapes`]), so the schedule that
 //! is verified is the schedule that is timed and the schedule that runs.
+//!
+//! The fourth stage closes the loop at run time: when a thread-local
+//! tracer is installed ([`crate::trace::begin`] / [`crate::trace::end`]),
+//! the engine records one span per executed op — kind, peer, lanes,
+//! sent/received/combined bytes, wall-clock timings — with phase and
+//! round indices mirrored from the very `phase_shapes` walk the netsim
+//! costs. [`crate::trace::check_phases`] then compares the observed
+//! per-round byte movement byte-exactly against the verified plan, so a
+//! traced run that executes anything other than its lowered schedule is
+//! an error, not a mystery; [`crate::trace::chrome_trace_doc`] exports
+//! the spans as chrome://tracing JSON (`pccl trace`, and
+//! `BENCH_smoke.trace.json` from `pccl smoke`). With no tracer installed
+//! the engine pays one `Option` check per op — the launcher traces only
+//! a dedicated extra trial, never the timed loop.
 //!
 //! Eight algorithm families lower through the IR: flat ring, recursive
 //! doubling/halving, the two-level hierarchical forms (ring or recursive

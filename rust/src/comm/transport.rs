@@ -37,8 +37,9 @@
 //! the exact counters they always did.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -50,6 +51,19 @@ use super::chunk::Chunk;
 /// Default receive timeout — generous for tests on loaded machines while
 /// still converting deadlocks into typed errors instead of hangs.
 pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// How long a lane worker sleeps per wait slice once a shutdown flag is
+/// attached to its pull: endpoint teardown is bounded by this, not by the
+/// full receive timeout a parked job still has remaining.
+const LANE_SHUTDOWN_POLL: Duration = Duration::from_millis(25);
+
+/// Lock a lane traffic counter, surviving poisoning. The counters are
+/// plain numbers: a panicked sibling thread cannot leave them in a state
+/// worth cascading the panic for, and the partial counts are still the
+/// best available answer during teardown.
+fn lock_traffic(t: &Mutex<Traffic>) -> MutexGuard<'_, Traffic> {
+    t.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 struct Msg<T> {
     src: usize,
@@ -135,6 +149,24 @@ impl<T> Mailbox<T> {
     /// delivery is classified as moved or copied). `rank` is only for
     /// error construction.
     fn pull(&mut self, rank: usize, from: usize, tag: u64, timeout: Duration) -> Result<Chunk<T>> {
+        self.pull_with_cancel(rank, from, tag, timeout, None)
+    }
+
+    /// [`Mailbox::pull`] that a shutdown flag can interrupt: with `cancel`
+    /// attached the wait is sliced into [`LANE_SHUTDOWN_POLL`] pieces and
+    /// the flag is checked between slices, so a parked lane worker notices
+    /// endpoint teardown within one slice instead of sleeping out the
+    /// remaining receive timeout. Cancellation surfaces as
+    /// [`Error::TransportClosed`]. With `cancel == None` the behavior is
+    /// byte-for-byte the plain pull.
+    fn pull_with_cancel(
+        &mut self,
+        rank: usize,
+        from: usize,
+        tag: u64,
+        timeout: Duration,
+        cancel: Option<&AtomicBool>,
+    ) -> Result<Chunk<T>> {
         let key = (from, tag);
         if let Some(q) = self.pending.get_mut(&key) {
             if let Some(data) = q.pop_front() {
@@ -143,8 +175,16 @@ impl<T> Mailbox<T> {
         }
         let deadline = Instant::now() + timeout;
         loop {
+            if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
+                return Err(Error::TransportClosed { rank });
+            }
             let remaining = deadline.saturating_duration_since(Instant::now());
-            match self.rx.recv_timeout(remaining) {
+            let wait = if cancel.is_some() {
+                remaining.min(LANE_SHUTDOWN_POLL)
+            } else {
+                remaining
+            };
+            match self.rx.recv_timeout(wait) {
                 Ok(msg) => {
                     if msg.src == from && msg.tag == tag {
                         return Ok(msg.data);
@@ -155,11 +195,13 @@ impl<T> Mailbox<T> {
                         .push_back(msg.data);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    return Err(Error::RecvTimeout {
-                        src: from,
-                        tag,
-                        ms: timeout.as_millis() as u64,
-                    })
+                    if Instant::now() >= deadline {
+                        return Err(Error::RecvTimeout {
+                            src: from,
+                            tag,
+                            ms: timeout.as_millis() as u64,
+                        });
+                    }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(Error::TransportClosed { rank })
@@ -179,7 +221,21 @@ impl<T> Mailbox<T> {
         expected: usize,
         timeout: Duration,
     ) -> Result<Chunk<T>> {
-        let data = self.pull(rank, from, tag, timeout)?;
+        self.checked_pull_with_cancel(rank, from, tag, expected, timeout, None)
+    }
+
+    /// [`Mailbox::checked_pull`] over the cancellable pull — see
+    /// [`Mailbox::pull_with_cancel`].
+    fn checked_pull_with_cancel(
+        &mut self,
+        rank: usize,
+        from: usize,
+        tag: u64,
+        expected: usize,
+        timeout: Duration,
+        cancel: Option<&AtomicBool>,
+    ) -> Result<Chunk<T>> {
+        let data = self.pull_with_cancel(rank, from, tag, timeout, cancel)?;
         if data.len() != expected {
             let got = data.len();
             self.pending.entry((from, tag)).or_default().push_front(data);
@@ -217,6 +273,10 @@ struct LaneWorker<T> {
     job_tx: Sender<LaneJob<T>>,
     done_rx: Receiver<LaneDone<T>>,
     traffic: Arc<Mutex<Traffic>>,
+    /// Shutdown flag shared with the worker thread: set by the endpoint's
+    /// `Drop` before the job queue closes so a mid-pull worker bails within
+    /// one [`LANE_SHUTDOWN_POLL`] slice and queued jobs drain immediately.
+    stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -310,12 +370,24 @@ fn spawn_lane_worker<T: Send + Sync + Clone + 'static>(
     let (done_tx, done_rx) = mpsc::channel::<LaneDone<T>>();
     let traffic = Arc::new(Mutex::new(Traffic::default()));
     let shared = Arc::clone(&traffic);
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
     let handle = std::thread::Builder::new()
         .name(format!("pccl-lane-{rank}.{lane}"))
         .spawn(move || {
             let mut mailbox = Mailbox::new(rx);
             while let Ok(job) = job_rx.recv() {
-                let done = serve_lane_job(&mut mailbox, &shared, rank, job);
+                // Once teardown starts, drain queued jobs without serving
+                // them: their pulls would only time out against a dying
+                // transport and stall the endpoint's join.
+                let done = if stop_flag.load(Ordering::Relaxed) {
+                    LaneDone {
+                        chunk: job.dest,
+                        result: Err(Error::TransportClosed { rank }),
+                    }
+                } else {
+                    serve_lane_job(&mut mailbox, &shared, rank, &stop_flag, job)
+                };
                 if done_tx.send(done).is_err() {
                     return; // endpoint dropped
                 }
@@ -326,21 +398,24 @@ fn spawn_lane_worker<T: Send + Sync + Clone + 'static>(
         job_tx,
         done_rx,
         traffic,
+        stop,
         handle: Some(handle),
     }
 }
 
 /// One receive on a worker lane: pull, deliver per the job's mode, count.
+/// The pulls watch `stop` so endpoint teardown interrupts a parked wait.
 fn serve_lane_job<T: Send + Sync + Clone + 'static>(
     mailbox: &mut Mailbox<T>,
     traffic: &Mutex<Traffic>,
     rank: usize,
+    stop: &AtomicBool,
     job: LaneJob<T>,
 ) -> LaneDone<T> {
     match job.dest {
-        None => match mailbox.pull(rank, job.from, job.tag, job.timeout) {
+        None => match mailbox.pull_with_cancel(rank, job.from, job.tag, job.timeout, Some(stop)) {
             Ok(data) => {
-                traffic.lock().unwrap().count_recv::<T>(data.len(), 0);
+                lock_traffic(traffic).count_recv::<T>(data.len(), 0);
                 LaneDone {
                     chunk: Some(data),
                     result: Ok(()),
@@ -352,7 +427,14 @@ fn serve_lane_job<T: Send + Sync + Clone + 'static>(
             },
         },
         Some(mut dest) => {
-            match mailbox.checked_pull(rank, job.from, job.tag, dest.len(), job.timeout) {
+            match mailbox.checked_pull_with_cancel(
+                rank,
+                job.from,
+                job.tag,
+                dest.len(),
+                job.timeout,
+                Some(stop),
+            ) {
                 Ok(data) => {
                     let len = data.len();
                     let copied = match &job.combiner {
@@ -362,7 +444,7 @@ fn serve_lane_job<T: Send + Sync + Clone + 'static>(
                         }
                         None => dest.accept(data),
                     };
-                    traffic.lock().unwrap().count_recv::<T>(len, copied);
+                    lock_traffic(traffic).count_recv::<T>(len, copied);
                     LaneDone {
                         chunk: Some(dest),
                         result: Ok(()),
@@ -436,7 +518,7 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
         let mut out = Vec::with_capacity(self.lane_count());
         out.push(self.traffic);
         for w in &self.workers {
-            out.push(*w.traffic.lock().unwrap());
+            out.push(*lock_traffic(&w.traffic));
         }
         out
     }
@@ -466,11 +548,7 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
         if lane == 0 {
             self.traffic.count_send::<T>(chunk.len());
         } else {
-            self.workers[lane - 1]
-                .traffic
-                .lock()
-                .unwrap()
-                .count_send::<T>(chunk.len());
+            lock_traffic(&self.workers[lane - 1].traffic).count_send::<T>(chunk.len());
         }
         self.hub
             .sender(to, lane)
@@ -575,7 +653,12 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
     fn collect_lane(&mut self, lane: usize) -> Result<LaneDone<T>> {
         // Workers answer every job exactly once; a generous wait beyond the
         // job's own recv timeout means a missing answer is a dead worker.
-        self.workers[lane - 1]
+        self.workers
+            .get(lane - 1)
+            .ok_or(Error::PeerOutOfRange {
+                peer: lane,
+                size: self.lane_count(),
+            })?
             .done_rx
             .recv_timeout(self.timeout + Duration::from_secs(30))
             .map_err(|_| Error::TransportClosed { rank: self.rank })
@@ -765,6 +848,12 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
 
 impl<T> Drop for Endpoint<T> {
     fn drop(&mut self) {
+        // Flag every worker first: one mid-pull on a dead transport would
+        // otherwise sleep out its full receive timeout before noticing the
+        // closed job queue, stalling this join for a minute or more.
+        for w in &self.workers {
+            w.stop.store(true, Ordering::Relaxed);
+        }
         // Closing each worker's job queue ends its loop; join so no lane
         // thread outlives the transport it serves.
         for w in &mut self.workers {
@@ -1050,5 +1139,29 @@ mod tests {
         let (_hub, eps) = TransportHub::<f32>::new(3);
         assert!(eps.iter().all(|e| e.lane_count() == 1));
         assert_eq!(eps[0].traffic_per_lane().len(), 1);
+    }
+
+    #[test]
+    fn endpoint_teardown_is_prompt_with_stuck_lane_jobs() {
+        // Two lane jobs that will never match a message: one parks the
+        // worker mid-pull, one sits queued behind it. Teardown must not
+        // wait out the 60 s receive timeout (let alone the padded collect
+        // wait) — the stop flag interrupts the pull within one poll slice
+        // and drains the queue.
+        let (_hub, mut eps) = TransportHub::<f32>::new_with_lanes(2, 2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.dispatch_lane(1, 1, 0xdead, None, None).unwrap();
+        e0.dispatch_lane(1, 1, 0xbeef, None, None).unwrap();
+        // Let the worker actually park inside the first pull.
+        std::thread::sleep(Duration::from_millis(50));
+        let t = Instant::now();
+        drop(e0);
+        assert!(
+            t.elapsed() < Duration::from_secs(10),
+            "teardown took {:?} with stuck lane jobs",
+            t.elapsed()
+        );
+        drop(e1);
     }
 }

@@ -74,6 +74,12 @@ pub enum Error {
 
     /// JSON (manifest, model persistence).
     Json(String),
+
+    /// A measurement that must land in a JSON artifact is NaN or infinite.
+    /// JSON has no spelling for those, so encoding would silently corrupt
+    /// the document; [`crate::util::json::Value::finite_num`] rejects them
+    /// up front with this error instead.
+    NonFiniteJson { value: String },
 }
 
 impl fmt::Display for Error {
@@ -114,6 +120,9 @@ impl fmt::Display for Error {
             // Transparent: the io error's own message is the message.
             Error::Io(e) => write!(f, "{e}"),
             Error::Json(m) => write!(f, "json error: {m}"),
+            Error::NonFiniteJson { value } => {
+                write!(f, "non-finite number {value} cannot be encoded as JSON")
+            }
         }
     }
 }

@@ -47,6 +47,7 @@ pub mod netsim;
 pub mod reduction;
 pub mod runtime;
 pub mod topology;
+pub mod trace;
 pub mod train;
 pub mod util;
 pub mod workload;

@@ -12,6 +12,8 @@
 //! pccl dispatch [--trials 10] [--save results/models]
 //! pccl train    <ddp|zero3> [--ranks 4] [--steps 100] [--lr 0.5]
 //!               [--backend pccl_rec] [--artifacts DIR]
+//! pccl trace    [--collective C] [--backend B] [--ranks 8] [--nodes 2]
+//!               [--size-kb 256] [--lanes 1] [--out trace.json]
 //! pccl smoke        [--out BENCH_smoke.json]
 //! pccl verify-plans
 //! pccl info
@@ -30,11 +32,13 @@ use pccl::topology::{Machine, Topology};
 use pccl::train::{ddp::run_ddp, zero3::run_zero3, DdpConfig, Zero3Config};
 use pccl::util::cli::Args;
 
-const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|smoke|verify-plans|info> [options]
+const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|trace|smoke|verify-plans|info> [options]
   pccl bench        [--collective C] [--backend B] [--ranks N] [--nodes N] [--size-kb K] [--trials T]
   pccl figures      <fig1..fig13|table1|all> [--out DIR]
   pccl dispatch     [--trials T] [--save DIR]
   pccl train        <ddp|zero3> [--ranks N] [--steps S] [--lr F] [--backend B] [--artifacts DIR]
+  pccl trace        [--collective C] [--backend B] [--ranks N] [--nodes N] [--size-kb K] [--lanes L]
+                    [--out FILE]   (op-level trace of one cell; writes chrome://tracing JSON)
   pccl smoke        [--out FILE]   (quick measured bench of every backend; writes JSON)
   pccl verify-plans (statically verify every dispatch cell's lowered plan)
   pccl info";
@@ -239,6 +243,81 @@ fn run_bench(
     Ok(())
 }
 
+/// Trace one (collective, backend, topology, size, lanes) cell: run it
+/// once with the op-level tracer installed on every rank, check the
+/// recorded spans against the verified plan's phase shapes, print the
+/// per-phase observed-vs-predicted timing summary, and write a
+/// chrome://tracing JSON document (load it at chrome://tracing or in
+/// Perfetto: one process per cell, one thread track per rank).
+fn run_trace(
+    collective: CollKind,
+    backend: Backend,
+    ranks: usize,
+    nodes: usize,
+    size_kb: usize,
+    lanes: usize,
+    out: &Path,
+) -> Result<()> {
+    use pccl::runtime::{Launcher, LauncherConfig};
+
+    if backend == Backend::Auto {
+        return Err(pccl::error::Error::Dispatch(
+            "pccl trace needs a concrete backend (the auto dispatcher picks one per call): \
+             use vendor|cray-mpich|pccl_ring|pccl_rec"
+                .into(),
+        ));
+    }
+    let topo = if nodes > 1 && ranks % nodes == 0 {
+        Topology::new(nodes, ranks / nodes, 1)?
+    } else {
+        Topology::flat(ranks)
+    };
+    let elems = (size_kb * 1024 / 4).max(1);
+    let lanes = lanes.max(1);
+    let launcher = Launcher::new(LauncherConfig {
+        topologies: vec![topo],
+        elem_counts: vec![elems],
+        trials: 1,
+        inner_iters: 1,
+        warmup_iters: 1,
+        persistent: false,
+        lane_counts: vec![lanes],
+    });
+    let cell = launcher.time_cell_lanes(topo, collective, backend, elems, lanes)?;
+    let trace = cell
+        .trace
+        .as_ref()
+        .expect("concrete backends always attach a trace");
+    println!(
+        "{} / {} on {} ranks ({} nodes), {} KiB/rank, {} lane(s): \
+         traced ops match the verified plan",
+        collective.label(),
+        backend.label(),
+        ranks,
+        nodes,
+        size_kb,
+        lanes
+    );
+    print!("{}", pccl::trace::format_summary(trace, &cell.predicted_phase_s));
+    let label = format!(
+        "{}/{} {}B p{} l{}",
+        collective.label(),
+        backend.label(),
+        cell.msg_bytes,
+        cell.ranks,
+        cell.lanes
+    );
+    let doc = pccl::trace::chrome_trace_doc(&[(label, trace)]);
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(out, doc.to_string())?;
+    println!("chrome trace → {} (open at chrome://tracing)", out.display());
+    Ok(())
+}
+
 /// Quick measured bench of the real data plane (few sizes, few reps):
 /// every backend × collective over two small topologies, run in *both*
 /// launcher modes. The persistent-world pass is what lands in the JSON
@@ -429,8 +508,37 @@ fn run_smoke(out: &Path) -> Result<()> {
         }
     }
 
-    let cell_json = |c: &pccl::runtime::MeasuredCell| {
-        Value::obj(vec![
+    let cell_json = |c: &pccl::runtime::MeasuredCell| -> Result<Value> {
+        // Per-phase observed (traced busy time) next to the netsim's
+        // predicted cost of the same `phase_shapes` — the schema-6 field.
+        // Timings must be real numbers: a NaN here means a broken clock,
+        // and `finite_num` fails the smoke run instead of null-encoding.
+        let phases = match &c.trace {
+            None => Vec::new(), // Backend::Auto resolves per call — untraced
+            Some(t) => t
+                .phases
+                .iter()
+                .enumerate()
+                .map(|(i, ph)| {
+                    Ok(Value::obj(vec![
+                        ("scope", Value::Str(ph.scope.to_string())),
+                        ("rounds", Value::Num(ph.rounds as f64)),
+                        ("ops", Value::Num(ph.ops as f64)),
+                        ("sent_bytes", Value::Num(ph.sent_bytes as f64)),
+                        ("combine_bytes", Value::Num(ph.combine_bytes as f64)),
+                        ("observed_s", Value::finite_num(ph.busy_s)?),
+                        (
+                            "predicted_s",
+                            match c.predicted_phase_s.get(i) {
+                                Some(&p) => Value::finite_num(p)?,
+                                None => Value::Null,
+                            },
+                        ),
+                    ]))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(Value::obj(vec![
             ("collective", Value::Str(c.kind.label().to_string())),
             ("backend", Value::Str(c.backend.label().to_string())),
             ("msg_bytes", Value::Num(c.msg_bytes as f64)),
@@ -447,11 +555,44 @@ fn run_smoke(out: &Path) -> Result<()> {
                     &c.moved_bytes_per_lane.iter().map(|&b| b as usize).collect::<Vec<_>>(),
                 ),
             ),
-        ])
+            ("phases", Value::Arr(phases)),
+        ]))
     };
-    let cells: Vec<Value> = sweep.cells.iter().chain(&lane_sweep.cells).map(cell_json).collect();
+    let cells: Vec<Value> = sweep
+        .cells
+        .iter()
+        .chain(&lane_sweep.cells)
+        .map(cell_json)
+        .collect::<Result<_>>()?;
+
+    // Chrome-trace export of every traced cell (both sweeps), written next
+    // to the bench record. Every traced trial already passed the
+    // observed-vs-plan op-count guard inside the launcher.
+    let trace_path = out.with_extension("trace.json");
+    let labeled: Vec<(String, &pccl::trace::CellTrace)> = sweep
+        .cells
+        .iter()
+        .chain(&lane_sweep.cells)
+        .filter_map(|c| {
+            c.trace.as_ref().map(|t| {
+                (
+                    format!(
+                        "{}/{} {}B p{} l{}",
+                        c.kind.label(),
+                        c.backend.label(),
+                        c.msg_bytes,
+                        c.ranks,
+                        c.lanes
+                    ),
+                    t,
+                )
+            })
+        })
+        .collect();
+    let trace_doc = pccl::trace::chrome_trace_doc(&labeled);
+
     let doc = Value::obj(vec![
-        ("schema", Value::Num(5.0)),
+        ("schema", Value::Num(6.0)),
         ("suite", Value::Str("pccl-smoke".to_string())),
         ("mode", Value::Str("persistent".to_string())),
         ("schedule_equivalent", Value::Bool(true)),
@@ -475,6 +616,10 @@ fn run_smoke(out: &Path) -> Result<()> {
         ("wall_s", Value::Num(wall)),
         ("guard_wall_s", Value::Num(guard_wall)),
         ("lanes_wall_s", Value::Num(lanes_wall)),
+        (
+            "trace_file",
+            Value::Str(trace_path.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string()),
+        ),
         ("cells", Value::Arr(cells)),
     ]);
     if let Some(parent) = out.parent() {
@@ -483,6 +628,7 @@ fn run_smoke(out: &Path) -> Result<()> {
         }
     }
     std::fs::write(out, doc.to_string())?;
+    std::fs::write(&trace_path, trace_doc.to_string())?;
     for c in sweep.cells.iter().chain(&lane_sweep.cells) {
         println!(
             "{:<16} {:<12} {:>10} B {:>4} ranks {:>2} lanes  {:>12}  {:>8.2} GiB/s moved",
@@ -497,12 +643,14 @@ fn run_smoke(out: &Path) -> Result<()> {
     }
     println!(
         "{} cells in {:.1}s + lane sweep {} cells in {:.1}s \
-         (schedule-equivalence and cross-lane guards OK) → {}",
+         (schedule-equivalence, cross-lane, and traced-op guards OK) → {} \
+         (op trace → {})",
         sweep.cells.len(),
         wall,
         lane_sweep.cells.len(),
         lanes_wall,
-        out.display()
+        out.display(),
+        trace_path.display()
     );
     Ok(())
 }
@@ -603,6 +751,20 @@ fn main() -> Result<()> {
                     std::process::exit(2);
                 }
             }
+        }
+        "trace" => {
+            let collective = parse_collective(args.get("collective").unwrap_or("all-reduce"))?;
+            let backend = parse_backend(args.get("backend").unwrap_or("pccl_ring"))?;
+            let out = PathBuf::from(args.get("out").unwrap_or("trace.json"));
+            run_trace(
+                collective,
+                backend,
+                args.get_parse("ranks", 8usize).unwrap(),
+                args.get_parse("nodes", 2usize).unwrap(),
+                args.get_parse("size-kb", 256usize).unwrap(),
+                args.get_parse("lanes", 1usize).unwrap(),
+                &out,
+            )?;
         }
         "smoke" => {
             let out = PathBuf::from(args.get("out").unwrap_or("BENCH_smoke.json"));

@@ -153,6 +153,51 @@ pub fn schedule(
     schedule_lanes(machine, lib, kind, msg, ranks, 1)
 }
 
+/// Cost each lowered phase of `spec` on `machine`: one predicted seconds
+/// value per [`plan::phase_shapes`] phase, in phase order.
+///
+/// This is deliberately *not* [`schedule`]: the library models there add
+/// phases the plan does not carry (e.g. the hierarchical shuffle runs as
+/// an op-free local plan outside the op stream), so their phase counts
+/// cannot line up with an op trace. Costing `phase_shapes` directly keeps
+/// the prediction one-to-one with the tracer's observed per-phase
+/// timeline — `pccl smoke` writes both side by side, so simulated-vs-
+/// measured drift becomes a plottable number per phase.
+pub fn predict_phase_times(
+    spec: &PlanSpec,
+    machine: Machine,
+    elem_bytes: usize,
+) -> Result<Vec<f64>> {
+    let mp = machine.params();
+    let shapes = plan::phase_shapes(spec)?;
+    Ok(shapes
+        .iter()
+        .map(|ph| {
+            let intra = ph.scope == Scope::Intra;
+            ph.rounds
+                .iter()
+                .map(|r| {
+                    let wire = (r.sent_elems as usize * elem_bytes) as f64;
+                    let reduce = (r.combine_elems as usize * elem_bytes) as f64;
+                    RoundCost {
+                        label: "traced-phase",
+                        alpha: if intra { mp.alpha_intra } else { mp.alpha_inter },
+                        nic_bytes: if intra { 0.0 } else { wire },
+                        intra_bytes: if intra { wire } else { 0.0 },
+                        reduce_bytes: reduce,
+                        reduce_bw: mp.gpu_reduce_bw,
+                        copy_bytes: 0.0,
+                        copy_bw: 0.0,
+                        rails: 1.0,
+                        repeat: 1,
+                    }
+                    .time(&mp)
+                })
+                .sum()
+        })
+        .collect())
+}
+
 /// [`schedule`] with an explicit transport-lane count. Only the PCCL
 /// hierarchical models are lane-aware (their NIC-bound inter phase stripes
 /// over the rails); the vendor and Cray-MPICH models ignore `lanes` —

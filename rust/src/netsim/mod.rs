@@ -7,5 +7,5 @@ pub mod libmodel;
 pub mod sim;
 
 pub use counters::NicCounters;
-pub use libmodel::{simulate, LibModel};
+pub use libmodel::{predict_phase_times, simulate, LibModel};
 pub use sim::{NetSim, Phase, RoundCost};

@@ -35,7 +35,9 @@ use crate::comm::{Chunk, Communicator, TransportHub};
 use crate::dispatch::{Dataset, SvmDispatcher};
 use crate::error::{Error, Result};
 use crate::metrics::Stats;
+use crate::netsim::predict_phase_times;
 use crate::topology::{Machine, Topology};
+use crate::trace::{self, CellTrace, OpSpan};
 
 use super::persistent::{PersistentWorld, TrialReport};
 
@@ -67,6 +69,17 @@ pub struct MeasuredCell {
     /// elements as f64, summed over ranks) — lane-count invariant on the
     /// integer-valued sweep inputs, so `pccl smoke` compares it exactly.
     pub checksum: f64,
+    /// Op-level trace of one dedicated traced trial, run *after* the timed
+    /// trials (never inside the measured section) and aggregated across
+    /// ranks. Before a cell is returned, its trace is checked op-for-op
+    /// against the verified plan's [`plan::phase_shapes`] — a disagreement
+    /// fails the cell. `None` only for [`Backend::Auto`] cells, whose
+    /// backend resolves per call.
+    pub trace: Option<CellTrace>,
+    /// Netsim-predicted seconds per traced phase (aligned with
+    /// `trace.phases`), costed from the same `plan::phase_shapes` the
+    /// tracer is checked against, on the [`Machine::Generic`] model.
+    pub predicted_phase_s: Vec<f64>,
 }
 
 /// Sweep configuration for the launcher.
@@ -475,8 +488,60 @@ fn cell_trial(
             copied_bytes: (after.copied_bytes - before.copied_bytes) / inner as u64,
             moved_bytes_per_lane,
             checksum,
+            trace: Vec::new(),
         })
     }
+}
+
+/// The dedicated traced trial: one *untimed* collective per rank with the
+/// op-level tracer installed for its duration. Launched after a cell's
+/// timed trials, so span recording never overlaps a measured section.
+fn traced_cell_trial(
+    kind: CollKind,
+    backend: Backend,
+    input_len: usize,
+    lanes: usize,
+) -> impl Fn(&mut Communicator<f32>) -> Result<TrialReport> + Send + Sync + Clone + 'static {
+    move |comm: &mut Communicator<f32>| {
+        let opts = CollectiveOptions::<f32>::default().backend(backend).lanes(lanes.max(1));
+        let input = Chunk::from_vec(vec![comm.rank() as f32; input_len]);
+        crate::trace::begin(comm.rank());
+        let run = run_collective(kind, lanes, comm, &input, &opts);
+        // Uninstall before surfacing any error so the rank thread never
+        // carries a stale tracer into later (timed) trials.
+        let spans = crate::trace::end().map(|t| t.into_spans()).unwrap_or_default();
+        let checksum = run?;
+        Ok(TrialReport { checksum, trace: spans, ..Default::default() })
+    }
+}
+
+/// Aggregate a traced trial's per-rank spans into a [`CellTrace`], verify
+/// the observed per-phase op structure against the lowered plan, and cost
+/// the same phases on the generic machine model. A trace that disagrees
+/// with its verified plan fails the cell — this is the observed-vs-planned
+/// guard `pccl smoke` (and every sweep) runs.
+fn fold_trace(
+    kind: CollKind,
+    backend: Backend,
+    topo: Topology,
+    input_len: usize,
+    lanes: usize,
+    reports: Vec<TrialReport>,
+) -> Result<(CellTrace, Vec<f64>)> {
+    let p = topo.world_size();
+    let spans: Vec<Vec<OpSpan>> = reports.into_iter().map(|r| r.trace).collect();
+    let cell_trace = trace::aggregate(spans);
+    let k = effective_cell_lanes(kind, input_len, p, lanes);
+    let spec = plan_spec_for(kind, backend, topo, input_len, k);
+    trace::check_phases(&cell_trace, &spec, 4).map_err(|e| {
+        Error::Dispatch(format!(
+            "traced {:?}/{:?} run disagrees with its verified plan \
+             (elems={input_len} p={p} lanes={k}): {e}",
+            kind, backend
+        ))
+    })?;
+    let predicted = predict_phase_times(&spec, Machine::Generic, 4)?;
+    Ok((cell_trace, predicted))
 }
 
 impl Launcher {
@@ -530,7 +595,10 @@ impl Launcher {
     {
         let results: Vec<Result<R>> = std::thread::scope(|s| {
             let f = &f;
-            let handles: Vec<_> = eps
+            // Spawn failures become per-rank errors instead of a panic:
+            // the spawned ranks run to their own recv timeout and the
+            // sweep surfaces the OS error for the rank that never started.
+            let handles: Vec<std::io::Result<_>> = eps
                 .into_iter()
                 .map(|ep| {
                     std::thread::Builder::new()
@@ -539,18 +607,17 @@ impl Launcher {
                             let mut comm = Communicator::new(ep, topo)?;
                             f(&mut comm)
                         })
-                        .expect("spawn rank thread")
                 })
                 .collect();
             handles
                 .into_iter()
                 .enumerate()
-                .map(|(rank, h)| {
+                .map(|(rank, h)| match h {
                     // A panicked rank is a dead data-plane endpoint, not a
                     // dispatcher problem — surface it as the transport
                     // failure its peers would observe.
-                    h.join()
-                        .unwrap_or_else(|_| Err(Error::TransportClosed { rank }))
+                    Ok(h) => h.join().unwrap_or_else(|_| Err(Error::TransportClosed { rank })),
+                    Err(e) => Err(Error::from(e)),
                 })
                 .collect()
         });
@@ -597,7 +664,18 @@ impl Launcher {
             reports = self.launch_lanes::<f32, _, _>(topo, lanes, &trial)?;
             stats.push(reports[0].secs);
         }
-        Ok(Self::collect_cell(kind, backend, msg_bytes, p, lanes, stats, &reports))
+        // One extra traced (untimed) trial, checked against the plan.
+        let (cell_trace, predicted) = if backend == Backend::Auto {
+            (None, Vec::new())
+        } else {
+            let traced = traced_cell_trial(kind, backend, input_len, lanes);
+            let trace_reports = self.launch_lanes::<f32, _, _>(topo, lanes, &traced)?;
+            let (t, pr) = fold_trace(kind, backend, topo, input_len, lanes, trace_reports)?;
+            (Some(t), pr)
+        };
+        Ok(Self::collect_cell(
+            kind, backend, msg_bytes, p, lanes, stats, &reports, cell_trace, predicted,
+        ))
     }
 
     /// Time one cell on a pinned [`PersistentWorld`] (its lane count
@@ -626,11 +704,25 @@ impl Launcher {
             reports = world.run_trial(trial.clone())?;
             stats.push(reports[0].secs);
         }
-        Ok(Self::collect_cell(kind, backend, msg_bytes, p, lanes, stats, &reports))
+        // One extra traced (untimed) trial on the same pinned threads; the
+        // trial uninstalls its tracer, so later trials stay untraced.
+        let (cell_trace, predicted) = if backend == Backend::Auto {
+            (None, Vec::new())
+        } else {
+            let traced = traced_cell_trial(kind, backend, input_len, lanes);
+            let trace_reports = world.run_trial(traced)?;
+            let (t, pr) =
+                fold_trace(kind, backend, world.topology(), input_len, lanes, trace_reports)?;
+            (Some(t), pr)
+        };
+        Ok(Self::collect_cell(
+            kind, backend, msg_bytes, p, lanes, stats, &reports, cell_trace, predicted,
+        ))
     }
 
     /// Fold the last trial's per-rank reports into a cell: byte totals,
     /// per-lane byte totals, and the cross-rank checksum sum.
+    #[allow(clippy::too_many_arguments)]
     fn collect_cell(
         kind: CollKind,
         backend: Backend,
@@ -639,6 +731,8 @@ impl Launcher {
         lanes: usize,
         stats: Stats,
         reports: &[TrialReport],
+        trace: Option<CellTrace>,
+        predicted_phase_s: Vec<f64>,
     ) -> MeasuredCell {
         let lane_count = reports
             .iter()
@@ -662,6 +756,8 @@ impl Launcher {
             copied_bytes_per_op: reports.iter().map(|t| t.copied_bytes).sum(),
             moved_bytes_per_lane,
             checksum: reports.iter().map(|t| t.checksum).sum(),
+            trace,
+            predicted_phase_s,
         }
     }
 
@@ -693,7 +789,7 @@ impl Launcher {
         let mut cells = Vec::new();
         for &topo in &self.cfg.topologies {
             for &lanes in &self.cfg.lane_counts {
-                let mut world = PersistentWorld::<f32>::new_with_lanes(topo, lanes);
+                let mut world = PersistentWorld::<f32>::new_with_lanes(topo, lanes)?;
                 for &elems in &self.cfg.elem_counts {
                     for kind in CollKind::ALL {
                         for backend in Backend::CONCRETE {
@@ -768,6 +864,13 @@ mod tests {
         assert!(sweep.cells.iter().all(|c| c.stats.count() == 2));
         assert!(sweep.cells.iter().all(|c| c.stats.mean() > 0.0));
         assert!(sweep.cells.iter().all(|c| c.bytes_per_op > 0));
+        // Every concrete cell carries a plan-checked trace with a
+        // prediction per observed phase (the traced trial added no sample
+        // to `stats` — count stays at `trials`).
+        assert!(sweep.cells.iter().all(|c| {
+            let t = c.trace.as_ref().expect("traced trial attached");
+            !t.phases.is_empty() && c.predicted_phase_s.len() >= t.phases.len()
+        }));
         for kind in CollKind::ALL {
             let d = sweep.dataset(kind).unwrap();
             assert_eq!(d.len(), 4, "one labeled sample per configuration");

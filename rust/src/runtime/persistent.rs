@@ -45,6 +45,11 @@ pub struct TrialReport {
     /// the output converted to f64). Identical schedules must produce
     /// identical checksums regardless of lane count.
     pub checksum: f64,
+    /// Op-level spans recorded by this rank when the trial ran with the
+    /// tracer installed (see [`crate::trace`]). Empty for timed trials —
+    /// the launcher only traces a dedicated extra trial, never the
+    /// measured section.
+    pub trace: Vec<crate::trace::OpSpan>,
 }
 
 type Job<T> = Box<dyn FnOnce(&mut Communicator<T>) -> Result<TrialReport> + Send>;
@@ -67,14 +72,15 @@ pub struct PersistentWorld<T: Elem> {
 
 impl<T: Elem> PersistentWorld<T> {
     /// Stand up the transport and pin one worker thread per rank.
-    pub fn new(topo: Topology) -> Self {
+    pub fn new(topo: Topology) -> Result<Self> {
         Self::new_with_lanes(topo, 1)
     }
 
     /// Stand up a multi-lane transport (one stripe queue + lane worker per
     /// extra lane, see [`TransportHub::new_with_lanes`]) and pin one rank
     /// thread per rank. `lanes == 1` is byte-for-byte [`PersistentWorld::new`].
-    pub fn new_with_lanes(topo: Topology, lanes: usize) -> Self {
+    /// Fails with the OS error if a rank thread cannot be spawned.
+    pub fn new_with_lanes(topo: Topology, lanes: usize) -> Result<Self> {
         let size = topo.world_size();
         let (_hub, eps) = TransportHub::<T>::new_with_lanes(size, lanes.max(1));
         let (done_tx, done_rx) = mpsc::channel();
@@ -101,18 +107,18 @@ impl<T: Elem> PersistentWorld<T> {
                         }
                     }
                 })
-                .expect("spawn persistent rank thread");
+                .map_err(Error::from)?;
             job_txs.push(jtx);
             handles.push(handle);
         }
-        Self {
+        Ok(Self {
             topo,
             lanes: lanes.max(1),
             job_txs,
             done_rx,
             handles,
             poisoned: false,
-        }
+        })
     }
 
     pub fn topology(&self) -> Topology {
@@ -145,10 +151,10 @@ impl<T: Elem> PersistentWorld<T> {
                 "persistent world poisoned by an earlier failed trial".into(),
             ));
         }
-        for tx in &self.job_txs {
+        for (rank, tx) in self.job_txs.iter().enumerate() {
             let g = f.clone();
             tx.send(Box::new(move |c: &mut Communicator<T>| g(c)))
-                .map_err(|_| Error::TransportClosed { rank: 0 })?;
+                .map_err(|_| Error::TransportClosed { rank })?;
         }
         let p = self.size();
         let mut out = vec![TrialReport::default(); p];
@@ -202,7 +208,7 @@ mod tests {
 
     #[test]
     fn trials_reuse_the_same_world() {
-        let mut world = PersistentWorld::<f32>::new(Topology::flat(4));
+        let mut world = PersistentWorld::<f32>::new(Topology::flat(4)).unwrap();
         for round in 0..3u32 {
             let reports = world
                 .run_trial(move |c| {
@@ -235,7 +241,7 @@ mod tests {
 
     #[test]
     fn lane_world_pins_ranks_on_a_striped_transport() {
-        let mut world = PersistentWorld::<f32>::new_with_lanes(Topology::flat(3), 2);
+        let mut world = PersistentWorld::<f32>::new_with_lanes(Topology::flat(3), 2).unwrap();
         let reports = world
             .run_trial(|c| {
                 if c.lanes() != 2 {
@@ -249,7 +255,7 @@ mod tests {
 
     #[test]
     fn failed_trial_poisons_the_world() {
-        let mut world = PersistentWorld::<f32>::new(Topology::flat(2));
+        let mut world = PersistentWorld::<f32>::new(Topology::flat(2)).unwrap();
         let err = world
             .run_trial(|c| {
                 if c.rank() == 0 {

@@ -1,0 +1,587 @@
+//! Op-level tracing for the plan engine.
+//!
+//! Every collective in this crate executes as a lowered, statically
+//! verified [`crate::collectives::plan::Plan`] run by one engine
+//! ([`crate::collectives::engine`]). That gives correctness a single
+//! choke point — and this module gives *observability* the same choke
+//! point: a per-rank ring-buffer recorder that the engine feeds with one
+//! [`OpSpan`] per executed op (kind, peer, lanes, bytes moved, wall-clock
+//! start and duration, and the phase/round indices of the plan's cost
+//! model).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when off.** The engine checks one `Option` per op; no
+//!    clocks are read and nothing allocates unless a tracer was installed
+//!    on the current thread with [`begin`]. The launcher only installs it
+//!    for a dedicated traced trial that runs *after* the timed loop, so
+//!    recording never overlaps a measured section.
+//! 2. **Phase/round indices match [`plan::phase_shapes`]** exactly: a
+//!    `BeginOp` opens a new phase, a `Round` marker opens a new round,
+//!    and an op before any explicit round marker lands in the phase's
+//!    implicit round 0 — the same rules the cost model uses. That makes
+//!    the traced timeline directly comparable (and compared, see
+//!    [`check_phases`]) to the verified plan.
+//! 3. **Bounded memory.** The recorder is a ring buffer; once full it
+//!    overwrites the oldest span and counts the loss, so tracing an
+//!    arbitrarily long run cannot OOM a rank thread.
+//!
+//! The aggregation side folds all ranks' spans into a [`CellTrace`]:
+//! raw per-rank spans for the chrome://tracing export
+//! ([`chrome_trace_doc`]) plus a [`PhaseSummary`] per plan phase for the
+//! compact table ([`format_summary`]) and the smoke-artifact guard.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use crate::collectives::plan::{self, PlanSpec, Scope};
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Default span capacity of a rank's ring buffer. Covers every plan the
+/// sweep grids lower today by orders of magnitude (a p=8 hierarchical
+/// all-reduce is a few dozen ops).
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// Stable label for a plan scope, used in span records and trace exports.
+pub fn scope_label(scope: Scope) -> &'static str {
+    match scope {
+        Scope::World => "world",
+        Scope::Inter => "inter",
+        Scope::Intra => "intra",
+    }
+}
+
+/// One executed plan op, as observed on one rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpSpan {
+    /// Phase index, aligned with `plan::phase_shapes(spec)`.
+    pub phase: u32,
+    /// Round index within the phase, aligned with `PhaseShape::rounds`.
+    pub round: u32,
+    /// Op kind: `send`, `recv`, `recv_combine`, `sendrecv`,
+    /// `sendrecv_combine`.
+    pub kind: &'static str,
+    /// Scope label (`world`/`inter`/`intra`).
+    pub scope: &'static str,
+    /// Peer rank (the send peer for fused exchanges).
+    pub peer: usize,
+    /// Stripe count of a striped exchange (0 = plain protocol).
+    pub lanes: u32,
+    /// Bytes posted by this op.
+    pub sent_bytes: u64,
+    /// Bytes received by this op.
+    pub recvd_bytes: u64,
+    /// Bytes folded by a combining delivery.
+    pub combine_bytes: u64,
+    /// Seconds since the tracer was installed on this rank.
+    pub start_s: f64,
+    /// Wall-clock duration of the op (post → delivery).
+    pub dur_s: f64,
+}
+
+/// Per-rank span recorder: a bounded ring buffer plus the phase/round
+/// counters that mirror the plan cost model.
+#[derive(Debug)]
+pub struct RankTrace {
+    rank: usize,
+    origin: Instant,
+    cap: usize,
+    spans: Vec<OpSpan>,
+    /// Next overwrite position once the buffer is full (= oldest span).
+    head: usize,
+    /// Spans overwritten after the buffer filled.
+    dropped: u64,
+    /// Phases opened so far (`BeginOp` count).
+    phases_seen: u32,
+    /// Explicit (or implicit first) rounds opened in the current phase.
+    rounds_in_phase: u32,
+    /// Local (op-free) plan executions observed, e.g. shuffle plans.
+    local_runs: u32,
+}
+
+impl RankTrace {
+    fn new(rank: usize, capacity: usize) -> Self {
+        Self {
+            rank,
+            origin: Instant::now(),
+            cap: capacity.max(1),
+            spans: Vec::new(),
+            head: 0,
+            dropped: 0,
+            phases_seen: 0,
+            rounds_in_phase: 0,
+            local_runs: 0,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Spans lost to ring-buffer overwrite.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Op-free local plan executions seen while this tracer was live.
+    pub fn local_runs(&self) -> u32 {
+        self.local_runs
+    }
+
+    /// The engine saw a `BeginOp`: a new phase opens with no rounds yet.
+    pub(crate) fn on_begin_op(&mut self) {
+        self.phases_seen += 1;
+        self.rounds_in_phase = 0;
+    }
+
+    /// The engine saw a `Round` cost-model marker.
+    pub(crate) fn on_round(&mut self) {
+        self.rounds_in_phase += 1;
+    }
+
+    /// The engine ran an op-free local plan (no spans to record).
+    pub(crate) fn on_local_run(&mut self) {
+        self.local_runs += 1;
+    }
+
+    /// Record one executed op. `started` is the instant the engine began
+    /// the op; duration is measured to now.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn record(
+        &mut self,
+        kind: &'static str,
+        scope: Scope,
+        peer: usize,
+        lanes: u32,
+        sent_bytes: u64,
+        recvd_bytes: u64,
+        combine_bytes: u64,
+        started: Instant,
+    ) {
+        if self.rounds_in_phase == 0 {
+            // Mirrors `plan::phase_shapes`: an op before any explicit
+            // `Round` marker lands in the phase's implicit round 0.
+            self.rounds_in_phase = 1;
+        }
+        let span = OpSpan {
+            phase: self.phases_seen.saturating_sub(1),
+            round: self.rounds_in_phase - 1,
+            kind,
+            scope: scope_label(scope),
+            peer,
+            lanes,
+            sent_bytes,
+            recvd_bytes,
+            combine_bytes,
+            start_s: started.duration_since(self.origin).as_secs_f64(),
+            dur_s: started.elapsed().as_secs_f64(),
+        };
+        if self.spans.len() < self.cap {
+            self.spans.push(span);
+        } else {
+            self.spans[self.head] = span;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Consume the recorder, yielding spans oldest-first.
+    pub fn into_spans(self) -> Vec<OpSpan> {
+        let mut spans = self.spans;
+        if self.dropped > 0 {
+            spans.rotate_left(self.head);
+        }
+        spans
+    }
+}
+
+thread_local! {
+    /// The rank thread's installed tracer, if any. Boxed so the engine's
+    /// take/restore handoff moves a pointer, not the buffer.
+    static ACTIVE: RefCell<Option<Box<RankTrace>>> = const { RefCell::new(None) };
+}
+
+/// Install a tracer on the current (rank) thread with the default span
+/// capacity. Replaces any tracer already installed.
+pub fn begin(rank: usize) {
+    begin_with_capacity(rank, DEFAULT_CAPACITY);
+}
+
+/// Install a tracer with an explicit ring-buffer capacity (min 1).
+pub fn begin_with_capacity(rank: usize, capacity: usize) {
+    ACTIVE.with(|slot| *slot.borrow_mut() = Some(Box::new(RankTrace::new(rank, capacity))));
+}
+
+/// Uninstall and return the current thread's tracer, if one is active.
+pub fn end() -> Option<RankTrace> {
+    ACTIVE.with(|slot| slot.borrow_mut().take()).map(|boxed| *boxed)
+}
+
+/// Whether a tracer is installed on the current thread.
+pub fn is_active() -> bool {
+    ACTIVE.with(|slot| slot.borrow().is_some())
+}
+
+/// Engine-side handoff: detach the tracer for the duration of a plan run
+/// (so the engine can thread `&mut` through its op loop without fighting
+/// the thread-local), to be put back with [`restore`].
+pub(crate) fn take() -> Option<Box<RankTrace>> {
+    ACTIVE.with(|slot| slot.borrow_mut().take())
+}
+
+/// Engine-side handoff: re-install a tracer detached with [`take`].
+pub(crate) fn restore(tracer: Box<RankTrace>) {
+    ACTIVE.with(|slot| *slot.borrow_mut() = Some(tracer));
+}
+
+// ---------------------------------------------------------------------------
+// Aggregation
+// ---------------------------------------------------------------------------
+
+/// One plan phase of a traced run, folded across ranks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSummary {
+    /// Scope label of the phase (from its first observed span).
+    pub scope: &'static str,
+    /// Comm ops rank 0 executed in the phase.
+    pub ops: u64,
+    /// Rounds rank 0 observed (max round index + 1).
+    pub rounds: u64,
+    /// Bytes rank 0 posted in the phase.
+    pub sent_bytes: u64,
+    /// Bytes rank 0 folded via combining deliveries.
+    pub combine_bytes: u64,
+    /// Bytes posted by all ranks together.
+    pub total_sent_bytes: u64,
+    /// Busiest rank's summed span time in the phase (seconds).
+    pub busy_s: f64,
+}
+
+/// A traced cell: raw per-rank spans plus the per-phase rollup.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CellTrace {
+    /// `per_rank[r]` = rank `r`'s spans, oldest first.
+    pub per_rank: Vec<Vec<OpSpan>>,
+    /// One summary per observed plan phase, in phase order.
+    pub phases: Vec<PhaseSummary>,
+}
+
+/// Fold per-rank span streams into a per-phase timeline.
+pub fn aggregate(per_rank: Vec<Vec<OpSpan>>) -> CellTrace {
+    let nphases = per_rank
+        .iter()
+        .flat_map(|spans| spans.iter())
+        .map(|s| s.phase + 1)
+        .max()
+        .unwrap_or(0);
+    let mut phases = Vec::with_capacity(nphases as usize);
+    for ph in 0..nphases {
+        let mut scope = None;
+        let (mut ops, mut rounds, mut sent, mut combine, mut total) = (0u64, 0u64, 0u64, 0u64, 0u64);
+        let mut busy = 0.0f64;
+        for (rank, spans) in per_rank.iter().enumerate() {
+            let mut rank_busy = 0.0f64;
+            for s in spans.iter().filter(|s| s.phase == ph) {
+                // Rank order means rank 0's first span names the scope.
+                scope.get_or_insert(s.scope);
+                total += s.sent_bytes;
+                rank_busy += s.dur_s;
+                if rank == 0 {
+                    ops += 1;
+                    rounds = rounds.max(u64::from(s.round) + 1);
+                    sent += s.sent_bytes;
+                    combine += s.combine_bytes;
+                }
+            }
+            busy = busy.max(rank_busy);
+        }
+        phases.push(PhaseSummary {
+            scope: scope.unwrap_or("world"),
+            ops,
+            rounds,
+            sent_bytes: sent,
+            combine_bytes: combine,
+            total_sent_bytes: total,
+            busy_s: busy,
+        });
+    }
+    CellTrace { per_rank, phases }
+}
+
+// ---------------------------------------------------------------------------
+// Guard: traced run vs. verified plan
+// ---------------------------------------------------------------------------
+
+/// Check a traced run against the plan the spec lowers to: rank 0's
+/// observed per-phase/per-round byte movement must equal the
+/// [`plan::phase_shapes`] cost model exactly (scope labels included).
+///
+/// Two deliberate leniencies keep degenerate plans (p = 1, op-free
+/// phases) checkable: trailing plan phases the trace never reached are
+/// accepted only if they move zero volume, and rounds beyond rank 0's
+/// last observed op are accepted only if the model schedules nothing for
+/// them — any scheduled volume with no matching span is an error.
+pub fn check_phases(trace: &CellTrace, spec: &PlanSpec, elem_bytes: usize) -> Result<()> {
+    let shapes = plan::phase_shapes(spec)?;
+    let es = elem_bytes as u64;
+    let rank0: &[OpSpan] = trace.per_rank.first().map(Vec::as_slice).unwrap_or(&[]);
+    let observed_phases = rank0.iter().map(|s| s.phase as usize + 1).max().unwrap_or(0);
+    if observed_phases > shapes.len() {
+        return Err(Error::Plan(format!(
+            "trace records {observed_phases} phases but the lowered plan has {}",
+            shapes.len()
+        )));
+    }
+    for (i, shape) in shapes.iter().enumerate().skip(observed_phases) {
+        let volume: u64 = shape
+            .rounds
+            .iter()
+            .map(|r| r.sent_elems + r.combine_elems)
+            .sum();
+        if volume != 0 {
+            return Err(Error::Plan(format!(
+                "plan phase {i} schedules {volume} elems but the trace never reached it"
+            )));
+        }
+    }
+    for (i, shape) in shapes.iter().enumerate().take(observed_phases) {
+        let spans: Vec<&OpSpan> = rank0.iter().filter(|s| s.phase as usize == i).collect();
+        if let Some(first) = spans.first() {
+            let expect = scope_label(shape.scope);
+            if first.scope != expect {
+                return Err(Error::Plan(format!(
+                    "trace phase {i} ran on the {} scope but the plan lowers it to {expect}",
+                    first.scope
+                )));
+            }
+        }
+        let nrounds = shape.rounds.len();
+        let mut sent = vec![0u64; nrounds];
+        let mut combine = vec![0u64; nrounds];
+        for s in &spans {
+            let r = s.round as usize;
+            if r >= nrounds {
+                return Err(Error::Plan(format!(
+                    "trace phase {i} observed round {r} but the plan has {nrounds} rounds"
+                )));
+            }
+            sent[r] += s.sent_bytes;
+            combine[r] += s.combine_bytes;
+        }
+        for (r, round) in shape.rounds.iter().enumerate() {
+            let (want_sent, want_combine) = (round.sent_elems * es, round.combine_elems * es);
+            if sent[r] != want_sent || combine[r] != want_combine {
+                return Err(Error::Plan(format!(
+                    "trace phase {i} round {r} moved {} sent / {} combined bytes but the \
+                     verified plan schedules {want_sent} / {want_combine}",
+                    sent[r], combine[r]
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Exports
+// ---------------------------------------------------------------------------
+
+/// Build a chrome://tracing (Trace Event Format) document from labeled
+/// cell traces: one process per cell, one thread row per rank, one
+/// complete (`"ph": "X"`) event per span. Loads in `chrome://tracing`
+/// and Perfetto.
+pub fn chrome_trace_doc(cells: &[(String, &CellTrace)]) -> Value {
+    let mut events = Vec::new();
+    for (pid, (label, cell)) in cells.iter().enumerate() {
+        events.push(Value::obj(vec![
+            ("name", Value::Str("process_name".to_string())),
+            ("ph", Value::Str("M".to_string())),
+            ("pid", Value::Num(pid as f64)),
+            (
+                "args",
+                Value::obj(vec![("name", Value::Str(label.clone()))]),
+            ),
+        ]));
+        for (rank, spans) in cell.per_rank.iter().enumerate() {
+            for s in spans {
+                events.push(Value::obj(vec![
+                    ("name", Value::Str(format!("{} p{}", s.kind, s.peer))),
+                    ("cat", Value::Str(s.scope.to_string())),
+                    ("ph", Value::Str("X".to_string())),
+                    ("ts", Value::Num(s.start_s * 1e6)),
+                    ("dur", Value::Num(s.dur_s * 1e6)),
+                    ("pid", Value::Num(pid as f64)),
+                    ("tid", Value::Num(rank as f64)),
+                    (
+                        "args",
+                        Value::obj(vec![
+                            ("phase", Value::Num(f64::from(s.phase))),
+                            ("round", Value::Num(f64::from(s.round))),
+                            ("lanes", Value::Num(f64::from(s.lanes))),
+                            ("sent_bytes", Value::Num(s.sent_bytes as f64)),
+                            ("recvd_bytes", Value::Num(s.recvd_bytes as f64)),
+                            ("combine_bytes", Value::Num(s.combine_bytes as f64)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+    }
+    Value::obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", Value::Str("ms".to_string())),
+    ])
+}
+
+/// Compact per-phase table of a traced cell, with the netsim-predicted
+/// time per phase alongside when available (pass `&[]` to omit).
+pub fn format_summary(trace: &CellTrace, predicted_s: &[f64]) -> String {
+    let mut out = String::new();
+    out.push_str("  phase  scope  rounds  ops   rank0-sent    combine       observed     predicted\n");
+    for (i, ph) in trace.phases.iter().enumerate() {
+        let predicted = predicted_s
+            .get(i)
+            .map(|p| format!("{:>9.1} us", p * 1e6))
+            .unwrap_or_else(|| "          --".to_string());
+        out.push_str(&format!(
+            "  {:<5}  {:<5}  {:>6}  {:>3}   {:>10} B  {:>10} B  {:>9.1} us  {}\n",
+            i, ph.scope, ph.rounds, ph.ops, ph.sent_bytes, ph.combine_bytes, ph.busy_s * 1e6, predicted
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::plan::{Algo, PlanKind};
+
+    fn span(phase: u32, round: u32, sent: u64, combine: u64) -> OpSpan {
+        OpSpan {
+            phase,
+            round,
+            kind: "send",
+            scope: "world",
+            peer: 1,
+            lanes: 0,
+            sent_bytes: sent,
+            recvd_bytes: 0,
+            combine_bytes: combine,
+            start_s: 0.0,
+            dur_s: 1e-6,
+        }
+    }
+
+    #[test]
+    fn ring_buffer_overwrites_oldest_and_counts_drops() {
+        let mut t = RankTrace::new(0, 2);
+        t.on_begin_op();
+        for i in 0..5u64 {
+            t.record("send", Scope::World, 1, 0, i, 0, 0, Instant::now());
+        }
+        assert_eq!(t.dropped(), 3);
+        let spans = t.into_spans();
+        assert_eq!(spans.len(), 2);
+        // Oldest-first order survives the wraparound.
+        assert_eq!(spans[0].sent_bytes, 3);
+        assert_eq!(spans[1].sent_bytes, 4);
+    }
+
+    #[test]
+    fn phase_and_round_counters_mirror_the_cost_model() {
+        let mut t = RankTrace::new(0, 16);
+        // Phase 0 with an implicit round 0 (op before any Round marker).
+        t.on_begin_op();
+        t.record("send", Scope::World, 1, 0, 8, 0, 0, Instant::now());
+        // Phase 1 with two explicit rounds.
+        t.on_begin_op();
+        t.on_round();
+        t.record("send", Scope::Inter, 2, 0, 8, 0, 0, Instant::now());
+        t.on_round();
+        t.record("recv_combine", Scope::Inter, 2, 0, 0, 8, 8, Instant::now());
+        let spans = t.into_spans();
+        assert_eq!((spans[0].phase, spans[0].round), (0, 0));
+        assert_eq!((spans[1].phase, spans[1].round), (1, 0));
+        assert_eq!((spans[2].phase, spans[2].round), (1, 1));
+        assert_eq!(spans[1].scope, "inter");
+    }
+
+    #[test]
+    fn thread_local_install_and_teardown() {
+        assert!(!is_active());
+        begin(3);
+        assert!(is_active());
+        let taken = take().expect("installed");
+        assert!(!is_active());
+        restore(taken);
+        let t = end().expect("restored");
+        assert_eq!(t.rank(), 3);
+        assert!(!is_active());
+    }
+
+    #[test]
+    fn aggregate_rolls_up_per_phase() {
+        let rank0 = vec![span(0, 0, 100, 0), span(1, 0, 50, 50), span(1, 1, 50, 0)];
+        let rank1 = vec![span(0, 0, 100, 0), span(1, 0, 50, 0)];
+        let cell = aggregate(vec![rank0, rank1]);
+        assert_eq!(cell.phases.len(), 2);
+        assert_eq!(cell.phases[0].ops, 1);
+        assert_eq!(cell.phases[0].sent_bytes, 100);
+        assert_eq!(cell.phases[0].total_sent_bytes, 200);
+        assert_eq!(cell.phases[1].rounds, 2);
+        assert_eq!(cell.phases[1].combine_bytes, 50);
+        assert!(cell.phases[0].busy_s > 0.0);
+    }
+
+    #[test]
+    fn check_phases_accepts_a_faithful_trace_and_rejects_a_forged_one() {
+        // Flat 4-rank ring all-gather: one phase, p-1 rounds, one block
+        // (256 elems × 4 B) sent per round by rank 0.
+        let spec = PlanSpec::flat(PlanKind::AllGather, Algo::Ring, 4, 1024, 1);
+        let shapes = plan::phase_shapes(&spec).expect("shapes");
+        let mut rank0 = Vec::new();
+        for (ph, shape) in shapes.iter().enumerate() {
+            for (r, round) in shape.rounds.iter().enumerate() {
+                rank0.push(span(ph as u32, r as u32, round.sent_elems * 4, round.combine_elems * 4));
+            }
+        }
+        let good = aggregate(vec![rank0.clone()]);
+        check_phases(&good, &spec, 4).expect("faithful trace passes");
+
+        let mut forged = rank0;
+        forged[0].sent_bytes += 4;
+        let bad = aggregate(vec![forged]);
+        let err = check_phases(&bad, &spec, 4).expect_err("forged trace rejected");
+        assert!(err.to_string().contains("verified plan schedules"));
+    }
+
+    #[test]
+    fn check_phases_rejects_extra_rounds_and_phases() {
+        let spec = PlanSpec::flat(PlanKind::AllGather, Algo::Ring, 2, 64, 1);
+        // One bogus span in a phase the plan does not have.
+        let bad = aggregate(vec![vec![span(7, 0, 4, 0)]]);
+        assert!(check_phases(&bad, &spec, 4).is_err());
+    }
+
+    #[test]
+    fn chrome_doc_is_valid_json_with_one_event_per_span() {
+        let cell = aggregate(vec![vec![span(0, 0, 8, 0)], vec![span(0, 0, 8, 0)]]);
+        let doc = chrome_trace_doc(&[("demo".to_string(), &cell)]);
+        let parsed = Value::parse(&doc.to_string()).expect("valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process-name metadata record + 2 spans.
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(events[1].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(events[2].get("tid").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn summary_table_has_one_line_per_phase() {
+        let cell = aggregate(vec![vec![span(0, 0, 8, 0), span(1, 0, 8, 8)]]);
+        let table = format_summary(&cell, &[1e-6]);
+        assert_eq!(table.lines().count(), 3); // header + 2 phases
+        assert!(table.contains("predicted"));
+    }
+}

@@ -103,6 +103,20 @@ impl Value {
         Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// [`Value::Num`] that refuses NaN/infinity with a typed error instead
+    /// of letting the writer null-encode it. Use for measurements that a
+    /// downstream consumer must be able to trust as numbers (bench records,
+    /// predicted/observed timings).
+    pub fn finite_num(n: f64) -> Result<Value> {
+        if n.is_finite() {
+            Ok(Value::Num(n))
+        } else {
+            Err(Error::NonFiniteJson {
+                value: n.to_string(),
+            })
+        }
+    }
+
     pub fn arr_f64(xs: &[f64]) -> Value {
         Value::Arr(xs.iter().map(|&x| Value::Num(x)).collect())
     }
@@ -126,7 +140,13 @@ impl Value {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                // JSON has no NaN/Infinity tokens; `{n}` would print them
+                // literally and corrupt the document. Null-encode instead
+                // (the lossy-but-valid fallback; use [`Value::finite_num`]
+                // to reject non-finite values up front).
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -400,6 +420,37 @@ mod tests {
         assert!(v.get("n").unwrap().as_usize().is_err());
         assert!(v.get("missing").is_err());
         assert!(v.get_opt("missing").is_none());
+    }
+
+    #[test]
+    fn non_finite_numbers_null_encode() {
+        // `{n}` on NaN/inf would emit bare `NaN`/`inf` tokens — not JSON.
+        assert_eq!(Value::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Value::Num(f64::NEG_INFINITY).to_string(), "null");
+        // A document carrying one stays valid and round-trips; the bad
+        // field comes back as Null, so optional lookups see it as absent.
+        let doc = Value::obj(vec![("ok", Value::Num(1.5)), ("bad", Value::Num(f64::NAN))]);
+        let text = doc.to_string();
+        let back = Value::parse(&text).expect(&text);
+        assert_eq!(back.get("ok").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(back.get("bad").unwrap(), &Value::Null);
+        assert!(back.get_opt("bad").is_none());
+    }
+
+    #[test]
+    fn finite_num_rejects_non_finite_with_typed_error() {
+        assert_eq!(Value::finite_num(2.5).unwrap(), Value::Num(2.5));
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            match Value::finite_num(bad) {
+                Err(Error::NonFiniteJson { value }) => {
+                    assert_eq!(value, bad.to_string());
+                }
+                other => panic!("expected NonFiniteJson, got {other:?}"),
+            }
+        }
+        let msg = Value::finite_num(f64::NAN).unwrap_err().to_string();
+        assert!(msg.contains("cannot be encoded as JSON"), "{msg}");
     }
 }
 

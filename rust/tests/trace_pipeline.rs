@@ -1,0 +1,185 @@
+//! End-to-end tests of the op-level trace pipeline: builder → verifier →
+//! engine → tracer. A traced trial's spans must agree op-for-op with the
+//! verified plan's [`phase_shapes`] cost model, the chrome://tracing
+//! export must follow the Trace Event Format, and tracing must never
+//! leak into the timed loop.
+
+use pccl::backends::{plan_spec_for, Backend, CollKind};
+use pccl::collectives::plan::phase_shapes;
+use pccl::error::Error;
+use pccl::runtime::{Launcher, LauncherConfig, PersistentWorld, TrialReport};
+use pccl::topology::Topology;
+use pccl::trace;
+use pccl::util::json::Value;
+
+fn tiny_launcher(topo: Topology) -> Launcher {
+    Launcher::new(LauncherConfig {
+        topologies: vec![topo],
+        elem_counts: vec![1 << 12],
+        trials: 1,
+        inner_iters: 1,
+        warmup_iters: 0,
+        persistent: false,
+        lane_counts: vec![1],
+    })
+}
+
+/// The §III-A shape convention inverted: recover the per-rank input
+/// element count `cell_shape` fed the collective from the cell's
+/// recorded message bytes.
+fn input_len_of(cell: &pccl::runtime::MeasuredCell) -> usize {
+    match cell.kind {
+        CollKind::AllGather => cell.msg_bytes / 4 / cell.ranks,
+        CollKind::ReduceScatter | CollKind::AllReduce => cell.msg_bytes / 4,
+    }
+}
+
+#[test]
+fn chrome_trace_export_matches_golden_schema() {
+    let topo = Topology::flat(4);
+    let cell = tiny_launcher(topo)
+        .time_cell(topo, CollKind::AllReduce, Backend::PcclRing, 1 << 12)
+        .unwrap();
+    let tr = cell.trace.as_ref().expect("concrete backend cell is traced");
+    let span_count: usize = tr.per_rank.iter().map(Vec::len).sum();
+    assert!(span_count > 0, "traced run recorded no spans");
+
+    let doc = trace::chrome_trace_doc(&[("all-reduce/pccl_ring".to_string(), tr)]);
+    let parsed = Value::parse(&doc.to_string()).expect("export must be valid JSON");
+    assert_eq!(parsed.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    // One process-name metadata record, then one complete event per span.
+    assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "M");
+    assert_eq!(events[0].get("name").unwrap().as_str().unwrap(), "process_name");
+    assert_eq!(events.len(), 1 + span_count);
+    for ev in &events[1..] {
+        assert_eq!(ev.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!(ev.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = ev.get("pid").unwrap().as_usize().unwrap();
+        let tid = ev.get("tid").unwrap().as_usize().unwrap();
+        assert!(tid < topo.world_size());
+        let cat = ev.get("cat").unwrap().as_str().unwrap();
+        assert!(matches!(cat, "world" | "inter" | "intra"), "bad scope {cat}");
+        let args = ev.get("args").unwrap();
+        for key in ["phase", "round", "lanes", "sent_bytes", "recvd_bytes", "combine_bytes"] {
+            let _ = args.get(key).unwrap().as_usize().unwrap();
+        }
+    }
+}
+
+#[test]
+fn traced_phase_counts_match_phase_shapes() {
+    let cases = [
+        (Topology::flat(3), Backend::Vendor),
+        (Topology::flat(6), Backend::CrayMpich),
+        (Topology::flat(8), Backend::PcclRec),
+        (Topology::new(2, 3, 1).unwrap(), Backend::PcclRing),
+        (Topology::new(2, 4, 1).unwrap(), Backend::PcclRec),
+    ];
+    for (topo, backend) in cases {
+        for kind in CollKind::ALL {
+            let cell = tiny_launcher(topo)
+                .time_cell(topo, kind, backend, 1 << 12)
+                .unwrap_or_else(|e| {
+                    panic!("{}/{} on {topo:?}: {e}", kind.label(), backend.label())
+                });
+            let tr = cell.trace.as_ref().expect("traced trial attached");
+            let input_len = input_len_of(&cell);
+            let spec = plan_spec_for(kind, backend, topo, input_len, 1);
+
+            // The launcher already ran this guard before returning the
+            // cell; re-run it explicitly so a regression in the wiring
+            // (guard silently skipped) also fails here.
+            trace::check_phases(tr, &spec, 4).unwrap_or_else(|e| {
+                panic!("{}/{} on {topo:?}: {e}", kind.label(), backend.label())
+            });
+
+            let shapes = phase_shapes(&spec).unwrap();
+            assert!(tr.phases.len() <= shapes.len());
+            for (i, ph) in tr.phases.iter().enumerate() {
+                let want_sent: u64 =
+                    shapes[i].rounds.iter().map(|r| r.sent_elems).sum::<u64>() * 4;
+                let want_combine: u64 =
+                    shapes[i].rounds.iter().map(|r| r.combine_elems).sum::<u64>() * 4;
+                assert_eq!(
+                    (ph.sent_bytes, ph.combine_bytes),
+                    (want_sent, want_combine),
+                    "{}/{} on {topo:?} phase {i}",
+                    kind.label(),
+                    backend.label()
+                );
+                assert!(ph.rounds as usize <= shapes[i].rounds.len());
+                assert!(ph.ops > 0, "observed phase with no ops");
+            }
+            // Any plan phase the trace never reached must schedule nothing.
+            for shape in &shapes[tr.phases.len()..] {
+                let volume: u64 =
+                    shape.rounds.iter().map(|r| r.sent_elems + r.combine_elems).sum();
+                assert_eq!(volume, 0, "unreached plan phase schedules volume");
+            }
+            // The netsim prediction covers every observed phase.
+            assert!(cell.predicted_phase_s.len() >= tr.phases.len());
+            assert!(cell.predicted_phase_s.iter().all(|s| s.is_finite() && *s > 0.0));
+        }
+    }
+}
+
+#[test]
+fn forged_trace_is_rejected_by_the_phase_guard() {
+    let topo = Topology::flat(4);
+    let cell = tiny_launcher(topo)
+        .time_cell(topo, CollKind::AllGather, Backend::PcclRing, 1 << 12)
+        .unwrap();
+    let mut tr = cell.trace.clone().expect("traced trial attached");
+    let spec = plan_spec_for(CollKind::AllGather, Backend::PcclRing, topo, input_len_of(&cell), 1);
+    trace::check_phases(&tr, &spec, 4).unwrap();
+
+    // One extra byte on rank 0's first span must break the byte-exact
+    // comparison against the verified plan.
+    tr.per_rank[0][0].sent_bytes += 4;
+    let err = trace::check_phases(&tr, &spec, 4).unwrap_err();
+    assert!(
+        err.to_string().contains("verified plan schedules"),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn tracing_stays_out_of_the_timed_loop() {
+    let mut world = PersistentWorld::<f32>::new(Topology::flat(2)).unwrap();
+    let launcher = Launcher::new(LauncherConfig {
+        topologies: vec![Topology::flat(2)],
+        elem_counts: vec![1 << 10],
+        trials: 2,
+        inner_iters: 1,
+        warmup_iters: 0,
+        persistent: true,
+        lane_counts: vec![1],
+    });
+    let cell = launcher
+        .time_cell_in(&mut world, CollKind::AllReduce, Backend::PcclRing, 1 << 10)
+        .unwrap();
+
+    // The dedicated traced trial ran and saw exactly one collective op's
+    // worth of traffic — the same schedule bytes the timed trials moved.
+    let tr = cell.trace.as_ref().expect("traced trial attached");
+    let traced_sent: u64 = tr.phases.iter().map(|p| p.total_sent_bytes).sum();
+    assert_eq!(traced_sent, cell.bytes_per_op);
+    // Every timed trial contributed a sample (the traced one is extra).
+    assert_eq!(cell.stats.count(), 2);
+
+    // After the cell, the pinned rank threads carry no tracer: a trial
+    // that would error under an installed tracer runs clean.
+    let reports = world
+        .run_trial(|_c| {
+            if pccl::trace::is_active() {
+                Err(Error::Dispatch("tracer leaked into a later trial".into()))
+            } else {
+                Ok(TrialReport::default())
+            }
+        })
+        .unwrap();
+    assert_eq!(reports.len(), 2);
+}
