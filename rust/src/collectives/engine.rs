@@ -97,12 +97,18 @@ fn stripe_bytes<T>(stripes: &[Chunk<T>]) -> u64 {
     stripes.iter().map(|s| chunk_bytes::<T>(s.len())).sum()
 }
 
-/// Execute a run of ops against one communicator. All ops must target the
-/// communicator `c` represents; scope changes are the caller's job.
+/// Execute a run of ops against one communicator, converting any failure
+/// into a world abort when an abort token is armed. All ops must target
+/// the communicator `c` represents; scope changes are the caller's job.
 ///
-/// When `tracer` is present, one span is recorded per executed comm op;
-/// the phase/round markers update its counters instead. When absent the
-/// only overhead is an `Option` check per op — no clocks are read.
+/// This is the crate's single execution chokepoint, so it is also the
+/// single abort-conversion point: a local failure (timeout, shape
+/// mismatch, injected fault) broadcasts poison to every peer and returns
+/// as [`Error::CollectiveAborted`] attributed to this rank; an incoming
+/// [`Error::CollectiveAborted`] (a peer's poison, or a fault-killed rank)
+/// passes through unchanged so the origin attribution survives. Either
+/// way an `"abort"` span is recorded when tracing, with the segment-start
+/// → detection latency as its duration.
 fn exec<T: Elem, C: Comm<T>>(
     c: &mut C,
     ops: &[Op],
@@ -110,8 +116,48 @@ fn exec<T: Elem, C: Comm<T>>(
     combiner: Option<&Combiner<T>>,
     mut tracer: Option<&mut RankTrace>,
 ) -> Result<()> {
+    let seg_started = tracer.as_ref().map(|_| Instant::now());
+    match exec_inner(c, ops, slots, combiner, tracer.as_deref_mut()) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let err = match e {
+                Error::CollectiveAborted { .. } => e,
+                other if c.abort_armed() => {
+                    let cause = other.to_string();
+                    c.broadcast_abort(&cause);
+                    Error::CollectiveAborted {
+                        origin_rank: c.rank(),
+                        op_seq: c.current_op_seq(),
+                        cause,
+                    }
+                }
+                other => other,
+            };
+            if let Some(t) = tracer.as_deref_mut() {
+                let started =
+                    seg_started.expect("span timing starts whenever a tracer is present");
+                let scope = ops.iter().find_map(Op::scope).unwrap_or(Scope::World);
+                t.record("abort", scope, c.rank(), 0, 0, 0, 0, started, 0.0, 0.0);
+            }
+            Err(err)
+        }
+    }
+}
+
+/// The op loop proper. When `tracer` is present, one span is recorded per
+/// executed comm op (with the endpoint op clock differenced around it for
+/// the queueing-vs-service split); the phase/round markers update its
+/// counters instead. When absent the only overhead is an `Option` check
+/// per op — no clocks are read.
+fn exec_inner<T: Elem, C: Comm<T>>(
+    c: &mut C,
+    ops: &[Op],
+    slots: &mut [Vec<Chunk<T>>],
+    combiner: Option<&Combiner<T>>,
+    mut tracer: Option<&mut RankTrace>,
+) -> Result<()> {
     for op in ops {
-        let started = tracer.as_ref().map(|_| Instant::now());
+        let started = tracer.as_ref().map(|_| (Instant::now(), c.op_clock()));
         let span: Option<SpanInfo> = match *op {
             Op::BeginOp { .. } => {
                 if let Some(t) = tracer.as_deref_mut() {
@@ -196,7 +242,9 @@ fn exec<T: Elem, C: Comm<T>>(
         if let (Some(t), Some((kind, peer, lanes, sent, recvd, folded))) =
             (tracer.as_deref_mut(), span)
         {
-            let started = started.expect("span timing starts whenever a tracer is present");
+            let (started, (wait0, serve0)) =
+                started.expect("span timing starts whenever a tracer is present");
+            let (wait1, serve1) = c.op_clock();
             t.record(
                 kind,
                 op.scope().unwrap_or(Scope::World),
@@ -206,6 +254,8 @@ fn exec<T: Elem, C: Comm<T>>(
                 recvd,
                 folded,
                 started,
+                wait1.saturating_sub(wait0) as f64 / 1e9,
+                serve1.saturating_sub(serve0) as f64 / 1e9,
             );
         }
     }
@@ -341,6 +391,32 @@ mod tests {
             assert_eq!(o.as_slice(), vec![src as i32; 2].as_slice());
             assert_eq!(o.storage_id(), ids[src], "moved, not copied");
         }
+    }
+
+    #[test]
+    fn engine_converts_local_failures_into_world_aborts() {
+        use crate::comm::CommWorld;
+        use std::time::Duration;
+        // Rank 1 sits out the collective entirely: rank 0's recv times
+        // out, and with an abort token armed the engine must surface that
+        // as a CollectiveAborted attributed to rank 0 — on *both* ranks'
+        // terms (rank 1 does nothing, so only rank 0 reports).
+        let spec = PlanSpec::flat(plan::PlanKind::AllGather, plan::Algo::Ring, 2, 4, 1);
+        let outs = CommWorld::<f32>::new(2)
+            .with_abort()
+            .with_recv_timeout(Duration::from_millis(60))
+            .run(move |c| {
+                if c.rank() == 1 {
+                    return None;
+                }
+                let pl = plan::build(&spec, c.rank()).unwrap();
+                let inputs = vec![Chunk::from_vec(vec![1.0; 4])];
+                Some(match run_flat(c, &pl, inputs, None) {
+                    Err(Error::CollectiveAborted { origin_rank, .. }) => origin_rank,
+                    other => panic!("expected CollectiveAborted, got {other:?}"),
+                })
+            });
+        assert_eq!(outs[0], Some(0));
     }
 
     #[test]

@@ -158,6 +158,57 @@
 //!   extra rails); `lanes = 1` (or `k == 1` after clamping to the
 //!   transport's lane count) delegates straight to the unstriped
 //!   algorithm, tags and all.
+//!
+//! ## Failure model (bounded-time collective abort)
+//!
+//! Collectives are all-or-nothing: either every rank completes its
+//! verified schedule, or every *surviving* rank returns the typed
+//! [`Error::CollectiveAborted`](crate::error::Error::CollectiveAborted)
+//! within a bounded detection window — never a hang, never a silently
+//! wrong answer.
+//!
+//! * **Fault taxonomy.** The transport's deterministic injection harness
+//!   ([`crate::comm::FaultPlan`]) models six failures: a *dropped* message
+//!   (counted as sent, lost on the wire — detected by the peer's receive
+//!   timeout), a *delayed* delivery, a *duplicated* message (harmless by
+//!   construction: wire tags are FNV-chained per epoch/op/step/lane, so a
+//!   stale copy can never satisfy a later receive), a *corrupted* payload
+//!   (length-visible truncation, caught by the posted-receive shape check
+//!   as `RecvShapeMismatch` before anything is folded), a *killed rank*
+//!   (every subsequent operation on the rank fails and it never announces
+//!   its own death — peers must detect it by timeout, like a real dead
+//!   host), and a *stalled lane worker* (a slow rail: survivable when it
+//!   wakes within the receive timeout, a typed
+//!   [`Error::LaneWorkerLost`](crate::error::Error::LaneWorkerLost) when
+//!   it misses the configurable shutdown grace).
+//! * **Abort protocol.** [`engine::exec`] is the single conversion point:
+//!   when any op fails on a communicator armed with an
+//!   [`crate::comm::AbortToken`], the engine broadcasts a poison control
+//!   message on the reserved ctrl-tag namespace (top 32 tag bits set, the
+//!   epoch in the low bits — unreachable by data traffic), trips the
+//!   shared token, and returns `CollectiveAborted { origin_rank, op_seq,
+//!   cause }`. Peers parked in receives poll the token between short
+//!   slices (25 ms default), so they observe the abort at poll
+//!   granularity instead of sleeping out their own receive timeout; a
+//!   fault only *one* rank can see (a kill) is detected by its neighbors'
+//!   timeout and then propagated the same way. Detection is therefore
+//!   bounded by `recv_timeout + poll`, not by the 60 s default timeout —
+//!   `pccl chaos` asserts the bound with a wall clock.
+//! * **Epoch/tag rules.** Every wire tag folds in the communicator's
+//!   epoch. Recovery ([`crate::comm::Communicator::bump_epoch`], run on
+//!   every rank by [`crate::runtime::PersistentWorld`] after an aborted
+//!   trial) advances the epoch, re-derives the tag context, resets the op
+//!   sequence, clears armed faults, and drains the queues — so a straggler
+//!   message or poison from the aborted epoch is unmatchable garbage that
+//!   the pull loops discard on sight, and the next collective starts from
+//!   aligned, empty state.
+//! * **Shrink guarantees.** [`crate::comm::Communicator::shrink`] rebuilds
+//!   a dense survivor world around dead ranks (ascending survivor order,
+//!   fresh epoch, drained queues) as a [`crate::comm::SubComm`]; a dead
+//!   rank cannot shrink around itself. The survivors' next collective is
+//!   correct and isolated from the failed epoch's traffic — `pccl chaos`
+//!   and `rust/tests/failure_injection.rs` exercise the full
+//!   die → detect → abort → shrink → recompute arc.
 
 pub mod engine;
 mod hierarchical;

@@ -24,6 +24,17 @@
 //! Index math is shared with the legacy closed forms in
 //! [`super::schedule`]; the property tests in `tests/plan_properties.rs`
 //! pin the lowered plans to that math step by step.
+//!
+//! **Abort semantics.** A lowered plan carries no failure handling of its
+//! own — ops assume every peer executes its verified schedule. Failure is
+//! the engine's job: when any op errors mid-plan on an abort-armed
+//! communicator, [`super::engine::exec`] broadcasts poison and converts
+//! the error to [`Error::CollectiveAborted`], leaving the plan abandoned
+//! partway. Slots then hold an undefined mix of delivered and undelivered
+//! blocks, so an aborted plan's outputs must never be read; recovery is
+//! an epoch bump ([`crate::comm::Communicator::bump_epoch`]) that drains
+//! the wire and retags it, after which the *same* spec can be re-lowered
+//! and re-run from scratch on the fresh epoch.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Mutex, OnceLock};

@@ -21,6 +21,15 @@
 //! so that high-frequency ops on long-lived subcomms cannot alias tags.
 //! FIFO per `(src, tag)` in the transport makes residual aliasing harmless
 //! (SPMD collectives send and receive in matched order).
+//!
+//! Failure semantics: the world's *epoch* is folded into the context id
+//! ahead of everything else, so after an aborted collective
+//! [`Communicator::bump_epoch`] retags the entire tag namespace — a stale
+//! in-flight message from the previous epoch can never match a
+//! post-recovery receive, it can only stash until the recovery drain
+//! reclaims it. [`Communicator::shrink`] builds on the same mechanism to
+//! resume on a survivor subset after a rank death. See
+//! [`crate::collectives`] for the full failure model.
 
 use std::time::Duration;
 
@@ -29,7 +38,7 @@ use crate::reduction::offload::Combiner;
 use crate::topology::Topology;
 
 use super::chunk::Chunk;
-use super::transport::{Endpoint, Traffic};
+use super::transport::{AbortToken, Endpoint, FaultPlan, Traffic};
 
 /// FNV-1a over a stream of u64 words — deterministic context ids.
 fn fnv64(words: impl IntoIterator<Item = u64>) -> u64 {
@@ -91,6 +100,33 @@ pub trait Comm<T: Send + Sync + 'static> {
     fn recv_chunk(&mut self, peer: usize, step: u32) -> Result<Chunk<T>>;
     /// Begin a new collective: bumps the op sequence for tag freshness.
     fn begin_op(&mut self);
+
+    /// Whether this communicator participates in a world abort protocol
+    /// (an [`AbortToken`] is armed on its endpoint). Defaults `false` for
+    /// plain single-queue impls with no failure machinery.
+    fn abort_armed(&self) -> bool {
+        false
+    }
+
+    /// Poison the world: trip the armed abort token and send a control
+    /// message to every peer so parked receives wake within one poll
+    /// slice. No-op when no token is armed.
+    fn broadcast_abort(&mut self, _cause: &str) {}
+
+    /// The communicator's current op sequence number (for abort
+    /// attribution). Default 0 for impls without one.
+    fn current_op_seq(&self) -> u64 {
+        0
+    }
+
+    /// Cumulative `(wait_ns, serve_ns)` clock of the underlying endpoint:
+    /// time spent waiting for matches vs delivering/folding payloads. The
+    /// engine differences this around each op for the queueing-vs-service
+    /// split in trace spans. Default `(0, 0)` for impls that don't track
+    /// it.
+    fn op_clock(&self) -> (u64, u64) {
+        (0, 0)
+    }
 
     /// Number of independent transport lanes this communicator can stripe
     /// a message over (≥ 1). The default single-queue implementation
@@ -333,7 +369,13 @@ pub trait Comm<T: Send + Sync + 'static> {
 pub struct Communicator<T> {
     ep: Endpoint<T>,
     topo: Topology,
+    /// Epoch-independent context seed (hash of kind + world size).
+    base_ctx: u64,
+    /// Live context id: `fnv64_step(base_ctx, epoch)`.
     ctx: u64,
+    /// Recovery epoch — bumped after every aborted collective so stale
+    /// messages from the dead epoch can never match fresh tags.
+    epoch: u32,
     op_seq: u64,
 }
 
@@ -358,11 +400,13 @@ impl<T: Send + Sync + 'static> Communicator<T> {
                 ep.size()
             )));
         }
-        let ctx = fnv64([0xC0, ep.size() as u64]);
+        let base_ctx = fnv64([0xC0, ep.size() as u64]);
         Ok(Self {
             ep,
             topo,
-            ctx,
+            base_ctx,
+            ctx: fnv64_step(base_ctx, 0),
+            epoch: 0,
             op_seq: 0,
         })
     }
@@ -380,6 +424,82 @@ impl<T: Send + Sync + 'static> Communicator<T> {
     /// Receive timeout for deadlock detection / failure injection.
     pub fn set_timeout(&mut self, timeout: Duration) {
         self.ep.set_timeout(timeout);
+    }
+
+    /// Arm the world abort token: parked receives on this rank watch it
+    /// between poll slices, and a local failure broadcast trips it for
+    /// every peer sharing the token.
+    pub fn arm_abort(&mut self, token: AbortToken) {
+        self.ep.set_abort_token(token);
+    }
+
+    /// The armed abort token, if any.
+    pub fn abort_token(&self) -> Option<&AbortToken> {
+        self.ep.abort_token()
+    }
+
+    /// How often parked receives re-check teardown / abort / timeout
+    /// state — the abort detection granularity.
+    pub fn set_abort_poll(&mut self, poll: Duration) {
+        self.ep.set_abort_poll(poll);
+    }
+
+    /// Grace window a lane worker gets past the receive timeout before
+    /// its collect gives up with [`Error::LaneWorkerLost`].
+    pub fn set_shutdown_grace(&mut self, grace: Duration) {
+        self.ep.set_shutdown_grace(grace);
+    }
+
+    /// Arm a deterministic fault plan on this rank's endpoint (chaos
+    /// testing). Specs fire against this communicator's op sequence.
+    pub fn arm_faults(&mut self, plan: FaultPlan) {
+        self.ep.arm_faults(plan);
+    }
+
+    /// Disarm fault injection (clears a latched kill too).
+    pub fn clear_faults(&mut self) {
+        self.ep.clear_faults();
+    }
+
+    /// Current recovery epoch.
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Enter the next recovery epoch after an aborted collective. Drains
+    /// every lane queue (reclaiming stale messages and stale poison),
+    /// disarms fault injection, re-derives the tag context with the new
+    /// epoch folded in, and resets the op sequence — all ranks of the
+    /// world must call this the same number of times, like any collective
+    /// configuration change.
+    pub fn bump_epoch(&mut self) -> Result<()> {
+        self.epoch = self.epoch.wrapping_add(1);
+        self.ctx = fnv64_step(self.base_ctx, self.epoch as u64);
+        self.op_seq = 0;
+        self.ep.set_epoch(self.epoch);
+        self.ep.clear_faults();
+        self.ep.drain()
+    }
+
+    /// Rebuild the world without `dead` ranks after an abort: bumps the
+    /// recovery epoch (draining stale traffic), then returns the survivor
+    /// sub-communicator this rank runs post-recovery collectives on.
+    /// Every survivor must call `shrink` with the same dead list; sub-rank
+    /// order is ascending global rank. Calling it on a dead rank is an
+    /// error — that rank is out of the world by definition.
+    pub fn shrink(&mut self, dead: &[usize]) -> Result<SubComm<'_, T>> {
+        if dead.contains(&self.ep.rank()) {
+            return Err(Error::InvalidTopology(format!(
+                "rank {} cannot shrink around its own death",
+                self.ep.rank()
+            )));
+        }
+        let survivors: Vec<usize> =
+            (0..self.ep.size()).filter(|r| !dead.contains(r)).collect();
+        // An empty dead list still enters a fresh epoch: the caller gets
+        // the same stale-message guarantees either way.
+        self.bump_epoch()?;
+        self.subcomm(survivors)
     }
 
     /// Borrowed sub-communicator over `group` (global ranks, which must
@@ -499,6 +619,23 @@ impl<T: Send + Sync + 'static> Comm<T> for Communicator<T> {
 
     fn begin_op(&mut self) {
         self.op_seq = self.op_seq.wrapping_add(1);
+        self.ep.note_op_seq(self.op_seq);
+    }
+
+    fn abort_armed(&self) -> bool {
+        self.ep.abort_token().is_some()
+    }
+
+    fn broadcast_abort(&mut self, cause: &str) {
+        self.ep.broadcast_abort(self.op_seq, cause);
+    }
+
+    fn current_op_seq(&self) -> u64 {
+        self.op_seq
+    }
+
+    fn op_clock(&self) -> (u64, u64) {
+        self.ep.op_clock()
     }
 
     fn lanes(&self) -> usize {
@@ -603,6 +740,23 @@ impl<'a, T: Send + Sync + 'static> Comm<T> for LaneComm<'a, T> {
 
     fn begin_op(&mut self) {
         self.c.op_seq = self.c.op_seq.wrapping_add(1);
+        self.c.ep.note_op_seq(self.c.op_seq);
+    }
+
+    fn abort_armed(&self) -> bool {
+        self.c.ep.abort_token().is_some()
+    }
+
+    fn broadcast_abort(&mut self, cause: &str) {
+        self.c.ep.broadcast_abort(self.c.op_seq, cause);
+    }
+
+    fn current_op_seq(&self) -> u64 {
+        self.c.op_seq
+    }
+
+    fn op_clock(&self) -> (u64, u64) {
+        self.c.ep.op_clock()
     }
 }
 
@@ -694,6 +848,23 @@ impl<'a, T: Send + Sync + 'static> Comm<T> for SubComm<'a, T> {
 
     fn begin_op(&mut self) {
         self.op_seq = self.op_seq.wrapping_add(1);
+        self.ep.note_op_seq(self.op_seq);
+    }
+
+    fn abort_armed(&self) -> bool {
+        self.ep.abort_token().is_some()
+    }
+
+    fn broadcast_abort(&mut self, cause: &str) {
+        self.ep.broadcast_abort(self.op_seq, cause);
+    }
+
+    fn current_op_seq(&self) -> u64 {
+        self.op_seq
+    }
+
+    fn op_clock(&self) -> (u64, u64) {
+        self.ep.op_clock()
     }
 
     fn lanes(&self) -> usize {
@@ -1029,6 +1200,61 @@ mod tests {
             let got = s3.recv_striped(0, 0, 2).unwrap();
             assert_eq!(Chunk::concat(&got), vec![7, 8, 9]);
         }
+    }
+
+    #[test]
+    fn bump_epoch_retags_and_drains_stale_traffic() {
+        let (mut c0, mut c1) = pair();
+        // A message posted in epoch 0...
+        c0.send_slice(1, 0, Chunk::from_vec(vec![9.0])).unwrap();
+        // ...must never match the same (op, step) after recovery: the
+        // epoch is folded into the context ahead of everything else.
+        c1.bump_epoch().unwrap();
+        c1.set_timeout(Duration::from_millis(30));
+        assert!(matches!(c1.recv_chunk(0, 0), Err(Error::RecvTimeout { .. })));
+        assert_eq!(c1.epoch(), 1);
+        // Once the sender recovers too, the worlds agree again.
+        c0.bump_epoch().unwrap();
+        c0.send_slice(1, 0, Chunk::from_vec(vec![4.0])).unwrap();
+        assert_eq!(c1.recv_chunk(0, 0).unwrap(), vec![4.0]);
+    }
+
+    #[test]
+    fn shrink_rebuilds_survivor_world() {
+        let (_hub, eps) = TransportHub::<i32>::new(4);
+        let topo = Topology::flat(4);
+        let mut comms: Vec<Communicator<i32>> = eps
+            .into_iter()
+            .map(|e| Communicator::new(e, topo).unwrap())
+            .collect();
+        let mut c2 = comms.remove(2);
+        let mut c0 = comms.remove(0);
+        // Rank 1 and 3 "died"; survivors shrink around them.
+        {
+            let mut s0 = c0.shrink(&[1, 3]).unwrap();
+            assert_eq!(s0.group(), &[0, 2]);
+            assert_eq!(s0.rank(), 0);
+            s0.send_slice(1, 0, Chunk::from_vec(vec![77])).unwrap();
+        }
+        {
+            let mut s2 = c2.shrink(&[1, 3]).unwrap();
+            assert_eq!(s2.rank(), 1);
+            assert_eq!(s2.recv_chunk(0, 0).unwrap(), vec![77]);
+        }
+        // A dead rank cannot shrink around itself.
+        let mut c1 = comms.remove(0);
+        assert!(c1.shrink(&[1, 3]).is_err());
+    }
+
+    #[test]
+    fn abort_defaults_and_endpoint_overrides() {
+        let (mut c0, _c1) = pair();
+        assert!(!c0.abort_armed());
+        c0.arm_abort(AbortToken::new());
+        assert!(c0.abort_armed());
+        c0.begin_op();
+        assert_eq!(c0.current_op_seq(), 1);
+        assert_eq!(Comm::op_clock(&c0), (0, 0), "no traffic yet");
     }
 
     #[test]

@@ -16,5 +16,8 @@ mod world;
 
 pub use chunk::{stripe_lens, Chunk};
 pub use communicator::{Comm, Communicator, LaneComm, SubComm};
-pub use transport::{Endpoint, Traffic, TransportHub, DEFAULT_RECV_TIMEOUT};
+pub use transport::{
+    AbortToken, Endpoint, FaultAction, FaultPlan, FaultSpec, Traffic, TransportHub,
+    DEFAULT_RECV_TIMEOUT, DEFAULT_SHUTDOWN_GRACE,
+};
 pub use world::CommWorld;

@@ -35,9 +35,25 @@
 //! counters, receives by whichever thread completes the delivery.
 //! [`Endpoint::traffic`] returns the lane sum, so single-lane callers see
 //! the exact counters they always did.
+//!
+//! ## Failure semantics
+//!
+//! Every blocking wait in this module is sliced into
+//! [`Endpoint::set_abort_poll`]-sized pieces and re-checks three things
+//! between slices: the lane teardown flag, the world [`AbortToken`], and
+//! the **live** receive timeout (an [`Endpoint::set_timeout`] issued while
+//! a lane job is already parked takes effect within one slice — the job
+//! carries a handle to the shared deadline, not a snapshot). A rank that
+//! detects a failure calls [`Endpoint::broadcast_abort`], which trips the
+//! token and posts a poison message on a reserved control tag
+//! ([`CTRL_TAG_PREFIX`] | epoch) to every peer's lane-0 mailbox, so a
+//! parked peer wakes immediately instead of at its next poll slice. Stale
+//! poison from an already-recovered epoch is discarded by the epoch check.
+//! Deterministic chaos testing is driven by a [`FaultPlan`] armed on an
+//! endpoint ([`Endpoint::arm_faults`]).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
@@ -45,6 +61,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::reduction::offload::Combiner;
+use crate::util::json::Value;
 
 use super::chunk::Chunk;
 
@@ -52,10 +69,330 @@ use super::chunk::Chunk;
 /// still converting deadlocks into typed errors instead of hangs.
 pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(60);
 
-/// How long a lane worker sleeps per wait slice once a shutdown flag is
-/// attached to its pull: endpoint teardown is bounded by this, not by the
-/// full receive timeout a parked job still has remaining.
+/// Default extra wait past the receive timeout before a silent lane worker
+/// is declared lost — see [`Endpoint::set_shutdown_grace`].
+pub const DEFAULT_SHUTDOWN_GRACE: Duration = Duration::from_secs(30);
+
+/// Default wait-slice length for every blocking pull: the teardown flag,
+/// the abort token, and the live timeout are re-checked between slices, so
+/// abort detection latency is bounded by this (configurable per endpoint
+/// via [`Endpoint::set_abort_poll`]), not by the receive timeout.
 const LANE_SHUTDOWN_POLL: Duration = Duration::from_millis(25);
+
+/// Control-message tag namespace: top 32 bits all-ones, the abort epoch in
+/// the low 32. Data tags are FNV-1a chain outputs, which land in this
+/// namespace with probability 2⁻³² per tag — vanishingly unlikely, and a
+/// collision is still caught downstream by the chaos checksums.
+pub(crate) const CTRL_TAG_PREFIX: u64 = 0xFFFF_FFFF_0000_0000;
+
+fn ctrl_tag(epoch: u32) -> u64 {
+    CTRL_TAG_PREFIX | epoch as u64
+}
+
+fn is_ctrl_tag(tag: u64) -> bool {
+    tag & CTRL_TAG_PREFIX == CTRL_TAG_PREFIX
+}
+
+fn ctrl_epoch(tag: u64) -> u32 {
+    (tag & 0xFFFF_FFFF) as u32
+}
+
+/// World-wide collective abort flag, shared by every rank of a world (one
+/// `Arc` under the clones). The first rank to detect a failure trips it
+/// with its identity and cause; every subsequent wait in the world returns
+/// the same typed [`Error::CollectiveAborted`] within one poll slice.
+/// [`AbortToken::clear`] re-arms it after recovery.
+#[derive(Clone, Default)]
+pub struct AbortToken {
+    inner: Arc<AbortState>,
+}
+
+#[derive(Default)]
+struct AbortState {
+    tripped: AtomicBool,
+    detail: Mutex<Option<(usize, u64, String)>>,
+}
+
+impl AbortToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Trip the abort. The first caller wins — later trips are ignored so
+    /// the origin attribution stays stable. Returns whether this call was
+    /// the one that tripped it.
+    pub fn trip(&self, origin_rank: usize, op_seq: u64, cause: &str) -> bool {
+        let mut d = self
+            .inner
+            .detail
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        if d.is_some() {
+            return false;
+        }
+        *d = Some((origin_rank, op_seq, cause.to_string()));
+        // Ordered after the detail write: a reader that observes the flag
+        // always finds the detail populated.
+        self.inner.tripped.store(true, Ordering::Release);
+        true
+    }
+
+    pub fn is_tripped(&self) -> bool {
+        self.inner.tripped.load(Ordering::Acquire)
+    }
+
+    /// The typed abort error, if tripped.
+    pub fn error(&self) -> Option<Error> {
+        if !self.is_tripped() {
+            return None;
+        }
+        let d = self
+            .inner
+            .detail
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        let (origin_rank, op_seq, cause) = d
+            .clone()
+            .unwrap_or_else(|| (usize::MAX, 0, "aborted".to_string()));
+        Some(Error::CollectiveAborted {
+            origin_rank,
+            op_seq,
+            cause,
+        })
+    }
+
+    /// Reset after recovery so the world can run its next epoch.
+    pub fn clear(&self) {
+        let mut d = self
+            .inner
+            .detail
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        *d = None;
+        self.inner.tripped.store(false, Ordering::Release);
+    }
+}
+
+/// What an injected fault does when it fires. Send-side directives model
+/// NIC/link failures at the posting rank; [`FaultAction::StallWorker`]
+/// fires on the receiving rank's lane worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The message is counted as sent, then silently lost on the wire —
+    /// peers detect it as a receive timeout.
+    Drop,
+    /// Delivery is delayed by `ms` on the sending side.
+    Delay { ms: u64 },
+    /// The message is delivered twice. The duplicate can never match a
+    /// later op (tags are FNV-chained per op/step), so correct tag
+    /// matching makes it harmless; recovery's queue drain reclaims it.
+    Duplicate,
+    /// The payload is mangled in a length-visible way (truncated by one
+    /// element; an empty payload is dropped instead) — our stand-in for a
+    /// CRC-detected corruption, surfaced by the posted-receive shape check
+    /// as [`Error::RecvShapeMismatch`] instead of silently folding garbage.
+    Corrupt,
+    /// The rank dies: this operation and every later send/receive on the
+    /// rank fails immediately with [`Error::CollectiveAborted`], and the
+    /// dead rank never broadcasts — peers must detect the death by
+    /// timeout, exactly as with a real dead host.
+    KillRank,
+    /// The lane worker serving the matching receive stalls `ms` before
+    /// serving (a slow rail). Fires on the receiving rank; worker lanes
+    /// (≥ 1) only.
+    StallWorker { ms: u64 },
+}
+
+impl FaultAction {
+    fn kind(&self) -> &'static str {
+        match self {
+            FaultAction::Drop => "drop",
+            FaultAction::Delay { .. } => "delay",
+            FaultAction::Duplicate => "duplicate",
+            FaultAction::Corrupt => "corrupt",
+            FaultAction::KillRank => "kill_rank",
+            FaultAction::StallWorker { .. } => "stall_worker",
+        }
+    }
+
+    fn ms(&self) -> u64 {
+        match self {
+            FaultAction::Delay { ms } | FaultAction::StallWorker { ms } => *ms,
+            _ => 0,
+        }
+    }
+
+    fn from_parts(kind: &str, ms: u64) -> Result<FaultAction> {
+        Ok(match kind {
+            "drop" => FaultAction::Drop,
+            "delay" => FaultAction::Delay { ms },
+            "duplicate" => FaultAction::Duplicate,
+            "corrupt" => FaultAction::Corrupt,
+            "kill_rank" => FaultAction::KillRank,
+            "stall_worker" => FaultAction::StallWorker { ms },
+            other => {
+                return Err(Error::Json(format!("unknown fault action {other:?}")))
+            }
+        })
+    }
+}
+
+/// One injected fault directive: fires on `rank` the first time it touches
+/// `(peer, lane)` at or after communicator op `op_seq`, then is spent
+/// ([`FaultAction::KillRank`] stays in effect permanently). Send-side
+/// actions match `peer` = destination; [`FaultAction::StallWorker`]
+/// matches `peer` = source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub rank: usize,
+    pub peer: usize,
+    pub lane: usize,
+    pub op_seq: u64,
+    pub action: FaultAction,
+}
+
+/// A deterministic, serializable fault schedule for chaos runs. Armed per
+/// endpoint via [`Endpoint::arm_faults`]; because each rank's traffic
+/// order is deterministic, replaying the same plan against the same
+/// program reproduces the same failure exactly.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// An explicit (hand-written) plan.
+    pub fn new(faults: Vec<FaultSpec>) -> Self {
+        Self { seed: 0, faults }
+    }
+
+    /// Deterministic pseudo-random plan: the same `(seed, size, lanes, n)`
+    /// always produces the same plan (xorshift64, no global RNG state).
+    pub fn seeded(seed: u64, size: usize, lanes: usize, n: usize) -> Self {
+        let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s
+        };
+        let size = size.max(1) as u64;
+        let lanes = lanes.max(1) as u64;
+        let faults = (0..n)
+            .map(|_| {
+                let rank = (next() % size) as usize;
+                let mut peer = (next() % size) as usize;
+                if size > 1 && peer == rank {
+                    peer = (peer + 1) % size as usize;
+                }
+                let lane = (next() % lanes) as usize;
+                let op_seq = next() % 4;
+                let action = match next() % 6 {
+                    0 => FaultAction::Drop,
+                    1 => FaultAction::Delay { ms: 1 + next() % 20 },
+                    2 => FaultAction::Duplicate,
+                    3 => FaultAction::Corrupt,
+                    4 => FaultAction::KillRank,
+                    _ => FaultAction::StallWorker { ms: 1 + next() % 20 },
+                };
+                FaultSpec { rank, peer, lane, op_seq, action }
+            })
+            .collect();
+        Self { seed, faults }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn faults(&self) -> &[FaultSpec] {
+        &self.faults
+    }
+
+    /// Serialize for the chaos record, so a failing cell's exact fault
+    /// schedule ships with the artifact and replays bit-for-bit.
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            // Seed as string: f64 would truncate seeds above 2^53.
+            ("seed", Value::Str(self.seed.to_string())),
+            (
+                "faults",
+                Value::Arr(
+                    self.faults
+                        .iter()
+                        .map(|f| {
+                            Value::obj(vec![
+                                ("rank", Value::Num(f.rank as f64)),
+                                ("peer", Value::Num(f.peer as f64)),
+                                ("lane", Value::Num(f.lane as f64)),
+                                ("op_seq", Value::Num(f.op_seq as f64)),
+                                ("action", Value::Str(f.action.kind().to_string())),
+                                ("ms", Value::Num(f.action.ms() as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Inverse of [`FaultPlan::to_value`].
+    pub fn from_value(v: &Value) -> Result<FaultPlan> {
+        let seed = v
+            .get("seed")?
+            .as_str()?
+            .parse::<u64>()
+            .map_err(|e| Error::Json(format!("bad fault plan seed: {e}")))?;
+        let faults = v
+            .get("faults")?
+            .as_arr()?
+            .iter()
+            .map(|f| {
+                let ms = f.get("ms")?.as_f64()? as u64;
+                Ok(FaultSpec {
+                    rank: f.get("rank")?.as_usize()?,
+                    peer: f.get("peer")?.as_usize()?,
+                    lane: f.get("lane")?.as_usize()?,
+                    op_seq: f.get("op_seq")?.as_f64()? as u64,
+                    action: FaultAction::from_parts(f.get("action")?.as_str()?, ms)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FaultPlan { seed, faults })
+    }
+}
+
+/// Armed per-endpoint fault state: the plan plus one-shot spent markers,
+/// the current communicator op sequence (fed by `begin_op`), and the
+/// kill-rank latch.
+struct FaultCtx {
+    plan: FaultPlan,
+    spent: Vec<bool>,
+    op_seq: u64,
+    killed: bool,
+}
+
+impl FaultCtx {
+    fn fire(&mut self, rank: usize, peer: usize, lane: usize, stall: bool) -> Option<FaultAction> {
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if self.spent[i]
+                || f.rank != rank
+                || f.peer != peer
+                || f.lane != lane
+                || self.op_seq < f.op_seq
+            {
+                continue;
+            }
+            if matches!(f.action, FaultAction::StallWorker { .. }) != stall {
+                continue;
+            }
+            self.spent[i] = true;
+            return Some(f.action);
+        }
+        None
+    }
+}
 
 /// Lock a lane traffic counter, surviving poisoning. The counters are
 /// plain numbers: a panicked sibling thread cannot leave them in a state
@@ -148,24 +485,20 @@ impl<T> Mailbox<T> {
     /// Matched pull without traffic accounting (counting happens once the
     /// delivery is classified as moved or copied). `rank` is only for
     /// error construction.
-    fn pull(&mut self, rank: usize, from: usize, tag: u64, timeout: Duration) -> Result<Chunk<T>> {
-        self.pull_with_cancel(rank, from, tag, timeout, None)
-    }
-
-    /// [`Mailbox::pull`] that a shutdown flag can interrupt: with `cancel`
-    /// attached the wait is sliced into [`LANE_SHUTDOWN_POLL`] pieces and
-    /// the flag is checked between slices, so a parked lane worker notices
-    /// endpoint teardown within one slice instead of sleeping out the
-    /// remaining receive timeout. Cancellation surfaces as
-    /// [`Error::TransportClosed`]. With `cancel == None` the behavior is
-    /// byte-for-byte the plain pull.
-    fn pull_with_cancel(
+    ///
+    /// The wait is sliced into `watch.poll` pieces; between slices the
+    /// teardown flag, the abort token, and the **live** receive timeout
+    /// are re-checked (so a timeout shortened mid-wait takes effect within
+    /// one slice). A matching-epoch control message aborts the pull
+    /// immediately; a stale-epoch one (from an already-recovered abort) is
+    /// discarded. Cancellation surfaces as [`Error::TransportClosed`],
+    /// aborts as [`Error::CollectiveAborted`].
+    fn pull_watched(
         &mut self,
         rank: usize,
         from: usize,
         tag: u64,
-        timeout: Duration,
-        cancel: Option<&AtomicBool>,
+        watch: &Watch<'_>,
     ) -> Result<Chunk<T>> {
         let key = (from, tag);
         if let Some(q) = self.pending.get_mut(&key) {
@@ -173,19 +506,33 @@ impl<T> Mailbox<T> {
                 return Ok(data);
             }
         }
-        let deadline = Instant::now() + timeout;
+        let start = Instant::now();
         loop {
-            if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
+            if watch.cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
                 return Err(Error::TransportClosed { rank });
             }
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            let wait = if cancel.is_some() {
-                remaining.min(LANE_SHUTDOWN_POLL)
-            } else {
-                remaining
-            };
+            if let Some(e) = watch.abort.and_then(AbortToken::error) {
+                return Err(e);
+            }
+            let timeout = Duration::from_millis(watch.timeout_ms.load(Ordering::Relaxed));
+            let deadline = start + timeout;
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::RecvTimeout {
+                    src: from,
+                    tag,
+                    ms: timeout.as_millis() as u64,
+                });
+            }
+            let wait = deadline.saturating_duration_since(now).min(watch.poll);
             match self.rx.recv_timeout(wait) {
                 Ok(msg) => {
+                    if is_ctrl_tag(msg.tag) {
+                        if ctrl_epoch(msg.tag) == watch.epoch {
+                            return Err(abort_error(watch.abort, msg.src));
+                        }
+                        continue; // stale-epoch poison: already recovered from
+                    }
                     if msg.src == from && msg.tag == tag {
                         return Ok(msg.data);
                     }
@@ -194,15 +541,7 @@ impl<T> Mailbox<T> {
                         .or_default()
                         .push_back(msg.data);
                 }
-                Err(RecvTimeoutError::Timeout) => {
-                    if Instant::now() >= deadline {
-                        return Err(Error::RecvTimeout {
-                            src: from,
-                            tag,
-                            ms: timeout.as_millis() as u64,
-                        });
-                    }
-                }
+                Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(Error::TransportClosed { rank })
                 }
@@ -210,32 +549,18 @@ impl<T> Mailbox<T> {
         }
     }
 
-    /// [`Mailbox::pull`] plus the posted-buffer shape check; on mismatch
-    /// the message is requeued at the front (FIFO order preserved — it was
-    /// taken from the front) and the error is recoverable.
-    fn checked_pull(
+    /// [`Mailbox::pull_watched`] plus the posted-buffer shape check; on
+    /// mismatch the message is requeued at the front (FIFO order preserved
+    /// — it was taken from the front) and the error is recoverable.
+    fn checked_pull_watched(
         &mut self,
         rank: usize,
         from: usize,
         tag: u64,
         expected: usize,
-        timeout: Duration,
+        watch: &Watch<'_>,
     ) -> Result<Chunk<T>> {
-        self.checked_pull_with_cancel(rank, from, tag, expected, timeout, None)
-    }
-
-    /// [`Mailbox::checked_pull`] over the cancellable pull — see
-    /// [`Mailbox::pull_with_cancel`].
-    fn checked_pull_with_cancel(
-        &mut self,
-        rank: usize,
-        from: usize,
-        tag: u64,
-        expected: usize,
-        timeout: Duration,
-        cancel: Option<&AtomicBool>,
-    ) -> Result<Chunk<T>> {
-        let data = self.pull_with_cancel(rank, from, tag, timeout, cancel)?;
+        let data = self.pull_watched(rank, from, tag, watch)?;
         if data.len() != expected {
             let got = data.len();
             self.pending.entry((from, tag)).or_default().push_front(data);
@@ -250,27 +575,84 @@ impl<T> Mailbox<T> {
     }
 }
 
+/// Everything a blocking pull watches besides its own `(src, tag)` match:
+/// the lane teardown flag, the world abort token, the live receive
+/// timeout, the current abort epoch (for control-tag filtering), and the
+/// wait-slice length bounding detection latency.
+struct Watch<'a> {
+    cancel: Option<&'a AtomicBool>,
+    abort: Option<&'a AbortToken>,
+    timeout_ms: &'a AtomicU64,
+    epoch: u32,
+    poll: Duration,
+}
+
+/// The error a poison control message resolves to: the token's detail when
+/// armed (origin, op, cause as tripped), else attribution to the sender.
+fn abort_error(tok: Option<&AbortToken>, origin: usize) -> Error {
+    tok.and_then(AbortToken::error)
+        .unwrap_or_else(|| Error::CollectiveAborted {
+            origin_rank: origin,
+            op_seq: 0,
+            cause: "abort signal from peer".to_string(),
+        })
+}
+
+/// Build a [`Watch`] from an endpoint's fields. A macro (not a method) so
+/// the borrow checker sees disjoint field borrows and lets the watch
+/// coexist with the `&mut self.lane0` pull it feeds.
+macro_rules! watch {
+    ($ep:expr) => {
+        Watch {
+            cancel: None,
+            abort: $ep.abort.as_ref(),
+            timeout_ms: &*$ep.timeout,
+            epoch: $ep.epoch,
+            poll: $ep.poll,
+        }
+    };
+}
+
 /// A receive request shipped to a lane worker. `dest: None` is a plain
 /// matched pull (the chunk reference comes back); `Some` is a posted
-/// receive, folded through `combiner` when one is attached.
+/// receive, folded through `combiner` when one is attached. The timeout is
+/// a live handle to the endpoint's shared deadline — not a snapshot — so
+/// [`Endpoint::set_timeout`] reaches a job that is already parked.
 struct LaneJob<T> {
     from: usize,
     tag: u64,
-    timeout: Duration,
+    timeout_ms: Arc<AtomicU64>,
+    abort: Option<AbortToken>,
+    epoch: u32,
+    poll: Duration,
+    /// Injected rail stall (fault harness): sleep this long before serving.
+    stall_ms: u64,
     dest: Option<Chunk<T>>,
     combiner: Option<Combiner<T>>,
 }
 
+/// What the endpoint asks a lane worker to do.
+enum LaneCmd<T> {
+    Recv(LaneJob<T>),
+    /// Post-abort recovery: discard every queued and stashed message on
+    /// this lane (stale-epoch tags can never match again).
+    Drain,
+}
+
 /// A lane worker's answer: the delivered (or returned-on-error) chunk plus
 /// the delivery result. On error a posted `dest` comes back untouched.
+/// `wait`/`serve` split the service time into time-in-mailbox vs
+/// accept/fold time, feeding the endpoint's op clock.
 struct LaneDone<T> {
     chunk: Option<Chunk<T>>,
+    wait: Duration,
+    serve: Duration,
     result: Result<()>,
 }
 
 /// Owner-side handle to one lane worker thread (lanes ≥ 1).
 struct LaneWorker<T> {
-    job_tx: Sender<LaneJob<T>>,
+    job_tx: Sender<LaneCmd<T>>,
     done_rx: Receiver<LaneDone<T>>,
     traffic: Arc<Mutex<Traffic>>,
     /// Shutdown flag shared with the worker thread: set by the endpoint's
@@ -366,7 +748,7 @@ fn spawn_lane_worker<T: Send + Sync + Clone + 'static>(
     lane: usize,
     rx: Receiver<Msg<T>>,
 ) -> LaneWorker<T> {
-    let (job_tx, job_rx) = mpsc::channel::<LaneJob<T>>();
+    let (job_tx, job_rx) = mpsc::channel::<LaneCmd<T>>();
     let (done_tx, done_rx) = mpsc::channel::<LaneDone<T>>();
     let traffic = Arc::new(Mutex::new(Traffic::default()));
     let shared = Arc::clone(&traffic);
@@ -376,17 +758,30 @@ fn spawn_lane_worker<T: Send + Sync + Clone + 'static>(
         .name(format!("pccl-lane-{rank}.{lane}"))
         .spawn(move || {
             let mut mailbox = Mailbox::new(rx);
-            while let Ok(job) = job_rx.recv() {
-                // Once teardown starts, drain queued jobs without serving
-                // them: their pulls would only time out against a dying
-                // transport and stall the endpoint's join.
-                let done = if stop_flag.load(Ordering::Relaxed) {
-                    LaneDone {
-                        chunk: job.dest,
-                        result: Err(Error::TransportClosed { rank }),
+            while let Ok(cmd) = job_rx.recv() {
+                let done = match cmd {
+                    LaneCmd::Drain => {
+                        while mailbox.rx.try_recv().is_ok() {}
+                        mailbox.pending.clear();
+                        LaneDone {
+                            chunk: None,
+                            wait: Duration::ZERO,
+                            serve: Duration::ZERO,
+                            result: Ok(()),
+                        }
                     }
-                } else {
-                    serve_lane_job(&mut mailbox, &shared, rank, &stop_flag, job)
+                    // Once teardown starts, drain queued jobs without
+                    // serving them: their pulls would only time out against
+                    // a dying transport and stall the endpoint's join.
+                    LaneCmd::Recv(job) if stop_flag.load(Ordering::Relaxed) => LaneDone {
+                        chunk: job.dest,
+                        wait: Duration::ZERO,
+                        serve: Duration::ZERO,
+                        result: Err(Error::TransportClosed { rank }),
+                    },
+                    LaneCmd::Recv(job) => {
+                        serve_lane_job(&mut mailbox, &shared, rank, &stop_flag, job)
+                    }
                 };
                 if done_tx.send(done).is_err() {
                     return; // endpoint dropped
@@ -404,7 +799,8 @@ fn spawn_lane_worker<T: Send + Sync + Clone + 'static>(
 }
 
 /// One receive on a worker lane: pull, deliver per the job's mode, count.
-/// The pulls watch `stop` so endpoint teardown interrupts a parked wait.
+/// The pulls watch `stop` so endpoint teardown interrupts a parked wait,
+/// and the abort token so a world abort does too.
 fn serve_lane_job<T: Send + Sync + Clone + 'static>(
     mailbox: &mut Mailbox<T>,
     traffic: &Mutex<Traffic>,
@@ -412,30 +808,57 @@ fn serve_lane_job<T: Send + Sync + Clone + 'static>(
     stop: &AtomicBool,
     job: LaneJob<T>,
 ) -> LaneDone<T> {
+    // Injected rail stall: sleep in poll slices so teardown still
+    // interrupts promptly.
+    if job.stall_ms > 0 {
+        let until = Instant::now() + Duration::from_millis(job.stall_ms);
+        loop {
+            let remaining = until.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            if stop.load(Ordering::Relaxed) {
+                return LaneDone {
+                    chunk: job.dest,
+                    wait: Duration::ZERO,
+                    serve: Duration::ZERO,
+                    result: Err(Error::TransportClosed { rank }),
+                };
+            }
+            std::thread::sleep(remaining.min(job.poll));
+        }
+    }
+    let watch = Watch {
+        cancel: Some(stop),
+        abort: job.abort.as_ref(),
+        timeout_ms: &job.timeout_ms,
+        epoch: job.epoch,
+        poll: job.poll,
+    };
+    let t0 = Instant::now();
     match job.dest {
-        None => match mailbox.pull_with_cancel(rank, job.from, job.tag, job.timeout, Some(stop)) {
+        None => match mailbox.pull_watched(rank, job.from, job.tag, &watch) {
             Ok(data) => {
+                let wait = t0.elapsed();
                 lock_traffic(traffic).count_recv::<T>(data.len(), 0);
                 LaneDone {
                     chunk: Some(data),
+                    wait,
+                    serve: Duration::ZERO,
                     result: Ok(()),
                 }
             }
             Err(e) => LaneDone {
                 chunk: None,
+                wait: t0.elapsed(),
+                serve: Duration::ZERO,
                 result: Err(e),
             },
         },
         Some(mut dest) => {
-            match mailbox.checked_pull_with_cancel(
-                rank,
-                job.from,
-                job.tag,
-                dest.len(),
-                job.timeout,
-                Some(stop),
-            ) {
+            match mailbox.checked_pull_watched(rank, job.from, job.tag, dest.len(), &watch) {
                 Ok(data) => {
+                    let matched = Instant::now();
                     let len = data.len();
                     let copied = match &job.combiner {
                         Some(comb) => {
@@ -447,11 +870,15 @@ fn serve_lane_job<T: Send + Sync + Clone + 'static>(
                     lock_traffic(traffic).count_recv::<T>(len, copied);
                     LaneDone {
                         chunk: Some(dest),
+                        wait: matched - t0,
+                        serve: matched.elapsed(),
                         result: Ok(()),
                     }
                 }
                 Err(e) => LaneDone {
                     chunk: Some(dest),
+                    wait: t0.elapsed(),
+                    serve: Duration::ZERO,
                     result: Err(e),
                 },
             }
@@ -466,7 +893,24 @@ pub struct Endpoint<T> {
     hub: TransportHub<T>,
     lane0: Mailbox<T>,
     workers: Vec<LaneWorker<T>>,
-    timeout: Duration,
+    /// Live receive timeout in ms — shared with every dispatched lane job,
+    /// so [`Endpoint::set_timeout`] reaches already-parked workers.
+    timeout: Arc<AtomicU64>,
+    /// Wait-slice length: abort/teardown/timeout-change detection latency.
+    poll: Duration,
+    /// Extra wait past the receive timeout before a silent lane worker is
+    /// declared lost ([`Error::LaneWorkerLost`]).
+    shutdown_grace: Duration,
+    /// Current abort epoch — folded into control tags so stale poison from
+    /// a recovered abort is discarded.
+    epoch: u32,
+    abort: Option<AbortToken>,
+    fault: Option<FaultCtx>,
+    /// Cumulative time-in-mailbox across receives (ns) — the op clock's
+    /// queueing half.
+    wait_ns: u64,
+    /// Cumulative accept/fold time across receives (ns) — the service half.
+    serve_ns: u64,
     traffic: Traffic,
 }
 
@@ -482,7 +926,14 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
             hub,
             lane0: Mailbox::new(lane0_rx),
             workers,
-            timeout: DEFAULT_RECV_TIMEOUT,
+            timeout: Arc::new(AtomicU64::new(DEFAULT_RECV_TIMEOUT.as_millis() as u64)),
+            poll: LANE_SHUTDOWN_POLL,
+            shutdown_grace: DEFAULT_SHUTDOWN_GRACE,
+            epoch: 0,
+            abort: None,
+            fault: None,
+            wait_ns: 0,
+            serve_ns: 0,
             traffic: Traffic::default(),
         }
     }
@@ -500,9 +951,143 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
         1 + self.workers.len()
     }
 
-    /// Override the receive timeout (failure-injection tests use short ones).
+    /// Override the receive timeout (failure-injection tests use short
+    /// ones). Takes effect immediately, including for lane jobs that are
+    /// already parked in a pull — they observe the new deadline within one
+    /// poll slice.
     pub fn set_timeout(&mut self, timeout: Duration) {
-        self.timeout = timeout;
+        self.timeout
+            .store(timeout.as_millis() as u64, Ordering::Relaxed);
+    }
+
+    fn timeout(&self) -> Duration {
+        Duration::from_millis(self.timeout.load(Ordering::Relaxed))
+    }
+
+    /// Extra wait past the receive timeout before a silent lane worker is
+    /// declared [`Error::LaneWorkerLost`]. Default
+    /// [`DEFAULT_SHUTDOWN_GRACE`].
+    pub fn set_shutdown_grace(&mut self, grace: Duration) {
+        self.shutdown_grace = grace;
+    }
+
+    pub fn shutdown_grace(&self) -> Duration {
+        self.shutdown_grace
+    }
+
+    /// Wait-slice length for every blocking pull — the abort detection
+    /// window. Clamped to ≥ 1 ms.
+    pub fn set_abort_poll(&mut self, poll: Duration) {
+        self.poll = poll.max(Duration::from_millis(1));
+    }
+
+    /// Arm this endpoint with the world's shared abort token. Pulls check
+    /// it between wait slices; [`Endpoint::broadcast_abort`] trips it.
+    pub fn set_abort_token(&mut self, token: AbortToken) {
+        self.abort = Some(token);
+    }
+
+    pub fn abort_token(&self) -> Option<&AbortToken> {
+        self.abort.as_ref()
+    }
+
+    /// Set the abort epoch. Control messages carry the sender's epoch;
+    /// pulls discard poison whose epoch differs from this one. Recovery
+    /// bumps every rank's epoch in lockstep (see `Communicator::bump_epoch`).
+    pub fn set_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Arm a deterministic fault schedule (chaos harness). Replaces any
+    /// previously armed plan and resets its spent/killed state.
+    pub fn arm_faults(&mut self, plan: FaultPlan) {
+        let spent = vec![false; plan.faults.len()];
+        self.fault = Some(FaultCtx {
+            plan,
+            spent,
+            op_seq: 0,
+            killed: false,
+        });
+    }
+
+    /// Disarm fault injection (part of epoch-bump recovery).
+    pub fn clear_faults(&mut self) {
+        self.fault = None;
+    }
+
+    /// Feed the communicator's op sequence to the fault harness so
+    /// directives can be keyed on it.
+    pub fn note_op_seq(&mut self, op_seq: u64) {
+        if let Some(f) = &mut self.fault {
+            f.op_seq = op_seq;
+        }
+    }
+
+    fn check_killed(&self) -> Result<()> {
+        match &self.fault {
+            Some(f) if f.killed => Err(Error::CollectiveAborted {
+                origin_rank: self.rank,
+                op_seq: f.op_seq,
+                cause: "fault injection: rank killed".to_string(),
+            }),
+            _ => Ok(()),
+        }
+    }
+
+    fn check_abort(&self) -> Result<()> {
+        match self.abort.as_ref().and_then(AbortToken::error) {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Cumulative `(time-in-mailbox, accept/fold time)` across this
+    /// endpoint's receives, in nanoseconds. The engine differences this
+    /// around each op to attribute queueing vs service time per span.
+    pub fn op_clock(&self) -> (u64, u64) {
+        (self.wait_ns, self.serve_ns)
+    }
+
+    /// Trip the world abort (if a token is armed) and post a poison
+    /// control message on the reserved tag for the current epoch to every
+    /// peer's lane-0 mailbox, waking parked peers immediately. Control
+    /// messages bypass traffic accounting — they are not data-plane bytes.
+    pub fn broadcast_abort(&mut self, op_seq: u64, cause: &str) {
+        if let Some(tok) = &self.abort {
+            tok.trip(self.rank, op_seq, cause);
+        }
+        let tag = ctrl_tag(self.epoch);
+        for peer in 0..self.hub.size() {
+            if peer == self.rank {
+                continue;
+            }
+            let _ = self.hub.sender(peer, 0).send(Msg {
+                src: self.rank,
+                tag,
+                data: Chunk::empty(),
+            });
+        }
+    }
+
+    /// Discard every queued and stashed message on all lanes — part of
+    /// post-abort recovery. Stale messages carry previous-epoch tags that
+    /// can never match again; dropping them reclaims the memory.
+    pub fn drain(&mut self) -> Result<()> {
+        while self.lane0.rx.try_recv().is_ok() {}
+        self.lane0.pending.clear();
+        for lane in 1..self.lane_count() {
+            let w = &self.workers[lane - 1];
+            w.job_tx
+                .send(LaneCmd::Drain)
+                .map_err(|_| Error::TransportClosed { rank: self.rank })?;
+            let done = self.collect_lane(lane)?;
+            done.result?;
+        }
+        Ok(())
     }
 
     /// Traffic counters so far, summed over all lanes (monotonic).
@@ -531,7 +1116,9 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
     }
 
     /// Post `chunk` to `to`'s mailbox on `lane`. Counting lands in this
-    /// endpoint's per-lane send counters.
+    /// endpoint's per-lane send counters. An armed fault directive for
+    /// `(self.rank, to, lane)` fires here, before the message is posted —
+    /// modeling a sender-side NIC/link fault.
     pub fn send_chunk_on(&mut self, to: usize, lane: usize, tag: u64, chunk: Chunk<T>) -> Result<()> {
         if to >= self.hub.size() {
             return Err(Error::PeerOutOfRange {
@@ -545,26 +1132,87 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
                 size: self.lane_count(),
             });
         }
-        if lane == 0 {
-            self.traffic.count_send::<T>(chunk.len());
-        } else {
-            lock_traffic(&self.workers[lane - 1].traffic).count_send::<T>(chunk.len());
+        self.check_killed()?;
+        self.check_abort()?;
+        let rank = self.rank;
+        let action = self
+            .fault
+            .as_mut()
+            .and_then(|ctx| ctx.fire(rank, to, lane, false));
+        let mut chunk = chunk;
+        let mut copies = 1usize;
+        match action {
+            None => {}
+            Some(FaultAction::Drop) => {
+                // Lost on the wire: the NIC already counted it as sent.
+                self.count_send_on(lane, chunk.len());
+                return Ok(());
+            }
+            Some(FaultAction::Delay { ms }) => std::thread::sleep(Duration::from_millis(ms)),
+            Some(FaultAction::Duplicate) => copies = 2,
+            Some(FaultAction::Corrupt) => {
+                if chunk.is_empty() {
+                    self.count_send_on(lane, 0);
+                    return Ok(());
+                }
+                let len = chunk.len();
+                chunk = chunk.slice(0, len - 1);
+            }
+            Some(FaultAction::KillRank) => {
+                let op_seq = match &mut self.fault {
+                    Some(ctx) => {
+                        ctx.killed = true;
+                        ctx.op_seq
+                    }
+                    None => 0,
+                };
+                return Err(Error::CollectiveAborted {
+                    origin_rank: rank,
+                    op_seq,
+                    cause: "fault injection: rank killed".to_string(),
+                });
+            }
+            Some(FaultAction::StallWorker { .. }) => {} // receive-side directive
+        }
+        self.count_send_on(lane, chunk.len());
+        for _ in 1..copies {
+            self.hub
+                .sender(to, lane)
+                .send(Msg {
+                    src: rank,
+                    tag,
+                    data: chunk.clone(),
+                })
+                .map_err(|_| Error::TransportClosed { rank })?;
         }
         self.hub
             .sender(to, lane)
             .send(Msg {
-                src: self.rank,
+                src: rank,
                 tag,
                 data: chunk,
             })
-            .map_err(|_| Error::TransportClosed { rank: self.rank })
+            .map_err(|_| Error::TransportClosed { rank })
+    }
+
+    fn count_send_on(&mut self, lane: usize, elems: usize) {
+        if lane == 0 {
+            self.traffic.count_send::<T>(elems);
+        } else {
+            lock_traffic(&self.workers[lane - 1].traffic).count_send::<T>(elems);
+        }
     }
 
     /// Blocking matched receive of a chunk from `(from, tag)` on lane 0 —
     /// the caller takes the delivered reference, so the whole message
     /// counts as moved.
     pub fn recv_chunk(&mut self, from: usize, tag: u64) -> Result<Chunk<T>> {
-        let data = self.lane0.pull(self.rank, from, tag, self.timeout)?;
+        self.check_killed()?;
+        let t0 = Instant::now();
+        let data = self
+            .lane0
+            .pull_watched(self.rank, from, tag, &watch!(self))?;
+        self.wait_ns += t0.elapsed().as_nanos() as u64;
         self.traffic.count_recv::<T>(data.len(), 0);
         Ok(data)
     }
@@ -592,11 +1240,16 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
     where
         T: Clone,
     {
-        let data = self
-            .lane0
-            .checked_pull(self.rank, from, tag, dest.len(), self.timeout)?;
+        self.check_killed()?;
+        let t0 = Instant::now();
+        let data =
+            self.lane0
+                .checked_pull_watched(self.rank, from, tag, dest.len(), &watch!(self))?;
+        let matched = Instant::now();
+        self.wait_ns += (matched - t0).as_nanos() as u64;
         let len = data.len();
         let copied = dest.accept(data);
+        self.serve_ns += matched.elapsed().as_nanos() as u64;
         self.traffic.count_recv::<T>(len, copied);
         Ok(())
     }
@@ -615,11 +1268,16 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
     where
         T: Clone,
     {
-        let data = self
-            .lane0
-            .checked_pull(self.rank, from, tag, dest.len(), self.timeout)?;
+        self.check_killed()?;
+        let t0 = Instant::now();
+        let data =
+            self.lane0
+                .checked_pull_watched(self.rank, from, tag, dest.len(), &watch!(self))?;
+        let matched = Instant::now();
+        self.wait_ns += (matched - t0).as_nanos() as u64;
         let len = data.len();
         dest.accept_combine(data, combiner);
+        self.serve_ns += matched.elapsed().as_nanos() as u64;
         self.traffic.count_recv::<T>(len, 0);
         Ok(())
     }
@@ -632,6 +1290,25 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
         dest: Option<Chunk<T>>,
         combiner: Option<Combiner<T>>,
     ) -> Result<()> {
+        self.check_killed()?;
+        let rank = self.rank;
+        // A stall directive for (self.rank, from, lane) fires on the
+        // receiving side: the worker sleeps before serving this job.
+        let stall_ms = match self.fault.as_mut().and_then(|ctx| ctx.fire(rank, from, lane, true)) {
+            Some(FaultAction::StallWorker { ms }) => ms,
+            _ => 0,
+        };
+        let job = LaneJob {
+            from,
+            tag,
+            timeout_ms: Arc::clone(&self.timeout),
+            abort: self.abort.clone(),
+            epoch: self.epoch,
+            poll: self.poll,
+            stall_ms,
+            dest,
+            combiner,
+        };
         let w = self
             .workers
             .get(lane - 1)
@@ -640,28 +1317,41 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
                 size: self.lane_count(),
             })?;
         w.job_tx
-            .send(LaneJob {
-                from,
-                tag,
-                timeout: self.timeout,
-                dest,
-                combiner,
-            })
-            .map_err(|_| Error::TransportClosed { rank: self.rank })
+            .send(LaneCmd::Recv(job))
+            .map_err(|_| Error::TransportClosed { rank })
     }
 
     fn collect_lane(&mut self, lane: usize) -> Result<LaneDone<T>> {
-        // Workers answer every job exactly once; a generous wait beyond the
-        // job's own recv timeout means a missing answer is a dead worker.
-        self.workers
+        // Workers answer every job exactly once; a worker that stays
+        // silent past the job's own receive timeout plus the configured
+        // shutdown grace is presumed dead — a typed loss, distinct from an
+        // orderly transport teardown.
+        let grace = self.shutdown_grace;
+        let deadline = self.timeout() + grace;
+        let res = self
+            .workers
             .get(lane - 1)
             .ok_or(Error::PeerOutOfRange {
                 peer: lane,
                 size: self.lane_count(),
             })?
             .done_rx
-            .recv_timeout(self.timeout + Duration::from_secs(30))
-            .map_err(|_| Error::TransportClosed { rank: self.rank })
+            .recv_timeout(deadline);
+        match res {
+            Ok(done) => {
+                self.wait_ns += done.wait.as_nanos() as u64;
+                self.serve_ns += done.serve.as_nanos() as u64;
+                Ok(done)
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::TransportClosed { rank: self.rank })
+            }
+            Err(RecvTimeoutError::Timeout) => Err(Error::LaneWorkerLost {
+                rank: self.rank,
+                lane,
+                grace_ms: grace.as_millis() as u64,
+            }),
+        }
     }
 
     /// Posted receive on an explicit lane (see [`Endpoint::recv_chunk_into`]).
@@ -717,11 +1407,16 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
     /// returned chunks are in lane order. `tags.len()` must be ≤
     /// [`Endpoint::lane_count`].
     pub fn recv_striped(&mut self, from: usize, tags: &[u64]) -> Result<Vec<Chunk<T>>> {
+        self.check_killed()?;
         let k = self.check_stripes(tags.len())?;
         for (l, &tag) in tags.iter().enumerate().skip(1) {
             self.dispatch_lane(l, from, tag, None, None)?;
         }
-        let lane0 = self.lane0.pull(self.rank, from, tags[0], self.timeout);
+        let t0 = Instant::now();
+        let lane0 = self
+            .lane0
+            .pull_watched(self.rank, from, tags[0], &watch!(self));
+        self.wait_ns += t0.elapsed().as_nanos() as u64;
         if let Ok(data) = &lane0 {
             self.traffic.count_recv::<T>(data.len(), 0);
         }
@@ -795,6 +1490,7 @@ impl<T: Send + Sync + 'static> Endpoint<T> {
     where
         T: Clone,
     {
+        self.check_killed()?;
         let k = self.check_stripes(tags.len())?;
         if dests.len() != k {
             return Err(Error::BadBufferSize {
@@ -1139,6 +1835,226 @@ mod tests {
         let (_hub, eps) = TransportHub::<f32>::new(3);
         assert!(eps.iter().all(|e| e.lane_count() == 1));
         assert_eq!(eps[0].traffic_per_lane().len(), 1);
+    }
+
+    #[test]
+    fn lock_traffic_survives_poisoned_lock() {
+        // A panicking holder poisons the mutex; the counters are plain
+        // numbers, so lock_traffic must hand back the partial counts
+        // instead of cascading the panic (the PR 9 poison-recovery path).
+        let t = Arc::new(Mutex::new(Traffic::default()));
+        let t2 = Arc::clone(&t);
+        let _ = std::thread::spawn(move || {
+            let mut g = t2.lock().unwrap();
+            g.sent_msgs = 7;
+            panic!("poison the traffic lock while holding it");
+        })
+        .join();
+        assert!(t.is_poisoned());
+        assert_eq!(lock_traffic(&t).sent_msgs, 7, "partial counts readable");
+    }
+
+    #[test]
+    fn set_timeout_reaches_parked_lane_jobs() {
+        // Regression: lane jobs used to snapshot the timeout at dispatch,
+        // so shortening it later never reached a parked worker.
+        let (_hub, mut eps) = TransportHub::<f32>::new_with_lanes(2, 2);
+        let _e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.set_timeout(Duration::from_secs(300));
+        e0.dispatch_lane(1, 1, 0xfeed, None, None).unwrap();
+        // Let the worker park inside the pull with the long deadline.
+        std::thread::sleep(Duration::from_millis(60));
+        e0.set_timeout(Duration::from_millis(50));
+        let t = Instant::now();
+        let done = e0.collect_lane(1).unwrap();
+        assert!(
+            matches!(done.result, Err(Error::RecvTimeout { .. })),
+            "expected RecvTimeout, got {:?}",
+            done.result
+        );
+        assert!(
+            t.elapsed() < Duration::from_secs(10),
+            "parked job kept its old deadline: {:?}",
+            t.elapsed()
+        );
+    }
+
+    #[test]
+    fn lane_worker_grace_miss_is_typed() {
+        let (_hub, mut eps) = TransportHub::<f32>::new_with_lanes(2, 2);
+        let _e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.set_timeout(Duration::from_millis(40));
+        e0.set_shutdown_grace(Duration::from_millis(80));
+        // Stall the worker far past timeout + grace: the collect must give
+        // up with a typed loss, not a generic transport teardown.
+        e0.arm_faults(FaultPlan::new(vec![FaultSpec {
+            rank: 0,
+            peer: 1,
+            lane: 1,
+            op_seq: 0,
+            action: FaultAction::StallWorker { ms: 5_000 },
+        }]));
+        let t = Instant::now();
+        match e0.recv_chunk_on(1, 1, 9) {
+            Err(Error::LaneWorkerLost { rank: 0, lane: 1, grace_ms: 80 }) => {}
+            other => panic!("expected LaneWorkerLost, got {other:?}"),
+        }
+        assert!(
+            t.elapsed() < Duration::from_secs(4),
+            "grace window not honored: {:?}",
+            t.elapsed()
+        );
+    }
+
+    #[test]
+    fn abort_broadcast_interrupts_parked_recv_immediately() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let tok = AbortToken::new();
+        e0.set_abort_token(tok.clone());
+        e1.set_abort_token(tok.clone());
+        // e1 parks with the default 60 s timeout; the poison must wake it
+        // long before that sleeps out.
+        let t = std::thread::spawn(move || {
+            let start = Instant::now();
+            (e1.recv_chunk(0, 5), start.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        e0.broadcast_abort(3, "injected failure");
+        let (res, waited) = t.join().unwrap();
+        match res {
+            Err(Error::CollectiveAborted { origin_rank: 0, op_seq: 3, .. }) => {}
+            other => panic!("expected CollectiveAborted, got {other:?}"),
+        }
+        assert!(waited < Duration::from_secs(5), "detection took {waited:?}");
+        assert!(tok.is_tripped());
+    }
+
+    #[test]
+    fn stale_epoch_poison_is_discarded() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.broadcast_abort(0, "previous-epoch failure"); // epoch-0 poison
+        e1.set_epoch(1); // e1 already recovered past it
+        e1.set_timeout(Duration::from_millis(50));
+        match e1.recv_chunk(0, 5) {
+            Err(Error::RecvTimeout { .. }) => {}
+            other => panic!("stale poison must be discarded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn injected_drop_surfaces_as_peer_timeout() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.arm_faults(FaultPlan::new(vec![FaultSpec {
+            rank: 0,
+            peer: 1,
+            lane: 0,
+            op_seq: 0,
+            action: FaultAction::Drop,
+        }]));
+        e0.send_chunk(1, 7, Chunk::from_vec(vec![1.0])).unwrap();
+        assert_eq!(e0.traffic().sent_msgs, 1, "drop is counted as sent");
+        e1.set_timeout(Duration::from_millis(40));
+        assert!(matches!(e1.recv_chunk(0, 7), Err(Error::RecvTimeout { .. })));
+        // One-shot: the next send goes through.
+        e0.send_chunk(1, 8, Chunk::from_vec(vec![2.0])).unwrap();
+        assert_eq!(e1.recv_chunk(0, 8).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn injected_corrupt_is_caught_by_shape_check() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.arm_faults(FaultPlan::new(vec![FaultSpec {
+            rank: 0,
+            peer: 1,
+            lane: 0,
+            op_seq: 0,
+            action: FaultAction::Corrupt,
+        }]));
+        e0.send_chunk(1, 7, Chunk::from_vec(vec![1.0, 2.0, 3.0])).unwrap();
+        let mut dest = Chunk::from_vec(vec![0.0; 3]);
+        match e1.recv_chunk_into(0, 7, &mut dest) {
+            Err(Error::RecvShapeMismatch { expected: 3, got: 2, .. }) => {}
+            other => panic!("expected RecvShapeMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn injected_duplicate_never_matches_a_later_tag() {
+        let (_hub, mut eps) = TransportHub::<i32>::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.arm_faults(FaultPlan::new(vec![FaultSpec {
+            rank: 0,
+            peer: 1,
+            lane: 0,
+            op_seq: 0,
+            action: FaultAction::Duplicate,
+        }]));
+        e0.send_chunk(1, 7, Chunk::from_vec(vec![11])).unwrap();
+        assert_eq!(e1.recv_chunk(0, 7).unwrap(), vec![11]);
+        // The duplicate is stashed under its own (src, tag) and can never
+        // match a different tag...
+        e1.set_timeout(Duration::from_millis(40));
+        assert!(matches!(e1.recv_chunk(0, 8), Err(Error::RecvTimeout { .. })));
+        // ...and recovery's drain reclaims it.
+        e1.drain().unwrap();
+        assert!(e1.lane0.pending.is_empty());
+    }
+
+    #[test]
+    fn injected_kill_rank_latches() {
+        let (_hub, mut eps) = TransportHub::<f32>::new(2);
+        let _e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.arm_faults(FaultPlan::new(vec![FaultSpec {
+            rank: 0,
+            peer: 1,
+            lane: 0,
+            op_seq: 0,
+            action: FaultAction::KillRank,
+        }]));
+        match e0.send_chunk(1, 7, Chunk::from_vec(vec![1.0])) {
+            Err(Error::CollectiveAborted { origin_rank: 0, .. }) => {}
+            other => panic!("expected CollectiveAborted, got {other:?}"),
+        }
+        // Dead is dead: receives fail too, without touching the mailbox.
+        assert!(matches!(e0.recv_chunk(1, 9), Err(Error::CollectiveAborted { .. })));
+        assert_eq!(e0.traffic().sent_msgs, 0, "a killed rank posts nothing");
+    }
+
+    #[test]
+    fn drain_clears_all_lanes() {
+        let (_hub, mut eps) = TransportHub::<f32>::new_with_lanes(2, 2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send_chunk_on(1, 0, 1, Chunk::from_vec(vec![1.0])).unwrap();
+        e0.send_chunk_on(1, 1, 2, Chunk::from_vec(vec![2.0])).unwrap();
+        e1.drain().unwrap();
+        e1.set_timeout(Duration::from_millis(40));
+        assert!(matches!(e1.recv_chunk(0, 1), Err(Error::RecvTimeout { .. })));
+        assert!(matches!(
+            e1.recv_chunk_on(1, 0, 2),
+            Err(Error::RecvTimeout { .. })
+        ));
+    }
+
+    #[test]
+    fn fault_plan_json_round_trip_and_determinism() {
+        let plan = FaultPlan::seeded(42, 8, 4, 12);
+        assert_eq!(plan, FaultPlan::seeded(42, 8, 4, 12), "seeded plans replay");
+        assert_ne!(plan, FaultPlan::seeded(43, 8, 4, 12));
+        let v = plan.to_value();
+        assert_eq!(FaultPlan::from_value(&v).unwrap(), plan);
     }
 
     #[test]

@@ -6,17 +6,21 @@
 //! joins the results.
 
 use std::marker::PhantomData;
+use std::time::Duration;
 
 use crate::error::Result;
 use crate::topology::Topology;
 
 use super::communicator::Communicator;
-use super::transport::TransportHub;
+use super::transport::{AbortToken, FaultPlan, TransportHub};
 
 /// Factory for SPMD runs over `size` rank threads.
 pub struct CommWorld<T> {
     topo: Topology,
     lanes: usize,
+    abort: Option<AbortToken>,
+    timeout: Option<Duration>,
+    faults: Option<FaultPlan>,
     _t: PhantomData<T>,
 }
 
@@ -26,6 +30,9 @@ impl<T: Send + Sync + Clone + 'static> CommWorld<T> {
         Self {
             topo: Topology::flat(size),
             lanes: 1,
+            abort: None,
+            timeout: None,
+            faults: None,
             _t: PhantomData,
         }
     }
@@ -35,6 +42,9 @@ impl<T: Send + Sync + Clone + 'static> CommWorld<T> {
         Self {
             topo,
             lanes: 1,
+            abort: None,
+            timeout: None,
+            faults: None,
             _t: PhantomData,
         }
     }
@@ -45,6 +55,35 @@ impl<T: Send + Sync + Clone + 'static> CommWorld<T> {
         assert!(lanes >= 1, "world needs at least one lane");
         self.lanes = lanes;
         self
+    }
+
+    /// Arm a shared [`AbortToken`] on every rank of each run: any rank's
+    /// failure poisons the world and every peer returns
+    /// [`crate::error::Error::CollectiveAborted`] within the detection
+    /// window instead of sleeping out its receive timeout. The token is
+    /// also readable from outside the run via [`CommWorld::abort_token`].
+    pub fn with_abort(mut self) -> Self {
+        self.abort = Some(AbortToken::new());
+        self
+    }
+
+    /// Set every rank's receive timeout (the failure-detection bound for
+    /// faults nobody survives to announce, e.g. a killed rank).
+    pub fn with_recv_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = Some(timeout);
+        self
+    }
+
+    /// Arm the same deterministic [`FaultPlan`] on every rank of each run
+    /// (each rank's endpoint fires only the specs naming its own rank).
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// The armed abort token, if [`CommWorld::with_abort`] was called.
+    pub fn abort_token(&self) -> Option<&AbortToken> {
+        self.abort.as_ref()
     }
 
     pub fn size(&self) -> usize {
@@ -76,11 +115,23 @@ impl<T: Send + Sync + Clone + 'static> CommWorld<T> {
             .into_iter()
             .map(|ep| {
                 let f = f.clone();
+                let abort = self.abort.clone();
+                let timeout = self.timeout;
+                let faults = self.faults.clone();
                 std::thread::Builder::new()
                     .name(format!("pccl-rank-{}", ep.rank()))
                     .spawn(move || {
                         let mut comm =
                             Communicator::new(ep, topo).expect("topology/transport mismatch");
+                        if let Some(tok) = abort {
+                            comm.arm_abort(tok);
+                        }
+                        if let Some(t) = timeout {
+                            comm.set_timeout(t);
+                        }
+                        if let Some(plan) = faults {
+                            comm.arm_faults(plan);
+                        }
                         f(&mut comm)
                     })
                     .expect("spawn rank thread")

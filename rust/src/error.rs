@@ -36,6 +36,30 @@ pub enum Error {
     /// The transport was shut down while an operation was in flight.
     TransportClosed { rank: usize },
 
+    /// A collective was aborted — either this rank hit a fault/timeout and
+    /// poisoned the world, or a peer did and the poison reached us. Every
+    /// surviving rank of the world returns this same error (with the
+    /// origin's identity) within the configured detection window, instead
+    /// of each independently sleeping out its full receive timeout.
+    CollectiveAborted {
+        /// Rank that first detected the failure and tripped the abort.
+        origin_rank: usize,
+        /// The origin's communicator op sequence when it aborted.
+        op_seq: u64,
+        /// Human-readable description of the underlying failure.
+        cause: String,
+    },
+
+    /// A lane worker thread failed to answer a dispatched job within the
+    /// receive timeout plus the endpoint's configured shutdown grace — the
+    /// worker is presumed dead or wedged (distinct from an orderly
+    /// [`Error::TransportClosed`] teardown).
+    LaneWorkerLost {
+        rank: usize,
+        lane: usize,
+        grace_ms: u64,
+    },
+
     /// Topology construction was asked for an impossible shape.
     InvalidTopology(String),
 
@@ -104,6 +128,19 @@ impl fmt::Display for Error {
             Error::TransportClosed { rank } => {
                 write!(f, "transport closed while rank {rank} was communicating")
             }
+            Error::CollectiveAborted { origin_rank, op_seq, cause } => {
+                write!(
+                    f,
+                    "collective aborted by rank {origin_rank} at op {op_seq}: {cause}"
+                )
+            }
+            Error::LaneWorkerLost { rank, lane, grace_ms } => {
+                write!(
+                    f,
+                    "lane worker {lane} of rank {rank} missed the shutdown grace \
+                     ({grace_ms} ms past the receive timeout) — worker presumed dead"
+                )
+            }
             Error::InvalidTopology(m) => write!(f, "invalid topology: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::ArtifactSchema { what, expected, got } => {
@@ -167,5 +204,21 @@ mod tests {
         let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(e.to_string().contains("gone"));
         assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn abort_and_worker_loss_are_typed() {
+        let e = Error::CollectiveAborted {
+            origin_rank: 3,
+            op_seq: 7,
+            cause: "recv timeout".into(),
+        };
+        assert_eq!(
+            e.to_string(),
+            "collective aborted by rank 3 at op 7: recv timeout"
+        );
+        let e = Error::LaneWorkerLost { rank: 1, lane: 2, grace_ms: 500 };
+        assert!(e.to_string().contains("lane worker 2 of rank 1"));
+        assert!(e.to_string().contains("500 ms"));
     }
 }

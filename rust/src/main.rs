@@ -15,6 +15,7 @@
 //! pccl trace    [--collective C] [--backend B] [--ranks 8] [--nodes 2]
 //!               [--size-kb 256] [--lanes 1] [--out trace.json]
 //! pccl smoke        [--out BENCH_smoke.json]
+//! pccl chaos        [--out BENCH_chaos.json]
 //! pccl verify-plans
 //! pccl info
 //! ```
@@ -32,7 +33,7 @@ use pccl::topology::{Machine, Topology};
 use pccl::train::{ddp::run_ddp, zero3::run_zero3, DdpConfig, Zero3Config};
 use pccl::util::cli::Args;
 
-const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|trace|smoke|verify-plans|info> [options]
+const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|trace|smoke|chaos|verify-plans|info> [options]
   pccl bench        [--collective C] [--backend B] [--ranks N] [--nodes N] [--size-kb K] [--trials T]
   pccl figures      <fig1..fig13|table1|all> [--out DIR]
   pccl dispatch     [--trials T] [--save DIR]
@@ -40,6 +41,7 @@ const USAGE: &str = "usage: pccl <bench|figures|dispatch|train|trace|smoke|verif
   pccl trace        [--collective C] [--backend B] [--ranks N] [--nodes N] [--size-kb K] [--lanes L]
                     [--out FILE]   (op-level trace of one cell; writes chrome://tracing JSON)
   pccl smoke        [--out FILE]   (quick measured bench of every backend; writes JSON)
+  pccl chaos        [--out FILE]   (fault-grid sweep: every cell must complete or abort in bound)
   pccl verify-plans (statically verify every dispatch cell's lowered plan)
   pccl info";
 
@@ -655,6 +657,61 @@ fn run_smoke(out: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Sweep the fault grid (see [`pccl::runtime::run_chaos`]): every fault ×
+/// backend cell must either complete with the reference checksum or
+/// return the typed collective abort within the detection bound, the
+/// persistent world must stay usable after every abort, a shrunk
+/// survivor world must complete a correct collective, and no lane-worker
+/// thread may outlive its world. The per-cell record (with each cell's
+/// replayable fault plan) is written as JSON before pass/fail is decided,
+/// so CI uploads the evidence either way.
+fn run_chaos_cmd(out: &Path) -> Result<()> {
+    use pccl::runtime::{run_chaos, ChaosConfig};
+
+    let cfg = ChaosConfig::default();
+    let t = Timer::start();
+    let report = run_chaos(&cfg)?;
+    let wall = t.secs();
+    println!(
+        "{:<14} {:<12} {:<16} {:>10} {:>9}  detail",
+        "fault", "backend", "collective", "outcome", "detect"
+    );
+    for c in &report.cells {
+        println!(
+            "{:<14} {:<12} {:<16} {:>10} {:>9}  {}",
+            c.fault,
+            c.backend.label(),
+            c.kind.label(),
+            c.outcome.label(),
+            fmt_secs(c.detect_s),
+            c.detail
+        );
+    }
+    println!(
+        "shrink-after-rank-death: {} in {} {}",
+        if report.shrink_passed { "ok" } else { "FAILED" },
+        fmt_secs(report.shrink_wall_s),
+        report.shrink_detail
+    );
+    if let Some((before, after)) = report.threads {
+        println!("threads: {before} before, {after} after teardown");
+    }
+    let doc = report.to_value(&cfg);
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(out, doc.to_string())?;
+    println!(
+        "chaos: {} cells + shrink in {:.1}s → {}",
+        report.cells.len(),
+        wall,
+        out.display()
+    );
+    report.ensure_passed()
+}
+
 fn main() -> Result<()> {
     let args = match Args::from_env() {
         Ok(a) => a,
@@ -769,6 +826,10 @@ fn main() -> Result<()> {
         "smoke" => {
             let out = PathBuf::from(args.get("out").unwrap_or("BENCH_smoke.json"));
             run_smoke(&out)?;
+        }
+        "chaos" => {
+            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_chaos.json"));
+            run_chaos_cmd(&out)?;
         }
         "verify-plans" => {
             run_verify_plans()?;

@@ -1,0 +1,610 @@
+//! `pccl chaos` — deterministic fault-grid sweep over the plan-IR backends.
+//!
+//! For every fault kind × concrete backend the harness runs one collective
+//! on a [`PersistentWorld`] with a seeded [`FaultPlan`] armed, and demands
+//! one of exactly two clean endings:
+//!
+//! * **completed** — the collective finished and its result checksum
+//!   matches a faultless reference run of the same cell (survivable
+//!   faults: a bounded delay, a duplicated message, a stalled-but-alive
+//!   lane worker), or
+//! * **aborted** — every failing rank returned the typed
+//!   [`Error::CollectiveAborted`] within the configured detection bound
+//!   (wall-clock asserted, far below the 60 s default receive timeout),
+//!   the world resynchronized onto a fresh epoch, and the *next* trial on
+//!   the same world reproduced the reference checksum.
+//!
+//! Anything else — a hang past the bound, a silently wrong checksum, an
+//! untyped error, a poisoned world, a leaked lane-worker thread — marks
+//! the cell `FAILED` and fails the whole run. A separate cell exercises
+//! rank-failure recovery by *shrinking*: a world loses a rank, the
+//! survivors detect it by timeout, broadcast the abort, and rebuild a
+//! smaller communicator (see [`crate::comm::Communicator::shrink`]) that
+//! completes a correct collective.
+//!
+//! Every cell's fault plan is serialized into the JSON report, so a chaos
+//! failure can be replayed exactly with [`FaultPlan::from_value`].
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use crate::backends::{Backend, CollKind, CollectiveOptions};
+use crate::comm::{Chunk, Comm, CommWorld, Communicator, FaultAction, FaultPlan, FaultSpec};
+use crate::error::{Error, Result};
+use crate::topology::Topology;
+use crate::util::json::Value;
+
+use super::launcher::run_collective;
+use super::persistent::{PersistentWorld, TrialReport};
+
+/// The fault taxonomy the grid sweeps, one cell per kind per backend.
+pub const FAULT_KINDS: [&str; 6] =
+    ["drop", "delay", "duplicate", "corrupt", "kill_rank", "stall_worker"];
+
+/// Grid shape and failure-detection budget for one chaos run.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// World size (≥ 3 so the shrink cell keeps a non-trivial survivor
+    /// ring).
+    pub ranks: usize,
+    /// Transport lanes per rank pair (≥ 2 so the stall-worker cells have a
+    /// worker lane to stall).
+    pub lanes: usize,
+    /// Elements per rank input — large enough that the striped PCCL paths
+    /// keep multiple stripes (see [`crate::backends::MIN_STRIPE_ELEMS`]).
+    pub elems: usize,
+    /// Per-rank receive timeout: the detection latency for faults nobody
+    /// survives to announce (a killed rank), and the clock every abort
+    /// cell races against.
+    pub recv_timeout: Duration,
+    /// Hard wall-clock bound on a faulted trial: complete or abort within
+    /// this window or the cell is `FAILED`. Must sit far below the 60 s
+    /// default receive timeout to prove the abort protocol, not the
+    /// timeout, bounded the trial.
+    pub detect_bound: Duration,
+    /// Backends to sweep (the concrete set by default).
+    pub backends: Vec<Backend>,
+    /// Check `/proc/self/status` for leaked threads after teardown. Keep
+    /// off inside `cargo test` — concurrent tests spawn threads of their
+    /// own and would flake the count.
+    pub thread_check: bool,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            ranks: 4,
+            lanes: 2,
+            elems: 16 * 1024,
+            recv_timeout: Duration::from_millis(250),
+            detect_bound: Duration::from_secs(10),
+            backends: Backend::CONCRETE.to_vec(),
+            thread_check: true,
+        }
+    }
+}
+
+/// How one fault cell ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellOutcome {
+    /// Finished with the reference checksum despite the fault.
+    Completed,
+    /// Every failing rank returned [`Error::CollectiveAborted`] within the
+    /// detection bound and the world recovered.
+    Aborted,
+    /// Hang, silent corruption, untyped error, or failed recovery.
+    Failed,
+}
+
+impl CellOutcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CellOutcome::Completed => "completed",
+            CellOutcome::Aborted => "aborted",
+            CellOutcome::Failed => "FAILED",
+        }
+    }
+}
+
+/// One (fault, backend, collective) grid cell's verdict.
+#[derive(Debug, Clone)]
+pub struct ChaosCell {
+    pub fault: &'static str,
+    pub backend: Backend,
+    pub kind: CollKind,
+    /// What the fault taxonomy says must happen (survivable faults must
+    /// complete; fatal ones must abort). A mismatch is a `FAILED` cell
+    /// even when the ending was individually clean.
+    pub expected: CellOutcome,
+    pub outcome: CellOutcome,
+    /// Wall seconds of the faulted trial — the measured detection window
+    /// for aborted cells.
+    pub detect_s: f64,
+    pub detail: String,
+    /// The exact armed plan, serialized into the report for replay.
+    pub plan: FaultPlan,
+}
+
+impl ChaosCell {
+    pub fn passed(&self) -> bool {
+        self.outcome != CellOutcome::Failed
+    }
+}
+
+/// The full chaos run: grid cells, the shrink cell, and the leak check.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub cells: Vec<ChaosCell>,
+    pub shrink_passed: bool,
+    pub shrink_wall_s: f64,
+    pub shrink_detail: String,
+    /// `(before, after)` OS thread counts when the leak check ran.
+    pub threads: Option<(usize, usize)>,
+    pub passed: bool,
+}
+
+impl ChaosReport {
+    /// The `BENCH_chaos.json` document: per-cell outcome plus the replay
+    /// plan, the shrink verdict, and the thread-leak numbers.
+    pub fn to_value(&self, cfg: &ChaosConfig) -> Value {
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                Value::obj(vec![
+                    ("fault", Value::Str(c.fault.to_string())),
+                    ("backend", Value::Str(c.backend.label().to_string())),
+                    ("collective", Value::Str(c.kind.label().to_string())),
+                    ("expected", Value::Str(c.expected.label().to_string())),
+                    ("outcome", Value::Str(c.outcome.label().to_string())),
+                    ("detect_s", Value::Num(c.detect_s)),
+                    ("detail", Value::Str(c.detail.clone())),
+                    ("plan", c.plan.to_value()),
+                ])
+            })
+            .collect();
+        let threads = match self.threads {
+            None => Value::Null,
+            Some((before, after)) => Value::obj(vec![
+                ("before", Value::Num(before as f64)),
+                ("after", Value::Num(after as f64)),
+                ("leaked", Value::Num(after.saturating_sub(before) as f64)),
+            ]),
+        };
+        Value::obj(vec![
+            ("schema", Value::Num(1.0)),
+            ("suite", Value::Str("pccl-chaos".to_string())),
+            ("ranks", Value::Num(cfg.ranks as f64)),
+            ("lanes", Value::Num(cfg.lanes as f64)),
+            ("elems", Value::Num(cfg.elems as f64)),
+            ("recv_timeout_ms", Value::Num(cfg.recv_timeout.as_millis() as f64)),
+            ("detect_bound_ms", Value::Num(cfg.detect_bound.as_millis() as f64)),
+            ("cells", Value::Arr(cells)),
+            (
+                "shrink",
+                Value::obj(vec![
+                    ("passed", Value::Bool(self.shrink_passed)),
+                    ("wall_s", Value::Num(self.shrink_wall_s)),
+                    ("detail", Value::Str(self.shrink_detail.clone())),
+                ]),
+            ),
+            ("threads", threads),
+            ("passed", Value::Bool(self.passed)),
+        ])
+    }
+
+    /// Error out with every failed cell named, for CI logs.
+    pub fn ensure_passed(&self) -> Result<()> {
+        if self.passed {
+            return Ok(());
+        }
+        let mut failed: Vec<String> = self
+            .cells
+            .iter()
+            .filter(|c| !c.passed())
+            .map(|c| {
+                format!("{}/{}/{}: {}", c.fault, c.backend.label(), c.kind.label(), c.detail)
+            })
+            .collect();
+        if !self.shrink_passed {
+            failed.push(format!("shrink: {}", self.shrink_detail));
+        }
+        if let Some((before, after)) = self.threads {
+            if after > before {
+                failed.push(format!("thread leak: {before} threads before, {after} after"));
+            }
+        }
+        Err(Error::Dispatch(format!("chaos run failed: {}", failed.join("; "))))
+    }
+}
+
+/// What the taxonomy demands of each fault kind: faults the transport can
+/// ride out must complete correctly; fatal ones must take the typed abort
+/// path. A "fatal" fault that completes means the injection never fired —
+/// harness rot — so the expectation is enforced both ways.
+fn expected_outcome(fault: &str) -> CellOutcome {
+    match fault {
+        "delay" | "duplicate" | "stall_worker" => CellOutcome::Completed,
+        _ => CellOutcome::Aborted,
+    }
+}
+
+/// The armed plan for one cell: rank 0 is always the faulty party, with
+/// one spec per peer so the injection fires on the first matching traffic
+/// regardless of which neighbor the backend's schedule touches first.
+/// Send-side faults sit on lane 0 (every schedule's stripe 0); the
+/// stall sits on worker lane 1 of rank 0's receive side. Delays and
+/// stalls stay well under the receive timeout so those cells complete.
+fn plan_for(fault: &str, ranks: usize) -> FaultPlan {
+    let survivable_ms = 25;
+    let spec = |peer: usize, lane: usize, action: FaultAction| FaultSpec {
+        rank: 0,
+        peer,
+        lane,
+        op_seq: 0,
+        action,
+    };
+    let faults = (1..ranks)
+        .map(|peer| match fault {
+            "drop" => spec(peer, 0, FaultAction::Drop),
+            "delay" => spec(peer, 0, FaultAction::Delay { ms: survivable_ms }),
+            "duplicate" => spec(peer, 0, FaultAction::Duplicate),
+            "corrupt" => spec(peer, 0, FaultAction::Corrupt),
+            "kill_rank" => spec(peer, 0, FaultAction::KillRank),
+            "stall_worker" => spec(peer, 1, FaultAction::StallWorker { ms: survivable_ms }),
+            other => unreachable!("unknown fault kind {other:?}"),
+        })
+        .collect();
+    FaultPlan::new(faults)
+}
+
+/// One collective trial: every rank runs `kind` on `backend` and reports
+/// the result checksum. With `faults`, the plan is armed for exactly this
+/// trial (the engine's abort conversion handles whatever it breaks) and
+/// disarmed on the way out — an aborted trial's resync clears it too.
+fn collective_trial(
+    kind: CollKind,
+    backend: Backend,
+    elems: usize,
+    lanes: usize,
+    faults: Option<FaultPlan>,
+    recv_timeout: Duration,
+) -> impl Fn(&mut Communicator<f32>) -> Result<TrialReport> + Send + Sync + Clone + 'static {
+    move |c: &mut Communicator<f32>| {
+        c.set_timeout(recv_timeout);
+        if let Some(plan) = &faults {
+            c.arm_faults(plan.clone());
+        }
+        let opts = CollectiveOptions::<f32>::default().backend(backend).lanes(lanes);
+        let input = Chunk::from_vec(vec![c.rank() as f32; elems]);
+        let res = run_collective(kind, lanes, c, &input, &opts);
+        c.clear_faults();
+        Ok(TrialReport { checksum: res?, ..Default::default() })
+    }
+}
+
+/// World-total checksum: per-rank checksums summed, so all three
+/// collective kinds reduce to one reference scalar per cell.
+fn total_checksum(reports: &[TrialReport]) -> f64 {
+    reports.iter().map(|t| t.checksum).sum()
+}
+
+fn failed_cell(
+    fault: &'static str,
+    backend: Backend,
+    kind: CollKind,
+    plan: FaultPlan,
+    detect_s: f64,
+    detail: String,
+) -> ChaosCell {
+    ChaosCell {
+        fault,
+        backend,
+        kind,
+        expected: expected_outcome(fault),
+        outcome: CellOutcome::Failed,
+        detect_s,
+        detail,
+        plan,
+    }
+}
+
+/// Run one grid cell: faultless reference → faulted trial → post-recovery
+/// correctness check → epoch reset (drains any surviving duplicates so
+/// cells stay isolated).
+fn run_cell(
+    world: &mut PersistentWorld<f32>,
+    cfg: &ChaosConfig,
+    fault: &'static str,
+    backend: Backend,
+    kind: CollKind,
+) -> ChaosCell {
+    let plan = plan_for(fault, cfg.ranks);
+    let expected = expected_outcome(fault);
+
+    let reference = match world.run_trial(collective_trial(
+        kind,
+        backend,
+        cfg.elems,
+        cfg.lanes,
+        None,
+        cfg.recv_timeout,
+    )) {
+        Ok(reports) => total_checksum(&reports),
+        Err(e) => {
+            return failed_cell(fault, backend, kind, plan, 0.0, format!("reference trial: {e}"))
+        }
+    };
+
+    let t0 = Instant::now();
+    let res = world.run_trial(collective_trial(
+        kind,
+        backend,
+        cfg.elems,
+        cfg.lanes,
+        Some(plan.clone()),
+        cfg.recv_timeout,
+    ));
+    let detect_s = t0.elapsed().as_secs_f64();
+    let (mut outcome, mut detail) = match res {
+        Ok(reports) => {
+            let sum = total_checksum(&reports);
+            if (sum - reference).abs() > 1e-9 {
+                (
+                    CellOutcome::Failed,
+                    format!("silent corruption: checksum {sum} vs reference {reference}"),
+                )
+            } else {
+                (CellOutcome::Completed, String::new())
+            }
+        }
+        Err(e @ Error::CollectiveAborted { .. }) => {
+            if world.is_poisoned() {
+                (CellOutcome::Failed, format!("world poisoned by abort: {e}"))
+            } else if detect_s > cfg.detect_bound.as_secs_f64() {
+                (
+                    CellOutcome::Failed,
+                    format!("abort took {detect_s:.3}s, over the detection bound: {e}"),
+                )
+            } else {
+                (CellOutcome::Aborted, e.to_string())
+            }
+        }
+        Err(e) => (CellOutcome::Failed, format!("untyped failure: {e}")),
+    };
+    if outcome != CellOutcome::Failed && outcome != expected {
+        detail = format!(
+            "expected {} but the cell {} ({})",
+            expected.label(),
+            outcome.label(),
+            if detail.is_empty() { "fault likely never fired" } else { detail.as_str() }
+        );
+        outcome = CellOutcome::Failed;
+    }
+
+    // A clean ending must also leave the world correct: the same cell,
+    // faultless, on the (possibly resynced) world must reproduce the
+    // reference checksum.
+    if outcome != CellOutcome::Failed {
+        match world.run_trial(collective_trial(
+            kind,
+            backend,
+            cfg.elems,
+            cfg.lanes,
+            None,
+            cfg.recv_timeout,
+        )) {
+            Ok(reports) => {
+                let sum = total_checksum(&reports);
+                if (sum - reference).abs() > 1e-9 {
+                    outcome = CellOutcome::Failed;
+                    detail =
+                        format!("post-recovery checksum {sum} vs reference {reference}");
+                }
+            }
+            Err(e) => {
+                outcome = CellOutcome::Failed;
+                detail = format!("post-recovery trial: {e}");
+            }
+        }
+    }
+
+    // Enter a fresh epoch between cells: drains anything a fault left in
+    // the queues (e.g. the duplicate's second copy) so no cell inherits
+    // its predecessor's wreckage.
+    if !world.is_poisoned() {
+        let reset = world.run_trial(|c: &mut Communicator<f32>| {
+            c.bump_epoch()?;
+            Ok(TrialReport::default())
+        });
+        if let Err(e) = reset {
+            outcome = CellOutcome::Failed;
+            detail = format!("epoch reset between cells: {e}");
+        }
+    }
+
+    ChaosCell { fault, backend, kind, expected, outcome, detect_s, detail, plan }
+}
+
+/// The rank-failure recovery cell: rank 1 of a fresh abort-armed world
+/// goes silent mid-ring; a survivor detects it by receive timeout and
+/// broadcasts the abort (as the engine would); the survivors then clear
+/// the token, shrink around the dead rank, and complete a correct ring
+/// pass on the rebuilt communicator. Returns `(passed, wall_s, detail)`.
+fn run_shrink_cell(cfg: &ChaosConfig) -> (bool, f64, String) {
+    let p = cfg.ranks;
+    let dead = 1usize;
+    let b_all = Arc::new(Barrier::new(p));
+    let b_live = Arc::new(Barrier::new(p - 1));
+    let world = CommWorld::<f32>::new(p).with_abort().with_recv_timeout(cfg.recv_timeout);
+    let t0 = Instant::now();
+    let outs = world.run(move |c: &mut Communicator<f32>| -> Result<f64> {
+        let r = c.rank();
+        let p = c.size();
+        if r == dead {
+            // The failed host: never sends, but keeps its endpoint alive
+            // until the survivors have finished detecting, so their
+            // phase-1 sends don't race its teardown.
+            b_all.wait();
+            return Ok(0.0);
+        }
+        c.begin_op();
+        c.send_slice((r + 1) % p, 0, Chunk::from_vec(vec![r as f32]))?;
+        match c.recv_chunk((r + p - 1) % p, 0) {
+            // The dead rank's right neighbor times out and broadcasts the
+            // abort exactly as the engine's conversion would; ranks parked
+            // behind it observe the poison as the typed abort instead.
+            Ok(_) | Err(Error::CollectiveAborted { .. }) => {}
+            Err(e) => c.broadcast_abort(&e.to_string()),
+        }
+        b_all.wait();
+        if r == 0 {
+            if let Some(tok) = c.abort_token() {
+                tok.clear();
+            }
+        }
+        b_live.wait();
+        let mut sub = c.shrink(&[dead])?;
+        sub.begin_op();
+        let (sp, sr) = (sub.size(), sub.rank());
+        sub.send_slice((sr + 1) % sp, 0, Chunk::from_vec(vec![r as f32]))?;
+        let got = sub.recv_chunk((sr + sp - 1) % sp, 0)?;
+        Ok(f64::from(got[0]))
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    if wall > cfg.detect_bound.as_secs_f64() {
+        return (false, wall, format!("shrink cell took {wall:.3}s, over the detection bound"));
+    }
+    let mut sum = 0.0;
+    for (r, out) in outs.iter().enumerate() {
+        if r == dead {
+            continue;
+        }
+        match out {
+            Ok(v) => sum += v,
+            Err(e) => return (false, wall, format!("survivor rank {r} failed: {e}")),
+        }
+    }
+    // Each survivor received its left survivor's *original* rank id, so
+    // the ring total is the survivor rank sum.
+    let expect: f64 = (0..p).filter(|&r| r != dead).map(|r| r as f64).sum();
+    if (sum - expect).abs() > 1e-9 {
+        return (false, wall, format!("survivor ring moved {sum}, expected {expect}"));
+    }
+    (true, wall, String::new())
+}
+
+/// OS threads of this process, from `/proc/self/status` (Linux only).
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+/// Sweep the full fault grid and the shrink cell. `Err` only on setup
+/// failures — per-cell verdicts land in the report; gate CI on
+/// [`ChaosReport::ensure_passed`] after writing it out.
+pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosReport> {
+    assert!(cfg.ranks >= 3, "chaos needs >= 3 ranks for a survivor ring");
+    assert!(cfg.lanes >= 2, "chaos needs a worker lane to stall");
+    let threads_before = if cfg.thread_check { thread_count() } else { None };
+
+    let topo = Topology::flat(cfg.ranks);
+    let mut world = PersistentWorld::<f32>::new_with_lanes(topo, cfg.lanes)?;
+    world.set_trial_deadline(cfg.detect_bound);
+    let mut cells = Vec::with_capacity(FAULT_KINDS.len() * cfg.backends.len());
+    let mut kind_i = 0usize;
+    for fault in FAULT_KINDS {
+        for &backend in &cfg.backends {
+            // Rotate the collective kind so the grid covers all three
+            // without tripling its size.
+            let kind = CollKind::ALL[kind_i % CollKind::ALL.len()];
+            kind_i += 1;
+            cells.push(run_cell(&mut world, cfg, fault, backend, kind));
+            if world.is_poisoned() {
+                // A failed cell may strand the world — rebuild so the
+                // remaining grid still gets measured.
+                world = PersistentWorld::new_with_lanes(topo, cfg.lanes)?;
+                world.set_trial_deadline(cfg.detect_bound);
+            }
+        }
+    }
+    drop(world);
+
+    let (shrink_passed, shrink_wall_s, shrink_detail) = run_shrink_cell(cfg);
+
+    // Every world above is torn down; any thread still alive is a leaked
+    // lane worker. Give detached teardown a moment to settle.
+    let threads = match threads_before {
+        None => None,
+        Some(before) => {
+            let deadline = Instant::now() + Duration::from_secs(2);
+            let mut after = thread_count().unwrap_or(before);
+            while after > before && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(20));
+                after = thread_count().unwrap_or(before);
+            }
+            Some((before, after))
+        }
+    };
+
+    let passed = cells.iter().all(ChaosCell::passed)
+        && shrink_passed
+        && !threads.is_some_and(|(before, after)| after > before);
+    Ok(ChaosReport { cells, shrink_passed, shrink_wall_s, shrink_detail, threads, passed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_chaos_grid_is_clean_and_serializes() {
+        // One backend keeps the in-test grid small; the full concrete set
+        // runs under `pccl chaos` in CI. Thread counting stays off — other
+        // tests' worlds run concurrently with this one.
+        let cfg = ChaosConfig {
+            backends: vec![Backend::PcclRing],
+            recv_timeout: Duration::from_millis(150),
+            thread_check: false,
+            ..ChaosConfig::default()
+        };
+        let report = run_chaos(&cfg).unwrap();
+        assert_eq!(report.cells.len(), FAULT_KINDS.len());
+        for cell in &report.cells {
+            assert_eq!(
+                cell.outcome, cell.expected,
+                "{}/{}: {}",
+                cell.fault,
+                cell.kind.label(),
+                cell.detail
+            );
+        }
+        assert!(report.shrink_passed, "{}", report.shrink_detail);
+        assert!(report.passed);
+        report.ensure_passed().unwrap();
+
+        let doc = report.to_value(&cfg);
+        assert!(doc.get("passed").unwrap().as_bool().unwrap());
+        let cells = doc.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), FAULT_KINDS.len());
+        // Each cell's armed plan round-trips for replay.
+        let plan = FaultPlan::from_value(cells[0].get("plan").unwrap()).unwrap();
+        assert_eq!(plan, plan_for(FAULT_KINDS[0], cfg.ranks));
+    }
+
+    #[test]
+    fn taxonomy_expectations_are_fixed() {
+        assert_eq!(expected_outcome("drop"), CellOutcome::Aborted);
+        assert_eq!(expected_outcome("corrupt"), CellOutcome::Aborted);
+        assert_eq!(expected_outcome("kill_rank"), CellOutcome::Aborted);
+        assert_eq!(expected_outcome("delay"), CellOutcome::Completed);
+        assert_eq!(expected_outcome("duplicate"), CellOutcome::Completed);
+        assert_eq!(expected_outcome("stall_worker"), CellOutcome::Completed);
+    }
+}

@@ -412,9 +412,9 @@ pub fn verify_plan_grid(cfg: &LauncherConfig) -> Result<usize> {
 }
 
 /// Sum a chunk list's elements as f64 — the order-independent result
-/// checksum the cross-lane guard compares (exact for the launcher's
-/// integer-valued f32 inputs).
-fn checksum_chunks(chunks: &[Chunk<f32>]) -> f64 {
+/// checksum the cross-lane guard compares (exact for the launcher's and
+/// the chaos harness's integer-valued f32 inputs).
+pub(crate) fn checksum_chunks(chunks: &[Chunk<f32>]) -> f64 {
     chunks
         .iter()
         .flat_map(|c| c.as_slice())
@@ -429,7 +429,7 @@ fn checksum_chunks(chunks: &[Chunk<f32>]) -> f64 {
 /// `lanes <= 1` takes the exact pre-lane entry points (byte-for-byte the
 /// old schedule); `lanes > 1` takes the lane-aware entry points with
 /// `opts.lanes` pre-set by [`cell_trial`].
-fn run_collective(
+pub(crate) fn run_collective(
     kind: CollKind,
     lanes: usize,
     comm: &mut Communicator<f32>,

@@ -17,12 +17,17 @@
 //!   persistent mode a [`PersistentWorld`] pins the rank threads for the
 //!   whole sweep (lower noise, larger sweeps) and every cell carries
 //!   per-op byte counters.
+//! * [`run_chaos`] — the `pccl chaos` fault-grid sweep: every fault kind ×
+//!   concrete backend must complete correctly or abort within the
+//!   detection bound on a recoverable [`PersistentWorld`], plus a
+//!   shrink-after-rank-death cell and a lane-worker leak check.
 //!
 //! Interchange format is HLO **text**, not serialized `HloModuleProto`:
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids.
 
 mod artifacts;
+mod chaos;
 mod executable;
 mod launcher;
 mod persistent;
@@ -30,6 +35,7 @@ mod service;
 pub(crate) mod xla_stub;
 
 pub use artifacts::{ArtifactEntry, Artifacts, Manifest, ModelMeta, TensorSpecJson};
+pub use chaos::{run_chaos, CellOutcome, ChaosCell, ChaosConfig, ChaosReport, FAULT_KINDS};
 pub use executable::{Executable, HostTensor, Runtime, TensorSpec};
 pub use launcher::{
     expected_schedule_bytes, flat_ring_expected_bytes, verify_plan_grid, Launcher, LauncherConfig,

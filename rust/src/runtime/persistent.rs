@@ -16,7 +16,7 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::comm::{Communicator, TransportHub, DEFAULT_RECV_TIMEOUT};
+use crate::comm::{AbortToken, Communicator, TransportHub, DEFAULT_RECV_TIMEOUT};
 use crate::error::{Error, Result};
 use crate::reduction::Elem;
 use crate::topology::Topology;
@@ -57,8 +57,16 @@ type Job<T> = Box<dyn FnOnce(&mut Communicator<T>) -> Result<TrialReport> + Send
 /// A long-lived world: pinned rank threads over one shared transport,
 /// each serving trial closures from its own queue.
 ///
-/// A trial that fails (or times out) poisons the world: the surviving
-/// ranks' op sequences are no longer aligned, so further trials would
+/// Every rank is armed with one shared [`AbortToken`], so a trial in
+/// which any rank fails aborts *collectively*: the failing rank's engine
+/// broadcasts poison and every peer returns
+/// [`Error::CollectiveAborted`] within the detection window. Such a trial
+/// is **recoverable** — the world clears the token, runs an epoch-resync
+/// job on every rank (draining stale traffic and retagging the wire, see
+/// [`Communicator::bump_epoch`]), and stays usable for further trials.
+/// Only a failure outside the abort protocol (a rank panic, a
+/// non-collective error, a failed resync) poisons the world: the ranks'
+/// states are no longer known to be aligned, so further trials would
 /// exchange garbage — subsequent [`PersistentWorld::run_trial`] calls
 /// return an error instead.
 pub struct PersistentWorld<T: Elem> {
@@ -67,6 +75,8 @@ pub struct PersistentWorld<T: Elem> {
     job_txs: Vec<Sender<Job<T>>>,
     done_rx: Receiver<(usize, Result<TrialReport>)>,
     handles: Vec<JoinHandle<()>>,
+    abort: AbortToken,
+    trial_deadline: Duration,
     poisoned: bool,
 }
 
@@ -84,12 +94,14 @@ impl<T: Elem> PersistentWorld<T> {
         let size = topo.world_size();
         let (_hub, eps) = TransportHub::<T>::new_with_lanes(size, lanes.max(1));
         let (done_tx, done_rx) = mpsc::channel();
+        let abort = AbortToken::new();
         let mut job_txs = Vec::with_capacity(size);
         let mut handles = Vec::with_capacity(size);
         for ep in eps {
             let rank = ep.rank();
             let (jtx, jrx) = mpsc::channel::<Job<T>>();
             let done = done_tx.clone();
+            let tok = abort.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("pccl-world-{rank}"))
                 .spawn(move || {
@@ -100,6 +112,7 @@ impl<T: Elem> PersistentWorld<T> {
                             return;
                         }
                     };
+                    comm.arm_abort(tok);
                     while let Ok(job) = jrx.recv() {
                         let out = job(&mut comm);
                         if done.send((rank, out)).is_err() {
@@ -117,6 +130,8 @@ impl<T: Elem> PersistentWorld<T> {
             job_txs,
             done_rx,
             handles,
+            abort,
+            trial_deadline: DEFAULT_RECV_TIMEOUT + Duration::from_secs(30),
             poisoned: false,
         })
     }
@@ -139,9 +154,30 @@ impl<T: Elem> PersistentWorld<T> {
         self.poisoned
     }
 
+    /// The world's shared abort token (tripped while a collective abort is
+    /// in flight; cleared again by the post-abort recovery).
+    pub fn abort_token(&self) -> &AbortToken {
+        &self.abort
+    }
+
+    /// How long the driver waits for each rank's trial report before
+    /// declaring a rank dead (unrecoverable). The default leaves room for
+    /// every straggler to hit its own receive timeout and report; chaos
+    /// tests shorten it together with the ranks' receive timeouts.
+    pub fn set_trial_deadline(&mut self, deadline: Duration) {
+        self.trial_deadline = deadline;
+    }
+
     /// Run one SPMD trial on every pinned rank thread; returns per-rank
     /// reports in rank order. The first rank error wins (the others
     /// surface as timeouts/closed-transport and are discarded).
+    ///
+    /// If every failing rank failed with [`Error::CollectiveAborted`]
+    /// (the abort protocol worked), the world recovers: the abort token
+    /// clears and every rank runs an epoch resync, so the *next*
+    /// `run_trial` proceeds on a clean epoch. Any other failure — or a
+    /// rank that never reports within the trial deadline — poisons the
+    /// world permanently.
     pub fn run_trial<F>(&mut self, f: F) -> Result<Vec<TrialReport>>
     where
         F: Fn(&mut Communicator<T>) -> Result<TrialReport> + Send + Sync + Clone + 'static,
@@ -159,13 +195,12 @@ impl<T: Elem> PersistentWorld<T> {
         let p = self.size();
         let mut out = vec![TrialReport::default(); p];
         let mut first_err: Option<Error> = None;
-        // Generous enough for stragglers to hit their own recv timeout and
-        // report it, rather than us abandoning them mid-collective.
-        let deadline = DEFAULT_RECV_TIMEOUT + Duration::from_secs(30);
+        let mut all_aborts = true;
         for _ in 0..p {
-            match self.done_rx.recv_timeout(deadline) {
+            match self.done_rx.recv_timeout(self.trial_deadline) {
                 Ok((rank, Ok(report))) => out[rank] = report,
                 Ok((_, Err(e))) => {
+                    all_aborts &= matches!(e, Error::CollectiveAborted { .. });
                     if first_err.is_none() {
                         first_err = Some(e);
                     }
@@ -176,7 +211,7 @@ impl<T: Elem> PersistentWorld<T> {
                     return Err(Error::RecvTimeout {
                         src: 0,
                         tag: 0,
-                        ms: deadline.as_millis() as u64,
+                        ms: self.trial_deadline.as_millis() as u64,
                     });
                 }
             }
@@ -184,10 +219,58 @@ impl<T: Elem> PersistentWorld<T> {
         match first_err {
             None => Ok(out),
             Some(e) => {
-                self.poisoned = true;
+                if all_aborts {
+                    // The abort protocol held: every failure was the typed
+                    // collective abort, so rank states are known-aligned
+                    // (all idle, op streams cut at the same collective).
+                    // Resync and stay usable.
+                    self.resync()?;
+                } else {
+                    self.poisoned = true;
+                }
                 Err(e)
             }
         }
+    }
+
+    /// Post-abort recovery: clear the tripped token, then have every rank
+    /// enter the next epoch (drain queues, retag, reset op sequences).
+    /// Failure here is unrecoverable and poisons the world.
+    fn resync(&mut self) -> Result<()> {
+        self.abort.clear();
+        let mut dead_queue = None;
+        for (rank, tx) in self.job_txs.iter().enumerate() {
+            let job: Job<T> = Box::new(|c: &mut Communicator<T>| {
+                c.bump_epoch()?;
+                Ok(TrialReport::default())
+            });
+            if tx.send(job).is_err() {
+                dead_queue = Some(rank);
+                break;
+            }
+        }
+        if let Some(rank) = dead_queue {
+            self.poisoned = true;
+            return Err(Error::TransportClosed { rank });
+        }
+        for _ in 0..self.size() {
+            match self.done_rx.recv_timeout(self.trial_deadline) {
+                Ok((_, Ok(_))) => {}
+                Ok((_, Err(e))) => {
+                    self.poisoned = true;
+                    return Err(e);
+                }
+                Err(_) => {
+                    self.poisoned = true;
+                    return Err(Error::RecvTimeout {
+                        src: 0,
+                        tag: 0,
+                        ms: self.trial_deadline.as_millis() as u64,
+                    });
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -251,6 +334,60 @@ mod tests {
             })
             .unwrap();
         assert_eq!(reports.len(), 3);
+    }
+
+    #[test]
+    fn aborted_trial_recovers_and_next_trial_is_correct() {
+        use crate::comm::Chunk;
+        let mut world = PersistentWorld::<f32>::new(Topology::flat(3)).unwrap();
+        // Trial 1: every rank fails with the typed collective abort (as the
+        // engine's conversion produces) — the world must resync, not poison.
+        let err = world
+            .run_trial(|c| {
+                c.broadcast_abort("injected");
+                Err(Error::CollectiveAborted {
+                    origin_rank: c.rank(),
+                    op_seq: c.current_op_seq(),
+                    cause: "injected".into(),
+                })
+            })
+            .unwrap_err();
+        assert!(matches!(err, Error::CollectiveAborted { .. }));
+        assert!(!world.is_poisoned(), "typed aborts are recoverable");
+        assert!(!world.abort_token().is_tripped(), "recovery clears the token");
+        // Trial 2 runs a correct collective on the resynced epoch.
+        let reports = world
+            .run_trial(|c| {
+                c.begin_op();
+                let (p, r) = (c.size(), c.rank());
+                c.send_slice((r + 1) % p, 0, Chunk::from_vec(vec![r as f32]))?;
+                let got = c.recv_chunk((r + p - 1) % p, 0)?;
+                Ok(TrialReport { checksum: f64::from(got[0]), ..Default::default() })
+            })
+            .unwrap();
+        let sum: f64 = reports.iter().map(|t| t.checksum).sum();
+        assert_eq!(sum, 3.0); // 0 + 1 + 2
+    }
+
+    #[test]
+    fn rank_panic_poisons_within_the_trial_deadline() {
+        // A rank that dies without reporting (panic) is unrecoverable; the
+        // driver must notice within the configured deadline, not hang.
+        let mut world = PersistentWorld::<f32>::new(Topology::flat(2)).unwrap();
+        world.set_trial_deadline(Duration::from_millis(300));
+        let t = std::time::Instant::now();
+        let err = world
+            .run_trial(|c| {
+                if c.rank() == 0 {
+                    panic!("simulated rank crash");
+                }
+                Ok(TrialReport::default())
+            })
+            .unwrap_err();
+        assert!(matches!(err, Error::RecvTimeout { .. }));
+        assert!(t.elapsed() < Duration::from_secs(10));
+        assert!(world.is_poisoned());
+        assert!(world.run_trial(|_| Ok(TrialReport::default())).is_err());
     }
 
     #[test]

@@ -78,6 +78,12 @@ pub struct OpSpan {
     pub start_s: f64,
     /// Wall-clock duration of the op (post → delivery).
     pub dur_s: f64,
+    /// Queueing share of the op: seconds the transport spent waiting for
+    /// matches in the mailbox (differenced from the endpoint's op clock).
+    pub wait_s: f64,
+    /// Service share of the op: seconds spent delivering/folding payloads
+    /// once matched (the combine time on reduce paths).
+    pub serve_s: f64,
 }
 
 /// Per-rank span recorder: a bounded ring buffer plus the phase/round
@@ -146,7 +152,9 @@ impl RankTrace {
     }
 
     /// Record one executed op. `started` is the instant the engine began
-    /// the op; duration is measured to now.
+    /// the op; duration is measured to now. `wait_s`/`serve_s` are the
+    /// op's queueing-vs-service split, differenced from the endpoint's op
+    /// clock around the op (0 when the comm impl doesn't track it).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn record(
         &mut self,
@@ -158,6 +166,8 @@ impl RankTrace {
         recvd_bytes: u64,
         combine_bytes: u64,
         started: Instant,
+        wait_s: f64,
+        serve_s: f64,
     ) {
         if self.rounds_in_phase == 0 {
             // Mirrors `plan::phase_shapes`: an op before any explicit
@@ -176,6 +186,8 @@ impl RankTrace {
             combine_bytes,
             start_s: started.duration_since(self.origin).as_secs_f64(),
             dur_s: started.elapsed().as_secs_f64(),
+            wait_s,
+            serve_s,
         };
         if self.spans.len() < self.cap {
             self.spans.push(span);
@@ -256,6 +268,10 @@ pub struct PhaseSummary {
     pub total_sent_bytes: u64,
     /// Busiest rank's summed span time in the phase (seconds).
     pub busy_s: f64,
+    /// Rank 0's summed queueing time in the phase (waiting for matches).
+    pub wait_s: f64,
+    /// Rank 0's summed service time in the phase (delivery + folds).
+    pub serve_s: f64,
 }
 
 /// A traced cell: raw per-rank spans plus the per-phase rollup.
@@ -280,6 +296,7 @@ pub fn aggregate(per_rank: Vec<Vec<OpSpan>>) -> CellTrace {
         let mut scope = None;
         let (mut ops, mut rounds, mut sent, mut combine, mut total) = (0u64, 0u64, 0u64, 0u64, 0u64);
         let mut busy = 0.0f64;
+        let (mut wait, mut serve) = (0.0f64, 0.0f64);
         for (rank, spans) in per_rank.iter().enumerate() {
             let mut rank_busy = 0.0f64;
             for s in spans.iter().filter(|s| s.phase == ph) {
@@ -292,6 +309,8 @@ pub fn aggregate(per_rank: Vec<Vec<OpSpan>>) -> CellTrace {
                     rounds = rounds.max(u64::from(s.round) + 1);
                     sent += s.sent_bytes;
                     combine += s.combine_bytes;
+                    wait += s.wait_s;
+                    serve += s.serve_s;
                 }
             }
             busy = busy.max(rank_busy);
@@ -304,6 +323,8 @@ pub fn aggregate(per_rank: Vec<Vec<OpSpan>>) -> CellTrace {
             combine_bytes: combine,
             total_sent_bytes: total,
             busy_s: busy,
+            wait_s: wait,
+            serve_s: serve,
         });
     }
     CellTrace { per_rank, phases }
@@ -422,6 +443,8 @@ pub fn chrome_trace_doc(cells: &[(String, &CellTrace)]) -> Value {
                             ("sent_bytes", Value::Num(s.sent_bytes as f64)),
                             ("recvd_bytes", Value::Num(s.recvd_bytes as f64)),
                             ("combine_bytes", Value::Num(s.combine_bytes as f64)),
+                            ("wait_us", Value::Num(s.wait_s * 1e6)),
+                            ("serve_us", Value::Num(s.serve_s * 1e6)),
                         ]),
                     ),
                 ]));
@@ -435,18 +458,33 @@ pub fn chrome_trace_doc(cells: &[(String, &CellTrace)]) -> Value {
 }
 
 /// Compact per-phase table of a traced cell, with the netsim-predicted
-/// time per phase alongside when available (pass `&[]` to omit).
+/// time per phase alongside when available (pass `&[]` to omit). The
+/// `wait`/`serve` columns split rank 0's observed time into queueing
+/// (parked in the mailbox awaiting a match) vs service (delivering and
+/// folding payloads) — a phase dominated by `wait` is skew- or
+/// straggler-bound, one dominated by `serve` is combine-bound.
 pub fn format_summary(trace: &CellTrace, predicted_s: &[f64]) -> String {
     let mut out = String::new();
-    out.push_str("  phase  scope  rounds  ops   rank0-sent    combine       observed     predicted\n");
+    out.push_str(
+        "  phase  scope  rounds  ops   rank0-sent    combine       observed         wait        serve     predicted\n",
+    );
     for (i, ph) in trace.phases.iter().enumerate() {
         let predicted = predicted_s
             .get(i)
             .map(|p| format!("{:>9.1} us", p * 1e6))
             .unwrap_or_else(|| "          --".to_string());
         out.push_str(&format!(
-            "  {:<5}  {:<5}  {:>6}  {:>3}   {:>10} B  {:>10} B  {:>9.1} us  {}\n",
-            i, ph.scope, ph.rounds, ph.ops, ph.sent_bytes, ph.combine_bytes, ph.busy_s * 1e6, predicted
+            "  {:<5}  {:<5}  {:>6}  {:>3}   {:>10} B  {:>10} B  {:>9.1} us  {:>9.1} us  {:>9.1} us  {}\n",
+            i,
+            ph.scope,
+            ph.rounds,
+            ph.ops,
+            ph.sent_bytes,
+            ph.combine_bytes,
+            ph.busy_s * 1e6,
+            ph.wait_s * 1e6,
+            ph.serve_s * 1e6,
+            predicted
         ));
     }
     out
@@ -470,6 +508,8 @@ mod tests {
             combine_bytes: combine,
             start_s: 0.0,
             dur_s: 1e-6,
+            wait_s: 6e-7,
+            serve_s: 4e-7,
         }
     }
 
@@ -478,7 +518,7 @@ mod tests {
         let mut t = RankTrace::new(0, 2);
         t.on_begin_op();
         for i in 0..5u64 {
-            t.record("send", Scope::World, 1, 0, i, 0, 0, Instant::now());
+            t.record("send", Scope::World, 1, 0, i, 0, 0, Instant::now(), 0.0, 0.0);
         }
         assert_eq!(t.dropped(), 3);
         let spans = t.into_spans();
@@ -493,13 +533,13 @@ mod tests {
         let mut t = RankTrace::new(0, 16);
         // Phase 0 with an implicit round 0 (op before any Round marker).
         t.on_begin_op();
-        t.record("send", Scope::World, 1, 0, 8, 0, 0, Instant::now());
+        t.record("send", Scope::World, 1, 0, 8, 0, 0, Instant::now(), 0.0, 0.0);
         // Phase 1 with two explicit rounds.
         t.on_begin_op();
         t.on_round();
-        t.record("send", Scope::Inter, 2, 0, 8, 0, 0, Instant::now());
+        t.record("send", Scope::Inter, 2, 0, 8, 0, 0, Instant::now(), 0.0, 0.0);
         t.on_round();
-        t.record("recv_combine", Scope::Inter, 2, 0, 0, 8, 8, Instant::now());
+        t.record("recv_combine", Scope::Inter, 2, 0, 0, 8, 8, Instant::now(), 0.0, 0.0);
         let spans = t.into_spans();
         assert_eq!((spans[0].phase, spans[0].round), (0, 0));
         assert_eq!((spans[1].phase, spans[1].round), (1, 0));
@@ -532,6 +572,9 @@ mod tests {
         assert_eq!(cell.phases[1].rounds, 2);
         assert_eq!(cell.phases[1].combine_bytes, 50);
         assert!(cell.phases[0].busy_s > 0.0);
+        // Queueing-vs-service split: rank 0's per-span wait/serve sum up.
+        assert!((cell.phases[1].wait_s - 2.0 * 6e-7).abs() < 1e-12);
+        assert!((cell.phases[1].serve_s - 2.0 * 4e-7).abs() < 1e-12);
     }
 
     #[test]
@@ -583,5 +626,7 @@ mod tests {
         let table = format_summary(&cell, &[1e-6]);
         assert_eq!(table.lines().count(), 3); // header + 2 phases
         assert!(table.contains("predicted"));
+        assert!(table.contains("wait"));
+        assert!(table.contains("serve"));
     }
 }

@@ -1,12 +1,17 @@
 //! Failure injection: dead ranks, malformed buffers, missing/corrupt
 //! artifacts — every failure must surface as a typed error, never a hang.
+//! The abort-protocol tests at the bottom assert the *bounded-time* part:
+//! injected faults must turn into [`Error::CollectiveAborted`] on every
+//! surviving rank within seconds, far under the 60 s default receive
+//! timeout.
 
-use std::time::Duration;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
 
-use pccl::backends::{all_gather, reduce_scatter, Backend, CollectiveOptions};
-use pccl::comm::{Chunk, Comm, CommWorld};
+use pccl::backends::{all_gather, all_reduce, reduce_scatter, Backend, CollectiveOptions};
+use pccl::comm::{Chunk, Comm, CommWorld, Communicator, FaultAction, FaultPlan, FaultSpec};
 use pccl::error::Error;
-use pccl::runtime::{Artifacts, DeviceService};
+use pccl::runtime::{Artifacts, DeviceService, PersistentWorld, TrialReport};
 use pccl::topology::Topology;
 use pccl::util::tmp::TempDir;
 
@@ -127,6 +132,150 @@ fn corrupt_manifest_json_is_typed() {
     let err = Artifacts::load(dir.path()).unwrap_err();
     assert!(matches!(err, Error::Artifact(_)));
     assert!(err.to_string().contains("malformed"));
+}
+
+/// A kill-rank plan naming every peer of the victim, so the latch engages
+/// on the victim's first send no matter which neighbor its schedule
+/// touches first.
+fn kill_rank_plan(victim: usize, ranks: usize) -> FaultPlan {
+    FaultPlan::new(
+        (0..ranks)
+            .filter(|&peer| peer != victim)
+            .map(|peer| FaultSpec {
+                rank: victim,
+                peer,
+                lane: 0,
+                op_seq: 0,
+                action: FaultAction::KillRank,
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn killed_rank_aborts_every_peer_within_the_bound() {
+    // Rank 1 dies on its first send and never broadcasts (a dead host
+    // can't). Peers must detect it via their (short) receive timeout, and
+    // the engine must convert that into the typed collective abort on
+    // EVERY rank — wall-clock bounded, not 60 s of default timeout.
+    let world = CommWorld::<f32>::new(4)
+        .with_abort()
+        .with_recv_timeout(Duration::from_millis(200))
+        .with_fault_plan(kill_rank_plan(1, 4));
+    let t = Instant::now();
+    let outs = world.run(|c| {
+        let opts = CollectiveOptions::default().backend(Backend::PcclRing);
+        all_gather(c, &[c.rank() as f32; 64], &opts)
+    });
+    assert!(
+        t.elapsed() < Duration::from_secs(10),
+        "abort detection took {:?} — the bound does not hold",
+        t.elapsed()
+    );
+    for (r, out) in outs.iter().enumerate() {
+        match out {
+            Err(Error::CollectiveAborted { .. }) => {}
+            other => panic!("rank {r}: expected CollectiveAborted, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn persistent_world_survives_killed_rank_and_recomputes() {
+    // Trial 1 aborts via the kill latch; the world must resync (not
+    // poison) and trial 2 must produce the exact faultless result.
+    let mut world = PersistentWorld::<f32>::new(Topology::flat(4)).unwrap();
+    world.set_trial_deadline(Duration::from_secs(10));
+    let plan = kill_rank_plan(0, 4);
+    let t = Instant::now();
+    let err = world
+        .run_trial(move |c: &mut Communicator<f32>| {
+            c.set_timeout(Duration::from_millis(200));
+            c.arm_faults(plan.clone());
+            let opts = CollectiveOptions::default().backend(Backend::PcclRec);
+            let out = all_reduce(c, &[1.0f32; 32], &opts);
+            c.clear_faults();
+            out.map(|v| TrialReport {
+                checksum: v.iter().map(|&x| f64::from(x)).sum(),
+                ..Default::default()
+            })
+        })
+        .unwrap_err();
+    assert!(matches!(err, Error::CollectiveAborted { .. }), "got {err:?}");
+    assert!(t.elapsed() < Duration::from_secs(10));
+    assert!(!world.is_poisoned(), "typed aborts must be recoverable");
+    let reports = world
+        .run_trial(|c: &mut Communicator<f32>| {
+            let opts = CollectiveOptions::default().backend(Backend::PcclRec);
+            let out = all_reduce(c, &[1.0f32; 32], &opts)?;
+            Ok(TrialReport {
+                checksum: out.iter().map(|&x| f64::from(x)).sum(),
+                ..Default::default()
+            })
+        })
+        .unwrap();
+    for r in &reports {
+        assert_eq!(r.checksum, 128.0); // 32 ones summed over 4 ranks
+    }
+}
+
+#[test]
+fn survivors_shrink_around_a_dead_rank_and_finish() {
+    // Full recovery arc on one world: a rank goes silent, a survivor
+    // detects by timeout and broadcasts, the token is cleared, and the
+    // survivors rebuild a 2-rank world that completes a correct exchange.
+    let p = 3;
+    let dead = 2usize;
+    let b_all = Arc::new(Barrier::new(p));
+    let b_live = Arc::new(Barrier::new(p - 1));
+    let world = CommWorld::<f32>::new(p)
+        .with_abort()
+        .with_recv_timeout(Duration::from_millis(200));
+    let t = Instant::now();
+    let outs = world.run(move |c: &mut Communicator<f32>| -> Result<f32, Error> {
+        let (r, p) = (c.rank(), c.size());
+        if r == dead {
+            b_all.wait(); // keeps its endpoint alive through detection
+            return Ok(0.0);
+        }
+        c.begin_op();
+        c.send_slice((r + 1) % p, 0, Chunk::from_vec(vec![r as f32]))?;
+        match c.recv_chunk((r + p - 1) % p, 0) {
+            Ok(_) | Err(Error::CollectiveAborted { .. }) => {}
+            Err(e) => c.broadcast_abort(&e.to_string()),
+        }
+        b_all.wait();
+        if r == 0 {
+            c.abort_token().expect("armed").clear();
+        }
+        b_live.wait();
+        let mut sub = c.shrink(&[dead])?;
+        sub.begin_op();
+        let (sp, sr) = (sub.size(), sub.rank());
+        sub.send_slice((sr + 1) % sp, 0, Chunk::from_vec(vec![r as f32]))?;
+        Ok(sub.recv_chunk((sr + sp - 1) % sp, 0)?[0])
+    });
+    assert!(t.elapsed() < Duration::from_secs(10));
+    let got: f32 = outs[0].as_ref().unwrap() + outs[1].as_ref().unwrap();
+    assert_eq!(got, 1.0, "survivor ring must carry ranks 0 and 1");
+}
+
+#[test]
+fn poisoned_world_tears_down_promptly() {
+    // A rank panic poisons the world; dropping it must still join every
+    // rank thread instead of hanging on the dead one.
+    let mut world = PersistentWorld::<f32>::new(Topology::flat(2)).unwrap();
+    world.set_trial_deadline(Duration::from_millis(300));
+    let _ = world.run_trial(|c: &mut Communicator<f32>| {
+        if c.rank() == 0 {
+            panic!("simulated crash");
+        }
+        Ok(TrialReport::default())
+    });
+    assert!(world.is_poisoned());
+    let t = Instant::now();
+    drop(world);
+    assert!(t.elapsed() < Duration::from_secs(5), "teardown hung on a dead rank");
 }
 
 #[test]
